@@ -1,0 +1,81 @@
+//! Network analysis — closeness & harmonic centrality from APSP.
+//!
+//! The third workload the paper motivates: identify the most central hubs
+//! of a scale-free network.  Closeness centrality needs the full distance
+//! matrix — exactly what the APSP service provides — and is a one-liner on
+//! top of it.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example centrality
+//! ```
+
+use fw_stage::coordinator::{Config, Coordinator};
+use fw_stage::graph::generators;
+
+fn main() -> anyhow::Result<()> {
+    let n = 500;
+    let graph = generators::scale_free(n, 2, 99);
+    println!(
+        "network: scale-free n={n}, {} edges",
+        graph.edge_count() / 2 // symmetric
+    );
+
+    let coord = Coordinator::start(Config::new("artifacts"))?;
+    let dist = coord.solve_graph(&graph, "staged")?;
+
+    // harmonic centrality: C(i) = Σ_j 1/d(i,j) — robust to disconnection
+    // closeness centrality: C(i) = (reachable-1) / Σ_j d(i,j)
+    let mut scores: Vec<(usize, f64, f64, usize)> = (0..n)
+        .map(|i| {
+            let mut harmonic = 0f64;
+            let mut total = 0f64;
+            let mut reach = 0usize;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let d = dist.get(i, j);
+                if d.is_finite() && d > 0.0 {
+                    harmonic += 1.0 / d as f64;
+                    total += d as f64;
+                    reach += 1;
+                }
+            }
+            let closeness = if total > 0.0 { reach as f64 / total } else { 0.0 };
+            (i, harmonic, closeness, reach)
+        })
+        .collect();
+    scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    println!("top 10 hubs by harmonic centrality:");
+    println!("{:>6} {:>12} {:>12} {:>10} {:>8}", "vertex", "harmonic", "closeness", "reachable", "degree");
+    for &(i, harmonic, closeness, reach) in scores.iter().take(10) {
+        let degree = (0..n)
+            .filter(|&j| j != i && graph.get(i, j).is_finite())
+            .count();
+        println!("{i:>6} {harmonic:>12.3} {closeness:>12.4} {reach:>10} {degree:>8}");
+    }
+
+    // scale-free sanity: hub centrality should correlate with degree
+    let top_degree: Vec<usize> = {
+        let mut by_degree: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                (
+                    i,
+                    (0..n).filter(|&j| j != i && graph.get(i, j).is_finite()).count(),
+                )
+            })
+            .collect();
+        by_degree.sort_by(|a, b| b.1.cmp(&a.1));
+        by_degree.iter().take(10).map(|&(i, _)| i).collect()
+    };
+    let top_central: Vec<usize> = scores.iter().take(10).map(|&(i, ..)| i).collect();
+    let overlap = top_central
+        .iter()
+        .filter(|i| top_degree.contains(i))
+        .count();
+    println!("top-10 centrality ∩ top-10 degree: {overlap}/10");
+    anyhow::ensure!(overlap >= 3, "hubs should be central in a scale-free net");
+    println!("centrality OK");
+    Ok(())
+}

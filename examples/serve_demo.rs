@@ -1,0 +1,100 @@
+//! Serving demo — replay a Poisson workload trace against the TCP server.
+//!
+//! Starts `fw-stage`'s coordinator + server in-process, replays a
+//! heavy-tail trace from concurrent client threads honoring arrival times,
+//! and reports throughput, latency percentiles, and the batching/caching
+//! metrics the coordinator collected.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fw_stage::coordinator::{client::Client, server::Server, Config, Coordinator};
+use fw_stage::util::stats::Samples;
+use fw_stage::workload::{generate, TraceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut config = Config::new("artifacts");
+    config.engine.batch_window = Duration::from_millis(3);
+    let coord = Arc::new(Coordinator::start(config)?);
+    let server = Server::spawn(coord.clone(), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+    println!("server on {addr}");
+
+    let trace = generate(&TraceConfig {
+        rate_hz: 60.0,
+        count: 120,
+        sizes: vec![40, 60, 100, 120, 200],
+        heavy_tail: true,
+        seed: 0xBEEF,
+    });
+    let span = trace.last().unwrap().at.as_secs_f64();
+    println!("trace: {} requests over {span:.2}s (heavy-tail sizes)", trace.len());
+
+    // replay with a small client fleet; each client owns a slice of the trace
+    let clients = 6;
+    let start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let items: Vec<_> = trace
+                .iter()
+                .skip(c)
+                .step_by(clients)
+                .cloned()
+                .collect();
+            std::thread::spawn(move || -> anyhow::Result<Samples> {
+                let mut client = Client::connect(&addr)?;
+                let mut lat = Samples::new();
+                for item in items {
+                    // honor the arrival schedule
+                    let now = start.elapsed();
+                    if item.at > now {
+                        std::thread::sleep(item.at - now);
+                    }
+                    let g = item.graph();
+                    let t0 = Instant::now();
+                    let resp = client.solve(&g, "staged")?;
+                    lat.push(t0.elapsed().as_secs_f64());
+                    anyhow::ensure!(resp.dist.n() == g.n());
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut all = Samples::new();
+    for h in handles {
+        let lat = h.join().expect("client thread")?;
+        all.merge(&lat);
+    }
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "replayed {} requests in {wall:.2}s → {:.1} req/s",
+        trace.len(),
+        trace.len() as f64 / wall
+    );
+    println!(
+        "latency: p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms  max {:.1}ms",
+        all.percentile(50.0) * 1e3,
+        all.percentile(90.0) * 1e3,
+        all.percentile(99.0) * 1e3,
+        all.max() * 1e3,
+    );
+
+    let snapshot = coord.metrics().snapshot();
+    println!("coordinator metrics: {snapshot}");
+    let batches = snapshot.get("batches").as_f64().unwrap_or(0.0);
+    let items = snapshot.get("batched_items").as_f64().unwrap_or(0.0);
+    if batches > 0.0 {
+        println!(
+            "batching: {items:.0} device items in {batches:.0} calls (avg {:.2} per call)",
+            items / batches
+        );
+    }
+    println!("serve_demo OK");
+    Ok(())
+}

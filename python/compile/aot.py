@@ -1,0 +1,170 @@
+"""AOT lowering: jax/Pallas → HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``apsp_<variant>_n<n>.hlo.txt`` per (variant × size), plus
+``manifest.json`` describing every artifact (shape, dtype, variant, tile,
+kchunk) so the Rust side can discover and validate them without guessing.
+Python never runs again after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import DEFAULT_KCHUNK, DEFAULT_TILE, VARIANTS, apsp_fn
+
+# Default deployment matrix: every variant at every serving bucket size.
+# Sizes are the coordinator's padding buckets (powers of two × tile).
+DEFAULT_SIZES = (64, 128, 256, 512)
+# Ablation artifacts (E8): the paper stages t=32 over 4 iterations (m=8);
+# we also ship m ∈ {4, 16, 32} for the staged variant at one probe size.
+ABLATION_KCHUNKS = (4, 16, 32)
+ABLATION_SIZE = 256
+
+MANIFEST_VERSION = 2
+
+
+def tuned_params(n: int, tile: int, kchunk: int) -> tuple[int, int]:
+    """Per-size tile/k-chunk tuning (§Perf, EXPERIMENTS.md).
+
+    The paper's 32×32/m=8 is sized for the C1060's 16 KB shared memory; the
+    TPU-model adaptation has VMEM-scale (~16 MB) tiles, and on the XLA-CPU
+    substrate grid-step overhead dominates, so larger tiles win heavily
+    (measured 17× at n=512: tile 128/m 32 vs 32/8).  We keep the paper's
+    4-stage structure (m = tile/4) and scale the tile with the problem:
+    tile = clamp(n/2, 32, 128).
+    """
+    t = min(128, max(32, n // 2))
+    t = min(t, n)  # never exceed the matrix
+    return t, max(1, t // 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(variant: str, n: int, tile: int, kchunk: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jax.numpy.float32)
+    fn = apsp_fn(variant, n, tile=tile, kchunk=kchunk)
+    lowered = jax.jit(fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def build(
+    out_dir: pathlib.Path,
+    sizes: tuple[int, ...],
+    variants: tuple[str, ...],
+    tile: int,
+    kchunk: int,
+    with_ablations: bool,
+    verbose: bool = True,
+    tune: bool = False,
+) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+
+    def emit(variant: str, n: int, t: int, m: int, tag: str = ""):
+        name = f"apsp_{variant}_n{n}{tag}.hlo.txt"
+        t0 = time.time()
+        text = lower_one(variant, n, t, m)
+        path = out_dir / name
+        path.write_text(text)
+        entry = {
+            "name": name,
+            "variant": variant,
+            "n": n,
+            "tile": t,
+            "kchunk": m if variant == "staged" else None,
+            "dtype": "f32",
+            "input_shape": [n, n],
+            "output_shape": [n, n],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        entries.append(entry)
+        if verbose:
+            print(
+                f"  {name:40s} {len(text):>10d} chars  {time.time() - t0:6.2f}s",
+                file=sys.stderr,
+            )
+
+    for n in sizes:
+        t, m = tuned_params(n, tile, kchunk) if tune else (tile, kchunk)
+        for variant in variants:
+            emit(variant, n, t, m)
+    if with_ablations and "staged" in variants:
+        # k-chunk sweep at the paper-faithful tile=32 (E8); also emit the
+        # paper's exact 32/8 configuration for tuned builds
+        for m in ABLATION_KCHUNKS:
+            emit("staged", ABLATION_SIZE, 32, m, tag=f"_t32m{m}")
+        if tune:
+            emit("staged", ABLATION_SIZE, 32, 8, tag="_t32m8")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "tile": tile,
+        "kchunk": kchunk,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", type=pathlib.Path)
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(DEFAULT_SIZES))
+    ap.add_argument("--variants", nargs="*", default=list(VARIANTS))
+    ap.add_argument("--tile", type=int, default=DEFAULT_TILE)
+    ap.add_argument("--kchunk", type=int, default=DEFAULT_KCHUNK)
+    ap.add_argument("--no-ablations", action="store_true")
+    ap.add_argument(
+        "--no-tune",
+        action="store_true",
+        help="lower every size at the paper's exact tile/kchunk instead of "
+        "the per-size tuned parameters (see tuned_params)",
+    )
+    args = ap.parse_args()
+
+    for v in args.variants:
+        if v not in VARIANTS:
+            ap.error(f"unknown variant {v!r}; choose from {VARIANTS}")
+    manifest = build(
+        args.out_dir,
+        tuple(args.sizes),
+        tuple(args.variants),
+        args.tile,
+        args.kchunk,
+        with_ablations=not args.no_ablations,
+        tune=not args.no_tune,
+    )
+    print(
+        f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {args.out_dir}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1: Pallas kernels for the staged blocked Floyd-Warshall (Lund & Smith 2010).
+
+Phase kernels mirror the paper's three CUDA kernels per stage; ``fw_naive``
+is the Harish–Narayanan baseline; ``ref`` is the pure-jnp oracle.
+"""
+
+from compile.kernels.fw_naive import naive_jnp, naive_pallas
+from compile.kernels.fw_phase1 import phase1
+from compile.kernels.fw_phase2 import phase2_col, phase2_row
+from compile.kernels.fw_phase3 import phase3_monolithic, phase3_staged
+
+__all__ = [
+    "naive_jnp",
+    "naive_pallas",
+    "phase1",
+    "phase2_col",
+    "phase2_row",
+    "phase3_monolithic",
+    "phase3_staged",
+]

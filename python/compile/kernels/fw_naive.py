@@ -1,0 +1,71 @@
+"""Naive one-task-per-element FW — the Harish & Narayanan baseline (paper §3.1).
+
+H&N launch one CUDA thread per (i, j) element for each k: every task moves
+16 bytes over the global-memory bus (3 loads + 1 store), so the kernel is
+bandwidth-bound.  The XLA analog is a k-sequential whole-matrix rank-1
+relaxation: every k step streams the full matrix HBM→compute→HBM, exactly
+the traffic pattern that saturates the bus in the paper's measurement
+(42 GB/s achieved of 77 GB/s, §5).
+
+Two forms are provided:
+
+``naive_jnp``   — pure jnp/lax (what H&N's grid launch lowers to under XLA).
+``naive_pallas``— the same schedule expressed as a Pallas kernel with k as
+                  the grid: one grid step = one CUDA kernel launch, the full
+                  matrix as the block (no on-chip reuse).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def naive_jnp(w: jax.Array) -> jax.Array:
+    """k-sequential full-matrix relaxation; identical to ref.floyd_warshall
+    but kept here as the lowering target for the 'naive' artifact variant."""
+    n = w.shape[0]
+
+    def body(k, w):
+        row = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=0)
+        col = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=1)
+        return jnp.minimum(w, col + row)
+
+    return jax.lax.fori_loop(0, n, body, w)
+
+
+def _naive_kernel(w_ref, o_ref):
+    """One k iteration over the full matrix.
+
+    The output ref is revisited across the k grid (index_map ignores k), so
+    step k reads the result of step k-1 — the same global-memory round trip
+    per iteration H&N's repeated kernel launches make.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = w_ref[...]
+
+    t = o_ref[...]
+    row = jax.lax.dynamic_slice_in_dim(t, k, 1, axis=0)  # (1, n)
+    col = jax.lax.dynamic_slice_in_dim(t, k, 1, axis=1)  # (n, 1)
+    o_ref[...] = jnp.minimum(t, col + row)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def naive_pallas(w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """H&N-style FW: grid over k, whole matrix per step, no blocking."""
+    n = w.shape[0]
+    assert w.shape == (n, n)
+    return pl.pallas_call(
+        _naive_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((n, n), lambda k: (0, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,47 @@
+"""Phase-1 Pallas kernel: the "independent block" (paper §3.2, Fig. 2 l.3-10).
+
+One stage's diagonal tile is a self-contained FW problem: every task in the
+tile depends only on other tasks in the same tile (or prior stages).  The k
+loop is a true FW recurrence and must run sequentially.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole (s, s) tile is one
+VMEM block; the sequential k loop is a ``fori_loop`` over the value held in
+vector registers — the analog of the CUDA kernel keeping the tile in shared
+memory for 32 sequential relaxation rounds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phase1_kernel(w_ref, o_ref):
+    """In-VMEM FW over one tile.  Sequential k (true dependency chain)."""
+    s = w_ref.shape[0]
+    t = w_ref[...]
+
+    def body(k, t):
+        # w[i, j] <- min(w[i, j], w[i, k] + w[k, j]) over the whole tile at
+        # once: rank-1 (min, +) update, fully vectorized on the VPU.
+        return jnp.minimum(t, t[:, k, None] + t[k, None, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, t)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def phase1(diag: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Run FW to fixed point (over its own k-range) on one diagonal tile.
+
+    ``diag``: (s, s) float32.  Returns the closed tile.
+    """
+    s = diag.shape[0]
+    assert diag.shape == (s, s), f"diag must be square, got {diag.shape}"
+    return pl.pallas_call(
+        _phase1_kernel,
+        out_shape=jax.ShapeDtypeStruct((s, s), diag.dtype),
+        interpret=interpret,
+    )(diag)

@@ -1,0 +1,88 @@
+"""Phase-2 Pallas kernels: the "singly dependent blocks" (paper §3.2).
+
+Each stage has Θ(n/s) singly-dependent tiles aligned with the independent
+(diagonal) block in the i- or j-direction.  Each such tile has one
+dependency in itself and one in the already-final diagonal tile, so its k
+loop is still sequential — but tiles along the panel are independent of each
+other, which is what the grid dimension expresses.
+
+TPU mapping: the diagonal tile rides along in VMEM for every grid step
+(constant index_map) — the analog of the CUDA kernel keeping the independent
+block in shared memory while each thread block owns one panel tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_kernel(d_ref, p_ref, o_ref):
+    """i-aligned (row-panel) tile: w[i,j] <- min(w[i,j], d[i,k] + w[k,j])."""
+    s = d_ref.shape[0]
+    d = d_ref[...]
+
+    def body(k, t):
+        return jnp.minimum(t, d[:, k, None] + t[k, None, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
+
+
+def _col_kernel(d_ref, p_ref, o_ref):
+    """j-aligned (col-panel) tile: w[i,j] <- min(w[i,j], w[i,k] + d[k,j])."""
+    s = d_ref.shape[0]
+    d = d_ref[...]
+
+    def body(k, t):
+        return jnp.minimum(t, t[:, k, None] + d[k, None, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def phase2_row(diag: jax.Array, panel: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Update the full i-aligned row panel.
+
+    ``diag``: (s, s) final independent block; ``panel``: (s, n) rows of W in
+    the stage's k-range.  Grid over the n/s tiles of the panel.
+    """
+    s = diag.shape[0]
+    n = panel.shape[1]
+    assert panel.shape == (s, n) and n % s == 0
+    return pl.pallas_call(
+        _row_kernel,
+        grid=(n // s,),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda j: (0, 0)),  # diag: resident every step
+            pl.BlockSpec((s, s), lambda j: (0, j)),  # panel tile j
+        ],
+        out_specs=pl.BlockSpec((s, s), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), panel.dtype),
+        interpret=interpret,
+    )(diag, panel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def phase2_col(diag: jax.Array, panel: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Update the full j-aligned column panel.
+
+    ``diag``: (s, s) final independent block; ``panel``: (n, s) columns of W
+    in the stage's k-range.  Grid over the n/s tiles of the panel.
+    """
+    s = diag.shape[0]
+    n = panel.shape[0]
+    assert panel.shape == (n, s) and n % s == 0
+    return pl.pallas_call(
+        _col_kernel,
+        grid=(n // s,),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+            pl.BlockSpec((s, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s), panel.dtype),
+        interpret=interpret,
+    )(diag, panel)

@@ -1,0 +1,128 @@
+"""Phase-3 Pallas kernels: the "doubly dependent blocks" — the hot path.
+
+Θ(n²) of the n²/s² tiles per stage are doubly dependent; this phase is Θ(n³)
+of the total Θ(n³) work, so (paper §3.2) "it is the efficiency with which
+this stage is performed that determines the speed of the algorithm".
+
+Both dependencies (the column-panel tile C and the row-panel tile R) are
+final when phase 3 runs, so the k loop is a pure (min, +) matmul and can run
+in any order — the property the paper exploits twice: for the cyclic
+bank-conflict-free schedule, and for staging the k-range.
+
+Two variants, mirroring the paper's §3.2 vs §4:
+
+``phase3_monolithic`` — the Katz–Kider analog.  One grid step per output
+    tile; the full (s, s) C and R tiles are VMEM blocks for the whole step —
+    the analog of 3 tiles × 32² words in shared memory (12320 B/block ⇒ one
+    thread block per SM ⇒ exposed latency).
+
+``phase3_staged`` — the paper's multi-stage kernel.  k becomes the innermost
+    *grid* dimension: each step sees only an (s, m) slice of C and an (m, s)
+    slice of R (the analog of 2·t·m words = 1056 B of shared memory), while
+    the output tile persists in VMEM across the k steps (the analog of the
+    doubly-dependent tile living in registers, §4.1).  The BlockSpec is the
+    HBM↔VMEM schedule the CUDA kernel expressed with __syncthreads() stages.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minplus(c: jax.Array, r: jax.Array) -> jax.Array:
+    """out[i, j] = min_k c[i, k] + r[k, j]   (vectorized, order-free)."""
+    return jnp.min(c[:, :, None] + r[None, :, :], axis=1)
+
+
+def _mono_kernel(w_ref, c_ref, r_ref, o_ref):
+    o_ref[...] = jnp.minimum(w_ref[...], _minplus(c_ref[...], r_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def phase3_monolithic(
+    w: jax.Array,
+    colp: jax.Array,
+    rowp: jax.Array,
+    *,
+    s: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Katz–Kider-style phase 3: full panel tiles resident per grid step.
+
+    ``w``: (n, n) matrix; ``colp``: (n, s) final column panel; ``rowp``:
+    (s, n) final row panel.  Returns the relaxed matrix.
+    """
+    n = w.shape[0]
+    assert w.shape == (n, n) and colp.shape == (n, s) and rowp.shape == (s, n)
+    assert n % s == 0
+    nb = n // s
+    return pl.pallas_call(
+        _mono_kernel,
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda i, j: (i, j)),  # W tile
+            pl.BlockSpec((s, s), lambda i, j: (i, 0)),  # C: col-panel tile, row i
+            pl.BlockSpec((s, s), lambda i, j: (0, j)),  # R: row-panel tile, col j
+        ],
+        out_specs=pl.BlockSpec((s, s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        interpret=interpret,
+    )(w, colp, rowp)
+
+
+def _staged_kernel(w_ref, c_ref, r_ref, o_ref):
+    """One k-stage: relax the resident output tile with an (s,m)x(m,s) slice.
+
+    ``o_ref`` is revisited across the k grid dimension (its index_map ignores
+    k), so it acts as the register accumulator of paper §4.1; the first k
+    step seeds it from W.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = w_ref[...]
+
+    o_ref[...] = jnp.minimum(o_ref[...], _minplus(c_ref[...], r_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "m", "interpret"))
+def phase3_staged(
+    w: jax.Array,
+    colp: jax.Array,
+    rowp: jax.Array,
+    *,
+    s: int = 32,
+    m: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """The paper's staged phase 3 (§4.2): k as the innermost grid dimension.
+
+    Per grid step only an (s, m) slice of the column panel and an (m, s)
+    slice of the row panel are resident — 2·s·m words, the paper's 1056-byte
+    shared-memory footprint — while the (s, s) output tile persists across
+    the s/m stages (register-resident tile, §4.1).
+
+    ``m`` is the k-chunk; the paper uses s=32 staged over 4 iterations
+    (m=8).  Ablatable via the ``m`` argument (benches E8).
+    """
+    n = w.shape[0]
+    assert w.shape == (n, n) and colp.shape == (n, s) and rowp.shape == (s, n)
+    assert n % s == 0 and s % m == 0
+    nb, nk = n // s, s // m
+    return pl.pallas_call(
+        _staged_kernel,
+        grid=(nb, nb, nk),  # k innermost: output tile stays resident
+        in_specs=[
+            pl.BlockSpec((s, s), lambda i, j, k: (i, j)),  # W tile (read at k=0)
+            pl.BlockSpec((s, m), lambda i, j, k: (i, k)),  # C slice
+            pl.BlockSpec((m, s), lambda i, j, k: (k, j)),  # R slice
+        ],
+        out_specs=pl.BlockSpec((s, s), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        interpret=interpret,
+    )(w, colp, rowp)

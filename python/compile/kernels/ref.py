@@ -1,0 +1,136 @@
+"""Pure-jnp correctness oracles for the Floyd-Warshall kernels.
+
+Everything in this module is *reference* code: simple, obviously-correct
+implementations of the recurrences the Pallas kernels (fw_phase*.py) and the
+blocked composition (model.py) must match.  Used only by pytest — never
+lowered into artifacts.
+
+The FW recurrence (paper Fig. 1):
+
+    w[i, j] <- min(w[i, j], w[i, k] + w[k, j])   for k = 0 .. n-1 (sequential)
+
+and its blocked decomposition (paper Fig. 2): per stage ``b`` process the
+independent (diagonal) block, then the singly-dependent row/column panels,
+then the doubly-dependent remainder, where only the last has a reorderable
+(min-plus matmul) k loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def floyd_warshall(w: jax.Array) -> jax.Array:
+    """Textbook FW over a dense (n, n) distance matrix.  O(n^3), jittable."""
+    n = w.shape[0]
+
+    def body(k, w):
+        row = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=0)  # (1, n)
+        col = jax.lax.dynamic_slice_in_dim(w, k, 1, axis=1)  # (n, 1)
+        return jnp.minimum(w, col + row)
+
+    return jax.lax.fori_loop(0, n, body, w)
+
+
+def floyd_warshall_numpy(w: np.ndarray) -> np.ndarray:
+    """Loop-over-k FW in numpy.  The slowest, most obviously correct oracle."""
+    w = w.copy()
+    n = w.shape[0]
+    for k in range(n):
+        w = np.minimum(w, w[:, k : k + 1] + w[k : k + 1, :])
+    return w
+
+
+def min_plus_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(min, +) matrix product: out[i, j] = min_k a[i, k] + b[k, j].
+
+    This is the order-free phase-3 inner computation (paper §3.2: "these
+    tasks may be performed in any order").
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def fw_tile_inplace(t: jax.Array) -> jax.Array:
+    """Phase-1 recurrence: full FW restricted to one tile (sequential k)."""
+    s = t.shape[0]
+
+    def body(k, t):
+        return jnp.minimum(t, t[:, k, None] + t[k, None, :])
+
+    return jax.lax.fori_loop(0, s, body, t)
+
+
+def fw_row_panel(diag: jax.Array, panel: jax.Array) -> jax.Array:
+    """Phase-2 recurrence for an i-aligned (row) panel.
+
+    ``panel`` is (s, n): the rows of W in the current k-range.  Dependency
+    w[i, k] lives in the (final) diagonal tile, w[k, j] in the panel itself,
+    so k must advance sequentially (paper Fig. 2 lines 12-21).
+    """
+    s = diag.shape[0]
+
+    def body(k, p):
+        return jnp.minimum(p, diag[:, k, None] + p[k, None, :])
+
+    return jax.lax.fori_loop(0, s, body, panel)
+
+
+def fw_col_panel(diag: jax.Array, panel: jax.Array) -> jax.Array:
+    """Phase-2 recurrence for a j-aligned (column) panel.
+
+    ``panel`` is (n, s): the columns of W in the current k-range.  Dependency
+    w[i, k] is in the panel itself, w[k, j] in the diagonal tile
+    (paper Fig. 2 lines 22-31).
+    """
+    s = diag.shape[0]
+
+    def body(k, p):
+        return jnp.minimum(p, p[:, k, None] + diag[k, None, :])
+
+    return jax.lax.fori_loop(0, s, body, panel)
+
+
+def blocked_floyd_warshall(w: jax.Array, s: int) -> jax.Array:
+    """Reference blocked FW (paper Fig. 2) built from the recurrences above.
+
+    Python-level stage loop (unrolled at trace time); each phase uses the
+    reference tile/panel functions.  Phase 3 relaxes the *entire* matrix with
+    the final panels — re-relaxing panel elements is a no-op because min-plus
+    relaxation against valid path lengths is conservative (DESIGN.md,
+    "Algorithm correctness note").
+    """
+    n = w.shape[0]
+    assert n % s == 0, f"n={n} not a multiple of tile size s={s}"
+    for b in range(n // s):
+        ks = b * s
+        diag = fw_tile_inplace(w[ks : ks + s, ks : ks + s])
+        w = w.at[ks : ks + s, ks : ks + s].set(diag)
+        rowp = fw_row_panel(diag, w[ks : ks + s, :])
+        w = w.at[ks : ks + s, :].set(rowp)
+        colp = fw_col_panel(diag, w[:, ks : ks + s])
+        w = w.at[:, ks : ks + s].set(colp)
+        w = jnp.minimum(w, min_plus_matmul(colp, rowp))
+    return w
+
+
+def random_distance_matrix(
+    n: int,
+    *,
+    density: float = 0.4,
+    key: jax.Array | None = None,
+    seed: int = 0,
+    max_weight: float = 10.0,
+) -> jax.Array:
+    """Random directed-graph distance matrix: diag 0, ``density`` fraction of
+    finite off-diagonal edges, rest +inf.  Used by tests and benches.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    kw, km = jax.random.split(key)
+    weights = jax.random.uniform(kw, (n, n), minval=0.1, maxval=max_weight)
+    mask = jax.random.uniform(km, (n, n)) < density
+    w = jnp.where(mask, weights, jnp.inf)
+    w = w.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return w.astype(jnp.float32)

@@ -1,0 +1,104 @@
+"""L2: the blocked Floyd-Warshall computation graph (paper Fig. 2 on CUDA →
+stage loop over Pallas phase kernels).
+
+``apsp(w, variant=...)`` is the function the AOT path lowers: a
+``lax.fori_loop`` over the n/s stages, each stage slicing out the diagonal
+tile and the two panels (static shapes, dynamic offsets), running the three
+phase kernels, and writing the results back.  The stage index is a traced
+scalar — the slicing happens *outside* the Pallas calls so every
+``pallas_call`` sees static shapes and static BlockSpecs.
+
+Variants (= rows of the paper's Table 1 that run on the device):
+
+  ``naive``    Harish & Narayanan: k-sequential full-matrix relaxation.
+  ``blocked``  Katz & Kider: blocked, monolithic phase-3 kernel.
+  ``staged``   this paper: blocked with the multi-stage phase-3 kernel.
+
+Python in this module runs at build time only; the lowered HLO is what the
+Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from compile.kernels import (
+    naive_jnp,
+    phase1,
+    phase2_col,
+    phase2_row,
+    phase3_monolithic,
+    phase3_staged,
+)
+
+VARIANTS = ("naive", "blocked", "staged")
+DEFAULT_TILE = 32
+DEFAULT_KCHUNK = 8
+
+
+def _stage_body(b, w, *, n: int, s: int, m: int, variant: str, interpret: bool):
+    """One stage of blocked FW: phases 1, 2 (row+col), 3."""
+    ks = b * s
+    # Phase 1: close the independent (diagonal) block.
+    diag = jax.lax.dynamic_slice(w, (ks, ks), (s, s))
+    diag = phase1(diag, interpret=interpret)
+    w = jax.lax.dynamic_update_slice(w, diag, (ks, ks))
+    # Phase 2: singly-dependent panels (sequential k against the final diag).
+    rowp = jax.lax.dynamic_slice(w, (ks, 0), (s, n))
+    rowp = phase2_row(diag, rowp, interpret=interpret)
+    w = jax.lax.dynamic_update_slice(w, rowp, (ks, 0))
+    colp = jax.lax.dynamic_slice(w, (0, ks), (n, s))
+    colp = phase2_col(diag, colp, interpret=interpret)
+    w = jax.lax.dynamic_update_slice(w, colp, (0, ks))
+    # Phase 3: doubly-dependent relaxation over the whole matrix (re-relaxing
+    # the final panels is a no-op — DESIGN.md "Algorithm correctness note").
+    if variant == "staged":
+        w = phase3_staged(w, colp, rowp, s=s, m=m, interpret=interpret)
+    else:
+        w = phase3_monolithic(w, colp, rowp, s=s, interpret=interpret)
+    return w
+
+
+@functools.partial(
+    jax.jit, static_argnames=("variant", "tile", "kchunk", "interpret")
+)
+def apsp(
+    w: jax.Array,
+    *,
+    variant: str = "staged",
+    tile: int = DEFAULT_TILE,
+    kchunk: int = DEFAULT_KCHUNK,
+    interpret: bool = True,
+) -> jax.Array:
+    """All-pairs shortest paths over a dense (n, n) f32 distance matrix.
+
+    Input convention (matches the Rust side): ``w[i][i] == 0``, missing edges
+    are ``+inf``.  ``n`` must be a multiple of ``tile`` (the Rust coordinator
+    pads with unreachable vertices).
+    """
+    n = w.shape[0]
+    assert w.shape == (n, n), f"square matrix required, got {w.shape}"
+    if variant == "naive":
+        return naive_jnp(w)
+    assert variant in VARIANTS, f"unknown variant {variant!r}"
+    assert n % tile == 0, f"n={n} not a multiple of tile={tile}"
+    body = functools.partial(
+        _stage_body, n=n, s=tile, m=kchunk, variant=variant, interpret=interpret
+    )
+    return jax.lax.fori_loop(0, n // tile, body, w)
+
+
+def apsp_fn(variant: str, n: int, tile: int = DEFAULT_TILE, kchunk: int = DEFAULT_KCHUNK):
+    """Return a single-argument jittable ``f(w) -> (dist,)`` for AOT lowering.
+
+    The 1-tuple return matches the rust loader's ``to_tuple1()`` unwrap
+    (HLO text is lowered with ``return_tuple=True``).
+    """
+
+    def fn(w):
+        return (apsp(w, variant=variant, tile=tile, kchunk=kchunk),)
+
+    fn.__name__ = f"apsp_{variant}_{n}"
+    return fn

@@ -1,0 +1,24 @@
+"""Shared fixtures for the kernel/model test suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xF10D)
+
+
+def make_matrix(n: int, seed: int = 0, density: float = 0.4) -> np.ndarray:
+    """Convenience wrapper returning a numpy f32 distance matrix."""
+    # np.array (not asarray): jax arrays view as read-only; tests mutate
+    return np.array(ref.random_distance_matrix(n, seed=seed, density=density))
+
+
+def gold(w: np.ndarray) -> np.ndarray:
+    """Ground-truth APSP via the numpy oracle."""
+    return ref.floyd_warshall_numpy(w)

@@ -1,0 +1,157 @@
+"""L2 model tests: the full blocked-FW composition vs the oracle, across
+variants, tile sizes, k-chunks, and adversarial weight patterns."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import VARIANTS, apsp, apsp_fn
+from tests.conftest import gold, make_matrix
+
+
+class TestVariantsMatchOracle:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("n", [32, 64, 128])
+    def test_random_graphs(self, variant, n):
+        w = make_matrix(n, seed=n * 3)
+        out = np.asarray(apsp(jnp.asarray(w), variant=variant))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_larger_probe(self, variant):
+        w = make_matrix(256, seed=99, density=0.2)
+        out = np.asarray(apsp(jnp.asarray(w), variant=variant))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6, atol=1e-6)
+
+    def test_variants_agree(self):
+        w = jnp.asarray(make_matrix(128, seed=5))
+        naive, blocked, staged = (np.asarray(apsp(w, variant=v)) for v in VARIANTS)
+        # blocked and staged relax the same (i,k,j) sums, only the min order
+        # differs — min reordering is exact on floats, so bitwise equal
+        np.testing.assert_array_equal(blocked, staged)
+        # naive relaxes through different intermediate values (per-k global
+        # updates), so sums round differently: allclose, not bitwise
+        np.testing.assert_allclose(naive, blocked, rtol=1e-5, atol=1e-6)
+
+
+class TestTileAndChunkParameters:
+    @pytest.mark.parametrize("tile", [16, 32, 64])
+    def test_blocked_tile_sizes(self, tile):
+        w = make_matrix(128, seed=tile)
+        out = np.asarray(apsp(jnp.asarray(w), variant="blocked", tile=tile))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6)
+
+    @pytest.mark.parametrize("tile,kchunk", [(16, 4), (32, 4), (32, 8), (32, 16), (32, 32), (64, 8)])
+    def test_staged_chunkings(self, tile, kchunk):
+        w = make_matrix(128, seed=tile + kchunk)
+        out = np.asarray(apsp(jnp.asarray(w), variant="staged", tile=tile, kchunk=kchunk))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6)
+
+    def test_single_block_matrix(self):
+        # n == tile: one stage, no doubly-dependent blocks at all
+        w = make_matrix(32, seed=0)
+        out = np.asarray(apsp(jnp.asarray(w), variant="staged", tile=32))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6)
+
+    def test_rejects_non_multiple(self):
+        w = jnp.zeros((48, 48), dtype=jnp.float32)
+        with pytest.raises(AssertionError):
+            apsp(w, variant="staged", tile=32)
+
+
+class TestStructuredGraphs:
+    def _run_all(self, w: np.ndarray):
+        g = gold(w)
+        for v in VARIANTS:
+            np.testing.assert_allclose(
+                np.asarray(apsp(jnp.asarray(w), variant=v)), g, rtol=1e-6, atol=1e-6
+            ), v
+
+    def test_ring(self):
+        n = 64
+        w = np.full((n, n), np.inf, dtype=np.float32)
+        np.fill_diagonal(w, 0.0)
+        for i in range(n):
+            w[i, (i + 1) % n] = 1.0
+        self._run_all(w)
+
+    def test_star(self):
+        n = 64
+        w = np.full((n, n), np.inf, dtype=np.float32)
+        np.fill_diagonal(w, 0.0)
+        w[0, 1:] = 2.0
+        w[1:, 0] = 3.0
+        self._run_all(w)
+
+    def test_two_components(self):
+        n = 64
+        w = make_matrix(n, seed=8, density=0.5)
+        w[: n // 2, n // 2 :] = np.inf
+        w[n // 2 :, : n // 2] = np.inf
+        out = np.asarray(apsp(jnp.asarray(w), variant="staged"))
+        assert np.isinf(out[: n // 2, n // 2 :]).all()
+        assert np.isinf(out[n // 2 :, : n // 2]).all()
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6)
+
+    def test_padded_matrix_unaffected(self):
+        # padding convention of the Rust coordinator: extra unreachable
+        # vertices (inf rows/cols, 0 diag) must not change real distances
+        n, pad = 48, 64
+        w = make_matrix(n, seed=12)
+        wp = np.full((pad, pad), np.inf, dtype=np.float32)
+        np.fill_diagonal(wp, 0.0)
+        wp[:n, :n] = w
+        out = np.asarray(apsp(jnp.asarray(wp), variant="staged"))
+        np.testing.assert_allclose(out[:n, :n], gold(w), rtol=1e-6)
+        assert np.isinf(out[n:, :n]).all() and np.isinf(out[:n, n:]).all()
+
+    def test_negative_weights_dag(self):
+        n = 64
+        w = np.full((n, n), np.inf, dtype=np.float32)
+        np.fill_diagonal(w, 0.0)
+        rng = np.random.default_rng(4)
+        for i in range(n):
+            for j in range(i + 1, n):
+                if rng.random() < 0.2:
+                    w[i, j] = rng.uniform(-5.0, 5.0)  # forward edges only: no cycles
+        self._run_all(w)
+
+
+class TestFixpoint:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_idempotent(self, variant):
+        # approximate under f32 (see test_ref.TestFixpointProperties)
+        w = jnp.asarray(make_matrix(64, seed=21))
+        once = np.asarray(apsp(w, variant=variant))
+        twice = np.asarray(apsp(jnp.asarray(once), variant=variant))
+        assert (twice <= once).all()
+        np.testing.assert_allclose(twice, once, rtol=1e-6)
+
+    def test_triangle_inequality(self):
+        d = np.asarray(apsp(jnp.asarray(make_matrix(96, seed=33)), variant="staged"))
+        viol = d[:, None, :] > (d[:, :, None] + d[None, :, :]) + 1e-4
+        assert not viol.any()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.05, 0.9))
+    def test_hypothesis_staged_vs_oracle(self, seed, density):
+        w = make_matrix(64, seed=seed, density=density)
+        out = np.asarray(apsp(jnp.asarray(w), variant="staged"))
+        np.testing.assert_allclose(out, gold(w), rtol=1e-6, atol=1e-6)
+
+
+class TestAotFn:
+    def test_apsp_fn_returns_tuple(self):
+        w = jnp.asarray(make_matrix(32, seed=2))
+        fn = apsp_fn("staged", 32)
+        out = fn(w)
+        assert isinstance(out, tuple) and len(out) == 1
+        np.testing.assert_allclose(
+            np.asarray(out[0]), gold(np.asarray(w)), rtol=1e-6
+        )
+
+    def test_apsp_fn_name(self):
+        assert apsp_fn("blocked", 128).__name__ == "apsp_blocked_128"

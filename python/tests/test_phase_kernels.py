@@ -1,0 +1,215 @@
+"""Pallas phase kernels vs the pure-jnp reference recurrences.
+
+These are the core L1 correctness tests: every kernel is checked against the
+matching ``ref`` function over deterministic sizes and hypothesis-driven
+random sweeps (shapes, seeds, densities, negative weights).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    naive_jnp,
+    naive_pallas,
+    phase1,
+    phase2_col,
+    phase2_row,
+    phase3_monolithic,
+    phase3_staged,
+    ref,
+)
+from tests.conftest import gold, make_matrix
+
+
+def _tile(n: int, seed: int, density: float = 0.5) -> jnp.ndarray:
+    return jnp.asarray(make_matrix(n, seed=seed, density=density))
+
+
+class TestPhase1:
+    @pytest.mark.parametrize("s", [8, 16, 32, 64])
+    def test_matches_ref(self, s):
+        t = _tile(s, seed=s)
+        np.testing.assert_allclose(
+            np.asarray(phase1(t)), np.asarray(ref.fw_tile_inplace(t)), rtol=1e-6
+        )
+
+    def test_is_full_fw_on_tile(self):
+        # phase1 on an (s,s) tile IS the complete APSP of that subgraph
+        t = _tile(32, seed=1)
+        np.testing.assert_allclose(np.asarray(phase1(t)), gold(np.asarray(t)), rtol=1e-6)
+
+    def test_idempotent(self):
+        # approximate under f32 (see test_ref.TestFixpointProperties)
+        t = phase1(_tile(32, seed=2))
+        again = np.asarray(phase1(t))
+        assert (again <= np.asarray(t)).all()
+        np.testing.assert_allclose(again, np.asarray(t), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.05, 1.0))
+    def test_hypothesis_sweep(self, seed, density):
+        t = _tile(16, seed=seed, density=density)
+        np.testing.assert_allclose(
+            np.asarray(phase1(t)), gold(np.asarray(t)), rtol=1e-6
+        )
+
+
+class TestPhase2:
+    @pytest.mark.parametrize("s,n", [(16, 64), (32, 128), (32, 32)])
+    def test_row_matches_ref(self, s, n):
+        diag = phase1(_tile(s, seed=s))
+        panel = jnp.asarray(make_matrix(n, seed=n)[:s, :])
+        np.testing.assert_allclose(
+            np.asarray(phase2_row(diag, panel)),
+            np.asarray(ref.fw_row_panel(diag, panel)),
+            rtol=1e-6,
+        )
+
+    @pytest.mark.parametrize("s,n", [(16, 64), (32, 128), (32, 32)])
+    def test_col_matches_ref(self, s, n):
+        diag = phase1(_tile(s, seed=s + 1))
+        panel = jnp.asarray(make_matrix(n, seed=n + 1)[:, :s])
+        np.testing.assert_allclose(
+            np.asarray(phase2_col(diag, panel)),
+            np.asarray(ref.fw_col_panel(diag, panel)),
+            rtol=1e-6,
+        )
+
+    def test_row_panel_tiles_independent(self):
+        # permuting which grid tile holds which columns must not interact:
+        # process two disjoint panels separately == as one wide panel
+        s, n = 16, 64
+        diag = phase1(_tile(s, seed=7))
+        panel = jnp.asarray(make_matrix(n, seed=8)[:s, :])
+        whole = np.asarray(phase2_row(diag, panel))
+        left = np.asarray(phase2_row(diag, panel[:, : n // 2]))
+        right = np.asarray(phase2_row(diag, panel[:, n // 2 :]))
+        np.testing.assert_array_equal(whole, np.concatenate([left, right], axis=1))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_row_col(self, seed):
+        s, n = 16, 48
+        diag = phase1(_tile(s, seed=seed))
+        rowp = jnp.asarray(make_matrix(n, seed=seed + 1)[:s, :])
+        colp = jnp.asarray(make_matrix(n, seed=seed + 2)[:, :s])
+        np.testing.assert_allclose(
+            np.asarray(phase2_row(diag, rowp)),
+            np.asarray(ref.fw_row_panel(diag, rowp)),
+            rtol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(phase2_col(diag, colp)),
+            np.asarray(ref.fw_col_panel(diag, colp)),
+            rtol=1e-6,
+        )
+
+
+class TestPhase3:
+    def _setup(self, n, s, seed):
+        w = _tile(n, seed=seed)
+        colp = jnp.asarray(make_matrix(n, seed=seed + 1)[:, :s])
+        rowp = jnp.asarray(make_matrix(n, seed=seed + 2)[:s, :])
+        expect = jnp.minimum(w, ref.min_plus_matmul(colp, rowp))
+        return w, colp, rowp, np.asarray(expect)
+
+    @pytest.mark.parametrize("n,s", [(64, 16), (64, 32), (128, 32), (32, 32)])
+    def test_monolithic_matches_ref(self, n, s):
+        w, colp, rowp, expect = self._setup(n, s, seed=n + s)
+        np.testing.assert_allclose(
+            np.asarray(phase3_monolithic(w, colp, rowp, s=s)), expect, rtol=1e-6
+        )
+
+    @pytest.mark.parametrize(
+        "n,s,m", [(64, 16, 4), (64, 32, 8), (128, 32, 8), (64, 32, 32), (64, 32, 4)]
+    )
+    def test_staged_matches_ref(self, n, s, m):
+        w, colp, rowp, expect = self._setup(n, s, seed=n + s + m)
+        np.testing.assert_allclose(
+            np.asarray(phase3_staged(w, colp, rowp, s=s, m=m)), expect, rtol=1e-6
+        )
+
+    def test_staged_equals_monolithic_all_chunks(self):
+        # the paper's staging claim: k-chunking must not change results
+        n, s = 64, 32
+        w, colp, rowp, _ = self._setup(n, s, seed=42)
+        mono = np.asarray(phase3_monolithic(w, colp, rowp, s=s))
+        for m in (1, 2, 4, 8, 16, 32):
+            staged = np.asarray(phase3_staged(w, colp, rowp, s=s, m=m))
+            np.testing.assert_array_equal(staged, mono), f"m={m}"
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.sampled_from([2, 4, 8, 16]),
+        density=st.floats(0.05, 1.0),
+    )
+    def test_hypothesis_staged(self, seed, m, density):
+        n, s = 32, 16
+        w = _tile(n, seed=seed, density=density)
+        colp = jnp.asarray(make_matrix(n, seed=seed + 1, density=density)[:, :s])
+        rowp = jnp.asarray(make_matrix(n, seed=seed + 2, density=density)[:s, :])
+        expect = np.asarray(jnp.minimum(w, ref.min_plus_matmul(colp, rowp)))
+        np.testing.assert_allclose(
+            np.asarray(phase3_staged(w, colp, rowp, s=s, m=m)), expect, rtol=1e-6
+        )
+
+
+class TestNaive:
+    @pytest.mark.parametrize("n", [16, 64, 128])
+    def test_jnp_matches_oracle(self, n):
+        w = _tile(n, seed=n)
+        np.testing.assert_allclose(
+            np.asarray(naive_jnp(w)), gold(np.asarray(w)), rtol=1e-6
+        )
+
+    @pytest.mark.parametrize("n", [16, 64])
+    def test_pallas_matches_oracle(self, n):
+        w = _tile(n, seed=n + 1)
+        np.testing.assert_allclose(
+            np.asarray(naive_pallas(w)), gold(np.asarray(w)), rtol=1e-6
+        )
+
+    def test_pallas_matches_jnp_exactly(self):
+        w = _tile(64, seed=3)
+        np.testing.assert_array_equal(np.asarray(naive_pallas(w)), np.asarray(naive_jnp(w)))
+
+
+class TestInfinityAndEdgeCases:
+    def test_all_inf_offdiag(self):
+        n = 32
+        w = jnp.full((n, n), jnp.inf, dtype=jnp.float32)
+        w = w.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+        out = np.asarray(phase1(w))
+        np.testing.assert_array_equal(out, np.asarray(w))
+
+    def test_inf_plus_inf_no_nan(self):
+        # inf + inf must stay inf (never NaN) through the min-plus kernels
+        n, s = 32, 16
+        w = jnp.full((n, n), jnp.inf, dtype=jnp.float32)
+        colp = jnp.full((n, s), jnp.inf, dtype=jnp.float32)
+        rowp = jnp.full((s, n), jnp.inf, dtype=jnp.float32)
+        out = np.asarray(phase3_staged(w, colp, rowp, s=s, m=4))
+        assert np.isinf(out).all() and not np.isnan(out).any()
+
+    def test_negative_weights(self):
+        n = 32
+        w = make_matrix(n, seed=77)
+        # shift finite off-diagonal weights negative but keep diag 0 and no
+        # negative cycles (upper-triangular negativity only → DAG-like)
+        neg = w.copy()
+        iu = np.triu_indices(n, 1)
+        finite = np.isfinite(neg[iu])
+        neg[iu] = np.where(finite, neg[iu] - 5.0, neg[iu])
+        out = np.asarray(phase1(jnp.asarray(neg[:32, :32])))
+        np.testing.assert_allclose(out, gold(neg[:32, :32]), rtol=1e-5)
+
+    def test_zero_weight_edges(self):
+        n = 16
+        w = np.zeros((n, n), dtype=np.float32)
+        out = np.asarray(phase1(jnp.asarray(w)))
+        np.testing.assert_array_equal(out, w)

@@ -1,0 +1,92 @@
+//! E5/E8 — ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. **§4 speedup decomposition** (simulated): instruction optimization
+//!    and staging toggled independently, plus the cyclic-k bank-conflict
+//!    fix — the factors whose product is the paper's ≈5.2×.
+//! 2. **k-chunk sweep** (measured): staged artifacts lowered with
+//!    m ∈ {4, 8, 16, 32} at n=256 — the paper stages t=32 over 4
+//!    iterations (m=8); this measures that choice on the XLA substrate.
+//! 3. **CPU tile sweep**: blocked FW with s ∈ {8…128} — the cache-blocking
+//!    curve (Venkataraman et al. [4]) that motivated blocking in the first
+//!    place.
+//! 4. **Thread scaling**: the parallel phase-3 fan-out.
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod common;
+
+use fw_stage::graph::generators;
+use fw_stage::perf::bench;
+use fw_stage::runtime::Manifest;
+use fw_stage::simulator::table::render_ablation;
+use fw_stage::{apsp, perf};
+
+fn main() {
+    common::banner("E5 — §4 speedup decomposition (simulated C1060)");
+    print!("{}", render_ablation(16384));
+
+    common::banner("E8 — staged k-chunk sweep (measured, n=256 artifacts)");
+    match common::artifact_dir().map(|d| (Manifest::load(&d), d)) {
+        Some((Ok(manifest), dir)) => {
+            let pool = fw_stage::runtime::ExecutorPool::open(&dir).expect("pool");
+            let g = generators::erdos_renyi(256, 0.3, 7);
+            let cfg = common::config_for(256);
+            // kchunk ablation artifacts carry the _m tag in their names
+            let mut entries: Vec<_> = manifest
+                .entries
+                .iter()
+                .filter(|e| e.variant == "staged" && e.n == 256)
+                .collect();
+            entries.sort_by_key(|e| e.kchunk);
+            for entry in entries {
+                let model = pool.model_for_entry(entry).expect("compile");
+                let padded = g.padded(entry.n);
+                model.run(&padded).expect("warm");
+                let r = bench(&entry.name, &cfg, || {
+                    perf::black_box(model.run(&padded).expect("run"));
+                });
+                println!(
+                    "m={:<3} ({:<32}) median {}",
+                    entry.kchunk.unwrap_or(0),
+                    entry.name,
+                    perf::format_time(r.median_s)
+                );
+            }
+        }
+        _ => println!("(artifacts not built — skipped)"),
+    }
+
+    common::banner("E8 — CPU blocked-FW tile sweep (cache blocking)");
+    let n = if common::fast_mode() { 256 } else { 512 };
+    let g = generators::erdos_renyi(n, 0.3, 13);
+    let cfg = common::config_for(n);
+    let naive = bench("naive", &cfg, || {
+        perf::black_box(apsp::naive::solve(&g));
+    });
+    println!(
+        "n={n}: naive {}  (baseline)",
+        perf::format_time(naive.median_s)
+    );
+    for s in [8usize, 16, 32, 64, 128] {
+        let r = bench("blocked", &cfg, || {
+            perf::black_box(apsp::blocked::solve(&g, s));
+        });
+        println!(
+            "s={s:<4} median {}  ({:.2}× vs naive)",
+            perf::format_time(r.median_s),
+            naive.median_s / r.median_s
+        );
+    }
+
+    common::banner("E8 — parallel phase-3 thread scaling");
+    for threads in [1usize, 2, 4, 8] {
+        let r = bench("parallel", &cfg, || {
+            perf::black_box(apsp::parallel::solve(&g, 32, threads));
+        });
+        println!(
+            "threads={threads:<3} median {}  ({:.2}× vs naive)",
+            perf::format_time(r.median_s),
+            naive.median_s / r.median_s
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Shared helpers for the bench binaries (`cargo bench` targets with
+//! `harness = false`, driven by `fw_stage::perf`).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use fw_stage::perf::BenchConfig;
+use fw_stage::runtime::ExecutorPool;
+
+/// Artifact directory if built (benches degrade to simulator/CPU-only
+/// sections when missing).
+#[allow(dead_code)]
+pub fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[allow(dead_code)]
+pub fn open_pool() -> Option<ExecutorPool> {
+    let dir = artifact_dir()?;
+    match ExecutorPool::open(&dir) {
+        Ok(pool) => Some(pool),
+        Err(e) => {
+            eprintln!("WARN: artifacts present but pool failed to open: {e:#}");
+            None
+        }
+    }
+}
+
+/// Config scaled to the expected per-iteration cost so total bench time
+/// stays bounded (device solves at n=512 run ~2 s each).
+#[allow(dead_code)]
+pub fn config_for(n: usize) -> BenchConfig {
+    if n >= 512 {
+        BenchConfig {
+            measure_time: Duration::from_secs(6),
+            warmup_time: Duration::from_millis(10),
+            max_samples: 3,
+            min_samples: 2,
+        }
+    } else if n >= 256 {
+        BenchConfig {
+            measure_time: Duration::from_secs(3),
+            warmup_time: Duration::from_millis(50),
+            max_samples: 8,
+            min_samples: 3,
+        }
+    } else {
+        BenchConfig {
+            measure_time: Duration::from_secs(1),
+            warmup_time: Duration::from_millis(100),
+            max_samples: 30,
+            min_samples: 5,
+        }
+    }
+}
+
+/// `FW_BENCH_FAST=1` trims sweeps for CI-style smoke runs.
+#[allow(dead_code)]
+pub fn fast_mode() -> bool {
+    std::env::var("FW_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[allow(dead_code)]
+pub fn banner(title: &str) {
+    println!();
+    println!("{}", "=".repeat(78));
+    println!("{title}");
+    println!("{}", "=".repeat(78));
+}

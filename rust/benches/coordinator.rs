@@ -1,0 +1,160 @@
+//! L3 coordinator benchmarks: request-path overhead, cache-hit latency,
+//! and block-diagonal batching throughput (the §Perf targets of DESIGN.md).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fw_stage::coordinator::{client::Client, server::Server, Config, Coordinator, Request};
+use fw_stage::graph::generators;
+use fw_stage::perf::{bench, black_box, format_time};
+use fw_stage::util::stats::Samples;
+
+fn main() {
+    let Some(dir) = common::artifact_dir() else {
+        println!("(artifacts not built — coordinator benches need `make artifacts`)");
+        return;
+    };
+
+    // ---- request-path overhead: engine round trip vs direct pool call ----
+    common::banner("coordinator overhead — direct pool vs engine round-trip vs TCP");
+    let n = 128;
+    let g = generators::erdos_renyi(n, 0.3, 5);
+    let cfg = common::config_for(n);
+
+    let pool = fw_stage::runtime::ExecutorPool::open(&dir).expect("pool");
+    pool.solve("staged", &g).expect("warm");
+    let direct = bench("direct pool.solve", &cfg, || {
+        black_box(pool.solve("staged", &g).expect("solve"));
+    });
+    println!("direct pool.solve      {}", format_time(direct.median_s));
+    drop(pool);
+
+    let mut config = Config::new(&dir);
+    config.cache_capacity = 64;
+    config.engine.batch_window = Duration::from_millis(0);
+    let coord = Arc::new(Coordinator::start(config).expect("coordinator"));
+    coord.solve_graph(&g, "staged").expect("warm");
+    let engine = bench("coordinator.solve", &cfg, || {
+        black_box(
+            coord
+                .solve(&Request {
+                    id: 0,
+                    graph: g.clone(),
+                    variant: "staged".into(),
+                    no_cache: true,
+                })
+                .expect("solve"),
+        );
+    });
+    println!(
+        "coordinator.solve      {}   (+{:.1}% vs direct)",
+        format_time(engine.median_s),
+        (engine.median_s / direct.median_s - 1.0) * 100.0
+    );
+
+    let server = Server::spawn(coord.clone(), "127.0.0.1:0").expect("server");
+    let addr = server.addr().to_string();
+    let mut client = Client::connect(&addr).expect("client");
+    // different seeds to dodge the cache; measure full TCP round trip
+    let mut tcp = Samples::new();
+    for i in 0..10 {
+        let g = generators::erdos_renyi(n, 0.3, 1000 + i);
+        let t0 = Instant::now();
+        client.solve(&g, "staged").expect("tcp solve");
+        tcp.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "TCP client.solve       {}   (+{:.1}% vs direct; includes JSON codec)",
+        format_time(tcp.median()),
+        (tcp.median() / direct.median_s - 1.0) * 100.0
+    );
+
+    // ---- cache hit path ----
+    common::banner("cache-hit latency");
+    let g_cached = generators::erdos_renyi(n, 0.3, 42);
+    coord.solve_graph(&g_cached, "staged").expect("prime cache");
+    let hit = bench("cache hit", &common::config_for(64), || {
+        black_box(
+            coord
+                .solve(&Request {
+                    id: 0,
+                    graph: g_cached.clone(),
+                    variant: "staged".into(),
+                    no_cache: false,
+                })
+                .expect("hit"),
+        );
+    });
+    println!(
+        "cache hit              {}   ({:.0}× faster than device solve)",
+        format_time(hit.median_s),
+        engine.median_s / hit.median_s
+    );
+
+    // ---- batching throughput: packable small graphs vs sequential ----
+    // n=30 graphs share the 64 bucket two-at-a-time: the cost-model packer
+    // halves the number of device calls (see batcher.rs for why packing
+    // never escalates to a larger bucket)
+    common::banner("block-diagonal batching — 8 × n=30 concurrent requests");
+    let graphs: Vec<_> = (0..8u64)
+        .map(|i| generators::erdos_renyi(30, 0.35, 2000 + i))
+        .collect();
+
+    // one coordinator for both modes: device route forced (cpu_threshold 0)
+    let mut config = Config::new(&dir);
+    config.engine.batch_window = Duration::from_millis(5);
+    config.router.cpu_threshold = 0; // small graphs must reach the engine
+    config.cache_capacity = 0;
+    let batching = Arc::new(Coordinator::start(config).expect("coordinator"));
+    batching
+        .solve_graph(&graphs[0], "staged")
+        .expect("warm batching coordinator");
+
+    // sequential: one at a time ⇒ every engine round holds a single job
+    let t0 = Instant::now();
+    for g in &graphs {
+        batching
+            .solve(&Request {
+                id: 0,
+                graph: g.clone(),
+                variant: "staged".into(),
+                no_cache: true,
+            })
+            .expect("sequential");
+    }
+    let sequential = t0.elapsed().as_secs_f64();
+    let bserver = Server::spawn(batching.clone(), "127.0.0.1:0").expect("server");
+    let baddr = bserver.addr().to_string();
+    let t0 = Instant::now();
+    let handles: Vec<_> = graphs
+        .iter()
+        .cloned()
+        .map(|g| {
+            let addr = baddr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("client");
+                c.solve(&g, "staged").expect("solve")
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let concurrent = t0.elapsed().as_secs_f64();
+    let snap = batching.metrics().snapshot();
+    println!("sequential (8 calls)   {}", format_time(sequential));
+    println!(
+        "batched    (packed)    {}   ({:.2}× speedup)",
+        format_time(concurrent),
+        sequential / concurrent
+    );
+    println!(
+        "engine batches: {} device calls for {} items",
+        snap.get("batches"),
+        snap.get("batched_items")
+    );
+}

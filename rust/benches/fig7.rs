@@ -1,0 +1,79 @@
+//! E2 — regenerate the paper's **Figure 7** (log-scale runtime curves).
+//!
+//! Emits CSV series ready for plotting:
+//! * `fig7_simulated.csv` — all five implementations at the 17 paper sizes
+//!   on the simulated C1060 (the absolute reproduction);
+//! * `fig7_measured.csv` — the measured laptop-scale series on this
+//!   machine (CPU + device variants).
+//!
+//! Files land in `target/bench-results/`; both are also printed.
+//!
+//! Run: `cargo bench --bench fig7`
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+
+use fw_stage::graph::generators;
+use fw_stage::perf::bench;
+use fw_stage::simulator::table::fig7_csv;
+use fw_stage::{apsp, perf};
+
+fn out_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/bench-results");
+    fs::create_dir_all(&dir).expect("creating bench-results dir");
+    dir
+}
+
+fn main() {
+    common::banner("Figure 7 / simulated series (C1060 model, 17 paper sizes)");
+    let sim = fig7_csv();
+    print!("{sim}");
+    let sim_path = out_dir().join("fig7_simulated.csv");
+    fs::write(&sim_path, &sim).unwrap();
+    println!("→ wrote {}", sim_path.display());
+
+    common::banner("Figure 7 / measured series (this machine)");
+    let sizes: &[usize] = if common::fast_mode() {
+        &[64, 128]
+    } else {
+        &[64, 128, 256, 512]
+    };
+    let pool = common::open_pool();
+    let mut csv = String::from("n,cpu_naive,cpu_blocked,cpu_parallel4,dev_naive,dev_blocked,dev_staged\n");
+    for &n in sizes {
+        let g = generators::erdos_renyi(n, 0.3, n as u64);
+        let cfg = common::config_for(n);
+        let mut cells = vec![n.to_string()];
+        for (_, f) in [
+            ("cpu_naive", Box::new(|| apsp::naive::solve(&g)) as Box<dyn Fn() -> _>),
+            ("cpu_blocked", Box::new(|| apsp::blocked::solve(&g, 32))),
+            ("cpu_parallel4", Box::new(|| apsp::parallel::solve(&g, 32, 4))),
+        ] {
+            let r = bench("cpu", &cfg, || {
+                perf::black_box(f());
+            });
+            cells.push(format!("{:.6}", r.median_s));
+        }
+        match &pool {
+            Some(pool) => {
+                for variant in ["naive", "blocked", "staged"] {
+                    pool.solve(variant, &g).expect("warm");
+                    let r = bench(variant, &cfg, || {
+                        perf::black_box(pool.solve(variant, &g).expect("solve"));
+                    });
+                    cells.push(format!("{:.6}", r.median_s));
+                }
+            }
+            None => cells.extend(["".into(), "".into(), "".into()]),
+        }
+        let line = cells.join(",");
+        println!("{line}");
+        csv.push_str(&line);
+        csv.push('\n');
+    }
+    let measured_path = out_dir().join("fig7_measured.csv");
+    fs::write(&measured_path, &csv).unwrap();
+    println!("→ wrote {}", measured_path.display());
+}

@@ -1,0 +1,94 @@
+//! E3/E4/E7 — the paper's §5 analysis: tasks/second, bandwidth accounting,
+//! and the CPU time constant.
+//!
+//! * simulated §5 block (H&N 2.6e9, K&K 14.9e9, staged 73.6e9 tasks/s and
+//!   the FLOPs-per-task derivations) — absolute reproduction;
+//! * measured tasks/s for every implementation on this machine, with the
+//!   bytes-per-task accounting of §3.1 applied to the measured rates;
+//! * E7: the measured n³ time constant of the CPU baseline (the paper's
+//!   footnote-1 arithmetic re-done on this host).
+//!
+//! Run: `cargo bench --bench tasks_per_sec`
+
+mod common;
+
+use fw_stage::graph::generators;
+use fw_stage::perf::bench;
+use fw_stage::simulator::table::render_analysis;
+use fw_stage::{apsp, perf};
+
+fn main() {
+    common::banner("§5 analysis — simulated C1060 (absolute reproduction)");
+    print!("{}", render_analysis());
+
+    common::banner("§5 analysis — measured on this machine");
+    let n = if common::fast_mode() { 128 } else { 256 };
+    let n3 = (n as f64).powi(3);
+    let g = generators::erdos_renyi(n, 0.3, 99);
+    let cfg = common::config_for(n);
+
+    println!("problem size n={n} ({n3:.3e} tasks per solve)\n");
+    println!(
+        "{:<28} {:>12} {:>16} {:>16}",
+        "implementation", "median", "tasks/s", "implied GB/s @16B"
+    );
+    let report = |name: &str, median_s: f64| {
+        println!(
+            "{:<28} {:>12} {:>16.3e} {:>16.2}",
+            name,
+            perf::format_time(median_s),
+            n3 / median_s,
+            n3 * 16.0 / median_s / 1e9,
+        );
+    };
+
+    let r = bench("cpu-naive", &cfg, || {
+        perf::black_box(apsp::naive::solve(&g));
+    });
+    report("cpu naive (Table1 col 1)", r.median_s);
+    let r = bench("cpu-blocked", &cfg, || {
+        perf::black_box(apsp::blocked::solve(&g, 32));
+    });
+    report("cpu blocked s=32", r.median_s);
+    let r = bench("cpu-parallel", &cfg, || {
+        perf::black_box(apsp::parallel::solve(&g, 32, 4));
+    });
+    report("cpu blocked s=32 ×4 threads", r.median_s);
+    let r = bench("cpu-johnson", &cfg, || {
+        perf::black_box(apsp::johnson::solve(&g).expect("no neg cycle"));
+    });
+    report("cpu Johnson (sparse family)", r.median_s);
+
+    if let Some(pool) = common::open_pool() {
+        for variant in ["naive", "blocked", "staged"] {
+            pool.solve(variant, &g).expect("warm");
+            let r = bench(variant, &cfg, || {
+                perf::black_box(pool.solve(variant, &g).expect("solve"));
+            });
+            report(&format!("device {variant} (PJRT/XLA-CPU)"), r.median_s);
+        }
+    } else {
+        println!("(artifacts not built — device rows skipped)");
+    }
+
+    common::banner("E7 — CPU time constant (paper footnote 1 arithmetic)");
+    let mut constants = Vec::new();
+    for n in [128usize, 192, 256] {
+        let g = generators::erdos_renyi(n, 0.3, n as u64);
+        let cfg = common::config_for(n);
+        let r = bench("cpu-const", &cfg, || {
+            perf::black_box(apsp::naive::solve(&g));
+        });
+        let c = r.median_s / (n as f64).powi(3);
+        constants.push(c);
+        println!("n={n:<5} median {}  → {c:.3e} s/task", perf::format_time(r.median_s));
+    }
+    let mean_c = constants.iter().sum::<f64>() / constants.len() as f64;
+    println!(
+        "\nthis host: ≈{mean_c:.2e} s/task  (paper's 2009 Phenom: 2.2e-9; staged C1060: 1.2e-11)"
+    );
+    println!(
+        "projected n=16384 CPU time on this host: {:.0}s (paper CPU: extrapolated ~9500s)",
+        mean_c * 16384f64.powi(3)
+    );
+}

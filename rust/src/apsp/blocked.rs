@@ -1,0 +1,222 @@
+//! Cache-blocked Floyd-Warshall on the CPU (paper Fig. 2; Venkataraman
+//! et al. [4]) — the algorithmic core the GPU kernels specialize.
+//!
+//! Per stage `b` (tile size `s`, `n/s` stages):
+//! 1. **independent block**: full FW on the diagonal tile (sequential k);
+//! 2. **singly dependent blocks**: the i-aligned row panel and j-aligned
+//!    column panel, each relaxed against the final diagonal tile
+//!    (sequential k — one dependency is in the panel itself);
+//! 3. **doubly dependent blocks**: every remaining tile relaxed by a
+//!    (min, +) product of its column-panel and row-panel tiles; k is
+//!    *innermost* (Fig. 2 line 37) because both dependencies are final —
+//!    the same order-freedom the GPU kernel exploits.
+//!
+//! The phase-3 inner loop is written i-k-j so the innermost loop walks two
+//! rows contiguously — the CPU analog of the coalesced accesses §4.3
+//! engineers on the GPU.
+
+use crate::graph::DistMatrix;
+
+/// Blocked FW with tile size `s`. Falls back to the naive solver when
+/// `n % s != 0` or the matrix is smaller than one tile.
+pub fn solve(w: &DistMatrix, s: usize) -> DistMatrix {
+    let mut out = w.clone();
+    solve_in_place(&mut out, s);
+    out
+}
+
+/// In-place blocked FW (see module docs).
+pub fn solve_in_place(w: &mut DistMatrix, s: usize) {
+    let n = w.n();
+    if n == 0 {
+        return;
+    }
+    if s == 0 || n % s != 0 || n < s {
+        super::naive::solve_in_place(w);
+        return;
+    }
+    let nb = n / s;
+    for b in 0..nb {
+        let ks = b * s;
+        phase1_diag(w, ks, s);
+        for jb in 0..nb {
+            if jb != b {
+                phase2_row_tile(w, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                phase2_col_tile(w, ks, ib * s, s);
+            }
+        }
+        for ib in 0..nb {
+            for jb in 0..nb {
+                if ib != b && jb != b {
+                    phase3_tile(w, ks, ib * s, jb * s, s);
+                }
+            }
+        }
+    }
+}
+
+/// Phase 1: full FW restricted to the diagonal tile at (ks, ks).
+pub(crate) fn phase1_diag(w: &mut DistMatrix, ks: usize, s: usize) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in ks..ks + s {
+            if i == k {
+                continue;
+            }
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            for j in ks..ks + s {
+                let cand = wik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, i-aligned: tile rows ks..ks+s, columns js..js+s.
+/// `w[i][j] <- min(w[i][j], diag[i][k] + w[k][j])`, sequential k.
+pub(crate) fn phase2_row_tile(w: &mut DistMatrix, ks: usize, js: usize, s: usize) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in ks..ks + s {
+            if i == k {
+                continue;
+            }
+            let dik = data[i * n + k]; // in the (final) diagonal tile
+            if !dik.is_finite() {
+                continue;
+            }
+            for j in js..js + s {
+                let cand = dik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, j-aligned: tile rows is..is+s, columns ks..ks+s.
+/// `w[i][j] <- min(w[i][j], w[i][k] + diag[k][j])`, sequential k.
+pub(crate) fn phase2_col_tile(w: &mut DistMatrix, ks: usize, is: usize, s: usize) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in is..is + s {
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            for j in ks..ks + s {
+                let cand = wik + data[k * n + j]; // diag row k
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 3: doubly-dependent tile at (is, js) relaxed against column-panel
+/// tile (is, ks) and row-panel tile (ks, js).  i-k-j order: `wik` is hoisted
+/// and both inner-row walks are contiguous.
+#[inline]
+fn phase3_tile(w: &mut DistMatrix, ks: usize, is: usize, js: usize, s: usize) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for i in is..is + s {
+        for k in ks..ks + s {
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let (row_k, row_i) = {
+                // rows i and k never alias in phase 3 (ib != b)
+                debug_assert_ne!(i, k);
+                if i < k {
+                    let (lo, hi) = data.split_at_mut(k * n);
+                    (&hi[js..js + s], &mut lo[i * n + js..i * n + js + s])
+                } else {
+                    let (lo, hi) = data.split_at_mut(i * n);
+                    (&lo[k * n + js..k * n + js + s], &mut hi[js..js + s])
+                }
+            };
+            // branchless min (vectorizes; see naive.rs)
+            for j in 0..s {
+                row_i[j] = row_i[j].min(wik + row_k[j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::naive;
+    use crate::graph::{generators, DistMatrix};
+
+    fn assert_matches_naive(g: &DistMatrix, s: usize) {
+        let expect = naive::solve(g);
+        let got = solve(g, s);
+        assert!(
+            got.allclose(&expect, 1e-5, 1e-6),
+            "blocked(s={s}) diverges from naive by {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn matches_naive_across_tiles() {
+        let g = generators::erdos_renyi(96, 0.3, 17);
+        for s in [8, 16, 32, 48, 96] {
+            assert_matches_naive(&g, s);
+        }
+    }
+
+    #[test]
+    fn matches_naive_structured() {
+        for g in [
+            generators::ring(64),
+            generators::grid(8, 3),
+            generators::scale_free(64, 2, 5),
+            generators::layered_dag(8, 8, 7), // negative weights
+        ] {
+            assert_matches_naive(&g, 16);
+        }
+    }
+
+    #[test]
+    fn non_multiple_falls_back() {
+        let g = generators::erdos_renyi(50, 0.4, 3);
+        assert_matches_naive(&g, 32); // 50 % 32 != 0 → naive path
+    }
+
+    #[test]
+    fn single_tile_equals_naive() {
+        let g = generators::erdos_renyi(32, 0.5, 9);
+        assert_matches_naive(&g, 32);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        solve(&DistMatrix::unconnected(0), 32);
+        let d = solve(&DistMatrix::unconnected(1), 32);
+        assert_eq!(d.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn dense_complete_graph() {
+        let g = generators::erdos_renyi(64, 1.0, 13);
+        assert_matches_naive(&g, 16);
+    }
+}

@@ -1,0 +1,222 @@
+//! Johnson's algorithm — the sparse-graph APSP comparator.
+//!
+//! Floyd-Warshall is Θ(n³) regardless of density (the property the paper
+//! leans on); Johnson's algorithm runs in O(n·m·log n) and wins on sparse
+//! graphs.  A production APSP service should know the crossover, so this
+//! solver exists both as a correctness oracle from a different algorithmic
+//! family and as a routing option (`variant = "johnson"`).
+//!
+//! Pipeline: Bellman–Ford from a virtual source (computes the reweighting
+//! potentials and detects negative cycles exactly), reweight
+//! `ŵ(u,v) = w(u,v) + h(u) − h(v) ≥ 0`, then one binary-heap Dijkstra per
+//! source, un-reweighting on output.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::graph::DistMatrix;
+use crate::{Dist, INF};
+
+/// Adjacency-list edge.
+#[derive(Clone, Copy, Debug)]
+struct Edge {
+    to: u32,
+    w: f32,
+}
+
+/// Errors Johnson can hit that FW silently tolerates.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum JohnsonError {
+    #[error("graph contains a negative cycle (vertex {0} improves on pass n)")]
+    NegativeCycle(usize),
+}
+
+/// Solve APSP via Johnson's algorithm.
+pub fn solve(w: &DistMatrix) -> Result<DistMatrix, JohnsonError> {
+    let n = w.n();
+    if n == 0 {
+        return Ok(DistMatrix::unconnected(0));
+    }
+    // adjacency lists once (dense scan; inputs are DistMatrix)
+    let mut adj: Vec<Vec<Edge>> = vec![Vec::new(); n];
+    for u in 0..n {
+        let row = w.row(u);
+        for (v, &wt) in row.iter().enumerate() {
+            if u != v && wt.is_finite() {
+                adj[u].push(Edge { to: v as u32, w: wt });
+            }
+        }
+    }
+
+    let h = bellman_ford_potentials(n, &adj)?;
+
+    // reweight: ŵ(u,v) = w + h[u] − h[v]  (≥ 0 up to f32 rounding)
+    let mut radj = adj;
+    for (u, edges) in radj.iter_mut().enumerate() {
+        for e in edges.iter_mut() {
+            e.w = (e.w as f64 + h[u] - h[e.to as usize]).max(0.0) as f32;
+        }
+    }
+
+    let mut out = DistMatrix::unconnected(n);
+    let mut dist = vec![INF; n];
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::new();
+    for src in 0..n {
+        dijkstra(&radj, src, &mut dist, &mut heap);
+        let row = &mut out.as_mut_slice()[src * n..(src + 1) * n];
+        for v in 0..n {
+            if dist[v].is_finite() {
+                // undo the reweighting
+                row[v] = (dist[v] as f64 - h[src] + h[v]) as Dist;
+            }
+        }
+        row[src] = 0.0;
+    }
+    Ok(out)
+}
+
+/// Bellman–Ford from a virtual source connected to every vertex with
+/// weight 0; returns the potential vector `h` (f64 for stable reweighting).
+fn bellman_ford_potentials(n: usize, adj: &[Vec<Edge>]) -> Result<Vec<f64>, JohnsonError> {
+    let mut h = vec![0f64; n]; // virtual source: h starts at 0 everywhere
+    for _ in 0..n {
+        let mut changed = false;
+        for (u, edges) in adj.iter().enumerate() {
+            let hu = h[u];
+            if !hu.is_finite() {
+                continue;
+            }
+            for e in edges {
+                let cand = hu + e.w as f64;
+                if cand < h[e.to as usize] - 1e-12 {
+                    h[e.to as usize] = cand;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            return Ok(h);
+        }
+    }
+    // one more pass: any improvement now proves a negative cycle
+    for (u, edges) in adj.iter().enumerate() {
+        for e in edges {
+            if h[u] + (e.w as f64) < h[e.to as usize] - 1e-9 {
+                return Err(JohnsonError::NegativeCycle(e.to as usize));
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// Min-heap item (BinaryHeap is a max-heap; reverse the ordering).
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f32,
+    vertex: u32,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.vertex.cmp(&self.vertex))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Standard lazy-deletion Dijkstra over non-negative weights.
+fn dijkstra(adj: &[Vec<Edge>], src: usize, dist: &mut [f32], heap: &mut BinaryHeap<HeapItem>) {
+    dist.fill(INF);
+    heap.clear();
+    dist[src] = 0.0;
+    heap.push(HeapItem {
+        dist: 0.0,
+        vertex: src as u32,
+    });
+    while let Some(HeapItem { dist: d, vertex: u }) = heap.pop() {
+        if d > dist[u as usize] {
+            continue; // stale entry
+        }
+        for e in &adj[u as usize] {
+            let cand = d + e.w;
+            if cand < dist[e.to as usize] {
+                dist[e.to as usize] = cand;
+                heap.push(HeapItem {
+                    dist: cand,
+                    vertex: e.to,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::naive;
+    use crate::graph::{generators, DistMatrix};
+
+    fn assert_matches_fw(g: &DistMatrix, tol: f64) {
+        let fw = naive::solve(g);
+        let jn = solve(g).expect("no negative cycle");
+        assert!(
+            jn.allclose(&fw, tol, tol),
+            "johnson diverges from FW by {}",
+            jn.max_abs_diff(&fw)
+        );
+    }
+
+    #[test]
+    fn matches_fw_on_random_graphs() {
+        for (n, p, seed) in [(32, 0.1, 1u64), (64, 0.3, 2), (96, 0.05, 3), (48, 0.9, 4)] {
+            assert_matches_fw(&generators::erdos_renyi(n, p, seed), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_fw_structured() {
+        assert_matches_fw(&generators::ring(40), 1e-5);
+        assert_matches_fw(&generators::grid(7, 5), 1e-4);
+        assert_matches_fw(&generators::scale_free(64, 2, 6), 1e-4);
+    }
+
+    #[test]
+    fn negative_weights_no_cycle() {
+        // reweighting is the whole point: negative edges, no negative cycle
+        assert_matches_fw(&generators::layered_dag(6, 8, 7), 1e-3);
+    }
+
+    #[test]
+    fn negative_cycle_detected() {
+        let mut g = DistMatrix::unconnected(4);
+        g.set(0, 1, 1.0);
+        g.set(1, 2, -3.0);
+        g.set(2, 0, 1.0);
+        assert!(matches!(solve(&g), Err(JohnsonError::NegativeCycle(_))));
+    }
+
+    #[test]
+    fn disconnected_and_empty() {
+        let g = DistMatrix::unconnected(5);
+        let d = solve(&g).unwrap();
+        assert_eq!(d, g);
+        assert_eq!(solve(&DistMatrix::unconnected(0)).unwrap().n(), 0);
+    }
+
+    #[test]
+    fn sparse_large_graph_smoke() {
+        // the regime Johnson exists for: n=256, ~4 edges/vertex
+        let g = generators::erdos_renyi(256, 4.0 / 256.0, 9);
+        assert_matches_fw(&g, 1e-4);
+    }
+}

@@ -1,0 +1,22 @@
+//! CPU all-pairs-shortest-paths solvers.
+//!
+//! These serve three roles:
+//! 1. the paper's "CPU" baseline (Table 1, column 1) — [`naive`];
+//! 2. correctness oracles for the PJRT-executed artifacts — any solver here
+//!    cross-checks the device results ([`validate`]);
+//! 3. the cache-blocked CPU implementation mirroring Venkataraman et al.
+//!    ([`blocked`]) and a multithreaded variant ([`parallel`]) that shows
+//!    the same blocking win the paper builds on.
+//!
+//! All solvers consume a [`crate::graph::DistMatrix`] and return the closed
+//! matrix; [`paths`] additionally reconstructs shortest paths via a
+//! successor matrix.
+
+pub mod blocked;
+pub mod johnson;
+pub mod naive;
+pub mod parallel;
+pub mod paths;
+pub mod validate;
+
+pub use validate::{check_invariants, negative_cycle_vertices};

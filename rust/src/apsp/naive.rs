@@ -1,0 +1,127 @@
+//! The textbook Floyd-Warshall triple loop — the paper's "CPU"
+//! implementation (Table 1, column 1; footnote 1 derives its time constant
+//! of ≈1.2·10⁻¹¹ s/task on the authors' Phenom).
+//!
+//! Kept deliberately simple: this is both the baseline whose constant we
+//! re-measure (EXPERIMENTS.md E7) and the most trustworthy oracle.
+
+use crate::graph::DistMatrix;
+
+/// In-place Floyd-Warshall over `w` (paper Fig. 1).
+pub fn solve_in_place(w: &mut DistMatrix) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in 0..n {
+        for i in 0..n {
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue; // no i→k path: row k cannot improve row i this round
+            }
+            // hoisting row pointers keeps the inner loop at two loads + min
+            let (row_k, row_i) = if i < k {
+                let (lo, hi) = data.split_at_mut(k * n);
+                (&hi[..n], &mut lo[i * n..i * n + n])
+            } else if i > k {
+                let (lo, hi) = data.split_at_mut(i * n);
+                (&lo[k * n..k * n + n], &mut hi[..n])
+            } else {
+                continue; // i == k: w[k][j] <- min(w[k][j], w[k][k] + w[k][j]) is a no-op
+            };
+            // conditional store: most relaxations don't improve, so
+            // skipping the store saves write bandwidth on full rows —
+            // measured faster than branchless min here (the tiled solvers
+            // prefer branchless; see blocked.rs)
+            for j in 0..n {
+                let cand = wik + row_k[j];
+                if cand < row_i[j] {
+                    row_i[j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Functional wrapper: clone, solve, return.
+pub fn solve(w: &DistMatrix) -> DistMatrix {
+    let mut out = w.clone();
+    solve_in_place(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, DistMatrix};
+    use crate::INF;
+
+    #[test]
+    fn triangle_shortcut() {
+        let mut m = DistMatrix::unconnected(3);
+        m.set(0, 1, 10.0);
+        m.set(0, 2, 2.0);
+        m.set(2, 1, 3.0);
+        let d = solve(&m);
+        assert_eq!(d.get(0, 1), 5.0);
+        assert_eq!(d.get(0, 2), 2.0);
+    }
+
+    #[test]
+    fn ring_distances() {
+        let d = solve(&generators::ring(10));
+        for i in 0..10 {
+            for j in 0..10 {
+                let expect = ((j + 10 - i) % 10) as f32;
+                assert_eq!(d.get(i, j), expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_stays_inf() {
+        let mut m = DistMatrix::unconnected(4);
+        m.set(0, 1, 1.0);
+        let d = solve(&m);
+        assert_eq!(d.get(0, 1), 1.0);
+        assert_eq!(d.get(1, 0), INF);
+        assert_eq!(d.get(2, 3), INF);
+    }
+
+    #[test]
+    fn negative_edges_no_cycle() {
+        let mut m = DistMatrix::unconnected(3);
+        m.set(0, 1, -2.0);
+        m.set(1, 2, 4.0);
+        m.set(2, 0, 1.0);
+        let d = solve(&m);
+        assert_eq!(d.get(0, 2), 2.0);
+        assert_eq!(d.get(2, 1), -1.0);
+    }
+
+    #[test]
+    fn zero_and_one_vertex() {
+        let d0 = solve(&DistMatrix::unconnected(0));
+        assert_eq!(d0.n(), 0);
+        let d1 = solve(&DistMatrix::unconnected(1));
+        assert_eq!(d1.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn matches_slow_reference() {
+        // compare against the unhoisted, obviously-literal triple loop
+        let g = generators::erdos_renyi(48, 0.3, 11);
+        let fast = solve(&g);
+        let mut slow = g.clone();
+        let n = slow.n();
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let cand = slow.get(i, k) + slow.get(k, j);
+                    if cand < slow.get(i, j) {
+                        slow.set(i, j, cand);
+                    }
+                }
+            }
+        }
+        assert_eq!(fast, slow);
+    }
+}

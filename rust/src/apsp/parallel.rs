@@ -1,0 +1,187 @@
+//! Multithreaded blocked Floyd-Warshall.
+//!
+//! Phase 3 is Θ(n³) of the total work and its tiles are mutually
+//! independent within a stage (both dependencies — the row and column
+//! panels — are final), so it parallelizes embarrassingly.  This solver
+//! runs phases 1–2 sequentially (Θ(n²·s) work) and fans phase 3 out over
+//! `threads` row bands using `std::thread::scope`.
+//!
+//! Safety model (no `unsafe`): before phase 3, the stage's row panel is
+//! copied to a scratch buffer (every thread reads it, one thread owns its
+//! rows).  The matrix rows are then split into disjoint `&mut` bands with
+//! `chunks_mut`; each band's column-panel dependency (`w[i][k]`) lives in
+//! the band's own rows, so no cross-band reads are needed.
+
+use crate::graph::DistMatrix;
+
+/// Blocked FW with tile size `s` and phase-3 parallelism of `threads`.
+pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
+    let mut out = w.clone();
+    solve_in_place(&mut out, s, threads);
+    out
+}
+
+/// In-place parallel blocked FW.  Falls back to the sequential blocked
+/// solver for degenerate parameters.
+pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
+    let n = w.n();
+    if n == 0 {
+        return;
+    }
+    if threads <= 1 || s == 0 || n % s != 0 || n < s {
+        super::blocked::solve_in_place(w, s);
+        return;
+    }
+    let nb = n / s;
+    let mut row_panel = vec![0f32; s * n];
+    for b in 0..nb {
+        let ks = b * s;
+        super::blocked::phase1_diag(w, ks, s);
+        for jb in 0..nb {
+            if jb != b {
+                super::blocked::phase2_row_tile(w, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                super::blocked::phase2_col_tile(w, ks, ib * s, s);
+            }
+        }
+        // snapshot the (final) row panel so phase-3 bands can read it freely
+        row_panel.copy_from_slice(&w.as_slice()[ks * n..(ks + s) * n]);
+        phase3_parallel(w, &row_panel, ks, s, threads);
+    }
+}
+
+/// Fan the stage's doubly-dependent tiles out over row bands.
+fn phase3_parallel(
+    w: &mut DistMatrix,
+    row_panel: &[f32],
+    ks: usize,
+    s: usize,
+    threads: usize,
+) {
+    let n = w.n();
+    let nb = n / s;
+    let b = ks / s;
+    // Each work item is one row-block (s contiguous rows).  Distribute
+    // row-blocks round-robin over bands of `rows_per_band` so chunks_mut can
+    // hand out disjoint row ranges.
+    let blocks_per_band = nb.div_ceil(threads);
+    let rows_per_band = blocks_per_band * s;
+    let data = w.as_mut_slice();
+    std::thread::scope(|scope| {
+        for (band_idx, band) in data.chunks_mut(rows_per_band * n).enumerate() {
+            let row_panel = &row_panel[..];
+            scope.spawn(move || {
+                let first_block = band_idx * blocks_per_band;
+                let band_blocks = band.len() / (s * n);
+                for ib_local in 0..band_blocks {
+                    let ib = first_block + ib_local;
+                    if ib == b {
+                        continue; // panel rows are final
+                    }
+                    for jb in 0..nb {
+                        if jb == b {
+                            continue;
+                        }
+                        phase3_tile_band(band, row_panel, n, s, ib_local * s, ks, jb * s);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Phase-3 tile relaxation where the tile rows live in `band` (a disjoint
+/// row range of the matrix) and row-panel reads come from the snapshot.
+///
+/// * `band`: `band_rows × n` row-major slice; tile rows start at `is_local`.
+/// * `row_panel`: `s × n` snapshot of matrix rows `ks..ks+s`.
+#[inline]
+fn phase3_tile_band(
+    band: &mut [f32],
+    row_panel: &[f32],
+    n: usize,
+    s: usize,
+    is_local: usize,
+    ks: usize,
+    js: usize,
+) {
+    for i in is_local..is_local + s {
+        let row_i = &mut band[i * n..(i + 1) * n];
+        for k in 0..s {
+            let wik = row_i[ks + k]; // column-panel value, inside this band
+            if !wik.is_finite() {
+                continue;
+            }
+            let row_k = &row_panel[k * n + js..k * n + js + s];
+            let out = &mut row_i[js..js + s];
+            // branchless min (vectorizes; see naive.rs)
+            for j in 0..s {
+                out[j] = out[j].min(wik + row_k[j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::naive;
+    use crate::graph::{generators, DistMatrix};
+
+    fn assert_matches_naive(g: &DistMatrix, s: usize, threads: usize) {
+        let expect = naive::solve(g);
+        let got = solve(g, s, threads);
+        assert!(
+            got.allclose(&expect, 1e-5, 1e-6),
+            "parallel(s={s}, t={threads}) diverges by {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn matches_naive_various_thread_counts() {
+        let g = generators::erdos_renyi(128, 0.3, 23);
+        for threads in [1, 2, 3, 4, 8] {
+            assert_matches_naive(&g, 32, threads);
+        }
+    }
+
+    #[test]
+    fn threads_exceed_blocks() {
+        // more threads than row blocks: some bands are empty
+        let g = generators::erdos_renyi(64, 0.4, 29);
+        assert_matches_naive(&g, 32, 16);
+    }
+
+    #[test]
+    fn uneven_band_split() {
+        // nb=5 blocks over 2 threads → bands of 3 and 2 blocks
+        let g = generators::erdos_renyi(80, 0.35, 31);
+        assert_matches_naive(&g, 16, 2);
+    }
+
+    #[test]
+    fn negative_weights() {
+        let g = generators::layered_dag(8, 8, 41);
+        assert_matches_naive(&g, 16, 4);
+    }
+
+    #[test]
+    fn bitwise_equal_to_sequential_blocked() {
+        // same relaxation order within every tile ⇒ identical floats
+        let g = generators::erdos_renyi(96, 0.3, 37);
+        let seq = super::super::blocked::solve(&g, 32);
+        let par = solve(&g, 32, 4);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn degenerate_params_fall_back() {
+        let g = generators::erdos_renyi(48, 0.4, 43);
+        assert_matches_naive(&g, 32, 4); // 48 % 32 != 0
+        assert_matches_naive(&g, 16, 0); // 0 threads → sequential
+    }
+}

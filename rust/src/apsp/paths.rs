@@ -1,0 +1,184 @@
+//! Shortest-path *reconstruction*: FW with a successor matrix.
+//!
+//! The paper (like most APSP kernels) computes distances only; downstream
+//! users of a routing service almost always need the actual paths.  This
+//! module runs the same relaxation while maintaining `succ[i][j]` = next hop
+//! on the best known i→j path, then extracts paths in O(len).
+
+use crate::graph::DistMatrix;
+
+/// APSP result with path reconstruction support.
+#[derive(Clone, Debug)]
+pub struct PathsResult {
+    pub dist: DistMatrix,
+    /// `succ[i*n + j]` = next vertex after `i` on the shortest i→j path;
+    /// `usize::MAX` when no path exists (or i == j).
+    succ: Vec<usize>,
+}
+
+/// No-successor sentinel.
+pub const NO_PATH: usize = usize::MAX;
+
+/// Floyd-Warshall with successor tracking (naive loop order; used where
+/// paths are needed, not on the benchmark hot path).
+pub fn solve(w: &DistMatrix) -> PathsResult {
+    let n = w.n();
+    let mut dist = w.clone();
+    let mut succ = vec![NO_PATH; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && w.get(i, j).is_finite() {
+                succ[i * n + j] = j; // direct edge
+            }
+        }
+    }
+    {
+        let d = dist.as_mut_slice();
+        for k in 0..n {
+            for i in 0..n {
+                let dik = d[i * n + k];
+                if !dik.is_finite() || i == k {
+                    continue;
+                }
+                for j in 0..n {
+                    let cand = dik + d[k * n + j];
+                    if cand < d[i * n + j] {
+                        d[i * n + j] = cand;
+                        succ[i * n + j] = succ[i * n + k];
+                    }
+                }
+            }
+        }
+    }
+    PathsResult { dist, succ }
+}
+
+impl PathsResult {
+    pub fn n(&self) -> usize {
+        self.dist.n()
+    }
+
+    /// The vertex sequence of a shortest i→j path (inclusive of both
+    /// endpoints), or `None` if unreachable.  `Some([i])` when `i == j`.
+    pub fn path(&self, i: usize, j: usize) -> Option<Vec<usize>> {
+        let n = self.n();
+        assert!(i < n && j < n, "path({i}, {j}) out of range for n={n}");
+        if i == j {
+            return Some(vec![i]);
+        }
+        if self.succ[i * n + j] == NO_PATH {
+            return None;
+        }
+        let mut path = vec![i];
+        let mut cur = i;
+        // a simple path visits ≤ n vertices; the guard catches corrupted
+        // successor chains (e.g. from negative cycles) instead of spinning
+        for _ in 0..n {
+            cur = self.succ[cur * n + j];
+            path.push(cur);
+            if cur == j {
+                return Some(path);
+            }
+        }
+        None
+    }
+
+    /// Sum of edge weights along [`PathsResult::path`] in the *original*
+    /// graph — used by tests to confirm path length equals reported distance.
+    pub fn path_weight(&self, original: &DistMatrix, i: usize, j: usize) -> Option<f64> {
+        let path = self.path(i, j)?;
+        let mut total = 0f64;
+        for pair in path.windows(2) {
+            let w = original.get(pair[0], pair[1]);
+            if !w.is_finite() {
+                return None; // corrupt path: uses a non-edge
+            }
+            total += w as f64;
+        }
+        Some(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::naive;
+    use crate::graph::{generators, DistMatrix};
+
+    #[test]
+    fn distances_match_naive() {
+        let g = generators::erdos_renyi(64, 0.3, 51);
+        let r = solve(&g);
+        assert!(r.dist.allclose(&naive::solve(&g), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn path_endpoints_and_weight() {
+        let g = generators::grid(6, 9);
+        let r = solve(&g);
+        for i in [0, 7, 35] {
+            for j in [0, 13, 20] {
+                match r.path(i, j) {
+                    Some(p) => {
+                        assert_eq!(*p.first().unwrap(), i);
+                        assert_eq!(*p.last().unwrap(), j);
+                        let wt = r.path_weight(&g, i, j).unwrap();
+                        let d = r.dist.get(i, j) as f64;
+                        assert!((wt - d).abs() < 1e-4, "({i},{j}): {wt} vs {d}");
+                    }
+                    None => assert!(!r.dist.get(i, j).is_finite()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trivial_and_unreachable() {
+        let mut g = DistMatrix::unconnected(3);
+        g.set(0, 1, 2.0);
+        let r = solve(&g);
+        assert_eq!(r.path(0, 0), Some(vec![0]));
+        assert_eq!(r.path(0, 1), Some(vec![0, 1]));
+        assert_eq!(r.path(1, 0), None);
+        assert_eq!(r.path(2, 1), None);
+    }
+
+    #[test]
+    fn path_takes_shortcut() {
+        let mut g = DistMatrix::unconnected(3);
+        g.set(0, 1, 10.0);
+        g.set(0, 2, 2.0);
+        g.set(2, 1, 3.0);
+        let r = solve(&g);
+        assert_eq!(r.path(0, 1), Some(vec![0, 2, 1]));
+    }
+
+    #[test]
+    fn ring_path_is_whole_ring() {
+        let g = generators::ring(6);
+        let r = solve(&g);
+        assert_eq!(r.path(1, 0), Some(vec![1, 2, 3, 4, 5, 0]));
+    }
+
+    #[test]
+    fn every_pair_consistent_on_random_graph() {
+        let g = generators::erdos_renyi(32, 0.2, 53);
+        let r = solve(&g);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                let d = r.dist.get(i, j);
+                match r.path(i, j) {
+                    Some(p) => {
+                        assert!(d.is_finite());
+                        // path must be simple (no repeated vertex)
+                        let mut seen = p.clone();
+                        seen.sort_unstable();
+                        seen.dedup();
+                        assert_eq!(seen.len(), p.len(), "non-simple path {p:?}");
+                    }
+                    None => assert!(!d.is_finite() || i == j),
+                }
+            }
+        }
+    }
+}

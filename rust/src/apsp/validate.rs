@@ -1,0 +1,189 @@
+//! APSP result validation: structural invariants any correct solver output
+//! must satisfy, plus negative-cycle detection.
+//!
+//! Used by the coordinator (optional response validation), the integration
+//! tests (device results vs invariants, not just vs oracle), and the
+//! property tests.
+
+use crate::graph::DistMatrix;
+
+/// Check the invariants of an APSP *result* `d` for *input* `w`:
+///
+/// 1. `d[i][j] ≤ w[i][j]` (a relaxation never lengthens),
+/// 2. `d[i][i] == 0` (absent negative cycles),
+/// 3. triangle inequality `d[i][j] ≤ d[i][k] + d[k][j]` (+ f32 slack),
+/// 4. no NaN / -inf,
+/// 5. reachability closure: `d[i][j]` finite iff j reachable from i in `w`
+///    (checked via BFS on the support graph).
+///
+/// Returns the first violation as a human-readable string.
+pub fn check_invariants(w: &DistMatrix, d: &DistMatrix) -> Result<(), String> {
+    let n = w.n();
+    if d.n() != n {
+        return Err(format!("result size {} != input size {n}", d.n()));
+    }
+    d.validate()?;
+    // (1) and (2)
+    for i in 0..n {
+        if d.get(i, i) != 0.0 {
+            return Err(format!("d[{i}][{i}] = {} != 0", d.get(i, i)));
+        }
+        for j in 0..n {
+            if d.get(i, j) > w.get(i, j) {
+                return Err(format!(
+                    "lengthened: d[{i}][{j}] = {} > w = {}",
+                    d.get(i, j),
+                    w.get(i, j)
+                ));
+            }
+        }
+    }
+    // (3) triangle inequality with f32 tolerance
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.get(i, k);
+            if !dik.is_finite() {
+                continue;
+            }
+            for j in 0..n {
+                let lhs = d.get(i, j) as f64;
+                let rhs = dik as f64 + d.get(k, j) as f64;
+                if lhs > rhs + 1e-3 + 1e-5 * rhs.abs() {
+                    return Err(format!(
+                        "triangle violated: d[{i}][{j}]={lhs} > d[{i}][{k}]+d[{k}][{j}]={rhs}"
+                    ));
+                }
+            }
+        }
+    }
+    // (5) reachability closure
+    for i in 0..n {
+        let reach = bfs_reach(w, i);
+        for j in 0..n {
+            let finite = d.get(i, j).is_finite();
+            if finite != reach[j] {
+                return Err(format!(
+                    "reachability mismatch at ({i},{j}): dist finite={finite}, BFS={}",
+                    reach[j]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Vertices on or reaching a negative cycle: `d[i][i] < 0` after closure.
+/// (Run on a *solved* matrix.)
+pub fn negative_cycle_vertices(d: &DistMatrix) -> Vec<usize> {
+    (0..d.n()).filter(|&i| d.get(i, i) < 0.0).collect()
+}
+
+/// Does the input graph contain a negative cycle? (solves a copy)
+pub fn has_negative_cycle(w: &DistMatrix) -> bool {
+    let d = super::naive::solve(w);
+    !negative_cycle_vertices(&d).is_empty()
+}
+
+fn bfs_reach(w: &DistMatrix, src: usize) -> Vec<bool> {
+    let n = w.n();
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::from([src]);
+    seen[src] = true;
+    while let Some(u) = queue.pop_front() {
+        for v in 0..n {
+            if !seen[v] && w.get(u, v).is_finite() {
+                seen[v] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    seen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::{blocked, naive, parallel};
+    use crate::graph::{generators, DistMatrix};
+
+    #[test]
+    fn all_solvers_pass_invariants() {
+        let g = generators::erdos_renyi(64, 0.25, 61);
+        for d in [
+            naive::solve(&g),
+            blocked::solve(&g, 16),
+            blocked::solve(&g, 32),
+            parallel::solve(&g, 16, 4),
+        ] {
+            check_invariants(&g, &d).unwrap();
+        }
+    }
+
+    #[test]
+    fn detects_lengthening() {
+        let g = generators::ring(8);
+        let mut d = naive::solve(&g);
+        d.set(0, 1, 99.0);
+        assert!(check_invariants(&g, &d).unwrap_err().contains("lengthened"));
+    }
+
+    #[test]
+    fn detects_triangle_violation() {
+        let g = generators::erdos_renyi(16, 0.8, 63);
+        let mut d = naive::solve(&g);
+        // raise one entry enough to break the triangle inequality but stay
+        // below the input weight (so the 'lengthened' check doesn't fire first)
+        let mut broke = false;
+        'outer: for i in 0..16 {
+            for j in 0..16 {
+                if i != j && g.get(i, j).is_finite() && d.get(i, j) + 1.0 < g.get(i, j) {
+                    d.set(i, j, g.get(i, j) - 0.001);
+                    broke = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(broke, "test graph had no slack edge");
+        assert!(check_invariants(&g, &d)
+            .unwrap_err()
+            .contains("triangle violated"));
+    }
+
+    #[test]
+    fn detects_wrong_reachability() {
+        let g = generators::ring(6);
+        let mut d = naive::solve(&g);
+        d.set(2, 3, f32::INFINITY); // 3 is reachable from 2 in a ring
+        let err = check_invariants(&g, &d).unwrap_err();
+        assert!(
+            err.contains("reachability") || err.contains("lengthened"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn detects_nonzero_diag() {
+        let g = generators::ring(4);
+        let mut d = naive::solve(&g);
+        d.set(1, 1, -0.5);
+        assert!(check_invariants(&g, &d).unwrap_err().contains("!= 0"));
+    }
+
+    #[test]
+    fn negative_cycle_detection() {
+        let mut g = DistMatrix::unconnected(4);
+        g.set(0, 1, 1.0);
+        g.set(1, 2, -3.0);
+        g.set(2, 0, 1.0); // cycle 0→1→2→0 weighs -1
+        assert!(has_negative_cycle(&g));
+        let no = generators::layered_dag(4, 4, 3); // negative edges, no cycles
+        assert!(!has_negative_cycle(&no));
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let g = generators::ring(4);
+        let d = DistMatrix::unconnected(5);
+        assert!(check_invariants(&g, &d).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny flag parser (the vendored crate set has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positionals.  Unknown flags are an error (catches typos in scripts).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: positionals plus flag → value (bool flags map to "").
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags consumed by `get_*` calls (for unknown-flag detection).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw arguments. `bool_flags` lists flags that take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    args.flags.insert(stripped.to_string(), String::new());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{stripped} needs a value"))?;
+                    args.flags.insert(stripped.to_string(), v.clone());
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Call after all `get_*`s: errors if the user passed unknown flags.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for key in self.flags.keys() {
+            if !seen.iter().any(|s| s == key) {
+                bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_values_and_positionals() {
+        let a = Args::parse(&raw("solve --n 64 --variant=staged file.gr"), &[]).unwrap();
+        assert_eq!(a.positionals, vec!["solve", "file.gr"]);
+        assert_eq!(a.get("n"), Some("64"));
+        assert_eq!(a.get("variant"), Some("staged"));
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let a = Args::parse(&raw("--csv --n 4"), &["csv"]).unwrap();
+        assert!(a.get_bool("csv"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw("--n"), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&raw("--x 1.5 --y 7"), &[]).unwrap();
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize("y", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("z", 9).unwrap(), 9);
+        assert!(a.get_usize("x", 0).is_err()); // 1.5 is not an integer
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(&raw("--known 1 --oops 2"), &[]).unwrap();
+        let _ = a.get("known");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("oops");
+        assert!(a.reject_unknown().is_ok());
+    }
+}

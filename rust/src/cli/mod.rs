@@ -1,0 +1,320 @@
+//! `fw-stage` command-line interface — the launcher for every part of the
+//! system.
+//!
+//! ```text
+//! fw-stage solve     --input g.gr [--variant staged] [--artifacts DIR] [--output d.dist]
+//! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
+//! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
+//! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
+//! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
+//! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
+//! fw-stage info      [--artifacts DIR]
+//! ```
+
+pub mod args;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{self, Coordinator};
+use crate::graph::{generators, io};
+use crate::simulator::{self, table, Variant};
+use crate::util::stats::Samples;
+use args::Args;
+
+const USAGE: &str = "fw-stage — staged blocked Floyd-Warshall serving stack
+
+USAGE:
+  fw-stage <subcommand> [flags]
+
+SUBCOMMANDS:
+  solve        solve APSP for a graph file (local engine)
+  serve        run the TCP coordinator
+  client       send a graph to a running server
+  gen          generate a workload graph
+  simulate     regenerate the paper's Table 1 / Fig 7 / §5 analysis
+  bench-tasks  measure tasks/sec through the local engine
+  info         describe available artifacts
+  help         show this message
+";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn run(raw_args: Vec<String>) -> i32 {
+    match dispatch(raw_args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = raw.split_first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "solve" => cmd_solve(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "gen" => cmd_gen(rest),
+        "simulate" => cmd_simulate(rest),
+        "bench-tasks" => cmd_bench_tasks(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn default_artifacts() -> PathBuf {
+    // next to the binary's working directory by convention
+    PathBuf::from("artifacts")
+}
+
+fn start_coordinator(args: &Args) -> Result<Coordinator> {
+    let dir = PathBuf::from(args.get_or("artifacts", default_artifacts().to_str().unwrap()));
+    let mut config = coordinator::Config::new(&dir);
+    config.cache_capacity = args.get_usize("cache", 128)?;
+    config.engine.batch_window =
+        std::time::Duration::from_millis(args.get_u64("batch-window-ms", 2)?);
+    config.router.cpu_threshold = args.get_usize("cpu-threshold", 32)?;
+    Coordinator::start(config)
+}
+
+fn cmd_solve(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["quiet"])?;
+    let input = args.get("input").context("--input <graph file> required")?;
+    let variant = args.get_or("variant", "staged").to_string();
+    let output = args.get("output").map(PathBuf::from);
+    let quiet = args.get_bool("quiet");
+    let _ = args.get("artifacts");
+    let _ = args.get("cache");
+    let _ = args.get("batch-window-ms");
+    let _ = args.get("cpu-threshold");
+    args.reject_unknown()?;
+
+    let graph = io::load(Path::new(input))?;
+    let coord = start_coordinator(&args)?;
+    let t0 = std::time::Instant::now();
+    let resp = coord.solve(&coordinator::Request {
+        id: 1,
+        graph: graph.clone(),
+        variant,
+        no_cache: false,
+    })?;
+    let dt = t0.elapsed().as_secs_f64();
+    if !quiet {
+        let n = graph.n() as f64;
+        eprintln!(
+            "solved n={} via {} (bucket {}) in {:.4}s ({:.3e} tasks/s)",
+            graph.n(),
+            resp.source.name(),
+            resp.bucket,
+            dt,
+            n * n * n / dt,
+        );
+    }
+    match output {
+        Some(path) => io::save(&resp.dist, &path)?,
+        None => print!("{}", io::to_matrix_text(&resp.dist)),
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let _ = args.get("artifacts");
+    let _ = args.get("cache");
+    let _ = args.get("batch-window-ms");
+    let _ = args.get("cpu-threshold");
+    args.reject_unknown()?;
+
+    let coord = Arc::new(start_coordinator(&args)?);
+    let summary = coord.manifest_summary().clone();
+    let server = coordinator::server::Server::spawn(coord, &addr)?;
+    eprintln!(
+        "fw-stage serving on {} (variants: {}; buckets: {:?})",
+        server.addr(),
+        summary.variants.join(", "),
+        summary.buckets,
+    );
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["stats"])?;
+    let addr = args.get("addr").context("--addr HOST:PORT required")?;
+    let want_stats = args.get_bool("stats");
+    let input = args.get("input").map(str::to_string);
+    let variant = args.get_or("variant", "staged").to_string();
+    let output = args.get("output").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    let mut client = coordinator::client::Client::connect(addr)?;
+    if want_stats {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    let input = input.context("--input <graph file> required (or --stats)")?;
+    let graph = io::load(Path::new(&input))?;
+    let resp = client.solve(&graph, &variant)?;
+    eprintln!(
+        "server solved n={} via {} (bucket {}) in {:.4}s",
+        graph.n(),
+        resp.source.name(),
+        resp.bucket,
+        resp.seconds
+    );
+    match output {
+        Some(path) => io::save(&resp.dist, &path)?,
+        None => print!("{}", io::to_matrix_text(&resp.dist)),
+    }
+    Ok(())
+}
+
+fn cmd_gen(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let model = args.get_or("model", "er").to_string();
+    let n = args.get_usize("n", 256)?;
+    let seed = args.get_u64("seed", 42)?;
+    let p = args.get_f64("p", 0.3)?;
+    let out = args.get("out").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    let g = match model.as_str() {
+        "er" | "erdos-renyi" => generators::erdos_renyi(n, p, seed),
+        "grid" => {
+            let side = (n as f64).sqrt().round().max(2.0) as usize;
+            generators::grid(side, seed)
+        }
+        "scale-free" | "sf" => generators::scale_free(n, 2, seed),
+        "geometric" | "geo" => generators::geometric(n, 0.3, seed),
+        "ring" => generators::ring(n),
+        "dag" => generators::layered_dag(n.div_ceil(16).max(2), 16, seed),
+        other => bail!("unknown model {other:?} (er, grid, scale-free, geometric, ring, dag)"),
+    };
+    eprintln!("generated {} with n={} edges={}", model, g.n(), g.edge_count());
+    match out {
+        Some(path) => io::save(&g, &path)?,
+        None => print!("{}", io::to_edge_list(&g)),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let args = Args::parse(
+        rest,
+        &["table1", "fig7", "csv", "analysis", "ablation", "accuracy"],
+    )?;
+    let n = args.get_usize("n", 16384)?;
+    let any = args.get_bool("table1") as u8
+        + args.get_bool("fig7") as u8
+        + args.get_bool("analysis") as u8
+        + args.get_bool("ablation") as u8
+        + args.get_bool("accuracy") as u8;
+    let csv = args.get_bool("csv");
+    args.reject_unknown()?;
+
+    if any == 0 || args.get_bool("table1") {
+        print!("{}", table::render_table1());
+        println!();
+    }
+    if args.get_bool("fig7") {
+        if csv {
+            print!("{}", table::fig7_csv());
+        } else {
+            print!("{}", table::render_table1());
+        }
+    }
+    if any == 0 || args.get_bool("analysis") {
+        print!("{}", table::render_analysis());
+        println!();
+    }
+    if any == 0 || args.get_bool("ablation") {
+        print!("{}", table::render_ablation(n));
+    }
+    if args.get_bool("accuracy") {
+        println!("simulator accuracy vs paper (relative error per cell):");
+        for (n, name, sim, paper, err) in table::accuracy_report() {
+            println!(
+                "  n={n:<6} {name:<20} sim {sim:>10.4}  paper {paper:>10.4}  {:+6.1}%",
+                err * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let variant = args.get_or("variant", "staged").to_string();
+    let n = args.get_usize("n", 512)?;
+    let iters = args.get_usize("iters", 5)?;
+    let _ = args.get("artifacts");
+    let _ = args.get("cache");
+    let _ = args.get("batch-window-ms");
+    let _ = args.get("cpu-threshold");
+    args.reject_unknown()?;
+
+    let coord = start_coordinator(&args)?;
+    let g = generators::erdos_renyi(n, 0.3, 7);
+    // warm (compile + first run)
+    coord.solve_graph(&g, &variant)?;
+    let mut samples = Samples::new();
+    for i in 0..iters {
+        let g = generators::erdos_renyi(n, 0.3, 100 + i as u64);
+        let t0 = std::time::Instant::now();
+        coord
+            .solve(&coordinator::Request {
+                id: i as u64,
+                graph: g,
+                variant: variant.clone(),
+                no_cache: true,
+            })
+            .context("bench solve")?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n3 = (n as f64).powi(3);
+    println!(
+        "variant={variant} n={n}: {}  → {:.3e} tasks/s (median)",
+        samples.summary("s"),
+        n3 / samples.median(),
+    );
+    // put the analogous simulated C1060 figure next to it for context
+    if let Some(v) = Variant::from_str(&variant) {
+        if n % 32 == 0 {
+            let sim = simulator::simulate(v, n);
+            println!(
+                "  (simulated C1060 {}: {:.3e} tasks/s)",
+                v.name(),
+                sim.tasks_per_sec
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    args.reject_unknown()?;
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    manifest.check_files()?;
+    println!("artifact dir: {}", manifest.dir().display());
+    println!("tile: {}", manifest.tile);
+    for variant in manifest.variants() {
+        println!("  {variant}: sizes {:?}", manifest.sizes_for(&variant));
+    }
+    println!("total artifacts: {}", manifest.entries.len());
+    Ok(())
+}

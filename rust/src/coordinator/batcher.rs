@@ -1,0 +1,258 @@
+//! Block-diagonal batching policy.
+//!
+//! APSP has a clean batching identity: graphs placed on the block diagonal
+//! of a larger matrix (cross-blocks = +inf) do not interact — the solved
+//! matrix contains each graph's independent APSP in its own block.
+//!
+//! **Cost model.** A device call on bucket `b` costs Θ(b³) compute plus a
+//! fixed dispatch overhead.  Packing k items into a *larger* bucket is
+//! therefore almost never a win (8 × n=60 packed into 512 does 64× the
+//! arithmetic of 8 separate 64-bucket calls — measured as a 1000× loss in
+//! `benches/coordinator.rs` before this policy existed).  Packing *is* a
+//! win when several items share a natural bucket and fit in it together:
+//! two n≤32 graphs in one 64-bucket call halve both dispatch overhead and
+//! total arithmetic versus two calls.
+//!
+//! The planner therefore groups items by natural bucket (smallest lowered
+//! size ≥ n) and first-fit packs within each group, never escalating to a
+//! larger bucket.  This module is pure policy (no device, no threads) so
+//! it is exhaustively testable; the engine applies its plans.
+
+/// One queued item, identified by an opaque ticket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Item {
+    pub ticket: u64,
+    /// Vertex count of the item's graph.
+    pub n: usize,
+}
+
+/// Where an item landed inside a packed batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub ticket: u64,
+    /// Row/col offset of the item's block on the batch diagonal.
+    pub offset: usize,
+    pub n: usize,
+}
+
+/// One device call: a bucket size and the items packed into it.
+/// `bucket == 0` marks items too large for any bucket (engine → error).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub bucket: usize,
+    pub placements: Vec<Placement>,
+}
+
+impl Batch {
+    /// Total vertices used of the bucket (fill factor numerator).
+    pub fn used(&self) -> usize {
+        self.placements.iter().map(|p| p.n).sum()
+    }
+}
+
+/// Packing policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Enable same-bucket packing (vs one call per item).
+    pub pack: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { pack: true }
+    }
+}
+
+/// Plan device calls for `items` given the lowered `buckets` (ascending).
+pub fn plan(items: &[Item], buckets: &[usize], policy: &BatchPolicy) -> Vec<Batch> {
+    assert!(!buckets.is_empty(), "no buckets available");
+    let natural = |n: usize| buckets.iter().copied().find(|&b| b >= n);
+
+    let mut batches: Vec<Batch> = Vec::new();
+    // group by natural bucket, preserving arrival order within groups
+    for &bucket in buckets {
+        let group: Vec<Item> = items
+            .iter()
+            .copied()
+            .filter(|it| natural(it.n) == Some(bucket))
+            .collect();
+        if group.is_empty() {
+            continue;
+        }
+        if !policy.pack {
+            for it in group {
+                batches.push(Batch {
+                    bucket,
+                    placements: vec![Placement {
+                        ticket: it.ticket,
+                        offset: 0,
+                        n: it.n,
+                    }],
+                });
+            }
+            continue;
+        }
+        // first-fit-decreasing within the same bucket size
+        let mut sorted = group;
+        sorted.sort_by(|a, b| b.n.cmp(&a.n).then(a.ticket.cmp(&b.ticket)));
+        let mut bins: Vec<(usize, Vec<Placement>)> = Vec::new();
+        for it in sorted {
+            match bins.iter_mut().find(|(used, _)| used + it.n <= bucket) {
+                Some((used, placements)) => {
+                    placements.push(Placement {
+                        ticket: it.ticket,
+                        offset: *used,
+                        n: it.n,
+                    });
+                    *used += it.n;
+                }
+                None => bins.push((
+                    it.n,
+                    vec![Placement {
+                        ticket: it.ticket,
+                        offset: 0,
+                        n: it.n,
+                    }],
+                )),
+            }
+        }
+        for (_, placements) in bins {
+            batches.push(Batch { bucket, placements });
+        }
+    }
+    // oversize items: no bucket fits
+    for it in items {
+        if natural(it.n).is_none() {
+            batches.push(Batch {
+                bucket: 0,
+                placements: vec![Placement {
+                    ticket: it.ticket,
+                    offset: 0,
+                    n: it.n,
+                }],
+            });
+        }
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: [usize; 4] = [64, 128, 256, 512];
+
+    fn items(ns: &[usize]) -> Vec<Item> {
+        ns.iter()
+            .enumerate()
+            .map(|(i, &n)| Item {
+                ticket: i as u64,
+                n,
+            })
+            .collect()
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::default()
+    }
+
+    #[test]
+    fn packs_within_natural_bucket_only() {
+        // two n=30 graphs fit together in one 64-bucket call
+        let batches = plan(&items(&[30, 30]), &BUCKETS, &policy());
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].bucket, 64);
+        assert_eq!(batches[0].placements.len(), 2);
+        assert_eq!(batches[0].used(), 60);
+    }
+
+    #[test]
+    fn never_escalates_to_larger_bucket() {
+        // 8 × n=60: natural bucket 64, only one fits per bin ⇒ 8 calls at
+        // 64, NOT one call at 512 (which would cost 64× the arithmetic)
+        let batches = plan(&items(&[60; 8]), &BUCKETS, &policy());
+        assert_eq!(batches.len(), 8);
+        for b in &batches {
+            assert_eq!(b.bucket, 64);
+            assert_eq!(b.placements.len(), 1);
+        }
+    }
+
+    #[test]
+    fn groups_do_not_mix_buckets() {
+        // 30+30 pack into one 64; 100 gets its own 128; 300 its own 512
+        let batches = plan(&items(&[30, 100, 30, 300]), &BUCKETS, &policy());
+        let mut buckets: Vec<usize> = batches.iter().map(|b| b.bucket).collect();
+        buckets.sort();
+        assert_eq!(buckets, vec![64, 128, 512]);
+        let b64 = batches.iter().find(|b| b.bucket == 64).unwrap();
+        assert_eq!(b64.placements.len(), 2);
+    }
+
+    #[test]
+    fn placements_disjoint_and_in_bounds() {
+        let batches = plan(&items(&[20, 20, 20, 10, 30, 64]), &BUCKETS, &policy());
+        for b in &batches {
+            let mut spans: Vec<(usize, usize)> =
+                b.placements.iter().map(|p| (p.offset, p.offset + p.n)).collect();
+            spans.sort();
+            for pair in spans.windows(2) {
+                assert!(pair[0].1 <= pair[1].0, "overlap: {spans:?}");
+            }
+            assert!(spans.last().unwrap().1 <= b.bucket);
+        }
+    }
+
+    #[test]
+    fn oversize_marked_with_bucket_zero() {
+        let batches = plan(&items(&[9999]), &BUCKETS, &policy());
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].bucket, 0);
+    }
+
+    #[test]
+    fn no_pack_policy_gives_one_batch_per_item() {
+        let p = BatchPolicy { pack: false };
+        let batches = plan(&items(&[30, 30, 30]), &BUCKETS, &p);
+        assert_eq!(batches.len(), 3);
+        for b in &batches {
+            assert_eq!(b.bucket, 64);
+        }
+    }
+
+    #[test]
+    fn every_ticket_appears_exactly_once() {
+        let input = items(&[60, 60, 300, 100, 10, 10, 10, 500, 9999, 64, 65]);
+        let batches = plan(&input, &BUCKETS, &policy());
+        let mut tickets: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.placements.iter().map(|p| p.ticket))
+            .collect();
+        tickets.sort();
+        assert_eq!(tickets, (0..input.len() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input_empty_plan() {
+        assert!(plan(&[], &BUCKETS, &policy()).is_empty());
+    }
+
+    #[test]
+    fn exact_bucket_fit() {
+        // n == bucket exactly: its own call, offset 0
+        let batches = plan(&items(&[64, 128]), &BUCKETS, &policy());
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().any(|b| b.bucket == 64));
+        assert!(batches.iter().any(|b| b.bucket == 128));
+    }
+
+    #[test]
+    fn many_tiny_items_fill_bins() {
+        // 10 × n=16: four fit per 64-bucket (4×16=64) ⇒ 3 bins (4+4+2)
+        let batches = plan(&items(&[16; 10]), &BUCKETS, &policy());
+        assert_eq!(batches.len(), 3);
+        let mut sizes: Vec<usize> = batches.iter().map(|b| b.placements.len()).collect();
+        sizes.sort();
+        assert_eq!(sizes, vec![2, 4, 4]);
+    }
+}

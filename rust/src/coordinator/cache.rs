@@ -1,0 +1,207 @@
+//! Result cache: LRU over (variant, graph-content hash).
+//!
+//! APSP is expensive and deterministic — identical graphs recur in routing
+//! workloads (topology changes are much rarer than queries).  Keyed by an
+//! FNV-1a hash of the matrix bytes plus n and variant; collisions are
+//! guarded by storing the full key (n, variant, hash) and verifying n.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::graph::DistMatrix;
+
+/// FNV-1a over the matrix's raw f32 bits (stable across runs).
+pub fn graph_fingerprint(g: &DistMatrix) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = OFFSET;
+    h ^= g.n() as u64;
+    h = h.wrapping_mul(PRIME);
+    for &w in g.as_slice() {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct Key {
+    variant: String,
+    n: usize,
+    fingerprint: u64,
+}
+
+struct Entry {
+    dist: DistMatrix,
+    /// Monotone counter value at last touch (LRU eviction order).
+    last_used: u64,
+}
+
+/// A thread-safe LRU result cache.
+pub struct ResultCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResultCache {
+    /// `capacity` = max cached results (0 disables caching).
+    pub fn new(capacity: usize) -> Self {
+        ResultCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            capacity,
+        }
+    }
+
+    pub fn get(&self, variant: &str, g: &DistMatrix) -> Option<DistMatrix> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let key = Key {
+            variant: variant.to_string(),
+            n: g.n(),
+            fingerprint: graph_fingerprint(g),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = clock;
+                let dist = entry.dist.clone();
+                inner.hits += 1;
+                Some(dist)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = Key {
+            variant: variant.to_string(),
+            n: g.n(),
+            fingerprint: graph_fingerprint(g),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {
+            // evict the least-recently-used entry
+            if let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert(
+            key,
+            Entry {
+                dist,
+                last_used: clock,
+            },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn hit_after_put() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(8);
+        let d = crate::apsp::naive::solve(&g);
+        assert!(cache.get("staged", &g).is_none());
+        cache.put("staged", &g, d.clone());
+        assert_eq!(cache.get("staged", &g), Some(d));
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn variant_is_part_of_key() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(8);
+        cache.put("staged", &g, crate::apsp::naive::solve(&g));
+        assert!(cache.get("blocked", &g).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let cache = ResultCache::new(2);
+        let g1 = generators::ring(4);
+        let g2 = generators::ring(5);
+        let g3 = generators::ring(6);
+        cache.put("v", &g1, g1.clone());
+        cache.put("v", &g2, g2.clone());
+        assert!(cache.get("v", &g1).is_some()); // touch g1: g2 is now LRU
+        cache.put("v", &g3, g3.clone()); // evicts g2
+        assert!(cache.get("v", &g2).is_none());
+        assert!(cache.get("v", &g1).is_some());
+        assert!(cache.get("v", &g3).is_some());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let cache = ResultCache::new(0);
+        let g = generators::ring(4);
+        cache.put("v", &g, g.clone());
+        assert!(cache.get("v", &g).is_none());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_content() {
+        let g1 = generators::erdos_renyi(16, 0.5, 1);
+        let mut g2 = g1.clone();
+        assert_eq!(graph_fingerprint(&g1), graph_fingerprint(&g2));
+        g2.set(3, 4, 0.123);
+        assert_ne!(graph_fingerprint(&g1), graph_fingerprint(&g2));
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_size() {
+        assert_ne!(
+            graph_fingerprint(&generators::ring(8)),
+            graph_fingerprint(&generators::ring(9))
+        );
+    }
+}

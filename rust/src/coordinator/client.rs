@@ -1,0 +1,82 @@
+//! Blocking TCP client for the coordinator protocol (examples, benches,
+//! and the `fw-stage client` subcommand).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::types::{decode_response, encode_request, Request, Response};
+use crate::graph::DistMatrix;
+use crate::util::json::Json;
+
+/// One connection to a running `fw-stage serve`.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(reply)
+    }
+
+    /// Solve a graph; returns the full response (distances + metadata).
+    pub fn solve(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request {
+            id,
+            graph: graph.clone(),
+            variant: variant.to_string(),
+            no_cache: false,
+        };
+        let reply = self.roundtrip(&encode_request(&req))?;
+        let resp = decode_response(&reply)?;
+        if resp.id != id {
+            bail!("response id {} for request {id}", resp.id);
+        }
+        Ok(resp)
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        let reply = self.roundtrip(r#"{"type":"ping"}"#)?;
+        let v = Json::parse(&reply)?;
+        if v.get("type").as_str() != Some("pong") {
+            bail!("unexpected ping reply: {reply}");
+        }
+        Ok(())
+    }
+
+    /// Server metrics snapshot.
+    pub fn stats(&mut self) -> Result<Json> {
+        let reply = self.roundtrip(r#"{"type":"stats"}"#)?;
+        Ok(Json::parse(&reply)?)
+    }
+
+    /// Artifact info (variants, buckets, tile).
+    pub fn info(&mut self) -> Result<Json> {
+        let reply = self.roundtrip(r#"{"type":"info"}"#)?;
+        Ok(Json::parse(&reply)?)
+    }
+}

@@ -1,0 +1,364 @@
+//! The device engine: a dedicated executor thread owning the PJRT client.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so all
+//! device work is confined to one engine thread fed by an MPSC channel —
+//! the same leader/worker split a GPU serving stack uses.  The engine:
+//!
+//! 1. blocks on the queue for the first pending job;
+//! 2. drains whatever else arrives within the batch window;
+//! 3. groups jobs by variant and plans device calls with the
+//!    block-diagonal packer ([`super::batcher`]);
+//! 4. executes each plan (packing/unpacking matrices as needed) and sends
+//!    each job its result through its reply channel.
+//!
+//! Backpressure: the submission channel is bounded; when the engine falls
+//! behind, `submit` blocks the caller (TCP handler threads), which is the
+//! correct shed point for a solve service.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{plan, BatchPolicy, Item};
+use super::metrics::Metrics;
+use crate::graph::DistMatrix;
+use crate::runtime::ExecutorPool;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifact_dir: PathBuf,
+    /// How long to linger collecting more jobs after the first (batching
+    /// window). Zero = no batching delay (still batches what is queued).
+    pub batch_window: Duration,
+    /// Max jobs drained into one planning round.
+    pub max_batch_jobs: usize,
+    /// Submission queue bound (backpressure).
+    pub queue_depth: usize,
+    /// Packing policy.
+    pub policy: BatchPolicy,
+    /// Eagerly compile all artifacts of these variants at startup.
+    pub warm_variants: Vec<String>,
+}
+
+impl EngineConfig {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Self {
+        EngineConfig {
+            artifact_dir: artifact_dir.into(),
+            batch_window: Duration::from_millis(2),
+            max_batch_jobs: 64,
+            queue_depth: 256,
+            policy: BatchPolicy::default(),
+            warm_variants: vec!["staged".to_string()],
+        }
+    }
+}
+
+/// A solve job travelling to the engine thread.
+struct Job {
+    variant: String,
+    graph: DistMatrix,
+    reply: mpsc::Sender<Result<EngineSolve>>,
+}
+
+/// A successful engine solve.
+#[derive(Clone, Debug)]
+pub struct EngineSolve {
+    pub dist: DistMatrix,
+    pub bucket: usize,
+    /// Number of jobs co-scheduled in the same device call.
+    pub batch_size: usize,
+}
+
+/// Handle to the engine thread (cheap to clone; `Send + Sync`).
+pub struct Engine {
+    tx: mpsc::SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread. Fails fast (synchronously) if the artifact
+    /// manifest is unreadable or the PJRT client cannot start.
+    pub fn start(config: EngineConfig, metrics: Arc<Metrics>) -> Result<Engine> {
+        let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread_metrics = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("fw-stage-engine".into())
+            .spawn(move || engine_main(config, rx, ready_tx, thread_metrics))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(Engine {
+            tx,
+            metrics,
+            handle: Some(handle),
+        })
+    }
+
+    /// Submit a solve and block for the result.
+    pub fn solve(&self, variant: &str, graph: DistMatrix) -> Result<EngineSolve> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                variant: variant.to_string(),
+                graph,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the job (shutting down?)"))?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // closing the channel stops the loop; join to flush in-flight work
+        let (tx, _) = mpsc::sync_channel(1);
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_main(
+    config: EngineConfig,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+    metrics: Arc<Metrics>,
+) {
+    let pool = match ExecutorPool::open(&config.artifact_dir) {
+        Ok(pool) => {
+            let mut warm_err = None;
+            for v in &config.warm_variants {
+                if let Err(e) = pool.warm(v) {
+                    warm_err = Some(e);
+                    break;
+                }
+            }
+            match warm_err {
+                None => {
+                    let _ = ready.send(Ok(()));
+                    pool
+                }
+                Some(e) => {
+                    let _ = ready.send(Err(e));
+                    return;
+                }
+            }
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        // block for the first job; channel closed = shutdown
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + config.batch_window;
+        while jobs.len() < config.max_batch_jobs {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => jobs.push(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_round(&pool, &config.policy, jobs, &metrics);
+    }
+}
+
+/// Plan and execute one drained round of jobs.
+fn run_round(pool: &ExecutorPool, policy: &BatchPolicy, jobs: Vec<Job>, metrics: &Metrics) {
+    // group by variant
+    let mut by_variant: HashMap<String, Vec<Job>> = HashMap::new();
+    for job in jobs {
+        by_variant.entry(job.variant.clone()).or_default().push(job);
+    }
+    for (variant, jobs) in by_variant {
+        let buckets = pool.manifest().sizes_for(&variant);
+        if buckets.is_empty() {
+            for job in jobs {
+                let _ = job
+                    .reply
+                    .send(Err(anyhow!("no artifacts for variant {variant:?}")));
+            }
+            continue;
+        }
+        let items: Vec<Item> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, job)| Item {
+                ticket: i as u64,
+                n: job.graph.n(),
+            })
+            .collect();
+        let mut jobs: Vec<Option<Job>> = jobs.into_iter().map(Some).collect();
+        for batch in plan(&items, &buckets, policy) {
+            if batch.bucket == 0 {
+                for p in &batch.placements {
+                    if let Some(job) = jobs[p.ticket as usize].take() {
+                        let _ = job.reply.send(Err(anyhow!(
+                            "graph size {} exceeds largest artifact bucket {}",
+                            p.n,
+                            buckets.last().unwrap()
+                        )));
+                    }
+                }
+                continue;
+            }
+            // assemble block-diagonal input
+            let t0 = Instant::now();
+            let mut packed = DistMatrix::unconnected(batch.bucket);
+            for p in &batch.placements {
+                let job = jobs[p.ticket as usize].as_ref().expect("ticket reuse");
+                copy_block(&mut packed, &job.graph, p.offset);
+            }
+            let solved = pool
+                .model(&variant, batch.bucket)
+                .and_then(|m| m.run(&packed));
+            let device_seconds = t0.elapsed().as_secs_f64();
+            metrics.record_batch(batch.placements.len(), device_seconds);
+            match solved {
+                Ok(solved) => {
+                    let batch_size = batch.placements.len();
+                    for p in &batch.placements {
+                        let job = jobs[p.ticket as usize].take().expect("ticket reuse");
+                        let dist = slice_block(&solved, p.offset, p.n);
+                        let _ = job.reply.send(Ok(EngineSolve {
+                            dist,
+                            bucket: batch.bucket,
+                            batch_size,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("device execution failed: {e:#}");
+                    for p in &batch.placements {
+                        if let Some(job) = jobs[p.ticket as usize].take() {
+                            let _ = job.reply.send(Err(anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+        }
+        // any job not covered by the plan is a planner bug; fail loudly
+        for job in jobs.into_iter().flatten() {
+            let _ = job
+                .reply
+                .send(Err(anyhow!("internal: job missing from batch plan")));
+        }
+    }
+}
+
+/// Copy `g` onto the diagonal of `dst` at `offset`.
+fn copy_block(dst: &mut DistMatrix, g: &DistMatrix, offset: usize) {
+    let n = g.n();
+    let m = dst.n();
+    debug_assert!(offset + n <= m);
+    for i in 0..n {
+        let src = g.row(i);
+        let dst_row = &mut dst.as_mut_slice()[(offset + i) * m + offset..][..n];
+        dst_row.copy_from_slice(src);
+    }
+}
+
+/// Extract the `n×n` diagonal block at `offset`.
+fn slice_block(src: &DistMatrix, offset: usize, n: usize) -> DistMatrix {
+    let m = src.n();
+    debug_assert!(offset + n <= m);
+    let mut out = DistMatrix::unconnected(n);
+    for i in 0..n {
+        let row = &src.row(offset + i)[offset..offset + n];
+        out.as_mut_slice()[i * n..(i + 1) * n].copy_from_slice(row);
+    }
+    out
+}
+
+/// Block-diagonal identity used by tests: packing then slicing is lossless
+/// and blocks cannot interact (all cross-block entries are `INF`).
+#[cfg(test)]
+pub fn pack_roundtrip_check(graphs: &[DistMatrix], bucket: usize) -> bool {
+    use crate::INF;
+    let mut packed = DistMatrix::unconnected(bucket);
+    let mut offset = 0;
+    let mut offsets = Vec::new();
+    for g in graphs {
+        copy_block(&mut packed, g, offset);
+        offsets.push(offset);
+        offset += g.n();
+    }
+    // cross-block entries untouched (INF)
+    for (gi, g) in graphs.iter().enumerate() {
+        for (gj, h) in graphs.iter().enumerate() {
+            if gi == gj {
+                continue;
+            }
+            for i in 0..g.n() {
+                for j in 0..h.n() {
+                    if packed.get(offsets[gi] + i, offsets[gj] + j) != INF {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    graphs
+        .iter()
+        .zip(&offsets)
+        .all(|(g, &off)| &slice_block(&packed, off, g.n()) == g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp;
+    use crate::graph::generators;
+
+    #[test]
+    fn pack_and_slice_roundtrip() {
+        let gs = vec![
+            generators::ring(10),
+            generators::erdos_renyi(20, 0.4, 1),
+            generators::grid(4, 2),
+        ];
+        assert!(pack_roundtrip_check(&gs, 64));
+    }
+
+    #[test]
+    fn block_diagonal_solve_is_independent() {
+        // solving the packed matrix solves each block independently
+        let a = generators::erdos_renyi(12, 0.5, 3);
+        let b = generators::ring(9);
+        let mut packed = DistMatrix::unconnected(32);
+        copy_block(&mut packed, &a, 0);
+        copy_block(&mut packed, &b, 12);
+        let solved = apsp::naive::solve(&packed);
+        assert_eq!(slice_block(&solved, 0, 12), apsp::naive::solve(&a));
+        assert_eq!(slice_block(&solved, 12, 9), apsp::naive::solve(&b));
+        // cross-block distances remain infinite
+        assert!(solved.get(0, 20).is_infinite());
+        assert!(solved.get(20, 0).is_infinite());
+    }
+}

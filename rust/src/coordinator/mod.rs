@@ -1,0 +1,178 @@
+//! Layer-3 coordinator: the serving system around the AOT kernels.
+//!
+//! ```text
+//!            TCP (JSON lines)                 mpsc (bounded)
+//!  clients ───────────────► server ─┬─► router ──► engine thread ─► PJRT
+//!                                   │      │          (batcher,
+//!                                   │      └─► CPU fallback)
+//!                                   └─► cache / metrics
+//! ```
+//!
+//! * [`types`] — request/response structs + wire codec
+//! * [`router`] — CPU-vs-device routing policy
+//! * [`batcher`] — block-diagonal packing plans
+//! * [`engine`] — the PJRT executor thread
+//! * [`cache`] — LRU result cache
+//! * [`metrics`] — counters + latency summaries
+//! * [`server`] / [`client`] — TCP front end and a blocking client
+
+pub mod batcher;
+pub mod cache;
+pub mod client;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod types;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::apsp;
+use crate::graph::DistMatrix;
+use crate::runtime::Manifest;
+
+pub use engine::{Engine, EngineConfig};
+pub use types::{Request, Response, Source};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub artifact_dir: PathBuf,
+    pub router: router::RouterConfig,
+    pub engine: EngineConfig,
+    /// Result-cache capacity (entries); 0 disables.
+    pub cache_capacity: usize,
+}
+
+impl Config {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Self {
+        let artifact_dir = artifact_dir.into();
+        Config {
+            engine: EngineConfig::new(&artifact_dir),
+            artifact_dir,
+            router: router::RouterConfig::default(),
+            cache_capacity: 128,
+        }
+    }
+}
+
+/// The coordinator: validates, routes, caches, and dispatches solves.
+/// `Send + Sync`; server handler threads share one instance.
+pub struct Coordinator {
+    engine: Engine,
+    cache: cache::ResultCache,
+    metrics: Arc<metrics::Metrics>,
+    router: router::RouterConfig,
+    manifest_summary: ManifestSummary,
+}
+
+/// What the coordinator knows about the artifacts (for `info` requests and
+/// routing) without touching the PJRT client.
+#[derive(Clone, Debug)]
+pub struct ManifestSummary {
+    pub variants: Vec<String>,
+    pub buckets: Vec<usize>,
+    pub tile: usize,
+}
+
+impl Coordinator {
+    /// Start the engine thread and load routing metadata.
+    pub fn start(mut config: Config) -> Result<Coordinator> {
+        let manifest = Manifest::load(&config.artifact_dir)
+            .context("coordinator: loading artifact manifest")?;
+        let summary = ManifestSummary {
+            variants: manifest.variants(),
+            buckets: manifest.sizes_for("staged"),
+            tile: manifest.tile,
+        };
+        config.router.device_variants = summary.variants.clone();
+        let metrics = Arc::new(metrics::Metrics::new());
+        let engine = Engine::start(config.engine, metrics.clone())?;
+        Ok(Coordinator {
+            engine,
+            cache: cache::ResultCache::new(config.cache_capacity),
+            metrics,
+            router: config.router,
+            manifest_summary: summary,
+        })
+    }
+
+    pub fn metrics(&self) -> &metrics::Metrics {
+        &self.metrics
+    }
+
+    pub fn manifest_summary(&self) -> &ManifestSummary {
+        &self.manifest_summary
+    }
+
+    /// Serve one request (blocking). This is the whole request path.
+    pub fn solve(&self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        self.metrics.record_request();
+        req.graph
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+
+        // cache
+        if !req.no_cache {
+            if let Some(dist) = self.cache.get(&req.variant, &req.graph) {
+                let seconds = t0.elapsed().as_secs_f64();
+                self.metrics.record_solve(Source::Cache, seconds);
+                return Ok(Response {
+                    id: req.id,
+                    dist,
+                    source: Source::Cache,
+                    bucket: req.graph.n(),
+                    seconds,
+                });
+            }
+        }
+
+        // route
+        let route = router::route(&self.router, &req.variant, req.graph.n())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let (dist, source, bucket) = match route {
+            router::Route::Cpu { tile } => {
+                let dist = apsp::blocked::solve(&req.graph, tile);
+                (dist, Source::Cpu, req.graph.n())
+            }
+            router::Route::Johnson => {
+                let dist = apsp::johnson::solve(&req.graph)
+                    .map_err(|e| anyhow::anyhow!("johnson: {e}"))?;
+                (dist, Source::Cpu, req.graph.n())
+            }
+            router::Route::Device => {
+                let solve = self.engine.solve(&req.variant, req.graph.clone())?;
+                (solve.dist, Source::Device, solve.bucket)
+            }
+        };
+
+        if !req.no_cache {
+            self.cache.put(&req.variant, &req.graph, dist.clone());
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        self.metrics.record_solve(source, seconds);
+        Ok(Response {
+            id: req.id,
+            dist,
+            source,
+            bucket,
+            seconds,
+        })
+    }
+
+    /// Convenience: solve a bare graph with defaults.
+    pub fn solve_graph(&self, graph: &DistMatrix, variant: &str) -> Result<DistMatrix> {
+        let resp = self.solve(&Request {
+            id: 0,
+            graph: graph.clone(),
+            variant: variant.to_string(),
+            no_cache: false,
+        })?;
+        Ok(resp.dist)
+    }
+}

@@ -1,0 +1,113 @@
+//! Request routing policy: where should a solve run?
+//!
+//! * tiny graphs (n ≤ `cpu_threshold`) run on the calling thread's CPU
+//!   solver — padding a 16-vertex graph to a 64³-work device bucket costs
+//!   more than solving it in-place (the same big/small split a GPU serving
+//!   stack makes);
+//! * the explicit "cpu" variant always routes to the CPU solver;
+//! * everything else goes to the device engine.
+//!
+//! Pure policy, trivially testable.
+
+/// Routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Solve on CPU in the calling thread (blocked solver, given tile).
+    Cpu { tile: usize },
+    /// Johnson's algorithm on the CPU (sparse graphs / explicit request).
+    Johnson,
+    /// Submit to the device engine.
+    Device,
+}
+
+/// Routing configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Graphs up to this size run on the CPU path.
+    pub cpu_threshold: usize,
+    /// Tile size for the CPU blocked solver.
+    pub cpu_tile: usize,
+    /// Variants the device knows about (from the manifest).
+    pub device_variants: Vec<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            cpu_threshold: 32,
+            cpu_tile: 32,
+            device_variants: vec!["naive".into(), "blocked".into(), "staged".into()],
+        }
+    }
+}
+
+/// Decide the route for (variant, n). Errors on unknown variants.
+pub fn route(config: &RouterConfig, variant: &str, n: usize) -> Result<Route, String> {
+    if variant == "cpu" {
+        return Ok(Route::Cpu {
+            tile: config.cpu_tile,
+        });
+    }
+    if variant == "johnson" {
+        return Ok(Route::Johnson);
+    }
+    if !config.device_variants.iter().any(|v| v == variant) {
+        return Err(format!(
+            "unknown variant {variant:?} (available: cpu, johnson, {})",
+            config.device_variants.join(", ")
+        ));
+    }
+    if n <= config.cpu_threshold {
+        Ok(Route::Cpu {
+            tile: config.cpu_tile,
+        })
+    } else {
+        Ok(Route::Device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RouterConfig {
+        RouterConfig::default()
+    }
+
+    #[test]
+    fn small_graphs_go_cpu() {
+        assert_eq!(route(&cfg(), "staged", 16).unwrap(), Route::Cpu { tile: 32 });
+        assert_eq!(route(&cfg(), "staged", 32).unwrap(), Route::Cpu { tile: 32 });
+    }
+
+    #[test]
+    fn large_graphs_go_device() {
+        assert_eq!(route(&cfg(), "staged", 33).unwrap(), Route::Device);
+        assert_eq!(route(&cfg(), "blocked", 512).unwrap(), Route::Device);
+    }
+
+    #[test]
+    fn explicit_cpu_always_cpu() {
+        assert_eq!(route(&cfg(), "cpu", 4096).unwrap(), Route::Cpu { tile: 32 });
+    }
+
+    #[test]
+    fn explicit_johnson_routes_to_johnson() {
+        assert_eq!(route(&cfg(), "johnson", 4096).unwrap(), Route::Johnson);
+        assert_eq!(route(&cfg(), "johnson", 4).unwrap(), Route::Johnson);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let err = route(&cfg(), "warp9", 64).unwrap_err();
+        assert!(err.contains("warp9"));
+        assert!(err.contains("staged"));
+    }
+
+    #[test]
+    fn threshold_configurable() {
+        let mut c = cfg();
+        c.cpu_threshold = 0;
+        assert_eq!(route(&c, "staged", 1).unwrap(), Route::Device);
+    }
+}

@@ -1,0 +1,150 @@
+//! TCP front end: line-delimited JSON over a thread-per-connection server.
+//!
+//! Request types:
+//! * `{"type":"solve", "id", "n", "variant", "edges": [[u,v,w],…]}` →
+//!   `{"type":"result", …}` (see [`super::types`])
+//! * `{"type":"ping"}` → `{"type":"pong"}`
+//! * `{"type":"stats"}` → metrics snapshot
+//! * `{"type":"info"}` → artifact variants/buckets
+//!
+//! Malformed input gets a `{"type":"error"}` line and the connection stays
+//! open; handler threads share the coordinator (the engine serializes
+//! device work internally).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::types::{decode_request, encode_error, encode_response};
+use super::Coordinator;
+use crate::util::json::Json;
+
+/// A running server (owns the accept thread).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve on background threads.
+    pub fn spawn(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_shutdown = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("fw-stage-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(stream) => {
+                            let coord = coordinator.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("fw-stage-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(&coord, stream);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            addr: local,
+            shutdown,
+            accept_handle: Some(handle),
+        })
+    }
+
+    /// The bound address (use with port 0 to discover the chosen port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Ask the accept loop to stop (in-flight connections drain naturally).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the listener so `incoming()` returns
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(coord: &Coordinator, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let peer_reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in peer_reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(coord, &line);
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Process one request line → one response line (shared with tests).
+pub fn handle_line(coord: &Coordinator, line: &str) -> String {
+    let ty = Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("type").as_str().map(str::to_string))
+        .unwrap_or_else(|| "solve".to_string());
+    match ty.as_str() {
+        "ping" => Json::obj(vec![("type", Json::str("pong"))]).to_string(),
+        "stats" => {
+            let mut snap = coord.metrics().snapshot();
+            if let Json::Obj(map) = &mut snap {
+                map.insert("type".into(), Json::str("stats"));
+            }
+            snap.to_string()
+        }
+        "info" => {
+            let s = coord.manifest_summary();
+            Json::obj(vec![
+                ("type", Json::str("info")),
+                (
+                    "variants",
+                    Json::Arr(s.variants.iter().map(|v| Json::str(v.clone())).collect()),
+                ),
+                (
+                    "buckets",
+                    Json::Arr(s.buckets.iter().map(|&b| Json::num(b as f64)).collect()),
+                ),
+                ("tile", Json::num(s.tile as f64)),
+            ])
+            .to_string()
+        }
+        "solve" => match decode_request(line) {
+            Ok(req) => match coord.solve(&req) {
+                Ok(resp) => encode_response(&resp),
+                Err(e) => {
+                    coord.metrics().record_error();
+                    encode_error(req.id, &format!("{e:#}"))
+                }
+            },
+            Err(e) => {
+                coord.metrics().record_error();
+                encode_error(0, &format!("{e:#}"))
+            }
+        },
+        other => encode_error(0, &format!("unknown request type {other:?}")),
+    }
+}

@@ -1,0 +1,308 @@
+//! Request/response types and their wire encoding.
+//!
+//! The server speaks line-delimited JSON over TCP.  Graphs travel as edge
+//! lists (sparse graphs dominate real workloads; a dense n×n float matrix
+//! would be ~4n² bytes of JSON); distance matrices return as row arrays
+//! with `null` for "unreachable".
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::DistMatrix;
+use crate::util::json::Json;
+use crate::INF;
+
+/// A solve request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client-chosen id echoed in the response.
+    pub id: u64,
+    /// The graph to solve.
+    pub graph: DistMatrix,
+    /// Model variant ("staged" unless overridden).
+    pub variant: String,
+    /// Skip the result cache when true.
+    pub no_cache: bool,
+}
+
+/// Where a response was computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// PJRT artifact execution (bucket size attached).
+    Device,
+    /// CPU fallback (below the routing threshold).
+    Cpu,
+    /// Served from the result cache.
+    Cache,
+}
+
+impl Source {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::Device => "device",
+            Source::Cpu => "cpu",
+            Source::Cache => "cache",
+        }
+    }
+}
+
+/// A solve response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub dist: DistMatrix,
+    pub source: Source,
+    /// Padding bucket used (device responses; n otherwise).
+    pub bucket: usize,
+    /// Wall-clock service time, seconds.
+    pub seconds: f64,
+}
+
+// ------------------------------------------------------------------ wire --
+
+/// Encode a request as one JSON line.
+pub fn encode_request(req: &Request) -> String {
+    let n = req.graph.n();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            let w = req.graph.get(i, j);
+            if i != j && w.is_finite() {
+                edges.push(Json::Arr(vec![
+                    Json::num(i as f64),
+                    Json::num(j as f64),
+                    Json::num(w as f64),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("type", Json::str("solve")),
+        ("id", Json::num(req.id as f64)),
+        ("n", Json::num(n as f64)),
+        ("variant", Json::str(req.variant.clone())),
+        ("no_cache", Json::Bool(req.no_cache)),
+        ("edges", Json::Arr(edges)),
+    ])
+    .to_string()
+}
+
+/// Decode a request line.
+pub fn decode_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).context("request is not valid JSON")?;
+    let ty = v.get("type").as_str().unwrap_or("solve");
+    if ty != "solve" {
+        bail!("unsupported request type {ty:?}");
+    }
+    let id = v.get("id").as_f64().unwrap_or(0.0) as u64;
+    let n = v.get("n").as_usize().context("request missing 'n'")?;
+    if n == 0 {
+        bail!("empty graph");
+    }
+    const MAX_N: usize = 4096;
+    if n > MAX_N {
+        bail!("n={n} exceeds server limit {MAX_N}");
+    }
+    let variant = v
+        .get("variant")
+        .as_str()
+        .unwrap_or("staged")
+        .to_string();
+    let mut graph = DistMatrix::unconnected(n);
+    let edges = v.get("edges").as_arr().unwrap_or(&[]);
+    for (idx, e) in edges.iter().enumerate() {
+        let e = e.as_arr().with_context(|| format!("edge[{idx}] not an array"))?;
+        if e.len() != 3 {
+            bail!("edge[{idx}] must be [u, v, w]");
+        }
+        let u = e[0].as_usize().with_context(|| format!("edge[{idx}] bad u"))?;
+        let vtx = e[1].as_usize().with_context(|| format!("edge[{idx}] bad v"))?;
+        let w = e[2].as_f64().with_context(|| format!("edge[{idx}] bad w"))? as f32;
+        if u >= n || vtx >= n {
+            bail!("edge[{idx}] endpoint out of range");
+        }
+        if w.is_nan() {
+            bail!("edge[{idx}] weight is NaN");
+        }
+        if u != vtx {
+            graph.set(u, vtx, w);
+        }
+    }
+    Ok(Request {
+        id,
+        graph,
+        variant,
+        no_cache: v.get("no_cache").as_bool().unwrap_or(false),
+    })
+}
+
+/// Encode a response as one JSON line.
+///
+/// The distance matrix is rendered with a hand-rolled writer: values are
+/// f32, and formatting them as f32 (shortest round-trip) instead of going
+/// through `Json::Num`'s f64 path halves the payload (e.g. `1.6` instead
+/// of `1.5999999940395355`) and with it the client's parse time — measured
+/// 2.3× end-to-end on the n=128 response (EXPERIMENTS.md §Perf L3).
+/// Parsing the decimal back to f64 and casting to f32 is exact.
+pub fn encode_response(resp: &Response) -> String {
+    use std::fmt::Write as _;
+    let n = resp.dist.n();
+    // header via the generic writer (cheap), matrix via the fast path
+    let mut out = String::with_capacity(16 * n * n + 128);
+    let _ = write!(
+        out,
+        "{{\"bucket\":{},\"dist\":[",
+        resp.bucket
+    );
+    for i in 0..n {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for (j, &w) in resp.dist.row(i).iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            if w.is_finite() {
+                let _ = write!(out, "{w}");
+            } else {
+                out.push_str("null");
+            }
+        }
+        out.push(']');
+    }
+    let _ = write!(
+        out,
+        "],\"id\":{},\"n\":{n},\"seconds\":{},\"source\":\"{}\",\"type\":\"result\"}}",
+        resp.id,
+        if resp.seconds.is_finite() { resp.seconds } else { 0.0 },
+        resp.source.name(),
+    );
+    out
+}
+
+/// Decode a response line.
+pub fn decode_response(line: &str) -> Result<Response> {
+    let v = Json::parse(line).context("response is not valid JSON")?;
+    match v.get("type").as_str() {
+        Some("result") => {}
+        Some("error") => bail!(
+            "server error: {}",
+            v.get("message").as_str().unwrap_or("unknown")
+        ),
+        other => bail!("unexpected response type {other:?}"),
+    }
+    let id = v.get("id").as_f64().unwrap_or(0.0) as u64;
+    let n = v.get("n").as_usize().context("response missing 'n'")?;
+    let rows = v.get("dist").as_arr().context("response missing 'dist'")?;
+    if rows.len() != n {
+        bail!("dist has {} rows, expected {n}", rows.len());
+    }
+    let mut dist = DistMatrix::unconnected(n);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().context("dist row not an array")?;
+        if row.len() != n {
+            bail!("dist row {i} has {} cols, expected {n}", row.len());
+        }
+        for (j, cell) in row.iter().enumerate() {
+            let w = match cell {
+                Json::Null => INF,
+                other => other.as_f64().context("bad dist cell")? as f32,
+            };
+            dist.set(i, j, w);
+        }
+    }
+    let source = match v.get("source").as_str() {
+        Some("device") => Source::Device,
+        Some("cpu") => Source::Cpu,
+        Some("cache") => Source::Cache,
+        other => bail!("bad source {other:?}"),
+    };
+    Ok(Response {
+        id,
+        dist,
+        source,
+        bucket: v.get("bucket").as_usize().unwrap_or(n),
+        seconds: v.get("seconds").as_f64().unwrap_or(0.0),
+    })
+}
+
+/// Encode a server-side error for a request id.
+pub fn encode_error(id: u64, message: &str) -> String {
+    Json::obj(vec![
+        ("type", Json::str("error")),
+        ("id", Json::num(id as f64)),
+        ("message", Json::str(message)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn sample_request() -> Request {
+        Request {
+            id: 42,
+            graph: generators::erdos_renyi(24, 0.3, 5),
+            variant: "staged".into(),
+            no_cache: false,
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let req = sample_request();
+        let back = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.variant, "staged");
+        assert_eq!(back.graph, req.graph);
+    }
+
+    #[test]
+    fn response_roundtrip_with_inf() {
+        let mut dist = DistMatrix::unconnected(3);
+        dist.set(0, 1, 1.5);
+        let resp = Response {
+            id: 7,
+            dist,
+            source: Source::Device,
+            bucket: 64,
+            seconds: 0.01,
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.bucket, 64);
+        assert_eq!(back.source, Source::Device);
+        assert_eq!(back.dist, resp.dist);
+        assert!(back.dist.get(1, 2).is_infinite());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"type":"solve"}"#).is_err()); // no n
+        assert!(decode_request(r#"{"type":"solve","n":0}"#).is_err());
+        assert!(decode_request(r#"{"type":"solve","n":9999999}"#).is_err());
+        assert!(
+            decode_request(r#"{"type":"solve","n":4,"edges":[[0,9,1.0]]}"#).is_err(),
+            "edge out of range"
+        );
+        assert!(decode_request(r#"{"type":"wat","n":4}"#).is_err());
+    }
+
+    #[test]
+    fn error_responses_surface_message() {
+        let line = encode_error(3, "boom");
+        let err = decode_response(&line).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let req =
+            decode_request(r#"{"type":"solve","n":3,"edges":[[1,1,5.0],[0,1,2.0]]}"#).unwrap();
+        assert_eq!(req.graph.get(1, 1), 0.0);
+        assert_eq!(req.graph.get(0, 1), 2.0);
+    }
+}

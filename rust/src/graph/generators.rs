@@ -1,0 +1,264 @@
+//! Workload graph generators.
+//!
+//! The paper's introduction motivates APSP with "bioinformatics, routing,
+//! and network analysis"; the generators here cover those shapes and are
+//! what the examples, benches, and tests consume.  All are deterministic in
+//! the seed (first-party Xoshiro PRNG) so every EXPERIMENTS.md number is
+//! reproducible.
+
+use crate::graph::DistMatrix;
+use crate::util::prng::Rng;
+
+/// G(n, p) Erdős–Rényi digraph with uniform weights in `[0.1, 10)`.
+///
+/// This matches the random dense instances used for the paper's Table 1
+/// ("any graph with single precision edge weights" — FW's runtime is
+/// data-independent, so the distribution only matters for validation).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> DistMatrix {
+    erdos_renyi_weighted(n, p, 0.1, 10.0, seed)
+}
+
+/// G(n, p) with uniform weights in `[lo, hi)`.
+pub fn erdos_renyi_weighted(n: usize, p: f64, lo: f32, hi: f32, seed: u64) -> DistMatrix {
+    assert!((0.0..=1.0).contains(&p), "p={p} out of range");
+    let mut rng = Rng::new(seed);
+    let mut m = DistMatrix::unconnected(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && rng.chance(p) {
+                m.set(i, j, rng.uniform(lo, hi));
+            }
+        }
+    }
+    m
+}
+
+/// 2-D grid (lattice) with 4-neighbourhood and unit-ish weights — the
+/// classic "routing on a road network" shape.  `side × side` vertices,
+/// bidirectional edges with independent weights per direction.
+pub fn grid(side: usize, seed: u64) -> DistMatrix {
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+    let mut m = DistMatrix::unconnected(n);
+    let idx = |r: usize, c: usize| r * side + c;
+    for r in 0..side {
+        for c in 0..side {
+            if c + 1 < side {
+                m.set(idx(r, c), idx(r, c + 1), rng.uniform(0.5, 1.5));
+                m.set(idx(r, c + 1), idx(r, c), rng.uniform(0.5, 1.5));
+            }
+            if r + 1 < side {
+                m.set(idx(r, c), idx(r + 1, c), rng.uniform(0.5, 1.5));
+                m.set(idx(r + 1, c), idx(r, c), rng.uniform(0.5, 1.5));
+            }
+        }
+    }
+    m
+}
+
+/// Barabási–Albert-style preferential attachment (scale-free), symmetric
+/// weights — the "network analysis" shape (hubs + long tails).  Each new
+/// vertex attaches to `m_edges` existing vertices with probability
+/// proportional to current degree.
+pub fn scale_free(n: usize, m_edges: usize, seed: u64) -> DistMatrix {
+    assert!(m_edges >= 1 && n > m_edges, "need n > m_edges >= 1");
+    let mut rng = Rng::new(seed);
+    let mut m = DistMatrix::unconnected(n);
+    // repeated-endpoint list: attachment ∝ degree
+    let mut endpoints: Vec<usize> = Vec::with_capacity(2 * n * m_edges);
+    // seed clique over the first m_edges+1 vertices
+    for i in 0..=m_edges {
+        for j in 0..i {
+            let w = rng.uniform(0.5, 5.0);
+            m.set(i, j, w);
+            m.set(j, i, w);
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for v in (m_edges + 1)..n {
+        let mut chosen = Vec::with_capacity(m_edges);
+        let mut guard = 0;
+        while chosen.len() < m_edges {
+            let t = endpoints[rng.range(0, endpoints.len())];
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+            guard += 1;
+            if guard > 10_000 {
+                // pathological only for tiny graphs; fall back to any vertex
+                let t = rng.range(0, v);
+                if !chosen.contains(&t) {
+                    chosen.push(t);
+                }
+            }
+        }
+        for &t in &chosen {
+            let w = rng.uniform(0.5, 5.0);
+            m.set(v, t, w);
+            m.set(t, v, w);
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    m
+}
+
+/// Random geometric graph on the unit square: vertices connect when within
+/// `radius`, weight = Euclidean distance (bioinformatics / sensor-net shape;
+/// also gives metrically-consistent instances useful for sanity checks).
+pub fn geometric(n: usize, radius: f64, seed: u64) -> DistMatrix {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n)
+        .map(|_| (rng.next_f64(), rng.next_f64()))
+        .collect();
+    let mut m = DistMatrix::unconnected(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = pts[i].0 - pts[j].0;
+            let dy = pts[i].1 - pts[j].1;
+            let d = (dx * dx + dy * dy).sqrt();
+            if d <= radius {
+                m.set(i, j, d as f32);
+                m.set(j, i, d as f32);
+            }
+        }
+    }
+    m
+}
+
+/// Directed ring with unit weights — worst-case diameter, used by tests
+/// (every shortest path is forced through n-1 relaxation levels).
+pub fn ring(n: usize) -> DistMatrix {
+    let mut m = DistMatrix::unconnected(n);
+    for i in 0..n {
+        m.set(i, (i + 1) % n, 1.0);
+    }
+    m
+}
+
+/// Layered DAG with negative weights allowed on forward edges (no cycles ⇒
+/// no negative cycles) — exercises FW's negative-edge support (paper §1).
+pub fn layered_dag(layers: usize, width: usize, seed: u64) -> DistMatrix {
+    let n = layers * width;
+    let mut rng = Rng::new(seed);
+    let mut m = DistMatrix::unconnected(n);
+    for l in 0..layers.saturating_sub(1) {
+        for a in 0..width {
+            for b in 0..width {
+                if rng.chance(0.5) {
+                    let u = l * width + a;
+                    let v = (l + 1) * width + b;
+                    m.set(u, v, rng.uniform(-2.0, 8.0));
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_density_scales_with_p() {
+        let dense = erdos_renyi(64, 0.8, 1);
+        let sparse = erdos_renyi(64, 0.1, 1);
+        assert!(dense.edge_count() > sparse.edge_count() * 3);
+    }
+
+    #[test]
+    fn er_deterministic() {
+        assert_eq!(erdos_renyi(32, 0.3, 7), erdos_renyi(32, 0.3, 7));
+        assert_ne!(erdos_renyi(32, 0.3, 7), erdos_renyi(32, 0.3, 8));
+    }
+
+    #[test]
+    fn er_extremes() {
+        assert_eq!(erdos_renyi(16, 0.0, 1).edge_count(), 0);
+        assert_eq!(erdos_renyi(16, 1.0, 1).edge_count(), 16 * 15);
+    }
+
+    #[test]
+    fn grid_edge_count() {
+        // side*side grid: 2*side*(side-1) undirected edges, ×2 directions
+        let side = 5;
+        let g = grid(side, 3);
+        assert_eq!(g.n(), side * side);
+        assert_eq!(g.edge_count(), 2 * 2 * side * (side - 1));
+    }
+
+    #[test]
+    fn scale_free_has_hubs() {
+        let g = scale_free(128, 2, 9);
+        let mut degrees: Vec<usize> = (0..g.n())
+            .map(|i| (0..g.n()).filter(|&j| g.get(i, j).is_finite() && i != j).count())
+            .collect();
+        degrees.sort_unstable_by(|a, b| b.cmp(a));
+        // preferential attachment: the top hub should far exceed the median
+        assert!(degrees[0] >= 3 * degrees[g.n() / 2].max(1));
+    }
+
+    #[test]
+    fn scale_free_symmetric() {
+        let g = scale_free(48, 2, 4);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_weights_are_distances() {
+        let g = geometric(64, 0.4, 5);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                let w = g.get(i, j);
+                if i != j && w.is_finite() {
+                    assert!(w <= 0.4 + 1e-6, "edge weight {w} exceeds radius");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_structure() {
+        let g = ring(8);
+        assert_eq!(g.edge_count(), 8);
+        for i in 0..8 {
+            assert_eq!(g.get(i, (i + 1) % 8), 1.0);
+        }
+    }
+
+    #[test]
+    fn layered_dag_no_backward_edges() {
+        let g = layered_dag(4, 8, 2);
+        let width = 8;
+        for u in 0..g.n() {
+            for v in 0..g.n() {
+                if u != v && g.get(u, v).is_finite() {
+                    assert_eq!(v / width, u / width + 1, "edge {u}->{v} not forward");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_generators_validate() {
+        for g in [
+            erdos_renyi(32, 0.4, 1),
+            grid(6, 1),
+            scale_free(32, 2, 1),
+            geometric(32, 0.3, 1),
+            ring(32),
+            layered_dag(4, 8, 1),
+        ] {
+            g.validate().unwrap();
+            for i in 0..g.n() {
+                assert_eq!(g.get(i, i), 0.0);
+            }
+        }
+    }
+}

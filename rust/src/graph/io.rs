@@ -1,0 +1,317 @@
+//! Graph I/O: DIMACS shortest-path format, simple edge lists, and a raw
+//! matrix dump for artifact-sized instances.
+//!
+//! Supported formats:
+//!
+//! * **DIMACS** (`.gr`, the 9th DIMACS Implementation Challenge format):
+//!   `p sp <n> <m>` header, `a <u> <v> <w>` arc lines, `c` comments.
+//!   1-based vertex ids, as in the published benchmark instances.
+//! * **Edge list** (`.edges`): whitespace-separated `u v w` per line,
+//!   0-based; `#` comments.  The format the examples write.
+//! * **Matrix dump** (`.dist`): `n` on the first line then `n` rows of `n`
+//!   whitespace-separated floats, `inf` for no-edge.  Round-trips APSP
+//!   results exactly enough for golden files (17 significant digits).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::DistMatrix;
+use crate::INF;
+
+// ---------------------------------------------------------------- DIMACS --
+
+/// Parse DIMACS `.gr` text into a distance matrix.
+pub fn parse_dimacs(text: &str) -> Result<DistMatrix> {
+    let mut m: Option<DistMatrix> = None;
+    let mut declared_arcs = 0usize;
+    let mut seen_arcs = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('c') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("p") => {
+                if m.is_some() {
+                    bail!("line {}: duplicate problem line", lineno + 1);
+                }
+                let kind = parts.next().unwrap_or("");
+                if kind != "sp" {
+                    bail!("line {}: expected 'p sp', got 'p {kind}'", lineno + 1);
+                }
+                let n: usize = parts
+                    .next()
+                    .context("missing vertex count")?
+                    .parse()
+                    .context("bad vertex count")?;
+                declared_arcs = parts
+                    .next()
+                    .context("missing arc count")?
+                    .parse()
+                    .context("bad arc count")?;
+                m = Some(DistMatrix::unconnected(n));
+            }
+            Some("a") => {
+                let m = m
+                    .as_mut()
+                    .with_context(|| format!("line {}: arc before problem line", lineno + 1))?;
+                let u: usize = parts.next().context("missing tail")?.parse()?;
+                let v: usize = parts.next().context("missing head")?.parse()?;
+                let w: f32 = parts.next().context("missing weight")?.parse()?;
+                if u == 0 || v == 0 || u > m.n() || v > m.n() {
+                    bail!("line {}: vertex id out of range (1-based)", lineno + 1);
+                }
+                if u != v {
+                    // parallel arcs: keep the lightest (standard convention)
+                    let cur = m.get(u - 1, v - 1);
+                    if w < cur {
+                        m.set(u - 1, v - 1, w);
+                    }
+                }
+                seen_arcs += 1;
+            }
+            Some(other) => bail!("line {}: unknown record '{other}'", lineno + 1),
+            None => {}
+        }
+    }
+    let m = m.context("no problem line found")?;
+    if declared_arcs != seen_arcs {
+        bail!("problem line declared {declared_arcs} arcs, file has {seen_arcs}");
+    }
+    Ok(m)
+}
+
+/// Serialize to DIMACS `.gr` text.
+pub fn to_dimacs(m: &DistMatrix, comment: &str) -> String {
+    let mut out = String::new();
+    if !comment.is_empty() {
+        for line in comment.lines() {
+            out.push_str(&format!("c {line}\n"));
+        }
+    }
+    out.push_str(&format!("p sp {} {}\n", m.n(), m.edge_count()));
+    for i in 0..m.n() {
+        for j in 0..m.n() {
+            let w = m.get(i, j);
+            if i != j && w.is_finite() {
+                out.push_str(&format!("a {} {} {}\n", i + 1, j + 1, w));
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- edge list --
+
+/// Parse a `u v w` edge list (0-based). `n` is inferred as max id + 1 unless
+/// a `# n <count>` header is present.
+pub fn parse_edge_list(text: &str) -> Result<DistMatrix> {
+    let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+    let mut declared_n: Option<usize> = None;
+    let mut max_id = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let mut parts = rest.split_whitespace();
+            if parts.next() == Some("n") {
+                declared_n = Some(parts.next().context("bad '# n' header")?.parse()?);
+            }
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let u: usize = parts
+            .next()
+            .with_context(|| format!("line {}: missing tail", lineno + 1))?
+            .parse()?;
+        let v: usize = parts
+            .next()
+            .with_context(|| format!("line {}: missing head", lineno + 1))?
+            .parse()?;
+        let w: f32 = parts
+            .next()
+            .with_context(|| format!("line {}: missing weight", lineno + 1))?
+            .parse()?;
+        if w.is_nan() {
+            bail!("line {}: NaN weight", lineno + 1);
+        }
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v, w));
+    }
+    let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id + 1 });
+    if max_id >= n && !edges.is_empty() {
+        bail!("vertex id {max_id} exceeds declared n={n}");
+    }
+    let mut m = DistMatrix::unconnected(n);
+    for (u, v, w) in edges {
+        if u != v && w < m.get(u, v) {
+            m.set(u, v, w);
+        }
+    }
+    Ok(m)
+}
+
+/// Serialize to an edge list with a `# n` header.
+pub fn to_edge_list(m: &DistMatrix) -> String {
+    let mut out = format!("# n {}\n", m.n());
+    for i in 0..m.n() {
+        for j in 0..m.n() {
+            let w = m.get(i, j);
+            if i != j && w.is_finite() {
+                out.push_str(&format!("{i} {j} {w}\n"));
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------ matrix dump --
+
+/// Serialize the full matrix (`inf` for no edge) — used for golden results.
+pub fn to_matrix_text(m: &DistMatrix) -> String {
+    let mut out = format!("{}\n", m.n());
+    for i in 0..m.n() {
+        let row: Vec<String> = m
+            .row(i)
+            .iter()
+            .map(|w| {
+                if w.is_finite() {
+                    format!("{w:.9e}")
+                } else {
+                    "inf".to_string()
+                }
+            })
+            .collect();
+        out.push_str(&row.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a matrix dump.
+pub fn parse_matrix_text(text: &str) -> Result<DistMatrix> {
+    let mut lines = text.lines();
+    let n: usize = lines
+        .next()
+        .context("empty matrix file")?
+        .trim()
+        .parse()
+        .context("bad n header")?;
+    let mut data = Vec::with_capacity(n * n);
+    for i in 0..n {
+        let line = lines.next().with_context(|| format!("missing row {i}"))?;
+        for tok in line.split_whitespace() {
+            let w = if tok == "inf" {
+                INF
+            } else {
+                tok.parse::<f32>().with_context(|| format!("bad value {tok:?}"))?
+            };
+            data.push(w);
+        }
+        if data.len() != (i + 1) * n {
+            bail!("row {i} has {} values, expected {n}", data.len() - i * n);
+        }
+    }
+    Ok(DistMatrix::from_vec(n, data))
+}
+
+// ------------------------------------------------------------------ files --
+
+/// Load a graph by extension: `.gr`/`.dimacs` → DIMACS, `.dist` → matrix,
+/// anything else → edge list.
+pub fn load(path: &Path) -> Result<DistMatrix> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("gr") | Some("dimacs") => parse_dimacs(&text),
+        Some("dist") => parse_matrix_text(&text),
+        _ => parse_edge_list(&text),
+    }
+}
+
+/// Save a graph by extension (same mapping as [`load`]).
+pub fn save(m: &DistMatrix, path: &Path) -> Result<()> {
+    let text = match path.extension().and_then(|e| e.to_str()) {
+        Some("gr") | Some("dimacs") => to_dimacs(m, "written by fw-stage"),
+        Some("dist") => to_matrix_text(m),
+        _ => to_edge_list(m),
+    };
+    let mut f = fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(text.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn dimacs_roundtrip() {
+        let g = generators::erdos_renyi(24, 0.3, 5);
+        let text = to_dimacs(&g, "test graph");
+        let back = parse_dimacs(&text).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn dimacs_rejects_malformed() {
+        assert!(parse_dimacs("a 1 2 3.0\n").is_err()); // arc before header
+        assert!(parse_dimacs("p sp 2 1\na 1 3 1.0\n").is_err()); // id range
+        assert!(parse_dimacs("p sp 2 2\na 1 2 1.0\n").is_err()); // arc count
+        assert!(parse_dimacs("p xx 2 0\n").is_err()); // wrong kind
+        assert!(parse_dimacs("").is_err());
+    }
+
+    #[test]
+    fn dimacs_keeps_lightest_parallel_arc() {
+        let g = parse_dimacs("p sp 2 2\na 1 2 5.0\na 1 2 3.0\n").unwrap();
+        assert_eq!(g.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = generators::scale_free(20, 2, 6);
+        let back = parse_edge_list(&to_edge_list(&g)).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn edge_list_infers_n() {
+        let g = parse_edge_list("0 5 1.5\n5 0 2.5\n").unwrap();
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.get(0, 5), 1.5);
+    }
+
+    #[test]
+    fn edge_list_header_pads_isolated_vertices() {
+        let g = parse_edge_list("# n 9\n0 1 1.0\n").unwrap();
+        assert_eq!(g.n(), 9);
+    }
+
+    #[test]
+    fn matrix_text_roundtrip_exact() {
+        let g = generators::geometric(16, 0.5, 2);
+        let back = parse_matrix_text(&to_matrix_text(&g)).unwrap();
+        assert_eq!(g, back); // bit-exact through %.9e
+    }
+
+    #[test]
+    fn file_roundtrip_by_extension() {
+        let dir = std::env::temp_dir().join("fw_stage_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = generators::grid(4, 3);
+        for name in ["g.gr", "g.edges", "g.dist"] {
+            let path = dir.join(name);
+            save(&g, &path).unwrap();
+            assert_eq!(load(&path).unwrap(), g, "{name}");
+        }
+    }
+}

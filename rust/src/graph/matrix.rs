@@ -1,0 +1,256 @@
+//! Dense row-major distance matrix — the shared currency of the stack.
+
+use crate::{Dist, INF};
+
+/// A dense `n × n` matrix of path lengths in row-major order.
+///
+/// Invariants maintained by constructors (and checked by
+/// [`DistMatrix::validate`]):
+/// * square, row-major, `f32`
+/// * `get(i, i) == 0` for graphs produced by generators/IO (APSP *outputs*
+///   keep whatever the solver computed — 0 unless a negative cycle exists)
+/// * missing edges are `+inf`, never NaN
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistMatrix {
+    n: usize,
+    data: Vec<Dist>,
+}
+
+impl DistMatrix {
+    /// A graph with no edges: all `+inf`, zero diagonal.
+    pub fn unconnected(n: usize) -> Self {
+        let mut m = Self {
+            n,
+            data: vec![INF; n * n],
+        };
+        for i in 0..n {
+            m.set(i, i, 0.0);
+        }
+        m
+    }
+
+    /// Build from a row-major buffer (must be `n*n` long).
+    pub fn from_vec(n: usize, data: Vec<Dist>) -> Self {
+        assert_eq!(data.len(), n * n, "buffer length {} != {n}²", data.len());
+        Self { n, data }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> Dist {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, w: Dist) {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j] = w;
+    }
+
+    /// Row-major backing slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[Dist] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [Dist] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[Dist] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<Dist> {
+        self.data
+    }
+
+    /// Number of finite off-diagonal edges.
+    pub fn edge_count(&self) -> usize {
+        let mut count = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j && self.get(i, j).is_finite() {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Pad to `m ≥ n` with unreachable vertices (inf rows/cols, 0 diagonal).
+    /// Padding never changes distances among the original vertices — padded
+    /// vertices have no edges, so no path can route through them.
+    pub fn padded(&self, m: usize) -> DistMatrix {
+        assert!(m >= self.n, "cannot pad {} down to {m}", self.n);
+        let mut out = DistMatrix::unconnected(m);
+        for i in 0..self.n {
+            out.data[i * m..i * m + self.n].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Take the top-left `m × m` corner (inverse of [`DistMatrix::padded`]).
+    pub fn truncated(&self, m: usize) -> DistMatrix {
+        assert!(m <= self.n, "cannot truncate {} up to {m}", self.n);
+        let mut out = DistMatrix::unconnected(m);
+        for i in 0..m {
+            out.data[i * m..(i + 1) * m].copy_from_slice(&self.row(i)[..m]);
+        }
+        out
+    }
+
+    /// Structural validation; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.data.len() != self.n * self.n {
+            return Err(format!(
+                "backing length {} != n²={}",
+                self.data.len(),
+                self.n * self.n
+            ));
+        }
+        for i in 0..self.n {
+            for j in 0..self.n {
+                let w = self.get(i, j);
+                if w.is_nan() {
+                    return Err(format!("NaN at ({i}, {j})"));
+                }
+                if w == f32::NEG_INFINITY {
+                    return Err(format!("-inf at ({i}, {j})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Max |a - b| over all finite pairs; `inf` if finiteness patterns differ.
+    pub fn max_abs_diff(&self, other: &DistMatrix) -> f64 {
+        assert_eq!(self.n, other.n, "size mismatch");
+        let mut worst = 0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            match (a.is_finite(), b.is_finite()) {
+                (true, true) => worst = worst.max((*a as f64 - *b as f64).abs()),
+                (false, false) => {}
+                _ => return f64::INFINITY,
+            }
+        }
+        worst
+    }
+
+    /// Approximate equality with absolute + relative tolerance (f32 APSP
+    /// results differ across solvers by rounding association).
+    pub fn allclose(&self, other: &DistMatrix, rtol: f64, atol: f64) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(a, b)| {
+            match (a.is_finite(), b.is_finite()) {
+                (true, true) => {
+                    let (a, b) = (*a as f64, *b as f64);
+                    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+                }
+                (false, false) => a == b, // both +inf (NaN rejected by validate)
+                _ => false,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconnected_shape() {
+        let m = DistMatrix::unconnected(4);
+        assert_eq!(m.n(), 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert_eq!(m.get(i, j), 0.0);
+                } else {
+                    assert!(m.get(i, j).is_infinite());
+                }
+            }
+        }
+        assert_eq!(m.edge_count(), 0);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = DistMatrix::unconnected(3);
+        m.set(0, 2, 5.5);
+        assert_eq!(m.get(0, 2), 5.5);
+        assert_eq!(m.edge_count(), 1);
+        assert_eq!(m.row(0), &[0.0, INF, 5.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn from_vec_wrong_len_panics() {
+        DistMatrix::from_vec(3, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn pad_truncate_roundtrip() {
+        let mut m = DistMatrix::unconnected(3);
+        m.set(0, 1, 1.0);
+        m.set(2, 0, 2.0);
+        let padded = m.padded(8);
+        assert_eq!(padded.n(), 8);
+        assert_eq!(padded.get(0, 1), 1.0);
+        assert_eq!(padded.get(2, 0), 2.0);
+        assert_eq!(padded.get(5, 5), 0.0);
+        assert!(padded.get(0, 5).is_infinite());
+        assert_eq!(padded.truncated(3), m);
+    }
+
+    #[test]
+    fn validate_catches_nan_and_neg_inf() {
+        let mut m = DistMatrix::unconnected(2);
+        assert!(m.validate().is_ok());
+        m.set(0, 1, f32::NAN);
+        assert!(m.validate().unwrap_err().contains("NaN"));
+        m.set(0, 1, f32::NEG_INFINITY);
+        assert!(m.validate().unwrap_err().contains("-inf"));
+    }
+
+    #[test]
+    fn allclose_tolerates_rounding() {
+        let mut a = DistMatrix::unconnected(2);
+        let mut b = a.clone();
+        a.set(0, 1, 1.0);
+        b.set(0, 1, 1.0 + 1e-7);
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        b.set(0, 1, 1.1);
+        assert!(!a.allclose(&b, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn allclose_requires_matching_inf_pattern() {
+        let a = DistMatrix::unconnected(2);
+        let mut b = a.clone();
+        b.set(0, 1, 7.0);
+        assert!(!a.allclose(&b, 1e-3, 1e-3));
+        assert_eq!(a.max_abs_diff(&b), f64::INFINITY);
+    }
+
+    #[test]
+    fn max_abs_diff_finite() {
+        let mut a = DistMatrix::unconnected(2);
+        let mut b = a.clone();
+        a.set(0, 1, 1.0);
+        b.set(0, 1, 1.5);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: dense distance matrices, generators, and I/O.
+//!
+//! The whole stack works on dense `f32` adjacency/distance matrices
+//! ([`DistMatrix`]) — Floyd-Warshall "doesn't suffer performance degradation
+//! for dense graphs, and has predictable execution regardless of the
+//! underlying data" (paper §1), so dense is the natural representation.
+//! `+inf` encodes "no edge"; diagonals are 0.
+
+pub mod generators;
+pub mod io;
+mod matrix;
+
+pub use matrix::DistMatrix;

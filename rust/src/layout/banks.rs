@@ -1,0 +1,161 @@
+//! Shared-memory bank-conflict model (paper §4.3, Figure 6).
+//!
+//! CUDA compute-1.x shared memory has 16 banks and one broadcast slot: a
+//! half-warp's load completes in one cycle iff the 16 threads hit 16
+//! distinct banks, *or* all 16 read the very same word.  Partial same-word
+//! reads (4 threads on one word) serialize — this is exactly the paper's
+//! observation that the 4×4 tiled layout creates "4-way data conflicts"
+//! even though the colliding threads want the *same* element.
+//!
+//! The staged kernel stores the panel slices k-minor (`c[i][k]`, `r[j][k]`
+//! with stride m), so with the natural k order all threads sharing an i (or
+//! j) hit one word.  The paper's fix — start each thread's k loop at
+//! `(i + j) mod 4` (the *cyclic* schedule) — spreads the 16 accesses over
+//! 16 distinct words in 16 distinct banks.
+//!
+//! This module reproduces Figure 6's analysis exactly: conflict degree 1
+//! (row-major + simple), 4 (tiled + simple), 1 (tiled + cyclic).  The C1060
+//! simulator consumes the resulting cycles-per-access factor.
+
+/// Number of shared-memory banks (compute capability 1.x).
+pub const BANKS: usize = 16;
+/// Threads per half-warp (the shared-memory transaction unit).
+pub const HALF_WARP: usize = 16;
+/// k-steps resident per stage in the staged kernel (m = t/4 with the
+/// paper's 4-stage split; the cyclic offset is mod this).
+const M: usize = 4;
+/// Tile size.
+const T: usize = 32;
+
+/// How tile data is arranged and how a half-warp's threads map to elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Row-major 32×32 tiles in shared memory; half-warp = 16 consecutive
+    /// elements of one row (Katz–Kider / Fig. 6 top).
+    RowMajor,
+    /// 4×4 sub-tiled data; half-warp = one 4×4 element block, panel slices
+    /// stored k-minor with stride m (staged kernel / Fig. 6 middle+bottom).
+    Tiled4x4,
+}
+
+/// The k-iteration schedule within a stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KSchedule {
+    /// Every thread starts at k = 0 (natural order; Fig. 6 middle).
+    Simple,
+    /// Thread at in-tile (i, j) starts at k = (i + j) mod m (Fig. 6 bottom).
+    Cyclic,
+}
+
+/// Worst conflict degree (cycles per shared-memory access) across the two
+/// panel reads over a full m-step stage.
+pub fn bank_conflict_degree(pattern: AccessPattern, schedule: KSchedule) -> usize {
+    let coords: Vec<(usize, usize)> = match pattern {
+        AccessPattern::RowMajor => (0..HALF_WARP).map(|t| (0, t)).collect(),
+        AccessPattern::Tiled4x4 => (0..HALF_WARP).map(|t| (t / 4, t % 4)).collect(),
+    };
+    let mut worst = 1usize;
+    for step in 0..M {
+        let mut row_words = Vec::with_capacity(HALF_WARP); // j-aligned read
+        let mut col_words = Vec::with_capacity(HALF_WARP); // i-aligned read
+        for &(i, j) in &coords {
+            let k = match schedule {
+                KSchedule::Simple => step,
+                KSchedule::Cyclic => (i + j + step) % M,
+            };
+            match pattern {
+                AccessPattern::RowMajor => {
+                    // full 32×32 tiles resident: r[k][j], c[i][k], stride T
+                    row_words.push(k * T + j);
+                    col_words.push(i * T + k);
+                }
+                AccessPattern::Tiled4x4 => {
+                    // staged t×m slices, k-minor: r[j][k], c[i][k], stride M
+                    row_words.push(j * M + k);
+                    col_words.push(i * M + k);
+                }
+            }
+        }
+        worst = worst
+            .max(conflict_degree(&row_words))
+            .max(conflict_degree(&col_words));
+    }
+    worst
+}
+
+/// Conflict degree of one half-warp access under CC 1.x rules:
+/// full-half-warp same-word reads broadcast in 1 cycle; otherwise the
+/// access serializes to the max number of threads landing on one bank
+/// (same-word collisions included — only the single broadcast word is free,
+/// and only when *all* threads use it).
+fn conflict_degree(words: &[usize]) -> usize {
+    debug_assert_eq!(words.len(), HALF_WARP);
+    if words.iter().all(|&w| w == words[0]) {
+        return 1; // broadcast
+    }
+    let mut per_bank = [0usize; BANKS];
+    for &w in words {
+        per_bank[w % BANKS] += 1;
+    }
+    per_bank.iter().copied().max().unwrap_or(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_simple_is_conflict_free() {
+        // Fig. 6 top: j-panel hits 16 distinct banks; i-panel broadcasts
+        assert_eq!(
+            bank_conflict_degree(AccessPattern::RowMajor, KSchedule::Simple),
+            1
+        );
+    }
+
+    #[test]
+    fn tiled_simple_has_4way_conflicts() {
+        // Fig. 6 middle: "threads 0, 4, 8, and 12 all access the same data
+        // element in the j-aligned tile ... resulting in 4-way conflicts"
+        assert_eq!(
+            bank_conflict_degree(AccessPattern::Tiled4x4, KSchedule::Simple),
+            4
+        );
+    }
+
+    #[test]
+    fn tiled_cyclic_is_conflict_free() {
+        // Fig. 6 bottom: the cyclic k-offset spreads the half-warp over 16
+        // distinct banks — "conflict free shared memory data access"
+        assert_eq!(
+            bank_conflict_degree(AccessPattern::Tiled4x4, KSchedule::Cyclic),
+            1
+        );
+    }
+
+    #[test]
+    fn full_broadcast_is_one_cycle() {
+        assert_eq!(conflict_degree(&[7; HALF_WARP]), 1);
+    }
+
+    #[test]
+    fn partial_same_word_serializes() {
+        // 4 groups of 4 threads, each group on its own word; words 0,4,8,12
+        // share no banks → degree = threads per word = 4
+        let words: Vec<usize> = (0..HALF_WARP).map(|t| (t / 4) * 4).collect();
+        assert_eq!(conflict_degree(&words), 4);
+    }
+
+    #[test]
+    fn distinct_banks_one_cycle() {
+        let words: Vec<usize> = (0..HALF_WARP).collect();
+        assert_eq!(conflict_degree(&words), 1);
+    }
+
+    #[test]
+    fn stride_16_worst_case() {
+        // all threads in bank 0 with distinct words: fully serialized
+        let words: Vec<usize> = (0..HALF_WARP).map(|t| t * BANKS).collect();
+        assert_eq!(conflict_degree(&words), 16);
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's data-layout contribution (§4.3): the doubly-tiled row-major
+//! order, plus analytic models of the two access-pattern problems it solves
+//! (global-memory coalescing, Fig. 5; shared-memory bank conflicts, Fig. 6).
+
+mod banks;
+mod tiled;
+
+pub use banks::{bank_conflict_degree, AccessPattern, KSchedule, BANKS, HALF_WARP};
+pub use tiled::{coalesced_run_length, from_doubly_tiled, tiled_index, to_doubly_tiled, Axis};

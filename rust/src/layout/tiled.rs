@@ -1,0 +1,187 @@
+//! Doubly-tiled row-major data order (paper §4.3, after Han, Franchetti &
+//! Püschel [7]).
+//!
+//! The staged kernel must read both a *row slice* and a *column slice* of a
+//! 32×32 tile as contiguous 16-word transactions (a CUDA half-warp).  In
+//! plain row-major order a column slice touches 1 word per row — 16
+//! transactions for 16 words (Fig. 5, top).  The paper's fix: tile the
+//! matrix twice — 32×32 tiles in row-major order, and *within* each tile,
+//! 4×4 sub-tiles in row-major order.  Then any 4 rows or 4 columns of a
+//! tile are made of whole 4×4 sub-tiles, i.e. contiguous 16-word blocks in
+//! either direction (Fig. 5, bottom).
+//!
+//! On the TPU the analogous constraint is the (sublane, lane) = (8, 128)
+//! native layout; the transform is kept here both as the faithful
+//! reproduction of §4.3 and as the layout the C1060 simulator's bandwidth
+//! model consumes.
+
+/// Matrix access direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// Walk along a row (j varies).
+    Row,
+    /// Walk along a column (i varies).
+    Col,
+}
+
+/// Linear index of element `(i, j)` of an `n × n` matrix stored doubly
+/// tiled: `s × s` tiles row-major, `t × t` sub-tiles row-major within each
+/// tile, elements row-major within each sub-tile.
+///
+/// Requires `n % s == 0 && s % t == 0`.
+#[inline]
+pub fn tiled_index(i: usize, j: usize, n: usize, s: usize, t: usize) -> usize {
+    debug_assert!(n % s == 0 && s % t == 0, "n={n}, s={s}, t={t}");
+    debug_assert!(i < n && j < n);
+    let (tile_i, in_tile_i) = (i / s, i % s);
+    let (tile_j, in_tile_j) = (j / s, j % s);
+    let (sub_i, in_sub_i) = (in_tile_i / t, in_tile_i % t);
+    let (sub_j, in_sub_j) = (in_tile_j / t, in_tile_j % t);
+    let tiles_per_row = n / s;
+    let subs_per_row = s / t;
+    let tile_base = (tile_i * tiles_per_row + tile_j) * s * s;
+    let sub_base = (sub_i * subs_per_row + sub_j) * t * t;
+    tile_base + sub_base + in_sub_i * t + in_sub_j
+}
+
+/// Convert a row-major buffer to doubly-tiled order.
+pub fn to_doubly_tiled(data: &[f32], n: usize, s: usize, t: usize) -> Vec<f32> {
+    assert_eq!(data.len(), n * n);
+    assert!(n % s == 0 && s % t == 0, "n={n} s={s} t={t}");
+    let mut out = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[tiled_index(i, j, n, s, t)] = data[i * n + j];
+        }
+    }
+    out
+}
+
+/// Convert a doubly-tiled buffer back to row-major order.
+pub fn from_doubly_tiled(data: &[f32], n: usize, s: usize, t: usize) -> Vec<f32> {
+    assert_eq!(data.len(), n * n);
+    assert!(n % s == 0 && s % t == 0, "n={n} s={s} t={t}");
+    let mut out = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[i * n + j] = data[tiled_index(i, j, n, s, t)];
+        }
+    }
+    out
+}
+
+/// Minimum contiguous run length (in elements) when reading a `t`-thick
+/// slice of a tile along `axis` — the quantity Fig. 5 argues about.
+///
+/// * Row-major (`t = 0` sentinel not used; pass `t = 1` for plain
+///   row-major): a `Row` walk is fully contiguous, a `Col` walk has run
+///   length 1.
+/// * Doubly tiled with `t × t` sub-tiles: both directions come in whole
+///   sub-tiles ⇒ run length `t·t`.
+pub fn coalesced_run_length(axis: Axis, n: usize, s: usize, t: usize) -> usize {
+    assert!(n % s == 0 && s % t == 0);
+    if t == 1 {
+        // plain row-major
+        return match axis {
+            Axis::Row => n, // whole row contiguous
+            Axis::Col => 1, // stride n between consecutive elements
+        };
+    }
+    // doubly tiled: a t-thick slice in either direction is whole t×t
+    // sub-tiles, each contiguous
+    t * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        for (n, s, t) in [(32, 32, 4), (64, 32, 4), (128, 32, 4), (64, 16, 4), (64, 32, 8)] {
+            let data: Vec<f32> = (0..n * n).map(|_| rng.next_f32()).collect();
+            let tiled = to_doubly_tiled(&data, n, s, t);
+            assert_eq!(from_doubly_tiled(&tiled, n, s, t), data, "n={n} s={s} t={t}");
+        }
+    }
+
+    #[test]
+    fn index_is_bijection() {
+        let (n, s, t) = (64, 32, 4);
+        let mut seen = vec![false; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let idx = tiled_index(i, j, n, s, t);
+                assert!(!seen[idx], "collision at ({i},{j})");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn tiles_are_contiguous() {
+        // each 32×32 tile occupies one contiguous s·s range (paper §4.3:
+        // "each 32 by 32 tile and each 4 by 4 tile is contiguous in memory")
+        let (n, s, t) = (64, 32, 4);
+        for tile_i in 0..n / s {
+            for tile_j in 0..n / s {
+                let base = (tile_i * (n / s) + tile_j) * s * s;
+                for i in 0..s {
+                    for j in 0..s {
+                        let idx = tiled_index(tile_i * s + i, tile_j * s + j, n, s, t);
+                        assert!(
+                            (base..base + s * s).contains(&idx),
+                            "tile ({tile_i},{tile_j}) element ({i},{j}) leaked to {idx}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtiles_are_contiguous() {
+        let (n, s, t) = (32, 32, 4);
+        // the 4 rows × 4 cols at (8..12, 16..20) must be 16 consecutive words
+        let idxs: Vec<usize> = (8..12)
+            .flat_map(|i| (16..20).map(move |j| tiled_index(i, j, n, s, t)))
+            .collect();
+        let base = idxs[0];
+        assert_eq!(idxs, (base..base + 16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn four_columns_are_whole_subtiles() {
+        // Fig. 5's claim: 4 adjacent columns of a tile = contiguous 16-word
+        // blocks. Verify columns 4..8 of a tile decompose into t*t runs.
+        let (n, s, t) = (32, 32, 4);
+        for sub_row in 0..s / t {
+            let idxs: Vec<usize> = (sub_row * t..sub_row * t + t)
+                .flat_map(|i| (4..8).map(move |j| tiled_index(i, j, n, s, t)))
+                .collect();
+            let min = *idxs.iter().min().unwrap();
+            let mut sorted = idxs.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (min..min + 16).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn run_lengths_match_figure5() {
+        // row-major: columns stride by n
+        assert_eq!(coalesced_run_length(Axis::Row, 64, 32, 1), 64);
+        assert_eq!(coalesced_run_length(Axis::Col, 64, 32, 1), 1);
+        // doubly tiled 4×4: both directions in 16-word blocks
+        assert_eq!(coalesced_run_length(Axis::Row, 64, 32, 4), 16);
+        assert_eq!(coalesced_run_length(Axis::Col, 64, 32, 4), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_dividing_tile() {
+        to_doubly_tiled(&vec![0.0; 36 * 36], 36, 32, 4);
+    }
+}

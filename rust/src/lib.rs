@@ -1,0 +1,60 @@
+//! # fw-stage
+//!
+//! A production-grade reproduction of **"A Multi-Stage CUDA Kernel for
+//! Floyd-Warshall"** (Lund & Smith, 2010) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels for the three phases of
+//!   blocked Floyd-Warshall, including the paper's staged phase-3 kernel
+//!   (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): the blocked-FW computation graph,
+//!   AOT-lowered to HLO text artifacts (`python/compile/model.py`).
+//! * **Layer 3** (this crate): the serving coordinator — request routing,
+//!   size-bucketed batching, executor pooling over PJRT, result caching —
+//!   plus every substrate the reproduction needs: graph generation and I/O,
+//!   CPU reference solvers, the paper's doubly-tiled data layout (§4.3), and
+//!   an analytical Tesla C1060 performance model that regenerates the
+//!   paper's Table 1 / Figure 7 (DESIGN.md §Substitutions).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! kernels once, and the `fw-stage` binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fw_stage::graph::generators;
+//! use fw_stage::apsp;
+//!
+//! let g = generators::erdos_renyi(256, 0.3, 42);
+//! let dist = apsp::blocked::solve(&g, 32);
+//! assert!(dist.get(0, 0) == 0.0);
+//! ```
+//!
+//! For the full system (PJRT execution of the AOT artifacts, the serving
+//! coordinator, the C1060 simulator) see the `runtime`, `coordinator` and
+//! `simulator` modules and the `examples/` directory.
+
+pub mod apsp;
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod layout;
+pub mod perf;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod workload;
+
+/// Distance value used across the stack: `f32` with `+inf` for "no path",
+/// matching the artifact convention (`python/compile/model.py`).
+pub type Dist = f32;
+
+/// Edge weight of missing edges.
+pub const INF: Dist = f32::INFINITY;
+
+/// Default tile size `s` (the paper uses 32×32 tiles throughout).
+pub const DEFAULT_TILE: usize = 32;
+
+/// Default k-chunk `m` for the staged phase 3 (paper: t=32 staged over 4
+/// iterations ⇒ m=8).
+pub const DEFAULT_KCHUNK: usize = 8;

@@ -1,0 +1,6 @@
+//! `fw-stage` binary: see [`fw_stage::cli`] for the subcommands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(fw_stage::cli::run(args));
+}

@@ -1,0 +1,171 @@
+//! First-party benchmark harness (no `criterion` in the vendored set).
+//!
+//! [`bench`] runs a closure with warm-up, auto-scaled iteration counts,
+//! and outlier-aware summary statistics, printing one criterion-style line
+//! per benchmark.  `cargo bench` targets under `rust/benches/` drive it.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget for the measurement phase.
+    pub measure_time: Duration,
+    /// Wall-clock budget for warm-up.
+    pub warmup_time: Duration,
+    /// Max samples to record.
+    pub max_samples: usize,
+    /// Min samples regardless of time budget.
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            measure_time: Duration::from_secs(2),
+            warmup_time: Duration::from_millis(300),
+            max_samples: 200,
+            min_samples: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for CI-style smoke benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            measure_time: Duration::from_millis(500),
+            warmup_time: Duration::from_millis(100),
+            max_samples: 50,
+            min_samples: 3,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Samples,
+    /// Seconds per iteration (mean).
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+}
+
+/// Measure `f` (one logical operation per call).
+pub fn bench<F: FnMut()>(name: &str, config: &BenchConfig, mut f: F) -> BenchResult {
+    // warm-up
+    let warm_deadline = Instant::now() + config.warmup_time;
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_deadline || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    // measurement
+    let mut samples = Samples::new();
+    let deadline = Instant::now() + config.measure_time;
+    while (samples.len() < config.max_samples && Instant::now() < deadline)
+        || samples.len() < config.min_samples
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mut s = samples.clone();
+    BenchResult {
+        name: name.to_string(),
+        mean_s: samples.mean(),
+        median_s: s.median(),
+        stddev_s: samples.stddev(),
+        samples,
+    }
+}
+
+impl BenchResult {
+    /// criterion-style report line.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} time: [{} {} {}]  (n={})",
+            self.name,
+            format_time(self.median_s - self.stddev_s),
+            format_time(self.median_s),
+            format_time(self.median_s + self.stddev_s),
+            self.samples.len(),
+        )
+    }
+
+    /// Report with a derived throughput figure.
+    pub fn report_throughput(&self, units: f64, unit_name: &str) -> String {
+        format!(
+            "{}  thrpt: {:.3e} {unit_name}/s",
+            self.report(),
+            units / self.median_s
+        )
+    }
+}
+
+/// Human-friendly time formatting (s/ms/µs/ns).
+pub fn format_time(seconds: f64) -> String {
+    let s = seconds.max(0.0);
+    if s >= 1.0 {
+        format!("{s:.4} s")
+    } else if s >= 1e-3 {
+        format!("{:.4} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.4} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            measure_time: Duration::from_millis(50),
+            warmup_time: Duration::from_millis(5),
+            max_samples: 20,
+            min_samples: 3,
+        };
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &cfg, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.samples.len() >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn format_time_units() {
+        assert!(format_time(2.5).ends_with(" s"));
+        assert!(format_time(2.5e-3).ends_with(" ms"));
+        assert!(format_time(2.5e-6).ends_with(" µs"));
+        assert!(format_time(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn throughput_report() {
+        let cfg = BenchConfig::quick();
+        let r = bench("t", &cfg, || {
+            black_box(1 + 1);
+        });
+        let line = r.report_throughput(1e6, "tasks");
+        assert!(line.contains("tasks/s"));
+    }
+}

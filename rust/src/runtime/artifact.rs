@@ -1,0 +1,257 @@
+//! Artifact manifest: discovery and validation of the AOT outputs.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py` and is
+//! the contract between the build-time Python layer and this runtime: it
+//! names every HLO-text file and the (variant, n, tile, kchunk, dtype)
+//! it was lowered for.  The Rust side never guesses shapes — everything is
+//! validated against this manifest.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Manifest version this runtime understands.
+pub const SUPPORTED_VERSION: usize = 2;
+
+/// One AOT-compiled program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Model variant: "naive" | "blocked" | "staged".
+    pub variant: String,
+    /// Problem size (matrix is n × n).
+    pub n: usize,
+    pub tile: usize,
+    /// k-chunk for staged variants (None otherwise).
+    pub kchunk: Option<usize>,
+    /// Absolute path to the HLO text.
+    pub path: PathBuf,
+    /// Size in bytes (sanity check against the file on disk).
+    pub bytes: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tile: usize,
+    pub entries: Vec<ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (artifact paths resolved relative to `dir`).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = root
+            .get("version")
+            .as_usize()
+            .context("manifest missing 'version'")?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version}, this runtime supports {SUPPORTED_VERSION}");
+        }
+        let tile = root.get("tile").as_usize().context("manifest missing 'tile'")?;
+        let arr = root
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing 'artifacts'")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let name = e
+                .get("name")
+                .as_str()
+                .with_context(|| format!("artifact[{i}] missing 'name'"))?
+                .to_string();
+            let variant = e
+                .get("variant")
+                .as_str()
+                .with_context(|| format!("artifact[{i}] missing 'variant'"))?
+                .to_string();
+            let n = e
+                .get("n")
+                .as_usize()
+                .with_context(|| format!("artifact[{i}] missing 'n'"))?;
+            let dtype = e.get("dtype").as_str().unwrap_or("f32");
+            if dtype != "f32" {
+                bail!("artifact {name}: unsupported dtype {dtype}");
+            }
+            let shape = e.get("input_shape");
+            let shape = shape.as_arr().unwrap_or(&[]);
+            if shape.len() != 2
+                || shape[0].as_usize() != Some(n)
+                || shape[1].as_usize() != Some(n)
+            {
+                bail!("artifact {name}: input_shape does not match n={n}");
+            }
+            entries.push(ArtifactEntry {
+                path: dir.join(&name),
+                name,
+                variant,
+                n,
+                tile: e.get("tile").as_usize().unwrap_or(tile),
+                kchunk: e.get("kchunk").as_usize(),
+                bytes: e.get("bytes").as_usize().unwrap_or(0),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest {
+            tile,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The entry for (variant, n), if lowered.
+    pub fn find(&self, variant: &str, n: usize) -> Option<&ArtifactEntry> {
+        // prefer the default kchunk (ablation artifacts carry a _m tag name)
+        self.entries
+            .iter()
+            .filter(|e| e.variant == variant && e.n == n)
+            .min_by_key(|e| e.name.len())
+    }
+
+    /// All sizes available for a variant, ascending.
+    pub fn sizes_for(&self, variant: &str) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.variant == variant)
+            .map(|e| e.n)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Smallest lowered size ≥ `n` for a variant (the padding bucket the
+    /// coordinator routes to).
+    pub fn bucket_for(&self, variant: &str, n: usize) -> Option<usize> {
+        self.sizes_for(variant).into_iter().find(|&s| s >= n)
+    }
+
+    /// Distinct variants present.
+    pub fn variants(&self) -> Vec<String> {
+        let mut set: BTreeMap<&str, ()> = BTreeMap::new();
+        for e in &self.entries {
+            set.insert(&e.variant, ());
+        }
+        set.into_keys().map(str::to_string).collect()
+    }
+
+    /// Verify every artifact file exists (and matches recorded size).
+    pub fn check_files(&self) -> Result<()> {
+        for e in &self.entries {
+            let meta = fs::metadata(&e.path)
+                .with_context(|| format!("artifact file missing: {}", e.path.display()))?;
+            if e.bytes != 0 && meta.len() as usize != e.bytes {
+                bail!(
+                    "artifact {} is {} bytes on disk, manifest says {}",
+                    e.name,
+                    meta.len(),
+                    e.bytes
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2, "tile": 32, "kchunk": 8, "jax_version": "0.8.2",
+      "artifacts": [
+        {"name": "apsp_staged_n64.hlo.txt", "variant": "staged", "n": 64,
+         "tile": 32, "kchunk": 8, "dtype": "f32",
+         "input_shape": [64, 64], "output_shape": [64, 64], "bytes": 100},
+        {"name": "apsp_staged_n128.hlo.txt", "variant": "staged", "n": 128,
+         "tile": 32, "kchunk": 8, "dtype": "f32",
+         "input_shape": [128, 128], "output_shape": [128, 128], "bytes": 100},
+        {"name": "apsp_staged_n128_m16.hlo.txt", "variant": "staged", "n": 128,
+         "tile": 32, "kchunk": 16, "dtype": "f32",
+         "input_shape": [128, 128], "output_shape": [128, 128], "bytes": 100},
+        {"name": "apsp_naive_n64.hlo.txt", "variant": "naive", "n": 64,
+         "tile": 32, "kchunk": null, "dtype": "f32",
+         "input_shape": [64, 64], "output_shape": [64, 64], "bytes": 100}
+      ]
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.tile, 32);
+        assert_eq!(m.variants(), vec!["naive".to_string(), "staged".to_string()]);
+    }
+
+    #[test]
+    fn find_prefers_default_kchunk() {
+        let m = sample();
+        let e = m.find("staged", 128).unwrap();
+        assert_eq!(e.name, "apsp_staged_n128.hlo.txt");
+        assert_eq!(e.kchunk, Some(8));
+    }
+
+    #[test]
+    fn bucket_rounds_up() {
+        let m = sample();
+        assert_eq!(m.bucket_for("staged", 1), Some(64));
+        assert_eq!(m.bucket_for("staged", 64), Some(64));
+        assert_eq!(m.bucket_for("staged", 65), Some(128));
+        assert_eq!(m.bucket_for("staged", 129), None);
+        assert_eq!(m.bucket_for("missing", 1), None);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 2", "\"version\": 99");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = SAMPLE.replace("\"input_shape\": [64, 64]", "\"input_shape\": [64, 32]");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let err = Manifest::parse(
+            r#"{"version": 2, "tile": 32, "artifacts": []}"#,
+            Path::new("/tmp"),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn paths_resolved_against_dir() {
+        let m = sample();
+        assert_eq!(
+            m.entries[0].path,
+            Path::new("/tmp/artifacts/apsp_staged_n64.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Executor pool: lazily-compiled, cached executables keyed by
+//! (variant, n), shared across coordinator worker threads.
+//!
+//! Compilation is the expensive step (XLA optimizes the whole while-loop
+//! nest), so executables are compiled once on first use and retained.  The
+//! pool also owns the padding/truncation logic: a request for any n is
+//! routed to the smallest lowered bucket ≥ n, padded with unreachable
+//! vertices (provably distance-preserving — `DistMatrix::padded`), solved,
+//! and truncated back.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::pjrt::{Executable, PjrtRuntime};
+use crate::graph::DistMatrix;
+
+/// A compiled model handle.
+pub struct LoadedModel {
+    pub variant: String,
+    pub n: usize,
+    exe: Executable,
+}
+
+impl LoadedModel {
+    /// Solve an exactly-n-sized matrix.
+    pub fn run(&self, w: &DistMatrix) -> Result<DistMatrix> {
+        anyhow::ensure!(
+            w.n() == self.n,
+            "model is lowered for n={}, got {}",
+            self.n,
+            w.n()
+        );
+        let out = self.exe.run(w.as_slice())?;
+        Ok(DistMatrix::from_vec(self.n, out))
+    }
+}
+
+/// Thread-safe pool of compiled executables over one PJRT client.
+pub struct ExecutorPool {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), Arc<LoadedModel>>>,
+}
+
+impl ExecutorPool {
+    /// Open the artifact directory and create the PJRT client.
+    pub fn open(artifact_dir: &Path) -> Result<ExecutorPool> {
+        let manifest = Manifest::load(artifact_dir)?;
+        manifest.check_files()?;
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(ExecutorPool {
+            runtime,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+
+    /// Get (compiling if needed) the model for an exact lowered size.
+    pub fn model(&self, variant: &str, n: usize) -> Result<Arc<LoadedModel>> {
+        let key = (variant.to_string(), n);
+        if let Some(m) = self.cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        // compile outside the lock: first-touch compiles of different keys
+        // can proceed in parallel, duplicate compiles of the same key are
+        // tolerated (last one wins, both are valid)
+        let entry = self
+            .manifest
+            .find(variant, n)
+            .with_context(|| format!("no artifact for variant={variant} n={n}"))?;
+        let exe = self.runtime.compile_file(&entry.path, entry.n)?;
+        let model = Arc::new(LoadedModel {
+            variant: variant.to_string(),
+            n: entry.n,
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, model.clone());
+        Ok(model)
+    }
+
+    /// Compile a *specific* manifest entry (bypasses the default-kchunk
+    /// preference of [`Manifest::find`]; used by the ablation benches).
+    pub fn model_for_entry(&self, entry: &super::artifact::ArtifactEntry) -> Result<Arc<LoadedModel>> {
+        let key = (entry.name.clone(), entry.n);
+        if let Some(m) = self.cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        let exe = self.runtime.compile_file(&entry.path, entry.n)?;
+        let model = Arc::new(LoadedModel {
+            variant: entry.variant.clone(),
+            n: entry.n,
+            exe,
+        });
+        self.cache.lock().unwrap().insert(key, model.clone());
+        Ok(model)
+    }
+
+    /// Eagerly compile every artifact of a variant (server warm-up).
+    pub fn warm(&self, variant: &str) -> Result<usize> {
+        let sizes = self.manifest.sizes_for(variant);
+        for &n in &sizes {
+            self.model(variant, n)?;
+        }
+        Ok(sizes.len())
+    }
+
+    /// Number of compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Solve a graph of *any* size: route to the smallest bucket ≥ n,
+    /// pad, run, truncate.  Returns the distances and the bucket used.
+    pub fn solve(&self, variant: &str, w: &DistMatrix) -> Result<(DistMatrix, usize)> {
+        let bucket = self
+            .manifest
+            .bucket_for(variant, w.n())
+            .with_context(|| {
+                format!(
+                    "no artifact bucket ≥ {} for variant {variant} (available: {:?})",
+                    w.n(),
+                    self.manifest.sizes_for(variant)
+                )
+            })?;
+        let model = self.model(variant, bucket)?;
+        let padded = if w.n() == bucket {
+            w.clone()
+        } else {
+            w.padded(bucket)
+        };
+        let solved = model.run(&padded)?;
+        let out = if w.n() == bucket {
+            solved
+        } else {
+            solved.truncated(w.n())
+        };
+        Ok((out, bucket))
+    }
+}

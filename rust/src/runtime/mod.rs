@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the
+//! request path.
+//!
+//! `python/compile/aot.py` lowers each (variant × size) once at build time;
+//! this module discovers the artifacts through `manifest.json`
+//! ([`artifact`]), compiles them on a shared PJRT CPU client ([`pjrt`]),
+//! and serves execute calls through a pooled, size-keyed executor registry
+//! ([`executor`]).  Python is never invoked here.
+
+pub mod artifact;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use executor::{ExecutorPool, LoadedModel};
+pub use pjrt::PjrtRuntime;

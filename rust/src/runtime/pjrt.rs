@@ -1,0 +1,106 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md): `HloModuleProto::from_text_file` reassigns instruction ids,
+//! sidestepping the 64-bit-id protos jax ≥ 0.5 emits that xla_extension
+//! 0.5.1 rejects.  One client is shared process-wide; compiled executables
+//! are cheap handles that can be executed concurrently.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::Dist;
+
+/// Process-wide PJRT client + compile/execute helpers.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled program taking one f32[n,n] input and returning a 1-tuple of
+/// f32[n,n] (the `apsp_fn` convention).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact expecting f32[n,n] → (f32[n,n],).
+    pub fn compile_file(&self, path: &Path, n: usize) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, n })
+    }
+
+    /// Compile HLO text from memory (used by tests).
+    pub fn compile_text(&self, text: &str, n: usize) -> Result<Executable> {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "fw_stage_inline_{}_{}.hlo.txt",
+            std::process::id(),
+            n
+        ));
+        std::fs::write(&path, text)?;
+        let result = self.compile_file(&path, n);
+        let _ = std::fs::remove_file(&path);
+        result
+    }
+}
+
+impl Executable {
+    /// Problem size this executable was lowered for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run the program on a row-major n×n f32 buffer; returns the solved
+    /// row-major buffer.
+    pub fn run(&self, input: &[Dist]) -> Result<Vec<Dist>> {
+        let n = self.n;
+        anyhow::ensure!(
+            input.len() == n * n,
+            "input length {} != {n}²",
+            input.len()
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[n as i64, n as i64])
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result buffer")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = out.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<Dist>().context("reading result values")?;
+        anyhow::ensure!(
+            values.len() == n * n,
+            "result length {} != {n}²",
+            values.len()
+        );
+        Ok(values)
+    }
+}

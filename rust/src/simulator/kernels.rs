@@ -1,0 +1,267 @@
+//! Per-variant kernel resource and cost models.
+//!
+//! Each Table 1 column is a [`Variant`]; each variant's phase-3 kernel (the
+//! Θ(n³) hot path) is described by a [`KernelModel`]: per-block resources
+//! (⇒ occupancy), cycles per task, and bytes of bus traffic per task.
+//!
+//! Cycle counts decompose as
+//!
+//! ```text
+//! cycles/task = (2·conflict_degree + 2) · co_issue + index_overhead
+//!               └ 2 smem loads   add+min ┘
+//! ```
+//!
+//! * `conflict_degree` comes from the bank model in [`crate::layout`]
+//!   (1 for row-major and for tiled+cyclic; 4 for tiled+simple-k, §4.3).
+//! * `index_overhead` is the per-task share of address arithmetic: ~5.8
+//!   cycles with div/mod and no unrolling (§4: removing it is the 2.1–2.3×
+//!   "Optimized" step), ~0.5 after shifts + unrolling, and ~0.47 for the
+//!   staged kernel (more tasks per thread amortize setup, §4).
+//! * `co_issue` models ILP: the staged kernel holds 16 independent
+//!   accumulator chains in registers per thread, letting the SM dual-issue
+//!   enough to push effective CPI below 1 (0.82, *calibrated*; equals the
+//!   paper's measured 12.7 FLOP-equivalents/task within 2%).
+//!
+//! Everything else (occupancy → issue efficiency, wave quantization,
+//! bandwidth roofline, launch overhead) lives in [`super::model`].
+
+use super::occupancy::BlockResources;
+use crate::layout::{bank_conflict_degree, AccessPattern, KSchedule};
+
+/// The five Table 1 columns plus the bank-conflict ablation (E5/E8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Basic triple loop on the host CPU.
+    Cpu,
+    /// Harish & Narayanan [3]: one thread per task, no blocking.
+    HarishNarayanan,
+    /// Katz & Kider [2]: blocked, 3 tiles in shared memory.
+    KatzKider,
+    /// §4 first round: K&K + shifts/unrolling (fewer, cheaper instructions).
+    OptimizedBlocked,
+    /// §4 second round: registers + staged panel loads + cyclic k (the paper).
+    StagedLoad,
+    /// Ablation: staged kernel with the *simple* k order — 4-way bank
+    /// conflicts (Fig. 6 middle). Not in Table 1; quantifies §4.3's fix.
+    StagedSimpleK,
+}
+
+impl Variant {
+    pub const TABLE1: [Variant; 5] = [
+        Variant::Cpu,
+        Variant::HarishNarayanan,
+        Variant::KatzKider,
+        Variant::OptimizedBlocked,
+        Variant::StagedLoad,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Cpu => "CPU",
+            Variant::HarishNarayanan => "Harish & Narayanan",
+            Variant::KatzKider => "Katz & Kider",
+            Variant::OptimizedBlocked => "Optimized & Blocked",
+            Variant::StagedLoad => "Staged Load",
+            Variant::StagedSimpleK => "Staged (simple k)",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_str(s: &str) -> Option<Variant> {
+        Some(match s {
+            "cpu" => Variant::Cpu,
+            "hn" | "harish-narayanan" | "naive" => Variant::HarishNarayanan,
+            "kk" | "katz-kider" | "blocked" => Variant::KatzKider,
+            "opt" | "optimized" => Variant::OptimizedBlocked,
+            "staged" | "staged-load" => Variant::StagedLoad,
+            "staged-simple-k" => Variant::StagedSimpleK,
+            _ => return None,
+        })
+    }
+}
+
+/// Cost model of one GPU kernel (the phase-3 kernel for blocked variants).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelModel {
+    /// Per-block resources → occupancy.
+    pub resources: BlockResources,
+    /// Issue cycles per task on one SP.
+    pub cycles_per_task: f64,
+    /// Global-bus bytes per task.
+    pub bytes_per_task: f64,
+    /// Bus efficiency for this kernel's access pattern (fraction of the
+    /// measured 77 GB/s usable).
+    pub bus_efficiency: f64,
+    /// Tile size (0 = unblocked).
+    pub tile: usize,
+}
+
+/// Address-arithmetic overhead per task, cycles.
+const INDEX_UNOPTIMIZED: f64 = 5.8; // div/mod + no unrolling (§4)
+const INDEX_OPTIMIZED: f64 = 0.5; // shifts + unrolled loops
+const INDEX_STAGED: f64 = 0.47; // + more tasks per thread
+
+/// ILP factor of the register-tiled staged kernel (*calibrated*).
+const CO_ISSUE_STAGED: f64 = 0.82;
+
+/// Tiled coalesced streaming reaches ~70 of 77 GB/s (§5: "the 70 GB/sec or
+/// so we could reasonably hope for").
+const BUS_EFF_TILED: f64 = 70.0 / 77.0;
+
+fn base_cycles(conflict_degree: usize, co_issue: f64, index_overhead: f64) -> f64 {
+    (2.0 * conflict_degree as f64 + 2.0) * co_issue + index_overhead
+}
+
+impl Variant {
+    /// The phase-3 kernel model for GPU variants; `None` for the CPU row.
+    pub fn kernel(&self) -> Option<KernelModel> {
+        let tile = 32;
+        Some(match self {
+            Variant::Cpu => return None,
+            Variant::HarishNarayanan => KernelModel {
+                // one thread per element, k sequential on the host side;
+                // 3 loads + 1 store = 16 B/task over the bus (§3.1)
+                resources: BlockResources {
+                    threads: 256,
+                    regs_per_thread: 10,
+                    smem_bytes: 32,
+                },
+                cycles_per_task: base_cycles(1, 1.0, INDEX_UNOPTIMIZED),
+                bytes_per_task: 16.0,
+                bus_efficiency: 1.0, // uses DeviceSpec.bus_efficiency semantics below
+                tile: 0,
+            },
+            Variant::KatzKider => KernelModel {
+                // 3 full tiles in smem: 3·32²·4 + 32 = 12320 B (§3.3)
+                resources: BlockResources {
+                    threads: 256,
+                    regs_per_thread: 16,
+                    smem_bytes: 12320,
+                },
+                cycles_per_task: base_cycles(
+                    bank_conflict_degree(AccessPattern::RowMajor, KSchedule::Simple),
+                    1.0,
+                    INDEX_UNOPTIMIZED,
+                ),
+                // 4 tiles of traffic per 32·32² tasks = 0.5 B/task
+                bytes_per_task: 16.0 / tile as f64,
+                bus_efficiency: BUS_EFF_TILED,
+                tile,
+            },
+            Variant::OptimizedBlocked => KernelModel {
+                resources: BlockResources {
+                    threads: 256,
+                    regs_per_thread: 16,
+                    smem_bytes: 12320,
+                },
+                cycles_per_task: base_cycles(
+                    bank_conflict_degree(AccessPattern::RowMajor, KSchedule::Simple),
+                    1.0,
+                    INDEX_OPTIMIZED,
+                ),
+                bytes_per_task: 16.0 / tile as f64,
+                bus_efficiency: BUS_EFF_TILED,
+                tile,
+            },
+            Variant::StagedLoad => KernelModel {
+                // §4.2: 2·32·4·4 + 32 = 1056 B, 64 threads, tile in registers
+                resources: BlockResources {
+                    threads: 64,
+                    regs_per_thread: 32,
+                    smem_bytes: 1056,
+                },
+                cycles_per_task: base_cycles(
+                    bank_conflict_degree(AccessPattern::Tiled4x4, KSchedule::Cyclic),
+                    CO_ISSUE_STAGED,
+                    INDEX_STAGED,
+                ),
+                bytes_per_task: 16.0 / tile as f64,
+                bus_efficiency: BUS_EFF_TILED,
+                tile,
+            },
+            Variant::StagedSimpleK => KernelModel {
+                resources: BlockResources {
+                    threads: 64,
+                    regs_per_thread: 32,
+                    smem_bytes: 1056,
+                },
+                cycles_per_task: base_cycles(
+                    bank_conflict_degree(AccessPattern::Tiled4x4, KSchedule::Simple),
+                    CO_ISSUE_STAGED,
+                    INDEX_STAGED,
+                ),
+                bytes_per_task: 16.0 / tile as f64,
+                bus_efficiency: BUS_EFF_TILED,
+                tile,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_hierarchy_matches_paper_ratios() {
+        let kk = Variant::KatzKider.kernel().unwrap().cycles_per_task;
+        let opt = Variant::OptimizedBlocked.kernel().unwrap().cycles_per_task;
+        let staged = Variant::StagedLoad.kernel().unwrap().cycles_per_task;
+        // §4: instruction optimization alone is a 2.1–2.3× speedup
+        let instr_ratio = kk / opt;
+        assert!(
+            (2.1..=2.3).contains(&instr_ratio),
+            "instr speedup {instr_ratio}"
+        );
+        // staged cycles must be below optimized (ILP + amortized indexing)
+        assert!(staged < opt);
+    }
+
+    #[test]
+    fn staged_matches_paper_flop_equivalents() {
+        // §5: staged uses "the equivalent of 12.7 FLOPs per task" of the
+        // 933 GFLOP marketing peak = 12.7/3 ≈ 4.2 issue cycles... the
+        // comparable quantity in our 311 G instr/s terms:
+        // tasks/s = 311e9 / cycles ⇒ paper's 73.6e9 tasks/s ⇒ 4.23 cycles
+        // at full occupancy. Our model: 3.75 cycles at occupancy 512/512.
+        let staged = Variant::StagedLoad.kernel().unwrap().cycles_per_task;
+        assert!((3.5..=4.4).contains(&staged), "{staged}");
+    }
+
+    #[test]
+    fn simple_k_ablation_pays_bank_conflicts() {
+        let cyclic = Variant::StagedLoad.kernel().unwrap().cycles_per_task;
+        let simple = Variant::StagedSimpleK.kernel().unwrap().cycles_per_task;
+        // 2 loads go from 1 cycle to 4 cycles each (Fig. 6): >2× slower
+        assert!(simple / cyclic > 2.0, "{simple} / {cyclic}");
+    }
+
+    #[test]
+    fn blocking_reduces_traffic_32x() {
+        let hn = Variant::HarishNarayanan.kernel().unwrap().bytes_per_task;
+        let kk = Variant::KatzKider.kernel().unwrap().bytes_per_task;
+        assert_eq!(hn / kk, 32.0); // §3.2: "reduced by a factor of 32"
+    }
+
+    #[test]
+    fn cpu_has_no_kernel() {
+        assert!(Variant::Cpu.kernel().is_none());
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::TABLE1 {
+            if v != Variant::Cpu {
+                assert!(Variant::from_str(match v {
+                    Variant::HarishNarayanan => "hn",
+                    Variant::KatzKider => "kk",
+                    Variant::OptimizedBlocked => "opt",
+                    Variant::StagedLoad => "staged",
+                    _ => unreachable!(),
+                })
+                .is_some());
+            }
+        }
+        assert_eq!(Variant::from_str("nope"), None);
+    }
+}

@@ -1,0 +1,28 @@
+//! Analytical Tesla C1060 performance model.
+//!
+//! The paper's testbed (NVIDIA Tesla C1060, CUDA 2.3) is unavailable; per
+//! DESIGN.md §Substitutions this module regenerates every number in the
+//! paper's evaluation analytically, from the same quantities the paper
+//! itself argues with:
+//!
+//! * §3.1: bytes/task over the global bus vs the measured 77 GB/s,
+//! * §3.3: shared-memory/register/thread occupancy limits per SM,
+//! * §4:   instruction counts per task (div/mod vs shifts, unrolling),
+//! * §4.3: shared-memory bank-conflict degree (from [`crate::layout`]),
+//! * the scheduler's ability to hide latency as a function of resident
+//!   threads (196 to hide register latency, 512 for global memory — §3.3).
+//!
+//! [`device`] holds the hardware constants, [`occupancy`] the CC 1.3
+//! occupancy calculator, [`kernels`] the per-variant kernel resource/cost
+//! models, [`model`] the per-phase execution-time composition, and
+//! [`table`] the Table 1 / Figure 7 / §5 emitters.
+
+pub mod device;
+pub mod kernels;
+pub mod model;
+pub mod occupancy;
+pub mod table;
+
+pub use device::DeviceSpec;
+pub use kernels::Variant;
+pub use model::{simulate, SimResult};

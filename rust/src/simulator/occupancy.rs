@@ -1,0 +1,194 @@
+//! CUDA compute-capability-1.3 occupancy calculator (paper §3.3, §4.1,
+//! §4.2; CUDA Occupancy Calculator [15]).
+//!
+//! Given a kernel's per-block resources, compute how many blocks an SM can
+//! host.  This is the quantity the paper's whole contribution turns on:
+//! 12320 B of shared memory ⇒ 1 block/SM ⇒ 256 resident threads ⇒ exposed
+//! latency; 1056 B ⇒ 8 blocks (thread/register-limited) ⇒ 512 resident
+//! threads ⇒ latency hidden.
+
+use super::device::DeviceSpec;
+
+/// Per-block resource demands of a kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockResources {
+    /// Threads per block.
+    pub threads: usize,
+    /// Registers per thread.
+    pub regs_per_thread: usize,
+    /// Shared memory per block, bytes (including parameter block).
+    pub smem_bytes: usize,
+}
+
+/// Which resource capped the block count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Limit {
+    SharedMemory,
+    Registers,
+    Threads,
+    BlockSlots,
+}
+
+/// Occupancy result for one kernel on one device.
+#[derive(Clone, Copy, Debug)]
+pub struct Occupancy {
+    pub blocks_per_sm: usize,
+    pub resident_threads: usize,
+    pub limited_by: Limit,
+}
+
+fn round_up(x: usize, granularity: usize) -> usize {
+    x.div_ceil(granularity) * granularity
+}
+
+/// CC 1.3 occupancy: blocks/SM = min over the four hardware limits, with
+/// register and shared-memory allocations rounded to device granularity.
+pub fn occupancy(dev: &DeviceSpec, res: &BlockResources) -> Occupancy {
+    assert!(res.threads > 0, "zero-thread block");
+    let smem_alloc = round_up(res.smem_bytes.max(1), dev.smem_alloc_granularity);
+    let regs_alloc = round_up(
+        res.regs_per_thread * res.threads,
+        dev.reg_alloc_granularity,
+    );
+    let by_smem = dev.smem_per_sm / smem_alloc;
+    let by_regs = if regs_alloc == 0 {
+        dev.max_blocks_per_sm
+    } else {
+        dev.regs_per_sm / regs_alloc
+    };
+    let by_threads = dev.max_threads_per_sm / res.threads;
+    let by_slots = dev.max_blocks_per_sm;
+
+    let (blocks, limited_by) = [
+        (by_smem, Limit::SharedMemory),
+        (by_regs, Limit::Registers),
+        (by_threads, Limit::Threads),
+        (by_slots, Limit::BlockSlots),
+    ]
+    .into_iter()
+    .min_by_key(|&(b, _)| b)
+    .unwrap();
+
+    Occupancy {
+        blocks_per_sm: blocks,
+        resident_threads: blocks * res.threads,
+        limited_by,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c1060() -> DeviceSpec {
+        DeviceSpec::tesla_c1060()
+    }
+
+    // ---- E6: the paper's three occupancy cases, §3.3 / §4.1 / §4.2 ----
+
+    #[test]
+    fn katz_kider_one_block_per_sm() {
+        // §3.3: 3 tiles × 32² × 4 B + 32 B params = 12320 B > half of 16 KB
+        let occ = occupancy(
+            &c1060(),
+            &BlockResources {
+                threads: 256,
+                regs_per_thread: 16,
+                smem_bytes: 12320,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 1);
+        assert_eq!(occ.limited_by, Limit::SharedMemory);
+        assert_eq!(occ.resident_threads, 256);
+    }
+
+    #[test]
+    fn registers_only_still_one_block() {
+        // §4.1: tile in registers ⇒ 2·32² + 32 = 8224 B — "still more than
+        // half of the available 16384", so still one block per SM
+        let occ = occupancy(
+            &c1060(),
+            &BlockResources {
+                threads: 256,
+                regs_per_thread: 24,
+                smem_bytes: 8224,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 1);
+        assert_eq!(occ.limited_by, Limit::SharedMemory);
+    }
+
+    #[test]
+    fn staged_kernel_eight_blocks() {
+        // §4.2: 2·32·4·4 + 32 = 1056 B ⇒ "as many as 15 blocks could be run
+        // ... given the shared memory usage. The limiting factors are now
+        // the total threads ... and the registers".
+        // 64 threads × 32 regs = 2048 regs/block ⇒ 8 blocks; thread limit
+        // 1024/64 = 16; block-slot limit 8.
+        let occ = occupancy(
+            &c1060(),
+            &BlockResources {
+                threads: 64,
+                regs_per_thread: 32,
+                smem_bytes: 1056,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 8);
+        assert_eq!(occ.resident_threads, 512);
+        assert_ne!(occ.limited_by, Limit::SharedMemory);
+    }
+
+    #[test]
+    fn staged_smem_alone_allows_15_blocks() {
+        // the paper's "as many as 15 blocks" figure: 16384 / ⌈1056⌉₅₁₂
+        let dev = c1060();
+        let smem_alloc = 1056usize.div_ceil(dev.smem_alloc_granularity)
+            * dev.smem_alloc_granularity;
+        assert_eq!(dev.smem_per_sm / smem_alloc, 10);
+        // (with byte-granularity allocation the paper's exact 15:)
+        assert_eq!(dev.smem_per_sm / 1056, 15);
+    }
+
+    #[test]
+    fn thread_limited_case() {
+        let occ = occupancy(
+            &c1060(),
+            &BlockResources {
+                threads: 512,
+                regs_per_thread: 8,
+                smem_bytes: 512,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert_eq!(occ.limited_by, Limit::Threads);
+    }
+
+    #[test]
+    fn block_slot_limited_case() {
+        let occ = occupancy(
+            &c1060(),
+            &BlockResources {
+                threads: 32,
+                regs_per_thread: 4,
+                smem_bytes: 16,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 8);
+        assert_eq!(occ.limited_by, Limit::BlockSlots);
+    }
+
+    #[test]
+    fn rounding_granularity_applies() {
+        // 513 B of smem rounds to 1024 ⇒ 16 by smem, capped by slots at 8
+        let dev = c1060();
+        let occ = occupancy(
+            &dev,
+            &BlockResources {
+                threads: 64,
+                regs_per_thread: 4,
+                smem_bytes: 513,
+            },
+        );
+        assert_eq!(occ.blocks_per_sm, 8);
+    }
+}

@@ -1,0 +1,15 @@
+//! First-party utility substrate.
+//!
+//! This build runs fully offline against a vendored crate set that has no
+//! `serde`, `rand`, `clap`, or `criterion`, so the pieces a framework would
+//! normally pull from crates.io are implemented here:
+//!
+//! * [`json`] — a small, strict JSON parser/serializer (manifest + wire protocol)
+//! * [`prng`] — SplitMix64 / Xoshiro256++ deterministic PRNG (generators, tests)
+//! * [`stats`] — streaming summary statistics used by the bench harness
+//! * [`proptest`] — a miniature property-testing driver with shrinking
+
+pub mod json;
+pub mod proptest;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,164 @@
+//! Miniature property-testing driver (the vendored crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! A property is a closure from a seeded [`super::prng::Rng`] to
+//! `Result<(), String>`.  The driver runs `cases` seeds; on failure it
+//! *shrinks over the seed's complexity knob* — properties receive a `size`
+//! hint that failing runs retry with smaller values, so counterexamples are
+//! reported at the smallest size that still fails.  This is deliberately
+//! simpler than structural shrinking but covers what the invariant tests
+//! here need (sizes, densities, seeds).
+
+use super::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u32,
+    /// Base seed; each case derives its own stream from it.
+    pub seed: u64,
+    /// Maximum `size` hint passed to the property.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: DEFAULT_SEED,
+            max_size: 128,
+        }
+    }
+}
+
+/// Outcome of a full property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub case: u32,
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases. On failure, retry the same
+/// case seed with progressively smaller sizes and report the smallest
+/// failing size.  Panics with a reproducible report (for use inside
+/// `#[test]` functions).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    if let Some(f) = check_quiet(cfg, &mut prop) {
+        panic!(
+            "property '{name}' failed: case {case} (seed {seed:#x}, size {size}): {msg}\n\
+             reproduce with Config {{ seed: {seed:#x}, .. }}",
+            case = f.case,
+            seed = f.seed,
+            size = f.size,
+            msg = f.message,
+        );
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (testable).
+pub fn check_quiet<F>(cfg: Config, prop: &mut F) -> Option<Failure>
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        // ramp size up with the case index so early cases are tiny
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case as usize
+            / cfg.cases.max(1) as usize;
+        let mut rng = Rng::new(case_seed);
+        if let Err(message) = prop(&mut rng, size) {
+            // shrink: halve the size until the property passes again
+            let mut best = Failure {
+                case,
+                seed: case_seed,
+                size,
+                message,
+            };
+            let mut sz = size / 2;
+            while sz >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, sz) {
+                    Err(message) => {
+                        best = Failure {
+                            case,
+                            seed: case_seed,
+                            size: sz,
+                            message,
+                        };
+                        sz /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return Some(best);
+        }
+    }
+    None
+}
+
+/// Default seed (spells approximately "FW STAGE").
+pub const DEFAULT_SEED: u64 = 0xF37_57A6E;
+
+impl Config {
+    pub fn with_cases(cases: u32) -> Self {
+        Self {
+            cases,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_returns_none() {
+        let mut prop = |_: &mut Rng, _: usize| Ok(());
+        assert!(check_quiet(Config::default(), &mut prop).is_none());
+    }
+
+    #[test]
+    fn failing_property_shrinks_size() {
+        // fails for any size >= 4; shrinker should land near 4
+        let mut prop = |_: &mut Rng, size: usize| {
+            if size >= 4 {
+                Err(format!("size {size} too big"))
+            } else {
+                Ok(())
+            }
+        };
+        let f = check_quiet(Config::default(), &mut prop).expect("must fail");
+        assert!(f.size >= 4 && f.size < 8, "shrunk to {}", f.size);
+    }
+
+    #[test]
+    fn failure_is_reproducible() {
+        let cfg = Config::default();
+        let mut prop = |rng: &mut Rng, _: usize| {
+            if rng.next_u64() % 7 == 0 {
+                Err("hit".into())
+            } else {
+                Ok(())
+            }
+        };
+        let a = check_quiet(cfg, &mut prop).map(|f| (f.case, f.seed));
+        let b = check_quiet(cfg, &mut prop).map(|f| (f.case, f.seed));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_panics_with_report() {
+        check("always-fails", Config::with_cases(2), |_, _| {
+            Err("nope".into())
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Summary statistics for the first-party benchmark harness (`perf` module
+//! and `rust/benches/*`): online mean/variance (Welford) plus exact
+//! percentiles over retained samples.
+
+/// A batch of duration/throughput samples with summary accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Raw samples (insertion order not guaranteed after percentile calls).
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Merge another sample set into this one.
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n<2).
+    pub fn stddev(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let ss: f64 = self.xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile by nearest-rank on the sorted samples; `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p}");
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.xs
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.xs.len() - 1) as f64).round() as usize;
+        self.xs[rank]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// One-line human summary: `mean ± stddev [min … max] (n)`.
+    pub fn summary(&mut self, unit: &str) -> String {
+        format!(
+            "{:.4}{u} ± {:.4}{u} [{:.4}{u} … {:.4}{u}] (n={})",
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.max(),
+            self.len(),
+            u = unit,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn of(xs: &[f64]) -> Samples {
+        let mut s = Samples::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let s = of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = of(&[42.0]);
+        assert_eq!(s.mean(), 42.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.median(), 42.0);
+        assert_eq!(s.min(), 42.0);
+        assert_eq!(s.max(), 42.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn push_after_percentile_resorts() {
+        let mut s = of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median(), 2.0);
+        s.push(0.5);
+        s.push(0.6);
+        assert_eq!(s.percentile(0.0), 0.5);
+    }
+}

@@ -1,0 +1,184 @@
+//! Serving-workload traces: deterministic request streams for the
+//! coordinator benches and the `serve_demo` example.
+//!
+//! A trace is a list of (arrival-offset, graph spec) pairs.  Arrivals are
+//! Poisson (exponential gaps); graph sizes follow either a uniform-bucket
+//! or heavy-tail (Zipf-like over buckets) distribution, matching the two
+//! regimes a routing service sees: homogeneous fleets vs mixed tenants.
+
+use std::time::Duration;
+
+use crate::graph::{generators, DistMatrix};
+use crate::util::prng::Rng;
+
+/// Which generator family a trace item uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    ErdosRenyi,
+    Grid,
+    ScaleFree,
+}
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    /// Offset from trace start at which the request arrives.
+    pub at: Duration,
+    pub n: usize,
+    pub kind: GraphKind,
+    pub seed: u64,
+}
+
+impl TraceItem {
+    /// Materialize the graph (deterministic in the item's seed).
+    pub fn graph(&self) -> DistMatrix {
+        match self.kind {
+            GraphKind::ErdosRenyi => generators::erdos_renyi(self.n, 0.3, self.seed),
+            GraphKind::Grid => {
+                let side = (self.n as f64).sqrt().round().max(2.0) as usize;
+                generators::grid(side, self.seed)
+            }
+            GraphKind::ScaleFree => generators::scale_free(self.n.max(4), 2, self.seed),
+        }
+    }
+}
+
+/// Trace shape parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate, requests/second.
+    pub rate_hz: f64,
+    /// Number of requests.
+    pub count: usize,
+    /// Candidate sizes (typically just below the artifact buckets).
+    pub sizes: Vec<usize>,
+    /// Heavy-tail toward small sizes if true; uniform otherwise.
+    pub heavy_tail: bool,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate_hz: 50.0,
+            count: 100,
+            sizes: vec![48, 60, 100, 120, 200],
+            heavy_tail: true,
+            seed: 0xACE,
+        }
+    }
+}
+
+/// Generate a deterministic trace.
+pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
+    assert!(!config.sizes.is_empty(), "trace needs candidate sizes");
+    assert!(config.rate_hz > 0.0);
+    let mut rng = Rng::new(config.seed);
+    let mut at = 0f64;
+    let mut items = Vec::with_capacity(config.count);
+    for i in 0..config.count {
+        // exponential inter-arrival gap
+        let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+        at += -u.ln() / config.rate_hz;
+        let idx = if config.heavy_tail {
+            // Zipf-ish: P(bucket k) ∝ 1/(k+1)
+            let weights: Vec<f64> = (0..config.sizes.len())
+                .map(|k| 1.0 / (k + 1) as f64)
+                .collect();
+            let total: f64 = weights.iter().sum();
+            let mut pick = rng.next_f64() * total;
+            let mut chosen = 0;
+            for (k, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    chosen = k;
+                    break;
+                }
+                pick -= w;
+            }
+            chosen
+        } else {
+            rng.range(0, config.sizes.len())
+        };
+        let kind = match rng.next_below(3) {
+            0 => GraphKind::ErdosRenyi,
+            1 => GraphKind::Grid,
+            _ => GraphKind::ScaleFree,
+        };
+        items.push(TraceItem {
+            at: Duration::from_secs_f64(at),
+            n: config.sizes[idx],
+            kind,
+            seed: config.seed.wrapping_add(i as u64 * 7919),
+        });
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.n, y.n);
+            assert_eq!(x.seed, y.seed);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let items = generate(&TraceConfig::default());
+        for pair in items.windows(2) {
+            assert!(pair[0].at <= pair[1].at);
+        }
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let cfg = TraceConfig {
+            rate_hz: 100.0,
+            count: 2000,
+            ..TraceConfig::default()
+        };
+        let items = generate(&cfg);
+        let span = items.last().unwrap().at.as_secs_f64();
+        let rate = cfg.count as f64 / span;
+        assert!((70.0..140.0).contains(&rate), "empirical rate {rate}");
+    }
+
+    #[test]
+    fn heavy_tail_prefers_small() {
+        let cfg = TraceConfig {
+            count: 1000,
+            heavy_tail: true,
+            ..TraceConfig::default()
+        };
+        let items = generate(&cfg);
+        let smallest = cfg.sizes[0];
+        let small_count = items.iter().filter(|i| i.n == smallest).count();
+        assert!(
+            small_count > items.len() / 3,
+            "smallest bucket got {small_count}/{}",
+            items.len()
+        );
+    }
+
+    #[test]
+    fn graphs_materialize_and_validate() {
+        let items = generate(&TraceConfig {
+            count: 12,
+            ..TraceConfig::default()
+        });
+        for item in items {
+            let g = item.graph();
+            g.validate().unwrap();
+            assert!(g.n() >= 4);
+        }
+    }
+}

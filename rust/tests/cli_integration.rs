@@ -1,0 +1,165 @@
+//! CLI integration: drive the built `fw-stage` binary end to end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn binary() -> PathBuf {
+    // target dir is a sibling of the test executable's parent (deps/)
+    let mut path = std::env::current_exe().unwrap();
+    path.pop(); // strip test binary name
+    if path.ends_with("deps") {
+        path.pop();
+    }
+    path.join("fw-stage")
+}
+
+fn artifacts_available() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(binary())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("running fw-stage");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["solve", "serve", "gen", "simulate", "bench-tasks", "info"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn no_args_prints_usage_ok() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn simulate_table1_reproduces_shape() {
+    let (ok, stdout, _) = run(&["simulate", "--table1"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Table 1"));
+    assert!(stdout.contains("16384"));
+    assert!(stdout.contains("53.02") || stdout.contains("(53.02"));
+}
+
+#[test]
+fn simulate_fig7_csv() {
+    let (ok, stdout, _) = run(&["simulate", "--fig7", "--csv"]);
+    assert!(ok);
+    let lines: Vec<&str> = stdout.trim().lines().collect();
+    assert_eq!(lines.len(), 18);
+    assert!(lines[0].starts_with("n,cpu"));
+}
+
+#[test]
+fn simulate_analysis_and_ablation() {
+    let (ok, stdout, _) = run(&["simulate", "--analysis", "--ablation", "--n", "8192"]);
+    assert!(ok);
+    assert!(stdout.contains("tasks/s"));
+    assert!(stdout.contains("Speedup decomposition"));
+}
+
+#[test]
+fn gen_writes_all_models() {
+    let dir = std::env::temp_dir().join(format!("fw_cli_gen_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for model in ["er", "grid", "scale-free", "geometric", "ring", "dag"] {
+        let out = dir.join(format!("{model}.edges"));
+        let (ok, _, stderr) = run(&[
+            "gen",
+            "--model",
+            model,
+            "--n",
+            "64",
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        assert!(ok, "{model}: {stderr}");
+        assert!(out.exists());
+        let g = fw_stage::graph::io::load(&out).unwrap();
+        assert!(g.n() >= 16, "{model} produced n={}", g.n());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gen_rejects_unknown_model_and_flags() {
+    let (ok, _, stderr) = run(&["gen", "--model", "mystery"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown model"));
+    let (ok, _, stderr) = run(&["gen", "--frobnicate", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag"));
+}
+
+#[test]
+fn solve_file_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fw_cli_solve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.edges");
+    let out_path = dir.join("d.dist");
+    let (ok, _, stderr) = run(&[
+        "gen", "--model", "er", "--n", "80", "--seed", "9",
+        "--out", graph_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--output", out_path.to_str().unwrap(),
+        "--variant", "staged",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stderr.contains("via device"), "{stderr}");
+    // verify against the CPU oracle
+    let g = fw_stage::graph::io::load(&graph_path).unwrap();
+    let d = fw_stage::graph::io::load(&out_path).unwrap();
+    let cpu = fw_stage::apsp::naive::solve(&g);
+    assert!(d.allclose(&cpu, 1e-5, 1e-5));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn info_describes_artifacts() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let (ok, stdout, stderr) = run(&["info"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("staged"), "{stdout}");
+    assert!(stdout.contains("tile: 32"));
+}
+
+#[test]
+fn solve_missing_input_is_error() {
+    let (ok, _, stderr) = run(&["solve"]);
+    assert!(!ok);
+    assert!(stderr.contains("--input"));
+}

@@ -1,0 +1,203 @@
+//! End-to-end coordinator tests: TCP server ↔ client ↔ engine ↔ PJRT.
+//!
+//! Skipped (with a notice) when artifacts/ has not been built.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fw_stage::apsp;
+use fw_stage::coordinator::{self, client::Client, server::Server, Coordinator};
+use fw_stage::graph::{generators, DistMatrix};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn start() -> Option<(Arc<Coordinator>, Server)> {
+    let dir = artifact_dir()?;
+    let mut config = coordinator::Config::new(&dir);
+    config.engine.batch_window = std::time::Duration::from_millis(1);
+    let coord = Arc::new(Coordinator::start(config).expect("coordinator"));
+    let server = Server::spawn(coord.clone(), "127.0.0.1:0").expect("server");
+    Some((coord, server))
+}
+
+macro_rules! with_server {
+    (|$coord:ident, $server:ident| $body:block) => {
+        match start() {
+            Some(($coord, $server)) => $body,
+            None => eprintln!("SKIP: artifacts/ not built (run `make artifacts`)"),
+        }
+    };
+}
+
+#[test]
+fn tcp_solve_matches_oracle() {
+    with_server!(|coord, server| {
+        let addr = server.addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.ping().unwrap();
+        let g = generators::erdos_renyi(100, 0.3, 301);
+        let resp = client.solve(&g, "staged").unwrap();
+        assert_eq!(resp.dist.n(), 100);
+        assert_eq!(resp.bucket, 128); // padded up
+        let cpu = apsp::naive::solve(&g);
+        assert!(resp.dist.allclose(&cpu, 1e-5, 1e-5));
+        let _ = coord;
+    });
+}
+
+#[test]
+fn small_graphs_served_by_cpu_route() {
+    with_server!(|coord, server| {
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let g = generators::ring(16); // ≤ cpu_threshold
+        let resp = client.solve(&g, "staged").unwrap();
+        assert_eq!(resp.source, coordinator::Source::Cpu);
+        assert!(resp.dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+        let _ = coord;
+    });
+}
+
+#[test]
+fn cache_hit_on_repeat() {
+    with_server!(|coord, server| {
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let g = generators::erdos_renyi(96, 0.4, 303);
+        let first = client.solve(&g, "staged").unwrap();
+        assert_ne!(first.source, coordinator::Source::Cache);
+        let second = client.solve(&g, "staged").unwrap();
+        assert_eq!(second.source, coordinator::Source::Cache);
+        assert_eq!(first.dist, second.dist);
+        let _ = coord;
+    });
+}
+
+#[test]
+fn concurrent_clients_batched() {
+    with_server!(|coord, server| {
+        let addr = server.addr().to_string();
+        // many small same-size requests arriving together: the engine packs
+        // them into block-diagonal batches
+        let handles: Vec<_> = (0..8u64)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let g = generators::erdos_renyi(60, 0.35, 400 + i);
+                    let resp = client.solve(&g, "staged").unwrap();
+                    (g, resp)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (g, resp) = h.join().unwrap();
+            let cpu = apsp::naive::solve(&g);
+            assert!(
+                resp.dist.allclose(&cpu, 1e-5, 1e-5),
+                "batched result diverges from oracle"
+            );
+        }
+        let snap = coord.metrics().snapshot();
+        let batches = snap.get("batches").as_f64().unwrap_or(0.0);
+        let items = snap.get("batched_items").as_f64().unwrap_or(0.0);
+        assert!(items >= batches, "{snap}");
+        let _ = server;
+    });
+}
+
+#[test]
+fn stats_and_info_endpoints() {
+    with_server!(|coord, server| {
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let g = generators::erdos_renyi(64, 0.3, 305);
+        client.solve(&g, "staged").unwrap();
+        let stats = client.stats().unwrap();
+        assert!(stats.get("requests").as_f64().unwrap() >= 1.0);
+        let info = client.info().unwrap();
+        let variants: Vec<&str> = info
+            .get("variants")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|v| v.as_str())
+            .collect();
+        assert!(variants.contains(&"staged"));
+        assert!(!info.get("buckets").as_arr().unwrap().is_empty());
+        let _ = coord;
+    });
+}
+
+#[test]
+fn malformed_requests_get_errors_and_connection_survives() {
+    with_server!(|coord, server| {
+        use std::io::{BufRead, BufReader, Write};
+        let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        for bad in [
+            "this is not json",
+            r#"{"type":"solve"}"#,
+            r#"{"type":"unknown-op"}"#,
+            r#"{"type":"solve","n":4,"edges":[[0,99,1.0]]}"#,
+        ] {
+            writer.write_all(bad.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            assert!(reply.contains("\"error\""), "for {bad}: {reply}");
+        }
+        // connection still works after errors
+        writer.write_all(b"{\"type\":\"ping\"}\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("pong"));
+        let _ = coord;
+    });
+}
+
+#[test]
+fn unknown_variant_is_client_error() {
+    with_server!(|coord, server| {
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let g = generators::erdos_renyi(64, 0.3, 311);
+        let err = client.solve(&g, "warp-drive").unwrap_err();
+        assert!(err.to_string().contains("warp-drive"), "{err}");
+        let _ = coord;
+    });
+}
+
+#[test]
+fn solve_graph_convenience_and_all_variants() {
+    with_server!(|coord, server| {
+        let g = generators::grid(9, 17); // 81 vertices → device route
+        let cpu = apsp::naive::solve(&g);
+        for variant in coord.manifest_summary().variants.clone() {
+            let dist = coord.solve_graph(&g, &variant).unwrap();
+            assert!(dist.allclose(&cpu, 1e-5, 1e-5), "variant {variant}");
+        }
+        let dist = coord.solve_graph(&g, "cpu").unwrap();
+        assert!(dist.allclose(&cpu, 1e-5, 1e-5));
+        let _ = server;
+    });
+}
+
+#[test]
+fn oversized_graph_rejected_cleanly() {
+    with_server!(|coord, server| {
+        // larger than the largest artifact bucket (512 in the default build)
+        let g = DistMatrix::unconnected(1024);
+        let err = coord
+            .solve(&coordinator::Request {
+                id: 9,
+                graph: g,
+                variant: "staged".into(),
+                no_cache: true,
+            })
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("exceeds") || msg.contains("bucket"), "{msg}");
+        let _ = server;
+    });
+}

@@ -1,0 +1,285 @@
+//! Property-based tests over the pure (non-PJRT) stack, driven by the
+//! first-party shrinking driver in `fw_stage::util::proptest`.
+//!
+//! Invariants covered:
+//! * solver agreement: blocked(s) == naive == parallel(s, t) for random
+//!   graphs, tiles, and thread counts;
+//! * APSP postconditions: triangle inequality, non-lengthening, zero diag,
+//!   reachability closure (via `apsp::check_invariants`);
+//! * layout transforms are bijections; tiled round-trip is exact;
+//! * batch planning covers every ticket exactly once within bucket bounds;
+//! * JSON round-trips arbitrary trees; wire codec round-trips requests;
+//! * padding invariance: solving a padded graph preserves the corner.
+
+use fw_stage::apsp;
+use fw_stage::coordinator::batcher::{plan, BatchPolicy, Item};
+use fw_stage::coordinator::types::{decode_request, encode_request, Request};
+use fw_stage::graph::{generators, DistMatrix};
+use fw_stage::layout;
+use fw_stage::util::json::Json;
+use fw_stage::util::prng::Rng;
+use fw_stage::util::proptest::{check, Config};
+
+/// Random graph scaled by the driver's size hint.
+fn arb_graph(rng: &mut Rng, size: usize) -> DistMatrix {
+    let n = 2 + rng.range(0, size.max(2));
+    let density = rng.next_f64();
+    generators::erdos_renyi_weighted(n, density, 0.1, 50.0, rng.next_u64())
+}
+
+#[test]
+fn prop_blocked_matches_naive() {
+    check("blocked == naive", Config { cases: 48, max_size: 72, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let tile = [4, 8, 16, 32][rng.range(0, 4)];
+        let naive = apsp::naive::solve(&g);
+        let blocked = apsp::blocked::solve(&g, tile);
+        if blocked.allclose(&naive, 1e-4, 1e-5) {
+            Ok(())
+        } else {
+            Err(format!(
+                "n={} tile={tile} max diff {}",
+                g.n(),
+                blocked.max_abs_diff(&naive)
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_matches_blocked_bitwise() {
+    check("parallel == blocked", Config { cases: 32, max_size: 96, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let tile = [8, 16][rng.range(0, 2)];
+        let threads = 1 + rng.range(0, 6);
+        let blocked = apsp::blocked::solve(&g, tile);
+        let parallel = apsp::parallel::solve(&g, tile, threads);
+        if blocked == parallel {
+            Ok(())
+        } else {
+            Err(format!("n={} tile={tile} threads={threads}", g.n()))
+        }
+    });
+}
+
+#[test]
+fn prop_apsp_invariants_hold() {
+    check("APSP invariants", Config { cases: 32, max_size: 48, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let d = apsp::blocked::solve(&g, 16);
+        apsp::check_invariants(&g, &d).map_err(|e| format!("n={}: {e}", g.n()))
+    });
+}
+
+#[test]
+fn prop_padding_invariance() {
+    check("padding invariance", Config { cases: 32, max_size: 48, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let pad = g.n() + 1 + rng.range(0, 32);
+        let solved_padded = apsp::naive::solve(&g.padded(pad)).truncated(g.n());
+        let solved = apsp::naive::solve(&g);
+        // identical relaxation order on the corner ⇒ bitwise equal
+        if solved_padded == solved {
+            Ok(())
+        } else {
+            Err(format!("n={} pad={pad}", g.n()))
+        }
+    });
+}
+
+#[test]
+fn prop_paths_are_consistent() {
+    check("path reconstruction", Config { cases: 24, max_size: 32, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let r = apsp::paths::solve(&g);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                let d = r.dist.get(i, j);
+                match r.path(i, j) {
+                    Some(p) => {
+                        if !d.is_finite() {
+                            return Err(format!("path exists but dist inf ({i},{j})"));
+                        }
+                        if p[0] != i || *p.last().unwrap() != j {
+                            return Err(format!("bad endpoints {p:?}"));
+                        }
+                        let w = r
+                            .path_weight(&g, i, j)
+                            .ok_or_else(|| format!("corrupt path {p:?}"))?;
+                        if (w - d as f64).abs() > 1e-3 {
+                            return Err(format!("weight {w} != dist {d} at ({i},{j})"));
+                        }
+                    }
+                    None => {
+                        if d.is_finite() && i != j {
+                            return Err(format!("dist finite but no path ({i},{j})"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layout_roundtrip() {
+    check("doubly-tiled roundtrip", Config { cases: 24, max_size: 4, ..Config::default() }, |rng, size| {
+        // n must be a multiple of s; s a multiple of t
+        let t = [2, 4][rng.range(0, 2)];
+        let s = t * [2, 4, 8][rng.range(0, 3)];
+        let n = s * (1 + rng.range(0, size.max(1)));
+        let data: Vec<f32> = (0..n * n).map(|_| rng.next_f32()).collect();
+        let tiled = layout::to_doubly_tiled(&data, n, s, t);
+        // bijection: sorted values identical
+        let mut a = data.clone();
+        let mut b = tiled.clone();
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        if a != b {
+            return Err(format!("not a permutation (n={n}, s={s}, t={t})"));
+        }
+        if layout::from_doubly_tiled(&tiled, n, s, t) != data {
+            return Err(format!("roundtrip failed (n={n}, s={s}, t={t})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_plan_is_partition() {
+    check("batch plan partitions tickets", Config { cases: 64, max_size: 40, ..Config::default() }, |rng, size| {
+        let buckets = [64usize, 128, 256, 512];
+        let count = rng.range(1, size.max(2) + 1);
+        let items: Vec<Item> = (0..count)
+            .map(|i| Item {
+                ticket: i as u64,
+                n: 1 + rng.range(0, 700),
+            })
+            .collect();
+        let policy = BatchPolicy {
+            pack: rng.chance(0.7),
+        };
+        let batches = plan(&items, &buckets, &policy);
+        let mut seen = vec![false; count];
+        for b in &batches {
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for p in &b.placements {
+                if seen[p.ticket as usize] {
+                    return Err(format!("ticket {} placed twice", p.ticket));
+                }
+                seen[p.ticket as usize] = true;
+                if b.bucket > 0 {
+                    if p.offset + p.n > b.bucket {
+                        return Err(format!(
+                            "placement {}+{} exceeds bucket {}",
+                            p.offset, p.n, b.bucket
+                        ));
+                    }
+                    // cost-model invariant: items run in their *natural*
+                    // bucket — never escalated to a larger (Θ(b³)) one
+                    let natural = buckets.iter().copied().find(|&bk| bk >= p.n);
+                    if natural != Some(b.bucket) {
+                        return Err(format!(
+                            "item n={} (natural {:?}) placed in bucket {}",
+                            p.n, natural, b.bucket
+                        ));
+                    }
+                    spans.push((p.offset, p.offset + p.n));
+                }
+            }
+            spans.sort();
+            for w in spans.windows(2) {
+                if w[0].1 > w[1].0 {
+                    return Err(format!("overlapping placements {spans:?}"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("ticket dropped from plan".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn arb_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::num((rng.next_f32() * 1000.0) as f64),
+            3 => {
+                let len = rng.range(0, 8);
+                Json::Str((0..len).map(|_| ('a'..='z').nth(rng.range(0, 26)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| arb_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.range(0, 4))
+                    .map(|i| {
+                        let key = format!("k{i}");
+                        (key, arb_json(rng, depth - 1))
+                    })
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", Config { cases: 128, max_size: 4, ..Config::default() }, |rng, size| {
+        let v = arb_json(rng, size.min(4));
+        let text = v.to_string();
+        match Json::parse(&text) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("{v} reparsed as {back}")),
+            Err(e) => Err(format!("{v} failed to reparse: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_request_roundtrip() {
+    check("wire request roundtrip", Config { cases: 32, max_size: 48, ..Config::default() }, |rng, size| {
+        let graph = arb_graph(rng, size);
+        let req = Request {
+            id: rng.next_u64() % 1_000_000,
+            graph,
+            variant: ["staged", "blocked", "naive"][rng.range(0, 3)].to_string(),
+            no_cache: rng.chance(0.5),
+        };
+        let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
+        if back.id != req.id || back.variant != req.variant || back.graph != req.graph {
+            return Err("fields diverged".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fw_monotone_in_edges() {
+    // adding an edge can only shorten distances
+    check("FW monotone in edges", Config { cases: 24, max_size: 40, ..Config::default() }, |rng, size| {
+        let g = arb_graph(rng, size);
+        let base = apsp::naive::solve(&g);
+        let mut g2 = g.clone();
+        let (i, j) = (rng.range(0, g.n()), rng.range(0, g.n()));
+        if i != j {
+            let w = rng.uniform(0.1, 5.0).min(g2.get(i, j));
+            g2.set(i, j, w);
+        }
+        let improved = apsp::naive::solve(&g2);
+        for a in 0..g.n() {
+            for b in 0..g.n() {
+                if improved.get(a, b) > base.get(a, b) + 1e-4 {
+                    return Err(format!(
+                        "adding edge lengthened d[{a}][{b}]: {} -> {}",
+                        base.get(a, b),
+                        improved.get(a, b)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,189 @@
+//! Integration: AOT artifacts → PJRT runtime → results vs the CPU oracle.
+//!
+//! These tests require `make artifacts` to have run (they are the proof
+//! that the three layers compose).  They are skipped with a notice when
+//! artifacts/ is missing so `cargo test` works in a fresh checkout.
+
+use std::cell::OnceCell;
+use std::path::PathBuf;
+
+use fw_stage::apsp::{self, check_invariants};
+use fw_stage::graph::{generators, DistMatrix};
+use fw_stage::runtime::ExecutorPool;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+thread_local! {
+    // The xla crate's PJRT client is Rc-based (not Send): one pool per test
+    // thread.  The channel-fed multi-thread path is covered by the
+    // coordinator integration tests.
+    static POOL: OnceCell<Option<ExecutorPool>> = const { OnceCell::new() };
+}
+
+/// Run `f` with the shared pool, or print a skip notice without artifacts.
+fn with_pool(f: impl FnOnce(&ExecutorPool)) {
+    POOL.with(|cell| {
+        let pool = cell.get_or_init(|| {
+            let dir = artifact_dir()?;
+            Some(ExecutorPool::open(&dir).expect("opening executor pool"))
+        });
+        match pool {
+            Some(p) => f(p),
+            None => eprintln!("SKIP: artifacts/ not built (run `make artifacts`)"),
+        }
+    });
+}
+
+#[test]
+fn staged_matches_cpu_oracle_exact_size() {
+    with_pool(|pool| {
+        let g = generators::erdos_renyi(128, 0.3, 101);
+        let (dev, bucket) = pool.solve("staged", &g).unwrap();
+        assert_eq!(bucket, 128);
+        let cpu = apsp::naive::solve(&g);
+        assert!(
+            dev.allclose(&cpu, 1e-5, 1e-5),
+            "device vs cpu max diff {}",
+            dev.max_abs_diff(&cpu)
+        );
+    });
+}
+
+#[test]
+fn all_variants_agree_with_oracle() {
+    with_pool(|pool| {
+        let g = generators::erdos_renyi(64, 0.4, 103);
+        let cpu = apsp::naive::solve(&g);
+        for variant in pool.manifest().variants() {
+            let (dev, _) = pool.solve(&variant, &g).unwrap();
+            assert!(
+                dev.allclose(&cpu, 1e-5, 1e-5),
+                "{variant}: max diff {}",
+                dev.max_abs_diff(&cpu)
+            );
+        }
+    });
+}
+
+#[test]
+fn padding_preserves_distances() {
+    with_pool(|pool| {
+        // 50 is not a lowered size: must pad to 64 and truncate back
+        let g = generators::scale_free(50, 2, 107);
+        let (dev, bucket) = pool.solve("staged", &g).unwrap();
+        assert_eq!(bucket, 64);
+        assert_eq!(dev.n(), 50);
+        let cpu = apsp::naive::solve(&g);
+        assert!(dev.allclose(&cpu, 1e-5, 1e-5));
+    });
+}
+
+#[test]
+fn device_results_pass_invariants() {
+    with_pool(|pool| {
+        let cases: Vec<(DistMatrix, &str)> = vec![
+            (generators::ring(96), "ring"),
+            (generators::grid(10, 5), "grid"),
+            (generators::geometric(120, 0.3, 7), "geometric"),
+        ];
+        for (g, name) in cases {
+            let (dev, _) = pool.solve("staged", &g).unwrap();
+            check_invariants(&g, &dev).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    });
+}
+
+#[test]
+fn negative_weights_through_device() {
+    with_pool(|pool| {
+        let g = generators::layered_dag(8, 8, 109); // negative edges, no cycles
+        let (dev, _) = pool.solve("staged", &g).unwrap();
+        let cpu = apsp::naive::solve(&g);
+        assert!(dev.allclose(&cpu, 1e-5, 1e-5));
+    });
+}
+
+#[test]
+fn disconnected_components_stay_inf() {
+    with_pool(|pool| {
+        let mut g = generators::erdos_renyi(64, 0.5, 113);
+        for i in 0..32 {
+            for j in 32..64 {
+                g.set(i, j, f32::INFINITY);
+                g.set(j, i, f32::INFINITY);
+            }
+        }
+        let (dev, _) = pool.solve("staged", &g).unwrap();
+        for i in 0..32 {
+            for j in 32..64 {
+                assert!(dev.get(i, j).is_infinite());
+                assert!(dev.get(j, i).is_infinite());
+            }
+        }
+    });
+}
+
+#[test]
+fn executor_pool_caches_compiles() {
+    with_pool(|pool| {
+        let before = pool.compiled_count();
+        let g = generators::ring(64);
+        pool.solve("staged", &g).unwrap();
+        let mid = pool.compiled_count();
+        pool.solve("staged", &g).unwrap();
+        pool.solve("staged", &g).unwrap();
+        assert_eq!(pool.compiled_count(), mid);
+        assert!(mid >= before);
+    });
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    with_pool(|pool| {
+        let g = generators::erdos_renyi(64, 0.3, 211);
+        let a = pool.solve("staged", &g).unwrap().0;
+        let b = pool.solve("staged", &g).unwrap().0;
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn blocked_and_staged_artifacts_agree_bitwise() {
+    with_pool(|pool| {
+        // same (min,+) sums, different k-grouping: exact equality expected
+        let g = generators::erdos_renyi(128, 0.35, 223);
+        let blocked = pool.solve("blocked", &g).unwrap().0;
+        let staged = pool.solve("staged", &g).unwrap().0;
+        assert_eq!(blocked, staged);
+    });
+}
+
+#[test]
+fn warm_compiles_all_sizes() {
+    with_pool(|pool| {
+        let count = pool.warm("staged").unwrap();
+        assert!(count >= 3, "expected ≥3 staged sizes, got {count}");
+        assert!(pool.compiled_count() >= count);
+    });
+}
+
+#[test]
+fn rejects_unknown_variant_and_oversize() {
+    with_pool(|pool| {
+        let g = generators::ring(16);
+        assert!(pool.solve("no-such-variant", &g).is_err());
+        let huge = DistMatrix::unconnected(4096);
+        assert!(pool.solve("staged", &huge).is_err());
+    });
+}
+
+#[test]
+fn runtime_reports_platform() {
+    with_pool(|pool| {
+        assert_eq!(pool.runtime().platform(), "cpu");
+        assert!(pool.runtime().device_count() >= 1);
+    });
+}

@@ -1,0 +1,116 @@
+//! Simulator-vs-paper accuracy gates (experiments E1–E7 of DESIGN.md).
+//!
+//! These run without artifacts (pure analytical model) and lock in the
+//! reproduction quality: if a refactor degrades the model's agreement with
+//! the paper's published numbers, these tests fail.
+
+use fw_stage::simulator::table::{accuracy_report, fig7_csv, table1, PAPER_TABLE1};
+use fw_stage::simulator::{simulate, Variant};
+
+#[test]
+fn e1_every_populated_cell_within_factor_2() {
+    for (n, name, sim, paper, _) in accuracy_report() {
+        let ratio = sim / paper;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "E1: {name} at n={n}: sim {sim:.3} vs paper {paper:.3}"
+        );
+    }
+}
+
+#[test]
+fn e1_large_n_within_15pct() {
+    for (n, name, sim, paper, err) in accuracy_report() {
+        if n >= 8192 {
+            assert!(
+                err.abs() <= 0.15,
+                "E1: {name} at n={n}: sim {sim:.2} vs paper {paper:.2} ({:+.1}%)",
+                err * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn e1_headline_cell() {
+    // "solve APSP for any graph ... containing 16,384 vertices in 53.06 s"
+    let t = simulate(Variant::StagedLoad, 16384).seconds;
+    assert!((t - 53.06).abs() / 53.06 < 0.10, "headline: {t:.2}s");
+}
+
+#[test]
+fn e2_fig7_series_ordering_everywhere() {
+    // Figure 7's visual claim: the five curves never cross
+    for row in table1() {
+        for pair in row.simulated.windows(2) {
+            assert!(pair[1] < pair[0], "curves cross at n={}", row.n);
+        }
+    }
+}
+
+#[test]
+fn e3_tasks_per_second_analysis() {
+    let hn = simulate(Variant::HarishNarayanan, 8192).tasks_per_sec;
+    let kk = simulate(Variant::KatzKider, 16384).tasks_per_sec;
+    let staged = simulate(Variant::StagedLoad, 16384).tasks_per_sec;
+    assert!((2.3e9..3.0e9).contains(&hn), "H&N {hn:.2e} (paper ~2.6e9)");
+    assert!((13.5e9..17.0e9).contains(&kk), "K&K {kk:.2e} (paper 14.9e9)");
+    assert!(
+        (70.0e9..90.0e9).contains(&staged),
+        "staged {staged:.2e} (paper 73.6e9)"
+    );
+}
+
+#[test]
+fn e4_hn_is_bandwidth_bound_others_not() {
+    assert!(simulate(Variant::HarishNarayanan, 8192).memory_bound);
+    assert!(!simulate(Variant::KatzKider, 16384).memory_bound);
+    assert!(!simulate(Variant::StagedLoad, 16384).memory_bound);
+}
+
+#[test]
+fn e5_speedup_decomposition() {
+    let kk = simulate(Variant::KatzKider, 16384).seconds;
+    let opt = simulate(Variant::OptimizedBlocked, 16384).seconds;
+    let staged = simulate(Variant::StagedLoad, 16384).seconds;
+    let instr = kk / opt;
+    let sched = opt / staged;
+    let total = kk / staged;
+    assert!((2.0..2.4).contains(&instr), "instr {instr:.2} (paper 2.1–2.3)");
+    assert!((2.2..2.6).contains(&sched), "sched {sched:.2} (paper 2.3–2.4)");
+    assert!((4.8..5.7).contains(&total), "total {total:.2} (paper ≈5.2)");
+}
+
+#[test]
+fn e5_cyclic_k_ablation_matters() {
+    let cyclic = simulate(Variant::StagedLoad, 8192).seconds;
+    let simple = simulate(Variant::StagedSimpleK, 8192).seconds;
+    assert!(simple / cyclic > 1.8, "bank conflicts: {:.2}×", simple / cyclic);
+}
+
+#[test]
+fn e7_cpu_time_constant() {
+    // footnote-adjacent: the CPU column's n³ constant (≈2.2e-9 s/task)
+    for (n, cells) in PAPER_TABLE1.iter().take(4) {
+        let paper = cells[0].unwrap();
+        let sim = simulate(Variant::Cpu, *n).seconds;
+        assert!((sim - paper).abs() / paper < 0.08, "CPU n={n}: {sim} vs {paper}");
+    }
+    // and the abstract's implied GPU constant 1.2e-11 s/task at 16384
+    let staged = simulate(Variant::StagedLoad, 16384);
+    let const_per_task = staged.seconds / (16384f64).powi(3);
+    assert!(
+        (1.0e-11..1.4e-11).contains(&const_per_task),
+        "staged constant {const_per_task:.3e}"
+    );
+}
+
+#[test]
+fn csv_matches_table() {
+    let csv = fig7_csv();
+    let rows = table1();
+    let second_line = csv.lines().nth(1).unwrap();
+    let first_cell: f64 = second_line.split(',').nth(1).unwrap().parse().unwrap();
+    // CSV renders %.5f — compare at that precision
+    assert!((first_cell - rows[0].simulated[0]).abs() < 1e-4);
+}
