@@ -1,0 +1,28 @@
+# fw-stage build orchestration.
+#
+# `artifacts` runs the build-time Python layer once (L1 Pallas kernels →
+# L2 AOT HLO-text artifacts + manifest); Python never runs on the request
+# path.  Artifacts land in rust/artifacts/ where the Rust tests, benches,
+# and the fw-stage binary discover them.
+
+ARTIFACT_DIR := rust/artifacts
+
+.PHONY: artifacts clean-artifacts build test bench fmt
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACT_DIR)
+
+clean-artifacts:
+	rm -rf $(ARTIFACT_DIR)
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --no-run
+
+fmt:
+	cargo fmt --check

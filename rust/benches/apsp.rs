@@ -1,0 +1,54 @@
+//! CPU-solver microbenchmarks — the substrate numbers every other bench
+//! builds on: the Table 1 "CPU" column at laptop scale for each solver
+//! family, plus the §4.3 doubly-tiled layout transform (free on the GPU,
+//! priced here because the simulator's bandwidth model assumes it).
+//!
+//! Run: `cargo bench --bench apsp`
+
+mod common;
+
+use fw_stage::graph::generators;
+use fw_stage::layout;
+use fw_stage::perf::bench;
+use fw_stage::{apsp, perf};
+
+fn main() {
+    let n = if common::fast_mode() { 128 } else { 256 };
+    let n3 = (n as f64).powi(3);
+    let g = generators::erdos_renyi(n, 0.3, 17);
+    let cfg = common::config_for(n);
+
+    common::banner(&format!("APSP CPU solvers (n={n})"));
+    let r = bench("naive triple loop", &cfg, || {
+        perf::black_box(apsp::naive::solve(&g));
+    });
+    println!("{}", r.report_throughput(n3, "tasks"));
+    let r = bench("blocked s=32", &cfg, || {
+        perf::black_box(apsp::blocked::solve(&g, 32));
+    });
+    println!("{}", r.report_throughput(n3, "tasks"));
+    let r = bench("parallel s=32 t=4", &cfg, || {
+        perf::black_box(apsp::parallel::solve(&g, 32, 4));
+    });
+    println!("{}", r.report_throughput(n3, "tasks"));
+    let r = bench("johnson (sparse family)", &cfg, || {
+        perf::black_box(apsp::johnson::solve(&g).expect("no negative cycle"));
+    });
+    println!("{}", r.report_throughput(n3, "tasks"));
+    let r = bench("paths (successor matrix)", &cfg, || {
+        perf::black_box(apsp::paths::solve(&g));
+    });
+    println!("{}", r.report_throughput(n3, "tasks"));
+
+    common::banner("doubly-tiled layout transform (§4.3)");
+    let data: Vec<f32> = g.as_slice().to_vec();
+    let r = bench("to_doubly_tiled s=32 t=4", &cfg, || {
+        perf::black_box(layout::to_doubly_tiled(&data, n, 32, 4));
+    });
+    println!("{}", r.report());
+    let tiled = layout::to_doubly_tiled(&data, n, 32, 4);
+    let r = bench("from_doubly_tiled s=32 t=4", &cfg, || {
+        perf::black_box(layout::from_doubly_tiled(&tiled, n, 32, 4));
+    });
+    println!("{}", r.report());
+}

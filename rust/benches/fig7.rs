@@ -46,16 +46,18 @@ fn main() {
         let g = generators::erdos_renyi(n, 0.3, n as u64);
         let cfg = common::config_for(n);
         let mut cells = vec![n.to_string()];
-        for (_, f) in [
-            ("cpu_naive", Box::new(|| apsp::naive::solve(&g)) as Box<dyn Fn() -> _>),
-            ("cpu_blocked", Box::new(|| apsp::blocked::solve(&g, 32))),
-            ("cpu_parallel4", Box::new(|| apsp::parallel::solve(&g, 32, 4))),
-        ] {
-            let r = bench("cpu", &cfg, || {
-                perf::black_box(f());
-            });
-            cells.push(format!("{:.6}", r.median_s));
-        }
+        let r = bench("cpu_naive", &cfg, || {
+            perf::black_box(apsp::naive::solve(&g));
+        });
+        cells.push(format!("{:.6}", r.median_s));
+        let r = bench("cpu_blocked", &cfg, || {
+            perf::black_box(apsp::blocked::solve(&g, 32));
+        });
+        cells.push(format!("{:.6}", r.median_s));
+        let r = bench("cpu_parallel4", &cfg, || {
+            perf::black_box(apsp::parallel::solve(&g, 32, 4));
+        });
+        cells.push(format!("{:.6}", r.median_s));
         match &pool {
             Some(pool) => {
                 for variant in ["naive", "blocked", "staged"] {

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         graph.edge_count() / 2 // symmetric
     );
 
-    let coord = Coordinator::start(Config::new("artifacts"))?;
+    let coord = Coordinator::start(Config::new(fw_stage::runtime::artifact::discover_dir()))?;
     let dist = coord.solve_graph(&graph, "staged")?;
 
     // harmonic centrality: C(i) = Σ_j 1/d(i,j) — robust to disconnection

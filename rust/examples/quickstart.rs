@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. the full serving stack: artifacts → PJRT engine → coordinator
-    let coord = Coordinator::start(Config::new("artifacts"))?;
+    let coord = Coordinator::start(Config::new(fw_stage::runtime::artifact::discover_dir()))?;
     let summary = coord.manifest_summary();
     println!(
         "coordinator up: variants [{}], buckets {:?}, tile {}",

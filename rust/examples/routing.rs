@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     println!("road network: {side}×{side} grid, {n} intersections, {} road segments", graph.edge_count());
 
     // distances via the device path
-    let coord = Coordinator::start(Config::new("artifacts"))?;
+    let coord = Coordinator::start(Config::new(fw_stage::runtime::artifact::discover_dir()))?;
     let dist = coord.solve_graph(&graph, "staged")?;
 
     // paths via the successor-matrix CPU solver (the device kernel computes

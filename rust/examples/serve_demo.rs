@@ -17,7 +17,7 @@ use fw_stage::util::stats::Samples;
 use fw_stage::workload::{generate, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
-    let mut config = Config::new("artifacts");
+    let mut config = Config::new(fw_stage::runtime::artifact::discover_dir());
     config.engine.batch_window = Duration::from_millis(3);
     let coord = Arc::new(Coordinator::start(config)?);
     let server = Server::spawn(coord.clone(), "127.0.0.1:0")?;

@@ -18,7 +18,7 @@
 use crate::graph::DistMatrix;
 
 /// Blocked FW with tile size `s`. Falls back to the naive solver when
-/// `n % s != 0` or the matrix is smaller than one tile.
+/// `n % s != 0` — which covers every `0 < n < s`, since then `n % s == n`.
 pub fn solve(w: &DistMatrix, s: usize) -> DistMatrix {
     let mut out = w.clone();
     solve_in_place(&mut out, s);
@@ -31,7 +31,7 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize) {
     if n == 0 {
         return;
     }
-    if s == 0 || n % s != 0 || n < s {
+    if s == 0 || n % s != 0 {
         super::naive::solve_in_place(w);
         return;
     }
@@ -205,6 +205,20 @@ mod tests {
     fn single_tile_equals_naive() {
         let g = generators::erdos_renyi(32, 0.5, 9);
         assert_matches_naive(&g, 32);
+    }
+
+    #[test]
+    fn tile_boundaries() {
+        // n == s: exactly one diagonal tile, the blocked path with nb = 1
+        let exact = generators::erdos_renyi(16, 0.5, 23);
+        assert_matches_naive(&exact, 16);
+        // 0 < n < s: n % s == n != 0, so the fallback guard fires without a
+        // separate `n < s` test (the condition this regression test pins)
+        let small = generators::erdos_renyi(20, 0.5, 27);
+        assert_matches_naive(&small, 32);
+        // the fallback runs the naive solver itself: bitwise equality
+        let tiny = generators::erdos_renyi(7, 0.8, 31);
+        assert_eq!(solve(&tiny, 32), naive::solve(&tiny));
     }
 
     #[test]

@@ -25,11 +25,22 @@ struct Edge {
 }
 
 /// Errors Johnson can hit that FW silently tolerates.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum JohnsonError {
-    #[error("graph contains a negative cycle (vertex {0} improves on pass n)")]
     NegativeCycle(usize),
 }
+
+impl std::fmt::Display for JohnsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JohnsonError::NegativeCycle(v) => {
+                write!(f, "graph contains a negative cycle (vertex {v} improves on pass n)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JohnsonError {}
 
 /// Solve APSP via Johnson's algorithm.
 pub fn solve(w: &DistMatrix) -> Result<DistMatrix, JohnsonError> {

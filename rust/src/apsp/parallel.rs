@@ -28,7 +28,7 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
     if n == 0 {
         return;
     }
-    if threads <= 1 || s == 0 || n % s != 0 || n < s {
+    if threads <= 1 || s == 0 || n % s != 0 {
         super::blocked::solve_in_place(w, s);
         return;
     }

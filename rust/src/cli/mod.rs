@@ -73,8 +73,9 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
 }
 
 fn default_artifacts() -> PathBuf {
-    // next to the binary's working directory by convention
-    PathBuf::from("artifacts")
+    // `artifacts/` next to the working directory, or `rust/artifacts/`
+    // when launched from the repository root
+    crate::runtime::artifact::discover_dir()
 }
 
 fn start_coordinator(args: &Args) -> Result<Coordinator> {
@@ -306,7 +307,10 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
 
 fn cmd_info(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let dir = match args.get("artifacts") {
+        Some(d) => PathBuf::from(d),
+        None => default_artifacts(),
+    };
     args.reject_unknown()?;
     let manifest = crate::runtime::Manifest::load(&dir)?;
     manifest.check_files()?;

@@ -32,7 +32,7 @@
 //!
 //! For the full system (PJRT execution of the AOT artifacts, the serving
 //! coordinator, the C1060 simulator) see the `runtime`, `coordinator` and
-//! `simulator` modules and the `examples/` directory.
+//! `simulator` modules and the `rust/examples/` directory.
 
 pub mod apsp;
 pub mod cli;

@@ -17,6 +17,21 @@ use crate::util::json::Json;
 /// Manifest version this runtime understands.
 pub const SUPPORTED_VERSION: usize = 2;
 
+/// Conventional artifact directory relative to the current working
+/// directory: `artifacts/` when launched from the crate root (where
+/// `make artifacts` lands them), `rust/artifacts/` from the repository
+/// root.  Falls back to `artifacts` so error messages point at the
+/// conventional location.
+pub fn discover_dir() -> PathBuf {
+    for candidate in ["artifacts", "rust/artifacts"] {
+        let dir = PathBuf::from(candidate);
+        if dir.join("manifest.json").exists() {
+            return dir;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
 /// One AOT-compiled program.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactEntry {

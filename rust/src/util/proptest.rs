@@ -42,9 +42,8 @@ pub struct Failure {
 }
 
 /// Run `prop(rng, size)` for `cfg.cases` cases. On failure, retry the same
-/// case seed with progressively smaller sizes and report the smallest
-/// failing size.  Panics with a reproducible report (for use inside
-/// `#[test]` functions).
+/// case seed with bisected sizes and report the smallest failing size.
+/// Panics with a reproducible report (for use inside `#[test]` functions).
 pub fn check<F>(name: &str, cfg: Config, mut prop: F)
 where
     F: FnMut(&mut Rng, usize) -> Result<(), String>,
@@ -74,27 +73,33 @@ where
             / cfg.cases.max(1) as usize;
         let mut rng = Rng::new(case_seed);
         if let Err(message) = prop(&mut rng, size) {
-            // shrink: halve the size until the property passes again
+            // shrink: bisect for the smallest failing size.  `lo` is the
+            // largest size known to pass (0 passes vacuously — sizes start
+            // at 1), `hi` the smallest known to fail; for the monotone
+            // properties this driver targets, the reported size is exactly
+            // the smallest that fails.
             let mut best = Failure {
                 case,
                 seed: case_seed,
                 size,
                 message,
             };
-            let mut sz = size / 2;
-            while sz >= 1 {
+            let mut lo = 0usize;
+            let mut hi = size;
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
                 let mut rng = Rng::new(case_seed);
-                match prop(&mut rng, sz) {
+                match prop(&mut rng, mid) {
                     Err(message) => {
+                        hi = mid;
                         best = Failure {
                             case,
                             seed: case_seed,
-                            size: sz,
+                            size: mid,
                             message,
                         };
-                        sz /= 2;
                     }
-                    Ok(()) => break,
+                    Ok(()) => lo = mid,
                 }
             }
             return Some(best);
@@ -127,7 +132,7 @@ mod tests {
 
     #[test]
     fn failing_property_shrinks_size() {
-        // fails for any size >= 4; shrinker should land near 4
+        // fails for any size >= 4; the bisecting shrinker lands exactly on 4
         let mut prop = |_: &mut Rng, size: usize| {
             if size >= 4 {
                 Err(format!("size {size} too big"))
@@ -136,7 +141,46 @@ mod tests {
             }
         };
         let f = check_quiet(Config::default(), &mut prop).expect("must fail");
-        assert!(f.size >= 4 && f.size < 8, "shrunk to {}", f.size);
+        assert_eq!(f.size, 4, "shrunk to {}", f.size);
+    }
+
+    #[test]
+    fn shrinks_to_exact_smallest_failing_size() {
+        // for a monotone property failing iff size >= threshold, the driver
+        // must report precisely the threshold, whatever size first failed
+        for threshold in [1usize, 2, 5, 9, 50] {
+            let mut prop = |_: &mut Rng, size: usize| {
+                if size >= threshold {
+                    Err(format!("size {size} >= {threshold}"))
+                } else {
+                    Ok(())
+                }
+            };
+            let f = check_quiet(Config::default(), &mut prop).expect("must fail");
+            assert_eq!(f.size, threshold, "threshold {threshold}");
+            assert!(f.message.contains(&format!("size {threshold}")));
+        }
+    }
+
+    #[test]
+    fn panic_report_contains_reproducing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("seeded", Config::default(), |_, _| Err("boom".into()));
+        });
+        let payload = result.expect_err("property must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic payload is a formatted String")
+            .clone();
+        // case 0 fails first, so the reported seed is the first stream drawn
+        // from the default config's meta generator, rendered in hex
+        let expected_seed = format!("{:#x}", Rng::new(Config::default().seed).next_u64());
+        assert!(
+            msg.contains(&expected_seed),
+            "report {msg:?} missing seed {expected_seed}"
+        );
+        assert!(msg.contains("reproduce with Config"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Vendored subset of the `anyhow` error-handling API.
+//!
+//! This build runs fully offline against a vendored crate set (see the
+//! repository's DESIGN.md §Substitutions), so the crates.io `anyhow` is
+//! replaced by this first-party implementation of the surface the codebase
+//! uses:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain;
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * a blanket `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Formatting matches upstream where it matters to callers: `{}` prints the
+//! outermost message, `{:#}` prints the whole chain joined by `": "`, and
+//! `{:?}` prints the message plus a `Caused by:` list (what `.unwrap()` and
+//! `.expect(..)` show).  Downcasting and backtraces are deliberately out of
+//! scope — nothing in this repository uses them.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an outermost message plus the chain of causes beneath
+/// it.  Source errors are flattened to their rendered messages at capture
+/// time, which keeps the type `Send + Sync + 'static` for free.
+pub struct Error {
+    /// Outermost context first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Construct from a std error, capturing its `source()` chain.
+    pub fn from_std<E: StdError + ?Sized>(error: &E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message (what [`Context::context`] does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            if self.chain.len() == 2 {
+                write!(f, "\n    {}", self.chain[1])?;
+            } else {
+                for (i, cause) in self.chain[1..].iter().enumerate() {
+                    write!(f, "\n    {i}: {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`; that
+// is what makes this blanket impl coherent (same trick as upstream anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::from_std(&error)
+    }
+}
+
+/// Attach context to a fallible value.
+pub trait Context<T> {
+    /// Wrap the error with `context` (evaluated eagerly).
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with `f()` (evaluated only on the error path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err::<(), std::io::Error>(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let result: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = result.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("file missing"), "{dbg}");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let v: Option<u8> = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        assert!(fails(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(fails(5).unwrap_err().to_string().contains("five"));
+        let owned = String::from("already rendered");
+        assert_eq!(anyhow!(owned).to_string(), "already rendered");
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn check() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        let msg = check().unwrap_err().to_string();
+        assert!(msg.contains("1 + 1 == 3"), "{msg}");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<Error>();
+    }
+}
