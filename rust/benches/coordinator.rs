@@ -11,11 +11,44 @@ use std::time::{Duration, Instant};
 use fw_stage::coordinator::{client::Client, server::Server, Config, Coordinator, Request};
 use fw_stage::graph::generators;
 use fw_stage::perf::{bench, black_box, format_time};
+use fw_stage::superblock::{self, SuperBlockConfig};
 use fw_stage::util::stats::Samples;
 
+/// Super-block schedule with the CPU diagonal tier: single-thread schedule
+/// vs the dependency-streaming pool.  Needs no artifacts — the tile math is
+/// identical either way (asserted), only the wall clock moves.
+fn superblock_schedule_section() {
+    common::banner("superblock schedule — CPU diagonal tier, pool width sweep");
+    let (n, bucket) = if common::fast_mode() { (512, 128) } else { (1024, 256) };
+    let g = generators::scale_free(n, 2, 7);
+    let t0 = Instant::now();
+    let (single, report) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket, workers: 1 });
+    let one = t0.elapsed().as_secs_f64();
+    println!(
+        "n={n} bucket={bucket} workers=1    {}   ({} rounds, {} tiles)",
+        format_time(one),
+        report.round_count(),
+        report.total_tiles()
+    );
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let t0 = Instant::now();
+    let (multi, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket, workers });
+    let many = t0.elapsed().as_secs_f64();
+    assert_eq!(single, multi, "pool width changed the closure");
+    println!(
+        "n={n} bucket={bucket} workers={workers:<2}   {}   ({:.2}× speedup vs single-thread)",
+        format_time(many),
+        one / many
+    );
+}
+
 fn main() {
+    superblock_schedule_section();
+
     let Some(dir) = common::artifact_dir() else {
-        println!("(artifacts not built — coordinator benches need `make artifacts`)");
+        println!("(artifacts not built — remaining coordinator benches need `make artifacts`)");
         return;
     };
 
@@ -156,5 +189,34 @@ fn main() {
         "engine batches: {} device calls for {} items",
         snap.get("batches"),
         snap.get("batched_items")
+    );
+
+    // ---- super-block tier through the coordinator (device diagonal) ----
+    // larger than every artifact bucket: the router sends it to the
+    // superblock tier, whose diagonal tiles loop back through the engine
+    common::banner("superblock tier — oversize request through the coordinator");
+    let n_sb = if common::fast_mode() { 600 } else { 1024 };
+    let g_sb = generators::scale_free(n_sb, 2, 77);
+    let t0 = Instant::now();
+    let resp = batching
+        .solve(&Request {
+            id: 0,
+            graph: g_sb.clone(),
+            variant: "staged".into(),
+            no_cache: true,
+        })
+        .expect("superblock solve");
+    let sb_seconds = t0.elapsed().as_secs_f64();
+    println!(
+        "coordinator n={n_sb}    {}   (source {}, super-bucket {})",
+        format_time(sb_seconds),
+        resp.source.name(),
+        resp.bucket
+    );
+    let snap = batching.metrics().snapshot();
+    println!(
+        "superblock rounds: {}  tile updates: {}",
+        snap.get("superblock_rounds"),
+        snap.get("superblock_tiles")
     );
 }

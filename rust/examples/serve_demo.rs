@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use fw_stage::coordinator::{client::Client, server::Server, Config, Coordinator};
 use fw_stage::util::stats::Samples;
-use fw_stage::workload::{generate, TraceConfig};
+use fw_stage::workload::{generate, GraphKind, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
     let mut config = Config::new(fw_stage::runtime::artifact::discover_dir());
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         count: 120,
         sizes: vec![40, 60, 100, 120, 200],
         heavy_tail: true,
+        kinds: vec![GraphKind::ErdosRenyi, GraphKind::Grid, GraphKind::ScaleFree],
         seed: 0xBEEF,
     });
     let span = trace.last().unwrap().at.as_secs_f64();
@@ -95,6 +96,48 @@ fn main() -> anyhow::Result<()> {
             items / batches
         );
     }
+
+    // ---- large-n regime: every request overflows the device buckets ----
+    // the router sends these to the superblock tier; the trace stays
+    // sparse (road-network-shaped) so the wire codec is not the bottleneck
+    let large = generate(&TraceConfig {
+        count: 4,
+        ..TraceConfig::large_n(0xF00D)
+    });
+    println!(
+        "large-n trace: {} requests, n in {:?}",
+        large.len(),
+        large.iter().map(|t| t.n).collect::<Vec<_>>()
+    );
+    let mut client = Client::connect(&addr)?;
+    let mut large_lat = Samples::new();
+    for item in &large {
+        let g = item.graph();
+        let t0 = Instant::now();
+        let resp = client.solve(&g, "staged")?;
+        large_lat.push(t0.elapsed().as_secs_f64());
+        anyhow::ensure!(resp.dist.n() == g.n());
+        println!(
+            "  n={:<5} served via {:<10} (super-bucket {}) in {:.2}s",
+            g.n(),
+            resp.source.name(),
+            resp.bucket,
+            resp.seconds
+        );
+    }
+    println!(
+        "large-n latency: p50 {:.2}s  p95 {:.2}s  p99 {:.2}s",
+        large_lat.percentile(50.0),
+        large_lat.percentile(95.0),
+        large_lat.percentile(99.0),
+    );
+    let snapshot = coord.metrics().snapshot();
+    println!(
+        "superblock: {} solves, {} rounds, {} tile updates",
+        snapshot.get("superblock_solves"),
+        snapshot.get("superblock_rounds"),
+        snapshot.get("superblock_tiles")
+    );
     println!("serve_demo OK");
     Ok(())
 }

@@ -2,8 +2,10 @@
 //! system.
 //!
 //! ```text
-//! fw-stage solve     --input g.gr [--variant staged] [--artifacts DIR] [--output d.dist]
+//! fw-stage solve     --input g.gr [--variant staged|superblock] [--artifacts DIR]
+//!                    [--superblock-bucket N] [--superblock-workers W] [--output d.dist]
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
+//!                    [--superblock-bucket N] [--superblock-workers W]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
@@ -85,6 +87,13 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
     config.engine.batch_window =
         std::time::Duration::from_millis(args.get_u64("batch-window-ms", 2)?);
     config.router.cpu_threshold = args.get_usize("cpu-threshold", 32)?;
+    // superblock tier: explicit super-tile size (must be a lowered bucket)
+    // and pool width; 0 = auto for both
+    let sb_bucket = args.get_usize("superblock-bucket", 0)?;
+    if sb_bucket > 0 {
+        config.router.superblock_bucket = Some(sb_bucket);
+    }
+    config.superblock_workers = args.get_usize("superblock-workers", 0)?;
     Coordinator::start(config)
 }
 
@@ -98,6 +107,8 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
     let _ = args.get("cpu-threshold");
+    let _ = args.get("superblock-bucket");
+    let _ = args.get("superblock-workers");
     args.reject_unknown()?;
 
     let graph = io::load(Path::new(input))?;
@@ -135,6 +146,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
     let _ = args.get("cpu-threshold");
+    let _ = args.get("superblock-bucket");
+    let _ = args.get("superblock-workers");
     args.reject_unknown()?;
 
     let coord = Arc::new(start_coordinator(&args)?);
@@ -265,6 +278,8 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
     let _ = args.get("cpu-threshold");
+    let _ = args.get("superblock-bucket");
+    let _ = args.get("superblock-workers");
     args.reject_unknown()?;
 
     let coord = start_coordinator(&args)?;

@@ -10,18 +10,29 @@ use std::sync::Mutex;
 
 use crate::graph::DistMatrix;
 
-/// FNV-1a over the matrix's raw f32 bits (stable across runs).
+/// FNV-1a-style hash over the matrix's raw f32 bits (stable across runs).
+///
+/// Folds **8 bytes (two f32 words) per multiply** instead of the textbook
+/// byte-at-a-time FNV-1a: superblock-tier graphs are 16× bigger than the
+/// largest device bucket, which put hashing on the request hot path — the
+/// chunked fold does n²/2 multiplies instead of 4n², same avalanche-by-
+/// prime construction.  An odd trailing word is folded on its own.  The
+/// pinned-value tests below freeze the exact function.
 pub fn graph_fingerprint(g: &DistMatrix) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01B3;
     let mut h = OFFSET;
     h ^= g.n() as u64;
     h = h.wrapping_mul(PRIME);
-    for &w in g.as_slice() {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
+    let mut chunks = g.as_slice().chunks_exact(2);
+    for pair in chunks.by_ref() {
+        let word = pair[0].to_bits() as u64 | ((pair[1].to_bits() as u64) << 32);
+        h ^= word;
+        h = h.wrapping_mul(PRIME);
+    }
+    if let [tail] = chunks.remainder() {
+        h ^= tail.to_bits() as u64;
+        h = h.wrapping_mul(PRIME);
     }
     h
 }
@@ -186,6 +197,38 @@ mod tests {
         cache.put("v", &g, g.clone());
         assert!(cache.get("v", &g).is_none());
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_values_pinned() {
+        // The chunked fold is part of the cache-key contract: changing it
+        // silently invalidates every cached closure.  Values computed
+        // independently (f32 bit patterns folded 8 bytes per multiply).
+        assert_eq!(
+            graph_fingerprint(&DistMatrix::unconnected(2)),
+            0x4820_083e_b15f_2d0d
+        );
+        // odd element count exercises the trailing-word fold
+        let g = DistMatrix::from_vec(
+            3,
+            vec![0.0, 1.5, 2.25, crate::INF, 0.0, -1.0, 0.5, crate::INF, 0.0],
+        );
+        assert_eq!(graph_fingerprint(&g), 0xc0ce_0e24_0b9f_3776);
+        // single-element matrix is tail-only
+        assert_eq!(
+            graph_fingerprint(&DistMatrix::unconnected(1)),
+            0x082f_2207_b4e8_8cc4
+        );
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_order_within_chunk() {
+        // both halves of the 8-byte chunk must contribute
+        let a = DistMatrix::from_vec(2, vec![0.0, 1.0, 2.0, 0.0]);
+        let b = DistMatrix::from_vec(2, vec![1.0, 0.0, 2.0, 0.0]);
+        let c = DistMatrix::from_vec(2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&b));
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&c));
     }
 
     #[test]

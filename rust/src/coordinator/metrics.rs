@@ -19,6 +19,9 @@ struct Inner {
     device_solves: u64,
     cpu_solves: u64,
     cache_hits: u64,
+    superblock_solves: u64,
+    superblock_rounds: u64,
+    superblock_tiles: u64,
     batches: u64,
     batched_items: u64,
     latency: Samples,
@@ -47,8 +50,16 @@ impl Metrics {
             super::types::Source::Device => m.device_solves += 1,
             super::types::Source::Cpu => m.cpu_solves += 1,
             super::types::Source::Cache => m.cache_hits += 1,
+            super::types::Source::SuperBlock => m.superblock_solves += 1,
         }
         m.latency.push(seconds);
+    }
+
+    /// Account one superblock solve's schedule (rounds run, tile updates).
+    pub fn record_superblock(&self, rounds: u64, tiles: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.superblock_rounds += rounds;
+        m.superblock_tiles += tiles;
     }
 
     pub fn record_batch(&self, items: usize, device_seconds: f64) {
@@ -62,6 +73,7 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         let mut m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
+        let percentiles = m.latency.percentiles(&[50.0, 95.0, 99.0]);
         Json::obj(vec![
             ("uptime_seconds", Json::num(uptime)),
             ("requests", Json::num(m.requests as f64)),
@@ -69,12 +81,16 @@ impl Metrics {
             ("device_solves", Json::num(m.device_solves as f64)),
             ("cpu_solves", Json::num(m.cpu_solves as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
+            ("superblock_solves", Json::num(m.superblock_solves as f64)),
+            ("superblock_rounds", Json::num(m.superblock_rounds as f64)),
+            ("superblock_tiles", Json::num(m.superblock_tiles as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("batched_items", Json::num(m.batched_items as f64)),
             ("device_seconds", Json::num(m.device_seconds)),
             ("latency_mean_s", Json::num(m.latency.mean())),
-            ("latency_p50_s", Json::num(m.latency.median())),
-            ("latency_p99_s", Json::num(m.latency.percentile(99.0))),
+            ("latency_p50_s", Json::num(percentiles[0])),
+            ("latency_p95_s", Json::num(percentiles[1])),
+            ("latency_p99_s", Json::num(percentiles[2])),
             ("latency_max_s", Json::num(m.latency.max())),
         ])
     }
@@ -106,6 +122,32 @@ mod tests {
         assert_eq!(snap.get("batches").as_usize(), Some(1));
         assert_eq!(snap.get("batched_items").as_usize(), Some(3));
         assert!(snap.get("latency_mean_s").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn superblock_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_solve(Source::SuperBlock, 1.5);
+        m.record_superblock(4, 60);
+        m.record_superblock(3, 24);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("superblock_solves").as_usize(), Some(1));
+        assert_eq!(snap.get("superblock_rounds").as_usize(), Some(7));
+        assert_eq!(snap.get("superblock_tiles").as_usize(), Some(84));
+    }
+
+    #[test]
+    fn latency_percentiles_exposed() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_solve(Source::Cpu, i as f64 / 1000.0);
+        }
+        let snap = m.snapshot();
+        let p50 = snap.get("latency_p50_s").as_f64().unwrap();
+        let p95 = snap.get("latency_p95_s").as_f64().unwrap();
+        let p99 = snap.get("latency_p99_s").as_f64().unwrap();
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!((p95 - 0.095).abs() < 2e-3, "p95={p95}");
     }
 
     #[test]

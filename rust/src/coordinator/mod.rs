@@ -3,8 +3,11 @@
 //! ```text
 //!            TCP (JSON lines)                 mpsc (bounded)
 //!  clients ───────────────► server ─┬─► router ──► engine thread ─► PJRT
-//!                                   │      │          (batcher,
-//!                                   │      └─► CPU fallback)
+//!                                   │      │          (batcher)
+//!                                   │      ├─► CPU fallback
+//!                                   │      └─► superblock tier (n larger
+//!                                   │          than every bucket; diagonal
+//!                                   │          tiles loop back to engine)
 //!                                   └─► cache / metrics
 //! ```
 //!
@@ -34,6 +37,7 @@ use anyhow::{Context, Result};
 use crate::apsp;
 use crate::graph::DistMatrix;
 use crate::runtime::Manifest;
+use crate::superblock;
 
 pub use engine::{Engine, EngineConfig};
 pub use types::{Request, Response, Source};
@@ -46,6 +50,8 @@ pub struct Config {
     pub engine: EngineConfig,
     /// Result-cache capacity (entries); 0 disables.
     pub cache_capacity: usize,
+    /// Phase-2/3 pool width for the superblock tier; 0 = one per core.
+    pub superblock_workers: usize,
 }
 
 impl Config {
@@ -56,6 +62,7 @@ impl Config {
             artifact_dir,
             router: router::RouterConfig::default(),
             cache_capacity: 128,
+            superblock_workers: 0,
         }
     }
 }
@@ -68,6 +75,14 @@ pub struct Coordinator {
     metrics: Arc<metrics::Metrics>,
     router: router::RouterConfig,
     manifest_summary: ManifestSummary,
+    /// Full manifest, kept for per-variant bucket lookups (the router's
+    /// `device_buckets` is one flattened list; superblock diagonal solves
+    /// must use a size the *diagonal variant* was actually lowered at).
+    manifest: Manifest,
+    /// Device variant used for superblock diagonal solves when the request
+    /// names the "superblock" pseudo-variant.
+    superblock_variant: String,
+    superblock_workers: usize,
 }
 
 /// What the coordinator knows about the artifacts (for `info` requests and
@@ -84,12 +99,24 @@ impl Coordinator {
     pub fn start(mut config: Config) -> Result<Coordinator> {
         let manifest = Manifest::load(&config.artifact_dir)
             .context("coordinator: loading artifact manifest")?;
+        // superblock diagonal solves prefer "staged" (the paper's kernel),
+        // falling back to whatever the manifest actually lowered
+        let variants = manifest.variants();
+        let superblock_variant = if variants.iter().any(|v| v == "staged") {
+            "staged".to_string()
+        } else {
+            variants.first().cloned().unwrap_or_default()
+        };
         let summary = ManifestSummary {
-            variants: manifest.variants(),
-            buckets: manifest.sizes_for("staged"),
+            buckets: manifest.sizes_for(&superblock_variant),
+            variants,
             tile: manifest.tile,
         };
+        // the router's variant/bucket tables are derived from the manifest
+        // here — RouterConfig::default() is intentionally empty, so new
+        // artifact variants are routable without code changes
         config.router.device_variants = summary.variants.clone();
+        config.router.device_buckets = summary.buckets.clone();
         let metrics = Arc::new(metrics::Metrics::new());
         let engine = Engine::start(config.engine, metrics.clone())?;
         Ok(Coordinator {
@@ -98,6 +125,9 @@ impl Coordinator {
             metrics,
             router: config.router,
             manifest_summary: summary,
+            manifest,
+            superblock_variant,
+            superblock_workers: config.superblock_workers,
         })
     }
 
@@ -148,6 +178,46 @@ impl Coordinator {
             router::Route::Device => {
                 let solve = self.engine.solve(&req.variant, req.graph.clone())?;
                 (solve.dist, Source::Device, solve.bucket)
+            }
+            router::Route::SuperBlock { bucket } => {
+                // the paper's three-phase schedule over device-bucket
+                // super-tiles: diagonal tiles go through the engine, panel
+                // and interior min-plus updates stream across the pool
+                let diag_variant = if req.variant == "superblock" {
+                    self.superblock_variant.as_str()
+                } else {
+                    req.variant.as_str()
+                };
+                // the routed bucket came from the flattened bucket list; if
+                // the diagonal variant was lowered at different sizes
+                // (mixed manifests), re-pick from the sizes it actually
+                // has — unless the operator pinned the bucket explicitly,
+                // which must fail loudly rather than be silently replaced
+                let diag_sizes = self.manifest.sizes_for(diag_variant);
+                let bucket = if diag_sizes.contains(&bucket) {
+                    bucket
+                } else if self.router.superblock_bucket.is_some() {
+                    anyhow::bail!(
+                        "superblock bucket {bucket} is not a lowered size for \
+                         variant {diag_variant:?} (available: {diag_sizes:?})"
+                    );
+                } else {
+                    router::pick_superblock_bucket(&diag_sizes, req.graph.n()).ok_or_else(
+                        || anyhow::anyhow!("no artifacts for variant {diag_variant:?}"),
+                    )?
+                };
+                let cfg = superblock::SuperBlockConfig {
+                    bucket,
+                    workers: self.superblock_workers,
+                };
+                let (dist, report) = superblock::solve_with(&req.graph, &cfg, |tile| {
+                    Ok(self.engine.solve(diag_variant, tile)?.dist)
+                })?;
+                self.metrics.record_superblock(
+                    report.round_count() as u64,
+                    report.total_tiles() as u64,
+                );
+                (dist, Source::SuperBlock, bucket)
             }
         };
 

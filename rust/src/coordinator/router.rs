@@ -5,9 +5,16 @@
 //!   more than solving it in-place (the same big/small split a GPU serving
 //!   stack makes);
 //! * the explicit "cpu" variant always routes to the CPU solver;
+//! * graphs larger than every artifact bucket go to the super-block tier
+//!   ([`crate::superblock`]), which runs the paper's three-phase schedule
+//!   over device-bucket tiles (also reachable explicitly as the
+//!   "superblock" variant);
 //! * everything else goes to the device engine.
 //!
-//! Pure policy, trivially testable.
+//! Variants and buckets are **derived from the loaded manifest** at
+//! coordinator construction ([`super::Coordinator::start`]), never
+//! hardcoded here — new artifact variants become routable without touching
+//! this file.  Pure policy, trivially testable.
 
 /// Routing decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -18,6 +25,9 @@ pub enum Route {
     Johnson,
     /// Submit to the device engine.
     Device,
+    /// Run the coordinator-level super-blocked schedule over device-bucket
+    /// tiles of the given size.
+    SuperBlock { bucket: usize },
 }
 
 /// Routing configuration.
@@ -27,8 +37,15 @@ pub struct RouterConfig {
     pub cpu_threshold: usize,
     /// Tile size for the CPU blocked solver.
     pub cpu_tile: usize,
-    /// Variants the device knows about (from the manifest).
+    /// Variants the device knows about.  Empty by default on purpose:
+    /// [`super::Coordinator::start`] fills this from the manifest.
     pub device_variants: Vec<String>,
+    /// Lowered artifact sizes, ascending.  Filled from the manifest
+    /// alongside `device_variants`.
+    pub device_buckets: Vec<usize>,
+    /// Explicit super-tile size for the superblock tier (must be a lowered
+    /// bucket); `None` = pick per request via [`pick_superblock_bucket`].
+    pub superblock_bucket: Option<usize>,
 }
 
 impl Default for RouterConfig {
@@ -36,7 +53,9 @@ impl Default for RouterConfig {
         RouterConfig {
             cpu_threshold: 32,
             cpu_tile: 32,
-            device_variants: vec!["naive".into(), "blocked".into(), "staged".into()],
+            device_variants: Vec::new(),
+            device_buckets: Vec::new(),
+            superblock_bucket: None,
         }
     }
 }
@@ -51,27 +70,90 @@ pub fn route(config: &RouterConfig, variant: &str, n: usize) -> Result<Route, St
     if variant == "johnson" {
         return Ok(Route::Johnson);
     }
+    if variant == "superblock" {
+        return superblock_route(config, n);
+    }
     if !config.device_variants.iter().any(|v| v == variant) {
         return Err(format!(
-            "unknown variant {variant:?} (available: cpu, johnson, {})",
+            "unknown variant {variant:?} (available: cpu, johnson, superblock, {})",
             config.device_variants.join(", ")
         ));
     }
     if n <= config.cpu_threshold {
-        Ok(Route::Cpu {
+        return Ok(Route::Cpu {
             tile: config.cpu_tile,
-        })
-    } else {
-        Ok(Route::Device)
+        });
     }
+    match config.device_buckets.last() {
+        // larger than every artifact bucket: the pre-superblock stack
+        // hard-failed here (batcher `bucket == 0`); now it is served
+        Some(&largest) if n > largest => superblock_route(config, n),
+        _ => Ok(Route::Device),
+    }
+}
+
+fn superblock_route(config: &RouterConfig, n: usize) -> Result<Route, String> {
+    let bucket = match config.superblock_bucket {
+        Some(b) => {
+            if !config.device_buckets.contains(&b) {
+                return Err(format!(
+                    "superblock bucket {b} is not a lowered artifact size \
+                     (available: {:?})",
+                    config.device_buckets
+                ));
+            }
+            b
+        }
+        None => match pick_superblock_bucket(&config.device_buckets, n) {
+            Some(b) => b,
+            None => {
+                return Err("superblock tier unavailable: no device buckets loaded".to_string())
+            }
+        },
+    };
+    Ok(Route::SuperBlock { bucket })
+}
+
+/// Choose the device bucket the super-block tier tiles with.
+///
+/// Total work is `padded³` where `padded = ceil(n/b)·b`, so first minimize
+/// padding waste; among ties prefer the **largest** bucket that still
+/// yields ≥ 3 super-blocks (a 2×2 grid has a single interior tile per
+/// round, starving the phase-3 pool), falling back to the largest tied
+/// bucket.  `buckets` must be ascending (manifest order).
+pub fn pick_superblock_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    if buckets.is_empty() || n == 0 {
+        return None;
+    }
+    let padded = |b: usize| n.div_ceil(b) * b;
+    let min_padded = buckets.iter().map(|&b| padded(b)).min().unwrap();
+    let tied = || buckets.iter().copied().filter(|&b| padded(b) == min_padded);
+    tied()
+        .filter(|&b| min_padded / b >= 3)
+        .max()
+        .or_else(|| tied().max())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// A manifest-shaped config (what `Coordinator::start` derives).
     fn cfg() -> RouterConfig {
-        RouterConfig::default()
+        RouterConfig {
+            device_variants: vec!["naive".into(), "blocked".into(), "staged".into()],
+            device_buckets: vec![64, 128, 256, 512],
+            ..RouterConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_config_is_manifest_driven() {
+        // regression: the variant list must come from the manifest, not be
+        // hardcoded here (new artifact variants would silently 404)
+        let d = RouterConfig::default();
+        assert!(d.device_variants.is_empty());
+        assert!(d.device_buckets.is_empty());
     }
 
     #[test]
@@ -84,6 +166,65 @@ mod tests {
     fn large_graphs_go_device() {
         assert_eq!(route(&cfg(), "staged", 33).unwrap(), Route::Device);
         assert_eq!(route(&cfg(), "blocked", 512).unwrap(), Route::Device);
+    }
+
+    #[test]
+    fn oversize_goes_superblock() {
+        // pre-superblock these were batcher `bucket == 0` hard errors
+        assert_eq!(
+            route(&cfg(), "staged", 1024).unwrap(),
+            Route::SuperBlock { bucket: 256 }
+        );
+        assert_eq!(
+            route(&cfg(), "staged", 768).unwrap(),
+            Route::SuperBlock { bucket: 256 }
+        );
+        assert_eq!(
+            route(&cfg(), "naive", 513).unwrap(),
+            Route::SuperBlock { bucket: 64 }
+        );
+    }
+
+    #[test]
+    fn explicit_superblock_variant() {
+        assert_eq!(
+            route(&cfg(), "superblock", 1024).unwrap(),
+            Route::SuperBlock { bucket: 256 }
+        );
+        // even below the largest bucket the explicit variant is honored
+        assert_eq!(
+            route(&cfg(), "superblock", 100).unwrap(),
+            Route::SuperBlock { bucket: 128 }
+        );
+    }
+
+    #[test]
+    fn superblock_bucket_override() {
+        let mut c = cfg();
+        c.superblock_bucket = Some(512);
+        assert_eq!(
+            route(&c, "staged", 2048).unwrap(),
+            Route::SuperBlock { bucket: 512 }
+        );
+        c.superblock_bucket = Some(100); // not a lowered size
+        let err = route(&c, "staged", 2048).unwrap_err();
+        assert!(err.contains("not a lowered artifact size"), "{err}");
+    }
+
+    #[test]
+    fn pick_bucket_minimizes_padding_then_keeps_pool_busy() {
+        let buckets = [64, 128, 256, 512];
+        // n=1024: every bucket pads to 1024; 256 is the largest with ≥3 blocks
+        assert_eq!(pick_superblock_bucket(&buckets, 1024), Some(256));
+        // n=768: 512 would pad to 1024; among {64,128,256} prefer 256 (3 blocks)
+        assert_eq!(pick_superblock_bucket(&buckets, 768), Some(256));
+        // n=600: {64,128} pad to 640 (others worse); 128 gives 5 blocks
+        assert_eq!(pick_superblock_bucket(&buckets, 600), Some(128));
+        // n=100: min padding is 128 via {64,128}; neither reaches 3 blocks,
+        // fall back to the largest tied bucket
+        assert_eq!(pick_superblock_bucket(&buckets, 100), Some(128));
+        assert_eq!(pick_superblock_bucket(&[], 100), None);
+        assert_eq!(pick_superblock_bucket(&buckets, 0), None);
     }
 
     #[test]
@@ -102,6 +243,20 @@ mod tests {
         let err = route(&cfg(), "warp9", 64).unwrap_err();
         assert!(err.contains("warp9"));
         assert!(err.contains("staged"));
+        assert!(err.contains("superblock"));
+    }
+
+    #[test]
+    fn no_buckets_loaded_degrades_to_device() {
+        // without bucket metadata the router cannot size super-tiles; known
+        // device variants keep the old behavior (engine reports oversize)
+        let c = RouterConfig {
+            device_variants: vec!["staged".into()],
+            ..RouterConfig::default()
+        };
+        assert_eq!(route(&c, "staged", 4096).unwrap(), Route::Device);
+        let err = route(&c, "superblock", 4096).unwrap_err();
+        assert!(err.contains("no device buckets"), "{err}");
     }
 
     #[test]

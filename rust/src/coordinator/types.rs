@@ -33,6 +33,9 @@ pub enum Source {
     Cpu,
     /// Served from the result cache.
     Cache,
+    /// Super-blocked schedule over device buckets (n larger than every
+    /// artifact bucket; the attached bucket is the super-tile size).
+    SuperBlock,
 }
 
 impl Source {
@@ -41,6 +44,7 @@ impl Source {
             Source::Device => "device",
             Source::Cpu => "cpu",
             Source::Cache => "cache",
+            Source::SuperBlock => "superblock",
         }
     }
 }
@@ -51,7 +55,8 @@ pub struct Response {
     pub id: u64,
     pub dist: DistMatrix,
     pub source: Source,
-    /// Padding bucket used (device responses; n otherwise).
+    /// Padding bucket used (device responses), super-tile size (superblock
+    /// responses), or n otherwise.
     pub bucket: usize,
     /// Wall-clock service time, seconds.
     pub seconds: f64,
@@ -215,6 +220,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
         Some("device") => Source::Device,
         Some("cpu") => Source::Cpu,
         Some("cache") => Source::Cache,
+        Some("superblock") => Source::SuperBlock,
         other => bail!("bad source {other:?}"),
     };
     Ok(Response {
@@ -257,6 +263,21 @@ mod tests {
         assert_eq!(back.id, 42);
         assert_eq!(back.variant, "staged");
         assert_eq!(back.graph, req.graph);
+    }
+
+    #[test]
+    fn superblock_source_roundtrips() {
+        let resp = Response {
+            id: 11,
+            dist: DistMatrix::unconnected(2),
+            source: Source::SuperBlock,
+            bucket: 256,
+            seconds: 1.25,
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(back.source, Source::SuperBlock);
+        assert_eq!(back.bucket, 256);
+        assert_eq!(Source::SuperBlock.name(), "superblock");
     }
 
     #[test]

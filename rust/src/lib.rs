@@ -10,8 +10,10 @@
 //! * **Layer 2** (build-time Python): the blocked-FW computation graph,
 //!   AOT-lowered to HLO text artifacts (`python/compile/model.py`).
 //! * **Layer 3** (this crate): the serving coordinator — request routing,
-//!   size-bucketed batching, executor pooling over PJRT, result caching —
-//!   plus every substrate the reproduction needs: graph generation and I/O,
+//!   size-bucketed batching, executor pooling over PJRT, result caching,
+//!   and the super-blocked tier (`superblock`) that serves arbitrary-n
+//!   graphs by running the paper's three-phase schedule over the device
+//!   buckets — plus every substrate the reproduction needs: graph generation and I/O,
 //!   CPU reference solvers, the paper's doubly-tiled data layout (§4.3), and
 //!   an analytical Tesla C1060 performance model that regenerates the
 //!   paper's Table 1 / Figure 7 (DESIGN.md §Substitutions).
@@ -42,6 +44,7 @@ pub mod layout;
 pub mod perf;
 pub mod runtime;
 pub mod simulator;
+pub mod superblock;
 pub mod util;
 pub mod workload;
 

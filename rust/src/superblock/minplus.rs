@@ -1,0 +1,252 @@
+//! Tiled (min, +) update primitives for the super-block tier.
+//!
+//! These are the paper's three phase bodies (Fig. 2) operating on
+//! *detached* `b × b` tile buffers instead of in-place windows of one big
+//! matrix.  Loop order, finiteness guards, and the branchless phase-3 inner
+//! loop mirror [`crate::apsp::blocked`] line for line, which buys a strong
+//! property the tests pin: a super-blocked solve whose diagonal tiles are
+//! solved in phase-1 order is **bitwise identical** to
+//! `apsp::blocked::solve(g, bucket)` — every relaxation performs the same
+//! f32 additions on the same values, and tile updates within a phase only
+//! read finalized inputs, so execution order (and hence pool parallelism)
+//! cannot perturb a single bit.
+
+/// Phase 1: full Floyd-Warshall on a detached `b × b` diagonal tile
+/// (sequential k; the order of `apsp::blocked::phase1_diag`).
+pub fn phase1(diag: &mut [f32], b: usize) {
+    debug_assert_eq!(diag.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            if i == k {
+                continue;
+            }
+            let wik = diag[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            for j in 0..b {
+                let cand = wik + diag[k * b + j];
+                if cand < diag[i * b + j] {
+                    diag[i * b + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, row panel: tile `(k, bj)` relaxed against the final diagonal
+/// tile — `t[i][j] <- min(t[i][j], diag[i][k] + t[k][j])`, sequential k
+/// (one dependency is in the panel itself).
+pub fn panel_row(tile: &mut [f32], diag: &[f32], b: usize) {
+    debug_assert_eq!(tile.len(), b * b);
+    debug_assert_eq!(diag.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            if i == k {
+                continue;
+            }
+            let dik = diag[i * b + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            for j in 0..b {
+                let cand = dik + tile[k * b + j];
+                if cand < tile[i * b + j] {
+                    tile[i * b + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, column panel: tile `(bi, k)` relaxed against the final
+/// diagonal tile — `t[i][j] <- min(t[i][j], t[i][k] + diag[k][j])`,
+/// sequential k.
+pub fn panel_col(tile: &mut [f32], diag: &[f32], b: usize) {
+    debug_assert_eq!(tile.len(), b * b);
+    debug_assert_eq!(diag.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            let wik = tile[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            for j in 0..b {
+                let cand = wik + diag[k * b + j];
+                if cand < tile[i * b + j] {
+                    tile[i * b + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 3, interior: `c <- min(c, col ⊗ row)` where `⊗` is the (min, +)
+/// tile product, `col` is the finalized column-panel tile `(bi, k)` and
+/// `row` the finalized row-panel tile `(k, bj)`.  i-k-j order with a
+/// hoisted `wik` and a branchless inner min, exactly like
+/// `apsp::blocked::phase3_tile`, so the inner loop vectorizes.
+pub fn interior(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
+    debug_assert_eq!(c.len(), b * b);
+    debug_assert_eq!(col.len(), b * b);
+    debug_assert_eq!(row.len(), b * b);
+    for i in 0..b {
+        let out = &mut c[i * b..(i + 1) * b];
+        for k in 0..b {
+            let wik = col[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let row_k = &row[k * b..(k + 1) * b];
+            for j in 0..b {
+                out[j] = out[j].min(wik + row_k[j]);
+            }
+        }
+    }
+}
+
+/// Parallel path for [`interior`]: split the tile's rows over `threads`
+/// scoped workers.  Row bands of `c` (and the matching rows of `col`) are
+/// disjoint and `row` is read-only, so this needs no locking; it exists for
+/// degenerate super-grids (2 × 2 has a single interior tile per round, so
+/// tile-level pooling alone leaves workers idle).
+pub fn interior_parallel(c: &mut [f32], col: &[f32], row: &[f32], b: usize, threads: usize) {
+    if threads <= 1 || b == 0 {
+        interior(c, col, row, b);
+        return;
+    }
+    let rows_per_band = b.div_ceil(threads.min(b));
+    std::thread::scope(|scope| {
+        for (band_idx, band) in c.chunks_mut(rows_per_band * b).enumerate() {
+            scope.spawn(move || {
+                let first_row = band_idx * rows_per_band;
+                let band_rows = band.len() / b;
+                for i_local in 0..band_rows {
+                    let i = first_row + i_local;
+                    let out = &mut band[i_local * b..(i_local + 1) * b];
+                    for k in 0..b {
+                        let wik = col[i * b + k];
+                        if !wik.is_finite() {
+                            continue;
+                        }
+                        let row_k = &row[k * b..(k + 1) * b];
+                        for j in 0..b {
+                            out[j] = out[j].min(wik + row_k[j]);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::blocked;
+    use crate::graph::{generators, DistMatrix};
+
+    const B: usize = 16;
+
+    /// Extract the B×B tile at super-coords (bi, bj) of a (2B)×(2B) matrix.
+    fn tile_of(w: &DistMatrix, bi: usize, bj: usize) -> Vec<f32> {
+        let mut out = vec![0f32; B * B];
+        for i in 0..B {
+            for j in 0..B {
+                out[i * B + j] = w.get(bi * B + i, bj * B + j);
+            }
+        }
+        out
+    }
+
+    fn full_matrix() -> DistMatrix {
+        generators::erdos_renyi(2 * B, 0.4, 99)
+    }
+
+    #[test]
+    fn phase1_matches_blocked_phase1_diag_bitwise() {
+        let mut w = full_matrix();
+        let mut detached = tile_of(&w, 0, 0);
+        phase1(&mut detached, B);
+        blocked::phase1_diag(&mut w, 0, B); // in-place oracle
+        assert_eq!(detached, tile_of(&w, 0, 0));
+    }
+
+    #[test]
+    fn panels_match_in_place_phase2_bitwise() {
+        // stage 0 of a 2×2 super-grid: phase 1 in place, then both phase-2
+        // flavors detached vs in place on the same values
+        let mut w = full_matrix();
+        blocked::phase1_diag(&mut w, 0, B);
+        let diag = tile_of(&w, 0, 0);
+
+        let mut row_panel = tile_of(&w, 0, 1);
+        panel_row(&mut row_panel, &diag, B);
+        blocked::phase2_row_tile(&mut w, 0, B, B);
+        assert_eq!(row_panel, tile_of(&w, 0, 1));
+
+        let mut col_panel = tile_of(&w, 1, 0);
+        panel_col(&mut col_panel, &diag, B);
+        blocked::phase2_col_tile(&mut w, 0, B, B);
+        assert_eq!(col_panel, tile_of(&w, 1, 0));
+    }
+
+    #[test]
+    fn interior_matches_naive_min_fold_bitwise() {
+        // For a fixed (i, j) the interior update applies min over ascending
+        // k with identical f32 additions, and f32 min is exact — so a naive
+        // i-j-k fold is a bitwise oracle.
+        let w = full_matrix();
+        let col = tile_of(&w, 1, 0);
+        let row = tile_of(&w, 0, 1);
+        let mut got = tile_of(&w, 1, 1);
+        interior(&mut got, &col, &row, B);
+
+        let base = tile_of(&w, 1, 1);
+        for i in 0..B {
+            for j in 0..B {
+                let mut best = base[i * B + j];
+                for k in 0..B {
+                    best = best.min(col[i * B + k] + row[k * B + j]);
+                }
+                assert_eq!(got[i * B + j].to_bits(), best.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn interior_parallel_is_bitwise_equal_to_serial() {
+        let w = full_matrix();
+        let col = tile_of(&w, 1, 0);
+        let row = tile_of(&w, 0, 1);
+        let mut serial = tile_of(&w, 1, 1);
+        interior(&mut serial, &col, &row, B);
+        for threads in [2, 3, 8, 64] {
+            let mut par = tile_of(&w, 1, 1);
+            interior_parallel(&mut par, &col, &row, B, threads);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn infinite_entries_stay_infinite() {
+        let mut diag = vec![f32::INFINITY; B * B];
+        for i in 0..B {
+            diag[i * B + i] = 0.0;
+        }
+        let mut tile = diag.clone();
+        panel_row(&mut tile, &diag, B);
+        panel_col(&mut tile, &diag, B);
+        let col = diag.clone();
+        interior(&mut tile, &col, &diag, B);
+        for i in 0..B {
+            for j in 0..B {
+                if i == j {
+                    assert_eq!(tile[i * B + j], 0.0);
+                } else {
+                    assert!(tile[i * B + j].is_infinite());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Super-blocked APSP engine: the paper's three-phase schedule, one level
+//! up the memory hierarchy.
+//!
+//! The device tier solves graphs up to the largest AOT artifact bucket
+//! (shared memory, in the paper's terms).  This tier serves **arbitrary n**
+//! by decomposing the n×n request into `blocks × blocks` super-tiles of
+//! device-bucket size `b` and running blocked Floyd-Warshall over the
+//! super-grid — exactly the recursion the blocked decomposition admits
+//! (Rucci et al. on Xeon Phi, RAPID-Graph; see PAPERS.md):
+//!
+//! ```text
+//!  round k of `blocks`:
+//!    phase 1   diagonal super-tile (k,k)  → existing device engine
+//!                                           (or CPU blocked solver)
+//!    phase 2   row panel (k,·), col panel (·,k)  → worker pool
+//!    phase 3   interior (i,j), i≠k, j≠k   → worker pool, each tile
+//!              released the moment ITS two panels resolve
+//! ```
+//!
+//! * [`schedule`] — pure round plans with dependency edges
+//! * [`minplus`] — the tiled phase-2/3 (min, +) primitives
+//! * [`pool`] — the dependency-driven worker pool
+//! * [`progress`] — per-round accounting for the serving metrics
+//!
+//! **Exactness.** The primitives mirror `apsp::blocked` line for line and
+//! every tile update reads only finalized inputs, so when the diagonal
+//! solver applies phase-1 order ([`solve_cpu`]) the result is *bitwise*
+//! equal to `apsp::blocked::solve(padded, bucket)` — regardless of pool
+//! width.  Tests pin this.
+
+pub mod minplus;
+pub mod pool;
+pub mod progress;
+pub mod schedule;
+
+use std::sync::RwLock;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::graph::DistMatrix;
+pub use progress::Report;
+use schedule::TileOp;
+
+/// Superblock tier configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SuperBlockConfig {
+    /// Super-tile size — must match a device artifact bucket when the
+    /// diagonal solver is the device engine.
+    pub bucket: usize,
+    /// Phase-2/3 pool width; 0 = one worker per available core.
+    pub workers: usize,
+}
+
+impl SuperBlockConfig {
+    pub fn new(bucket: usize) -> SuperBlockConfig {
+        SuperBlockConfig { bucket, workers: 0 }
+    }
+
+    /// The pool width actually used (resolves `workers == 0`).
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// Solve APSP for a graph of any size with the super-blocked schedule.
+///
+/// `diag_solver` computes the closure of one `bucket × bucket` diagonal
+/// tile (the coordinator passes the device engine; [`solve_cpu`] passes the
+/// CPU blocked solver).  Returns the distance closure plus the per-round
+/// [`Report`].
+pub fn solve_with<F>(
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
+    mut diag_solver: F,
+) -> Result<(DistMatrix, Report)>
+where
+    F: FnMut(DistMatrix) -> Result<DistMatrix>,
+{
+    let n = graph.n();
+    let b = config.bucket;
+    ensure!(b > 0, "superblock bucket must be positive");
+    let workers = config.effective_workers();
+    if n == 0 {
+        return Ok((graph.clone(), Report::new(0, 0, b, 0, workers)));
+    }
+    let blocks = n.div_ceil(b);
+    let padded_n = blocks * b;
+    let padded = if padded_n == n {
+        graph.clone()
+    } else {
+        graph.padded(padded_n)
+    };
+
+    let tiles = split_tiles(&padded, blocks, b);
+    let mut report = Report::new(n, padded_n, b, blocks, workers);
+
+    for k in 0..blocks {
+        // ---- phase 1: diagonal super-tile through the pluggable solver
+        let t0 = Instant::now();
+        let diag_idx = k * blocks + k;
+        let diag_in = DistMatrix::from_vec(b, tiles[diag_idx].read().unwrap().clone());
+        let solved = diag_solver(diag_in)?;
+        ensure!(
+            solved.n() == b,
+            "diagonal solver returned n={}, expected bucket {b}",
+            solved.n()
+        );
+        let diag = solved.into_vec();
+        tiles[diag_idx].write().unwrap().copy_from_slice(&diag);
+        let diag_seconds = t0.elapsed().as_secs_f64();
+
+        // ---- phases 2 + 3: stream tiles through the pool as deps resolve
+        let t1 = Instant::now();
+        let plan = schedule::round_plan(blocks, k);
+        // degenerate grids (e.g. 2×2: one interior tile per round) would
+        // leave most workers idle, so split interior rows across the spare
+        // width — divided by the interior count so concurrent tile tasks
+        // never oversubscribe the pool
+        let intra_threads = match plan.interior_tiles() {
+            n_int if n_int > 0 && n_int < workers => (workers / n_int).max(1),
+            _ => 1,
+        };
+        pool::run_tasks(&plan.dep_graph(), workers, |id| match plan.tasks[id].op {
+            TileOp::PanelRow { bj } => {
+                let mut tile = tiles[k * blocks + bj].write().unwrap();
+                minplus::panel_row(&mut tile, &diag, b);
+            }
+            TileOp::PanelCol { bi } => {
+                let mut tile = tiles[bi * blocks + k].write().unwrap();
+                minplus::panel_col(&mut tile, &diag, b);
+            }
+            TileOp::Interior { bi, bj } => {
+                let col = tiles[bi * blocks + k].read().unwrap();
+                let row = tiles[k * blocks + bj].read().unwrap();
+                let mut tile = tiles[bi * blocks + bj].write().unwrap();
+                if intra_threads > 1 {
+                    minplus::interior_parallel(&mut tile, &col, &row, b, intra_threads);
+                } else {
+                    minplus::interior(&mut tile, &col, &row, b);
+                }
+            }
+        });
+        report.rounds.push(progress::RoundStats {
+            round: k,
+            diag_seconds,
+            tile_seconds: t1.elapsed().as_secs_f64(),
+            panel_tiles: plan.panel_tiles(),
+            interior_tiles: plan.interior_tiles(),
+        });
+    }
+
+    let mut out = join_tiles(&tiles, blocks, b);
+    if padded_n != n {
+        out = out.truncated(n);
+    }
+    Ok((out, report))
+}
+
+/// Superblock solve with the CPU phase-1 kernel as the diagonal tier.
+///
+/// The diagonal tile is solved in phase-1 order ([`minplus::phase1`], the
+/// detached mirror of `apsp::blocked::phase1_diag`), which makes the whole
+/// solve bitwise equal to `apsp::blocked::solve(padded, bucket)` — the
+/// exactness oracle the tests and benches lean on.  Infallible: the CPU
+/// kernel cannot fail.
+pub fn solve_cpu(graph: &DistMatrix, config: &SuperBlockConfig) -> (DistMatrix, Report) {
+    solve_with(graph, config, |mut tile| {
+        let s = tile.n();
+        minplus::phase1(tile.as_mut_slice(), s);
+        Ok(tile)
+    })
+    .expect("CPU diagonal solver is infallible")
+}
+
+/// Cut the padded matrix into row-major `b × b` tile buffers (row-major
+/// super-grid order).
+fn split_tiles(w: &DistMatrix, blocks: usize, b: usize) -> Vec<RwLock<Vec<f32>>> {
+    let m = w.n();
+    debug_assert_eq!(m, blocks * b);
+    let mut tiles = Vec::with_capacity(blocks * blocks);
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            let mut tile = Vec::with_capacity(b * b);
+            for i in 0..b {
+                let row = &w.row(bi * b + i)[bj * b..(bj + 1) * b];
+                tile.extend_from_slice(row);
+            }
+            tiles.push(RwLock::new(tile));
+        }
+    }
+    tiles
+}
+
+/// Reassemble the tile grid into one `(blocks·b) × (blocks·b)` matrix.
+fn join_tiles(tiles: &[RwLock<Vec<f32>>], blocks: usize, b: usize) -> DistMatrix {
+    let m = blocks * b;
+    let mut data = vec![0f32; m * m];
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            let tile = tiles[bi * blocks + bj].read().unwrap();
+            for i in 0..b {
+                let dst = &mut data[(bi * b + i) * m + bj * b..][..b];
+                dst.copy_from_slice(&tile[i * b..(i + 1) * b]);
+            }
+        }
+    }
+    DistMatrix::from_vec(m, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp;
+    use crate::graph::generators;
+
+    fn cfg(bucket: usize, workers: usize) -> SuperBlockConfig {
+        SuperBlockConfig { bucket, workers }
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let g = generators::erdos_renyi(48, 0.4, 7);
+        let tiles = split_tiles(&g, 3, 16);
+        assert_eq!(tiles.len(), 9);
+        assert_eq!(join_tiles(&tiles, 3, 16), g);
+    }
+
+    #[test]
+    fn bitwise_equal_to_blocked_when_n_divides() {
+        // the exactness claim in the module docs, at unit scale
+        let g = generators::erdos_renyi(96, 0.3, 11);
+        let oracle = apsp::blocked::solve(&g, 32);
+        for workers in [1, 2, 4, 8] {
+            let (dist, report) = solve_cpu(&g, &cfg(32, workers));
+            assert_eq!(dist, oracle, "workers={workers}");
+            assert_eq!(report.round_count(), 3);
+            assert_eq!(report.blocks, 3);
+            assert_eq!(report.total_tiles(), 3 * (4 + 4));
+        }
+    }
+
+    #[test]
+    fn non_multiple_n_pads_and_truncates() {
+        let g = generators::erdos_renyi(50, 0.4, 13);
+        let (dist, report) = solve_cpu(&g, &cfg(16, 4));
+        assert_eq!(report.padded, 64);
+        assert_eq!(report.blocks, 4);
+        assert_eq!(dist.n(), 50);
+        // bitwise vs the padded blocked oracle, close vs the naive oracle
+        let oracle = apsp::blocked::solve(&g.padded(64), 16).truncated(50);
+        assert_eq!(dist, oracle);
+        assert!(dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn single_block_grid_is_one_diag_solve() {
+        let g = generators::erdos_renyi(20, 0.5, 17);
+        let (dist, report) = solve_cpu(&g, &cfg(32, 4));
+        assert_eq!(report.blocks, 1);
+        assert_eq!(report.total_tiles(), 0);
+        assert_eq!(report.diag_solves(), 1);
+        assert!(dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn structured_graphs_match_naive() {
+        for g in [
+            generators::ring(80),
+            generators::grid(9, 3), // n = 81
+            generators::scale_free(75, 2, 5),
+            generators::layered_dag(10, 8, 7), // negative weights
+        ] {
+            let (dist, _) = solve_cpu(&g, &cfg(16, 3));
+            let naive = apsp::naive::solve(&g);
+            assert!(
+                dist.allclose(&naive, 1e-5, 1e-6),
+                "diverges by {}",
+                dist.max_abs_diff(&naive)
+            );
+        }
+    }
+
+    #[test]
+    fn diag_solver_errors_propagate() {
+        let g = generators::ring(64);
+        let err = solve_with(&g, &cfg(32, 2), |_| anyhow::bail!("device fell over"));
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("device fell over"));
+    }
+
+    #[test]
+    fn diag_solver_shape_mismatch_rejected() {
+        let g = generators::ring(64);
+        let err = solve_with(&g, &cfg(32, 2), |_| Ok(DistMatrix::unconnected(16)));
+        assert!(err.unwrap_err().to_string().contains("expected bucket"));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = DistMatrix::unconnected(0);
+        let (dist, report) = solve_cpu(&g, &cfg(32, 2));
+        assert_eq!(dist.n(), 0);
+        assert_eq!(report.round_count(), 0);
+    }
+
+    #[test]
+    fn custom_diag_solver_is_used() {
+        // a diag solver that runs the naive CPU solver still yields a
+        // correct closure (order differs, values agree within tolerance)
+        let g = generators::erdos_renyi(64, 0.4, 23);
+        let (dist, _) = solve_with(&g, &cfg(16, 2), |tile| Ok(apsp::naive::solve(&tile)))
+            .unwrap();
+        assert!(dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn report_accounts_every_tile() {
+        let g = generators::erdos_renyi(128, 0.3, 29);
+        let (_, report) = solve_cpu(&g, &cfg(32, 4));
+        // blocks=4: per round 2·3 panels + 3² interiors = 15, 4 rounds
+        assert_eq!(report.blocks, 4);
+        assert_eq!(report.total_tiles(), 4 * 15);
+        assert_eq!(report.diag_solves(), 4);
+        assert_eq!(report.bucket, 32);
+        assert_eq!(report.n, 128);
+        assert_eq!(report.padded, 128);
+    }
+}

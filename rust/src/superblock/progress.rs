@@ -1,0 +1,127 @@
+//! Per-round accounting for superblock solves.
+//!
+//! The orchestrator records one [`RoundStats`] per round; the aggregate
+//! [`Report`] is what the coordinator feeds into the serving metrics
+//! (`superblock_rounds` / `superblock_tiles` counters) and what the benches
+//! print when comparing pool widths.
+
+use std::fmt;
+
+/// What one round of the super-blocked schedule did.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundStats {
+    pub round: usize,
+    /// Seconds spent in the phase-1 diagonal solve (device or CPU).
+    pub diag_seconds: f64,
+    /// Seconds spent draining the phase-2/3 tile pool.
+    pub tile_seconds: f64,
+    pub panel_tiles: usize,
+    pub interior_tiles: usize,
+}
+
+/// Aggregate accounting for one superblock solve.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Report {
+    /// Request size.
+    pub n: usize,
+    /// Padded size actually scheduled (`blocks · bucket`).
+    pub padded: usize,
+    /// Device-bucket tile size.
+    pub bucket: usize,
+    /// Super-grid width (`padded / bucket`).
+    pub blocks: usize,
+    /// Pool width used for phase-2/3 tasks.
+    pub workers: usize,
+    pub rounds: Vec<RoundStats>,
+}
+
+impl Report {
+    pub fn new(n: usize, padded: usize, bucket: usize, blocks: usize, workers: usize) -> Report {
+        Report {
+            n,
+            padded,
+            bucket,
+            blocks,
+            workers,
+            rounds: Vec::with_capacity(blocks),
+        }
+    }
+
+    pub fn round_count(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total phase-2 + phase-3 tile updates across all rounds.
+    pub fn total_tiles(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| r.panel_tiles + r.interior_tiles)
+            .sum()
+    }
+
+    /// Total diagonal (phase-1) solves — one per round.
+    pub fn diag_solves(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn diag_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.diag_seconds).sum()
+    }
+
+    pub fn tile_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.tile_seconds).sum()
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "superblock n={} padded={} bucket={} blocks={} workers={}: \
+             {} rounds, {} tiles ({:.3}s diag + {:.3}s tiles)",
+            self.n,
+            self.padded,
+            self.bucket,
+            self.blocks,
+            self.workers,
+            self.round_count(),
+            self.total_tiles(),
+            self.diag_seconds(),
+            self.tile_seconds(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_across_rounds() {
+        let mut report = Report::new(1000, 1024, 256, 4, 8);
+        for round in 0..4 {
+            report.rounds.push(RoundStats {
+                round,
+                diag_seconds: 0.5,
+                tile_seconds: 1.0,
+                panel_tiles: 6,
+                interior_tiles: 9,
+            });
+        }
+        assert_eq!(report.round_count(), 4);
+        assert_eq!(report.diag_solves(), 4);
+        assert_eq!(report.total_tiles(), 4 * 15);
+        assert!((report.diag_seconds() - 2.0).abs() < 1e-12);
+        assert!((report.tile_seconds() - 4.0).abs() < 1e-12);
+        let line = report.to_string();
+        assert!(line.contains("blocks=4"), "{line}");
+        assert!(line.contains("60 tiles"), "{line}");
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let report = Report::new(64, 64, 64, 1, 1);
+        assert_eq!(report.total_tiles(), 0);
+        assert_eq!(report.round_count(), 0);
+    }
+}

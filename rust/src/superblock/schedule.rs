@@ -1,0 +1,196 @@
+//! Pure round plans for the super-blocked schedule.
+//!
+//! One round of the paper's three-phase decomposition, lifted to the
+//! coordinator level: the diagonal super-tile (phase 1) is solved by the
+//! orchestrator before the round plan runs, so a plan holds only the
+//! phase-2 panel tasks and the phase-3 interior tasks, with explicit
+//! dependency edges from each interior tile to the two panel tiles it
+//! reads.  Plans are pure data — no threads, no tiles — so the dependency
+//! structure is exhaustively testable, and the worker pool ([`super::pool`])
+//! can stream interior updates the moment their panels resolve instead of
+//! waiting for a whole-phase barrier.
+
+/// One tile update within a round (super-grid coordinates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileOp {
+    /// Phase 2, row panel: tile `(round, bj)` relaxed against the final
+    /// diagonal tile (`w[i][j] <- min(w[i][j], diag[i][k] + w[k][j])`).
+    PanelRow { bj: usize },
+    /// Phase 2, column panel: tile `(bi, round)` relaxed against the final
+    /// diagonal tile (`w[i][j] <- min(w[i][j], w[i][k] + diag[k][j])`).
+    PanelCol { bi: usize },
+    /// Phase 3, interior: tile `(bi, bj)` relaxed by the (min, +) product
+    /// of its column-panel tile `(bi, round)` and row-panel tile
+    /// `(round, bj)`.
+    Interior { bi: usize, bj: usize },
+}
+
+/// A schedulable tile update plus the plan-local indices it waits on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub op: TileOp,
+    /// Indices into the owning plan's task list; always smaller than this
+    /// task's own index (plans are emitted in topological order).
+    pub deps: Vec<usize>,
+}
+
+/// All phase-2/3 work for one round `k` of a `blocks × blocks` super-grid.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub round: usize,
+    pub blocks: usize,
+    pub tasks: Vec<Task>,
+}
+
+impl RoundPlan {
+    /// Number of phase-2 (panel) tasks: `2 · (blocks − 1)`.
+    pub fn panel_tiles(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| !matches!(t.op, TileOp::Interior { .. }))
+            .count()
+    }
+
+    /// Number of phase-3 (interior) tasks: `(blocks − 1)²`.
+    pub fn interior_tiles(&self) -> usize {
+        self.tasks.len() - self.panel_tiles()
+    }
+
+    /// Dependency lists, one per task (what [`super::pool::run_tasks`] eats).
+    pub fn dep_graph(&self) -> Vec<Vec<usize>> {
+        self.tasks.iter().map(|t| t.deps.clone()).collect()
+    }
+}
+
+/// Build the plan for round `k` of a `blocks × blocks` super-grid.
+///
+/// Panel tasks come first (no dependencies — the diagonal tile is final
+/// when the plan runs); each interior task depends on exactly its column
+/// panel `(bi, k)` and row panel `(k, bj)`.
+pub fn round_plan(blocks: usize, round: usize) -> RoundPlan {
+    assert!(round < blocks, "round {round} out of range for {blocks} blocks");
+    let k = round;
+    let outer = blocks.saturating_sub(1);
+    let mut tasks = Vec::with_capacity(2 * outer + outer * outer);
+    // phase 2: panels, indexed so interiors can name them
+    let mut row_panel_idx = vec![usize::MAX; blocks];
+    let mut col_panel_idx = vec![usize::MAX; blocks];
+    for bj in 0..blocks {
+        if bj != k {
+            row_panel_idx[bj] = tasks.len();
+            tasks.push(Task {
+                op: TileOp::PanelRow { bj },
+                deps: Vec::new(),
+            });
+        }
+    }
+    for bi in 0..blocks {
+        if bi != k {
+            col_panel_idx[bi] = tasks.len();
+            tasks.push(Task {
+                op: TileOp::PanelCol { bi },
+                deps: Vec::new(),
+            });
+        }
+    }
+    // phase 3: interiors, each gated on its two panels
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            if bi != k && bj != k {
+                tasks.push(Task {
+                    op: TileOp::Interior { bi, bj },
+                    deps: vec![col_panel_idx[bi], row_panel_idx[bj]],
+                });
+            }
+        }
+    }
+    RoundPlan {
+        round,
+        blocks,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_the_paper_decomposition() {
+        for blocks in [1usize, 2, 3, 4, 7] {
+            for round in 0..blocks {
+                let plan = round_plan(blocks, round);
+                assert_eq!(plan.panel_tiles(), 2 * (blocks - 1), "blocks={blocks}");
+                assert_eq!(plan.interior_tiles(), (blocks - 1) * (blocks - 1));
+                assert_eq!(plan.tasks.len(), plan.panel_tiles() + plan.interior_tiles());
+            }
+        }
+    }
+
+    #[test]
+    fn single_block_grid_has_no_tile_work() {
+        assert!(round_plan(1, 0).tasks.is_empty());
+    }
+
+    #[test]
+    fn interiors_depend_on_exactly_their_panels() {
+        let blocks = 4;
+        for round in 0..blocks {
+            let plan = round_plan(blocks, round);
+            for task in &plan.tasks {
+                match task.op {
+                    TileOp::PanelRow { bj } => {
+                        assert_ne!(bj, round);
+                        assert!(task.deps.is_empty());
+                    }
+                    TileOp::PanelCol { bi } => {
+                        assert_ne!(bi, round);
+                        assert!(task.deps.is_empty());
+                    }
+                    TileOp::Interior { bi, bj } => {
+                        assert_ne!(bi, round);
+                        assert_ne!(bj, round);
+                        assert_eq!(task.deps.len(), 2);
+                        let dep_ops: Vec<TileOp> =
+                            task.deps.iter().map(|&d| plan.tasks[d].op).collect();
+                        assert!(dep_ops.contains(&TileOp::PanelCol { bi }), "{dep_ops:?}");
+                        assert!(dep_ops.contains(&TileOp::PanelRow { bj }), "{dep_ops:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_topologically_ordered() {
+        let plan = round_plan(5, 2);
+        for (idx, task) in plan.tasks.iter().enumerate() {
+            for &d in &task.deps {
+                assert!(d < idx, "task {idx} depends forward on {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_tile_appears_exactly_once() {
+        let blocks = 3;
+        let plan = round_plan(blocks, 1);
+        let mut seen = std::collections::BTreeSet::new();
+        for task in &plan.tasks {
+            let coords = match task.op {
+                TileOp::PanelRow { bj } => (plan.round, bj),
+                TileOp::PanelCol { bi } => (bi, plan.round),
+                TileOp::Interior { bi, bj } => (bi, bj),
+            };
+            assert!(seen.insert(coords), "tile {coords:?} scheduled twice");
+        }
+        // every tile except the diagonal one
+        assert_eq!(seen.len(), blocks * blocks - 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn round_must_be_in_range() {
+        round_plan(3, 3);
+    }
+}

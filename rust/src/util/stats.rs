@@ -83,6 +83,12 @@ impl Samples {
         self.percentile(50.0)
     }
 
+    /// Several percentiles at once (one sort, amortized over the batch —
+    /// the metrics snapshot asks for p50/p95/p99 together).
+    pub fn percentiles(&mut self, ps: &[f64]) -> Vec<f64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+
     /// One-line human summary: `mean ± stddev [min … max] (n)`.
     pub fn summary(&mut self, unit: &str) -> String {
         format!(
@@ -122,6 +128,12 @@ mod tests {
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.median(), 3.0);
         assert_eq!(s.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn batch_percentiles() {
+        let mut s = of(&[5.0, 1.0, 4.0, 2.0, 3.0]);
+        assert_eq!(s.percentiles(&[0.0, 50.0, 100.0]), vec![1.0, 3.0, 5.0]);
     }
 
     #[test]

@@ -54,6 +54,8 @@ pub struct TraceConfig {
     pub sizes: Vec<usize>,
     /// Heavy-tail toward small sizes if true; uniform otherwise.
     pub heavy_tail: bool,
+    /// Generator families the trace draws from (uniformly).
+    pub kinds: Vec<GraphKind>,
     pub seed: u64,
 }
 
@@ -64,7 +66,27 @@ impl Default for TraceConfig {
             count: 100,
             sizes: vec![48, 60, 100, 120, 200],
             heavy_tail: true,
+            kinds: vec![GraphKind::ErdosRenyi, GraphKind::Grid, GraphKind::ScaleFree],
             seed: 0xACE,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Large-n regime: every request is bigger than the largest artifact
+    /// bucket (512 in the default build), so the whole trace exercises the
+    /// coordinator's super-block tier.  Sizes model continental road
+    /// networks — big and sparse — hence only the sparse generator
+    /// families (a dense n=1024 edge list is megabytes of JSON on the
+    /// wire for no modeling gain).
+    pub fn large_n(seed: u64) -> TraceConfig {
+        TraceConfig {
+            rate_hz: 4.0,
+            count: 8,
+            sizes: vec![600, 768, 900, 1024],
+            heavy_tail: false,
+            kinds: vec![GraphKind::Grid, GraphKind::ScaleFree],
+            seed,
         }
     }
 }
@@ -72,6 +94,7 @@ impl Default for TraceConfig {
 /// Generate a deterministic trace.
 pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
     assert!(!config.sizes.is_empty(), "trace needs candidate sizes");
+    assert!(!config.kinds.is_empty(), "trace needs generator kinds");
     assert!(config.rate_hz > 0.0);
     let mut rng = Rng::new(config.seed);
     let mut at = 0f64;
@@ -99,11 +122,7 @@ pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
         } else {
             rng.range(0, config.sizes.len())
         };
-        let kind = match rng.next_below(3) {
-            0 => GraphKind::ErdosRenyi,
-            1 => GraphKind::Grid,
-            _ => GraphKind::ScaleFree,
-        };
+        let kind = config.kinds[rng.next_below(config.kinds.len() as u64) as usize];
         items.push(TraceItem {
             at: Duration::from_secs_f64(at),
             n: config.sizes[idx],
@@ -167,6 +186,26 @@ mod tests {
             "smallest bucket got {small_count}/{}",
             items.len()
         );
+    }
+
+    #[test]
+    fn large_n_regime_exceeds_every_bucket() {
+        let cfg = TraceConfig::large_n(7);
+        let items = generate(&cfg);
+        assert_eq!(items.len(), cfg.count);
+        for item in &items {
+            assert!(item.n > 512, "large-n trace produced n={}", item.n);
+            assert!(
+                matches!(item.kind, GraphKind::Grid | GraphKind::ScaleFree),
+                "large-n traces stay sparse, got {:?}",
+                item.kind
+            );
+        }
+        // materialized graphs stay beyond the bucket ceiling too (grid
+        // rounds n to a square) and validate structurally
+        let g = items[0].graph();
+        g.validate().unwrap();
+        assert!(g.n() > 512);
     }
 
     #[test]

@@ -115,6 +115,21 @@ fn stats_and_info_endpoints() {
         client.solve(&g, "staged").unwrap();
         let stats = client.stats().unwrap();
         assert!(stats.get("requests").as_f64().unwrap() >= 1.0);
+        // latency percentiles and superblock counters are part of the wire
+        // contract of the stats endpoint
+        for key in [
+            "latency_p50_s",
+            "latency_p95_s",
+            "latency_p99_s",
+            "superblock_solves",
+            "superblock_rounds",
+            "superblock_tiles",
+        ] {
+            assert!(stats.get(key).as_f64().is_some(), "missing {key}: {stats}");
+        }
+        let p50 = stats.get("latency_p50_s").as_f64().unwrap();
+        let p99 = stats.get("latency_p99_s").as_f64().unwrap();
+        assert!(p50 <= p99);
         let info = client.info().unwrap();
         let variants: Vec<&str> = info
             .get("variants")
@@ -184,20 +199,50 @@ fn solve_graph_convenience_and_all_variants() {
 }
 
 #[test]
-fn oversized_graph_rejected_cleanly() {
+fn oversized_graph_served_by_superblock_tier() {
     with_server!(|coord, server| {
-        // larger than the largest artifact bucket (512 in the default build)
-        let g = DistMatrix::unconnected(1024);
-        let err = coord
+        // larger than the largest artifact bucket (512 in the default
+        // build): pre-superblock this was a hard batcher error, now it is
+        // served (an edgeless graph keeps the test cheap; the full closure
+        // check lives in tests/superblock_integration.rs)
+        let g = DistMatrix::unconnected(520);
+        let resp = coord
             .solve(&coordinator::Request {
                 id: 9,
                 graph: g,
                 variant: "staged".into(),
                 no_cache: true,
             })
-            .unwrap_err();
-        let msg = err.to_string();
-        assert!(msg.contains("exceeds") || msg.contains("bucket"), "{msg}");
+            .expect("oversized graphs are served by the superblock tier");
+        assert_eq!(resp.source, coordinator::Source::SuperBlock);
+        assert_eq!(resp.dist.n(), 520);
+        // edgeless in, edgeless closure out
+        assert!(resp.dist.get(0, 519).is_infinite());
+        assert_eq!(resp.dist.get(519, 519), 0.0);
         let _ = server;
     });
+}
+
+#[test]
+fn invalid_superblock_bucket_override_is_clean_error() {
+    match artifact_dir() {
+        None => eprintln!("SKIP: artifacts/ not built (run `make artifacts`)"),
+        Some(dir) => {
+            let mut config = coordinator::Config::new(&dir);
+            config.router.superblock_bucket = Some(100); // not a lowered size
+            let coord = Coordinator::start(config).expect("coordinator");
+            let err = coord
+                .solve(&coordinator::Request {
+                    id: 1,
+                    graph: DistMatrix::unconnected(600),
+                    variant: "staged".into(),
+                    no_cache: true,
+                })
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("not a lowered artifact size"),
+                "{err}"
+            );
+        }
+    }
 }

@@ -1,0 +1,160 @@
+//! Super-block tier integration tests.
+//!
+//! The CPU-path tests run **without artifacts** (the tier's schedule,
+//! pool, and exactness guarantees are device-independent), so CI's
+//! artifact-free job covers them.  The coordinator-path tests need the
+//! artifact manifest and skip politely when it is absent, like the rest of
+//! the integration suite.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fw_stage::apsp;
+use fw_stage::coordinator::{self, Config, Coordinator, Engine, EngineConfig, Source};
+use fw_stage::graph::{generators, DistMatrix};
+use fw_stage::superblock::{self, SuperBlockConfig};
+
+fn sb(bucket: usize, workers: usize) -> SuperBlockConfig {
+    SuperBlockConfig { bucket, workers }
+}
+
+// ---------------------------------------------------------- artifact-free --
+
+/// The issue's exactness bar: n = 768 (a multiple of the 256 bucket) must
+/// agree **bitwise** with `apsp::blocked` at the same tile size — the
+/// super-blocked schedule performs the same f32 relaxations in a
+/// dependency-equivalent order (see superblock module docs).
+#[test]
+fn n768_exactly_matches_blocked() {
+    let g = generators::erdos_renyi(768, 0.03, 31);
+    let oracle = apsp::blocked::solve(&g, 256);
+    let (dist, report) = superblock::solve_cpu(&g, &sb(256, 0));
+    assert_eq!(dist, oracle, "superblock diverges from apsp::blocked at n=768");
+    assert_eq!(report.blocks, 3);
+    assert_eq!(report.round_count(), 3);
+    assert_eq!(report.total_tiles(), 3 * (4 + 4));
+}
+
+/// Non-multiple-of-bucket n: padded schedule, truncated result; bitwise
+/// against the padded blocked oracle and close to the naive oracle.
+#[test]
+fn non_multiple_of_bucket_exact() {
+    let g = generators::erdos_renyi(200, 0.15, 37);
+    let (dist, report) = superblock::solve_cpu(&g, &sb(64, 4));
+    assert_eq!(report.padded, 256);
+    assert_eq!(report.blocks, 4);
+    let oracle = apsp::blocked::solve(&g.padded(256), 64).truncated(200);
+    assert_eq!(dist, oracle);
+    assert!(dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+}
+
+/// Pool width must never change results (bitwise).
+#[test]
+fn pool_width_is_value_invariant() {
+    let g = generators::scale_free(160, 2, 11);
+    let (one, _) = superblock::solve_cpu(&g, &sb(32, 1));
+    for workers in [2, 3, 8] {
+        let (many, _) = superblock::solve_cpu(&g, &sb(32, workers));
+        assert_eq!(one, many, "workers={workers}");
+    }
+}
+
+// ------------------------------------------------------- need artifacts --
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn start() -> Option<Coordinator> {
+    let dir = artifact_dir()?;
+    let mut config = Config::new(&dir);
+    config.engine.batch_window = std::time::Duration::from_millis(1);
+    Some(Coordinator::start(config).expect("coordinator"))
+}
+
+macro_rules! with_coordinator {
+    (|$coord:ident| $body:block) => {
+        match start() {
+            Some($coord) => $body,
+            None => eprintln!("SKIP: artifacts/ not built (run `make artifacts`)"),
+        }
+    };
+}
+
+/// Regression for the pre-superblock hard error: an n = 1024 request
+/// (larger than every artifact bucket, the old batcher `bucket == 0` case)
+/// is now served through the coordinator, matches the `apsp::blocked`
+/// closure, and hits the cache on repeat.
+#[test]
+fn oversized_request_served_and_cached() {
+    with_coordinator!(|coord| {
+        let g = generators::erdos_renyi(1024, 0.01, 41);
+        let req = coordinator::Request {
+            id: 9,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+        };
+        let first = coord.solve(&req).expect("n=1024 must be served now");
+        assert_eq!(first.source, Source::SuperBlock);
+        assert_eq!(first.bucket, 256, "policy picks the parallel-friendly bucket");
+        let oracle = apsp::blocked::solve(&g, 32);
+        assert!(
+            first.dist.allclose(&oracle, 1e-5, 1e-5),
+            "superblock closure diverges from apsp::blocked by {}",
+            first.dist.max_abs_diff(&oracle)
+        );
+
+        // repeat: served from the result cache, byte-identical
+        let second = coord.solve(&req).unwrap();
+        assert_eq!(second.source, Source::Cache);
+        assert_eq!(second.dist, first.dist);
+
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.get("superblock_solves").as_usize(), Some(1));
+        assert_eq!(snap.get("superblock_rounds").as_usize(), Some(4));
+        assert_eq!(snap.get("superblock_tiles").as_usize(), Some(4 * 15));
+        assert!(snap.get("latency_p95_s").as_f64().is_some(), "{snap}");
+    });
+}
+
+/// The explicit "superblock" pseudo-variant is honored at any n.
+#[test]
+fn explicit_superblock_variant() {
+    with_coordinator!(|coord| {
+        let g = generators::erdos_renyi(300, 0.1, 43);
+        let resp = coord
+            .solve(&coordinator::Request {
+                id: 1,
+                graph: g.clone(),
+                variant: "superblock".into(),
+                no_cache: true,
+            })
+            .unwrap();
+        assert_eq!(resp.source, Source::SuperBlock);
+        assert_eq!(resp.bucket, 64); // min padding (320) with ≥3 blocks
+        assert!(resp.dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-5));
+    });
+}
+
+/// The engine itself still reports oversize on direct submits — the
+/// batcher's `bucket == 0` contract is unchanged; only the coordinator's
+/// routing in front of it grew the new tier.
+#[test]
+fn engine_direct_submit_still_reports_oversize() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let metrics = Arc::new(coordinator::metrics::Metrics::new());
+    let engine = Engine::start(EngineConfig::new(&dir), metrics).expect("engine");
+    let err = engine
+        .solve("staged", DistMatrix::unconnected(1024))
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("exceeds largest artifact bucket"),
+        "engine oversize contract changed: {msg}"
+    );
+}
