@@ -79,6 +79,7 @@ fn main() {
                     graph: g.clone(),
                     variant: "staged".into(),
                     no_cache: true,
+                    want_paths: false,
                 })
                 .expect("solve"),
         );
@@ -118,6 +119,7 @@ fn main() {
                     graph: g_cached.clone(),
                     variant: "staged".into(),
                     no_cache: false,
+                    want_paths: false,
                 })
                 .expect("hit"),
         );
@@ -156,6 +158,7 @@ fn main() {
                 graph: g.clone(),
                 variant: "staged".into(),
                 no_cache: true,
+                want_paths: false,
             })
             .expect("sequential");
     }
@@ -204,6 +207,7 @@ fn main() {
             graph: g_sb.clone(),
             variant: "staged".into(),
             no_cache: true,
+            want_paths: false,
         })
         .expect("superblock solve");
     let sb_seconds = t0.elapsed().as_secs_f64();

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         graph: graph.clone(),
         variant: "staged".into(),
         no_cache: true,
+        want_paths: false,
     })?;
     let device_s = t0.elapsed().as_secs_f64();
     let tasks = (resp.bucket as f64).powi(3);

@@ -15,6 +15,7 @@
 //! rows contiguously — the CPU analog of the coalesced accesses §4.3
 //! engineers on the GPU.
 
+use super::paths::{self, PathsResult};
 use crate::graph::DistMatrix;
 
 /// Blocked FW with tile size `s`. Falls back to the naive solver when
@@ -23,6 +24,51 @@ pub fn solve(w: &DistMatrix, s: usize) -> DistMatrix {
     let mut out = w.clone();
     solve_in_place(&mut out, s);
     out
+}
+
+/// Blocked FW with successor tracking: the same tile schedule as [`solve`],
+/// with `succ` updated alongside `dist` in every phase (the shared rule:
+/// an improvement via pivot `k` copies `succ[i][k]` into `succ[i][j]`).
+///
+/// Distances are **bitwise identical** to [`solve`] — every phase performs
+/// the same f32 additions in the same order, and the branchy
+/// `cand < cur` accept test picks the same value as the distance-only
+/// branchless `min` (no NaN by [`DistMatrix::validate`], and FW sums never
+/// produce `-0.0`).  Falls back to the reference solver
+/// ([`paths::solve`]) for degenerate params, mirroring the naive fallback.
+pub fn solve_paths(w: &DistMatrix, s: usize) -> PathsResult {
+    let n = w.n();
+    if n == 0 {
+        return PathsResult::from_parts(w.clone(), Vec::new());
+    }
+    if s == 0 || n % s != 0 {
+        return paths::solve(w);
+    }
+    let mut dist = w.clone();
+    let mut succ = paths::init_succ(w);
+    let nb = n / s;
+    for b in 0..nb {
+        let ks = b * s;
+        phase1_diag_succ(&mut dist, &mut succ, ks, s);
+        for jb in 0..nb {
+            if jb != b {
+                phase2_row_tile_succ(&mut dist, &mut succ, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                phase2_col_tile_succ(&mut dist, &mut succ, ks, ib * s, s);
+            }
+        }
+        for ib in 0..nb {
+            for jb in 0..nb {
+                if ib != b && jb != b {
+                    phase3_tile_succ(&mut dist, &mut succ, ks, ib * s, jb * s, s);
+                }
+            }
+        }
+    }
+    PathsResult::from_parts(dist, succ)
 }
 
 /// In-place blocked FW (see module docs).
@@ -121,6 +167,128 @@ pub(crate) fn phase2_col_tile(w: &mut DistMatrix, ks: usize, is: usize, s: usize
                 let cand = wik + data[k * n + j]; // diag row k
                 if cand < data[i * n + j] {
                     data[i * n + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 1 with successor tracking (same relaxation order as
+/// [`phase1_diag`]; both the pivot column `(i, k)` and the target live in
+/// the diagonal tile, so the successor source is `succ[i][k]`).
+pub(crate) fn phase1_diag_succ(w: &mut DistMatrix, succ: &mut [usize], ks: usize, s: usize) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in ks..ks + s {
+            if i == k {
+                continue;
+            }
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = succ[i * n + k];
+            for j in ks..ks + s {
+                let cand = wik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                    succ[i * n + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, i-aligned, with successor tracking (order of
+/// [`phase2_row_tile`]; the pivot column `(i, k)` is in the diagonal tile).
+pub(crate) fn phase2_row_tile_succ(
+    w: &mut DistMatrix,
+    succ: &mut [usize],
+    ks: usize,
+    js: usize,
+    s: usize,
+) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in ks..ks + s {
+            if i == k {
+                continue;
+            }
+            let dik = data[i * n + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            let sik = succ[i * n + k];
+            for j in js..js + s {
+                let cand = dik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                    succ[i * n + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 2, j-aligned, with successor tracking (order of
+/// [`phase2_col_tile`]; the pivot column `(i, k)` is in this panel itself).
+pub(crate) fn phase2_col_tile_succ(
+    w: &mut DistMatrix,
+    succ: &mut [usize],
+    ks: usize,
+    is: usize,
+    s: usize,
+) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in ks..ks + s {
+        for i in is..is + s {
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = succ[i * n + k];
+            for j in ks..ks + s {
+                let cand = wik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                    succ[i * n + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// Phase 3 with successor tracking (order of [`phase3_tile`]; the pivot
+/// column `(i, k)` is in the column panel).  Plain indexed writes instead
+/// of the split-borrow trick — the accept branch needs the comparison
+/// anyway, and the succ write makes the inner loop non-vectorizable
+/// regardless.
+#[inline]
+fn phase3_tile_succ(
+    w: &mut DistMatrix,
+    succ: &mut [usize],
+    ks: usize,
+    is: usize,
+    js: usize,
+    s: usize,
+) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for i in is..is + s {
+        for k in ks..ks + s {
+            let wik = data[i * n + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = succ[i * n + k];
+            for j in js..js + s {
+                let cand = wik + data[k * n + j];
+                if cand < data[i * n + j] {
+                    data[i * n + j] = cand;
+                    succ[i * n + j] = sik;
                 }
             }
         }
@@ -232,5 +400,67 @@ mod tests {
     fn dense_complete_graph() {
         let g = generators::erdos_renyi(64, 1.0, 13);
         assert_matches_naive(&g, 16);
+    }
+
+    #[test]
+    fn paths_distances_bitwise_equal_to_distance_only() {
+        // the contract solve_paths documents: same schedule, same floats
+        let g = generators::erdos_renyi(96, 0.3, 61);
+        for s in [16, 32, 48] {
+            assert_eq!(solve_paths(&g, s).dist, solve(&g, s), "s={s}");
+        }
+        // negative weights exercise the accept branch both ways
+        let neg = generators::layered_dag(8, 8, 7);
+        assert_eq!(solve_paths(&neg, 16).dist, solve(&neg, 16));
+    }
+
+    #[test]
+    fn paths_reconstruct_to_reported_distances() {
+        let g = generators::erdos_renyi(64, 0.25, 67);
+        let r = solve_paths(&g, 16);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                let d = r.dist.get(i, j);
+                match r.path(i, j) {
+                    Some(p) => {
+                        assert_eq!(*p.first().unwrap(), i);
+                        assert_eq!(*p.last().unwrap(), j);
+                        let w = r.path_weight(&g, i, j).expect("valid edge walk");
+                        assert!((w - d as f64).abs() < 1e-3, "({i},{j}): {w} vs {d}");
+                    }
+                    None => assert!(!d.is_finite() || i == j),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paths_degenerate_params_fall_back_to_reference() {
+        // n % s != 0 → the reference solver runs; results are identical
+        let g = generators::erdos_renyi(50, 0.4, 71);
+        let fell_back = solve_paths(&g, 32);
+        let reference = crate::apsp::paths::solve(&g);
+        assert_eq!(fell_back, reference);
+        // empty graph
+        let empty = solve_paths(&DistMatrix::unconnected(0), 16);
+        assert_eq!(empty.n(), 0);
+    }
+
+    #[test]
+    fn paths_unreachable_iff_dist_infinite() {
+        let g = generators::scale_free(60, 2, 73); // plenty of unreachable pairs
+        let r = solve_paths(&g, 20);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                if i == j {
+                    continue;
+                }
+                assert_eq!(
+                    r.succ_at(i, j) == crate::apsp::paths::NO_PATH,
+                    !r.dist.get(i, j).is_finite(),
+                    "({i},{j})"
+                );
+            }
+        }
     }
 }

@@ -12,6 +12,7 @@
 //! `chunks_mut`; each band's column-panel dependency (`w[i][k]`) lives in
 //! the band's own rows, so no cross-band reads are needed.
 
+use super::paths::{self, PathsResult};
 use crate::graph::DistMatrix;
 
 /// Blocked FW with tile size `s` and phase-3 parallelism of `threads`.
@@ -19,6 +20,131 @@ pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
     let mut out = w.clone();
     solve_in_place(&mut out, s, threads);
     out
+}
+
+/// Parallel blocked FW with successor tracking — the same band
+/// decomposition as [`solve`], with each phase-3 band carrying its own
+/// disjoint successor rows.
+///
+/// The safety model extends unchanged: the distance row panel is
+/// snapshotted before phase 3 (every band reads it), while the successor
+/// source of a phase-3 update is `succ[i][k]` — the *column-panel* entry,
+/// which lives in the band's own rows — so no successor snapshot is needed
+/// and bands stay disjoint in both matrices.  Distances are bitwise equal
+/// to [`solve`] (and hence to `blocked::solve`); degenerate parameters
+/// fall back to [`super::blocked::solve_paths`].
+pub fn solve_paths(w: &DistMatrix, s: usize, threads: usize) -> PathsResult {
+    let n = w.n();
+    if n == 0 {
+        return PathsResult::from_parts(w.clone(), Vec::new());
+    }
+    if threads <= 1 || s == 0 || n % s != 0 {
+        return super::blocked::solve_paths(w, s);
+    }
+    let mut dist = w.clone();
+    let mut succ = paths::init_succ(w);
+    let nb = n / s;
+    let mut row_panel = vec![0f32; s * n];
+    for b in 0..nb {
+        let ks = b * s;
+        super::blocked::phase1_diag_succ(&mut dist, &mut succ, ks, s);
+        for jb in 0..nb {
+            if jb != b {
+                super::blocked::phase2_row_tile_succ(&mut dist, &mut succ, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                super::blocked::phase2_col_tile_succ(&mut dist, &mut succ, ks, ib * s, s);
+            }
+        }
+        row_panel.copy_from_slice(&dist.as_slice()[ks * n..(ks + s) * n]);
+        phase3_parallel_succ(&mut dist, &mut succ, &row_panel, ks, s, threads);
+    }
+    PathsResult::from_parts(dist, succ)
+}
+
+/// Fan the stage's doubly-dependent tiles out over row bands, tracking
+/// successors.  Mirrors [`phase3_parallel`] with a second banded matrix.
+fn phase3_parallel_succ(
+    w: &mut DistMatrix,
+    succ: &mut [usize],
+    row_panel: &[f32],
+    ks: usize,
+    s: usize,
+    threads: usize,
+) {
+    let n = w.n();
+    let nb = n / s;
+    let b = ks / s;
+    let blocks_per_band = nb.div_ceil(threads);
+    let rows_per_band = blocks_per_band * s;
+    let data = w.as_mut_slice();
+    std::thread::scope(|scope| {
+        let bands = data
+            .chunks_mut(rows_per_band * n)
+            .zip(succ.chunks_mut(rows_per_band * n));
+        for (band_idx, (band, succ_band)) in bands.enumerate() {
+            let row_panel = &row_panel[..];
+            scope.spawn(move || {
+                let first_block = band_idx * blocks_per_band;
+                let band_blocks = band.len() / (s * n);
+                for ib_local in 0..band_blocks {
+                    let ib = first_block + ib_local;
+                    if ib == b {
+                        continue; // panel rows are final
+                    }
+                    for jb in 0..nb {
+                        if jb == b {
+                            continue;
+                        }
+                        phase3_tile_band_succ(
+                            band,
+                            succ_band,
+                            row_panel,
+                            n,
+                            s,
+                            ib_local * s,
+                            ks,
+                            jb * s,
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Successor-tracking twin of [`phase3_tile_band`]: distance reads/writes
+/// are identical; the successor source `succ[i][k]` sits in the band's own
+/// rows (column panel), so `succ_band` alone suffices.
+#[inline]
+fn phase3_tile_band_succ(
+    band: &mut [f32],
+    succ_band: &mut [usize],
+    row_panel: &[f32],
+    n: usize,
+    s: usize,
+    is_local: usize,
+    ks: usize,
+    js: usize,
+) {
+    for i in is_local..is_local + s {
+        for k in 0..s {
+            let wik = band[i * n + ks + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = succ_band[i * n + ks + k];
+            for j in js..js + s {
+                let cand = wik + row_panel[k * n + j];
+                if cand < band[i * n + j] {
+                    band[i * n + j] = cand;
+                    succ_band[i * n + j] = sik;
+                }
+            }
+        }
+    }
 }
 
 /// In-place parallel blocked FW.  Falls back to the sequential blocked
@@ -183,5 +309,58 @@ mod tests {
         let g = generators::erdos_renyi(48, 0.4, 43);
         assert_matches_naive(&g, 32, 4); // 48 % 32 != 0
         assert_matches_naive(&g, 16, 0); // 0 threads → sequential
+    }
+
+    #[test]
+    fn paths_distances_bitwise_equal_across_thread_counts() {
+        // same contract as the distance solver: thread count cannot perturb
+        // a bit, and the path variant matches the distance-only output
+        let g = generators::erdos_renyi(96, 0.3, 47);
+        let dist_only = solve(&g, 32, 4);
+        for threads in [1, 2, 3, 4, 8] {
+            let r = solve_paths(&g, 32, threads);
+            assert_eq!(r.dist, dist_only, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn paths_successors_identical_to_sequential_blocked() {
+        // bands only re-partition the same relaxation order, so even the
+        // successor matrix (not just distances) matches blocked::solve_paths
+        let g = generators::erdos_renyi(80, 0.35, 53);
+        let seq = super::super::blocked::solve_paths(&g, 16);
+        for threads in [2, 5] {
+            let par = solve_paths(&g, 16, threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn paths_reconstruct_on_negative_weights() {
+        let g = generators::layered_dag(8, 8, 59); // negative edges, no cycles
+        let r = solve_paths(&g, 16, 4);
+        for i in 0..g.n() {
+            for j in 0..g.n() {
+                match r.path(i, j) {
+                    Some(_) => {
+                        let w = r.path_weight(&g, i, j).expect("valid edge walk");
+                        let d = r.dist.get(i, j) as f64;
+                        assert!((w - d).abs() < 1e-3, "({i},{j}): {w} vs {d}");
+                    }
+                    None => assert!(!r.dist.get(i, j).is_finite() || i == j),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paths_degenerate_params_fall_back() {
+        let g = generators::erdos_renyi(48, 0.4, 43);
+        // 48 % 32 != 0 → blocked::solve_paths → reference solver
+        let r = solve_paths(&g, 32, 4);
+        assert_eq!(r, crate::apsp::paths::solve(&g));
+        // 0 threads → sequential blocked path solver
+        let seq = solve_paths(&g, 16, 0);
+        assert_eq!(seq, super::super::blocked::solve_paths(&g, 16));
     }
 }

@@ -2,13 +2,24 @@
 //!
 //! The paper (like most APSP kernels) computes distances only; downstream
 //! users of a routing service almost always need the actual paths.  This
-//! module runs the same relaxation while maintaining `succ[i][j]` = next hop
-//! on the best known i→j path, then extracts paths in O(len).
+//! module holds the shared successor-matrix machinery: the direct-edge
+//! initializer ([`init_succ`]), the reference solver ([`solve`], naive loop
+//! order), and [`PathsResult`] with O(len) path extraction.
+//!
+//! The update rule every tier shares: whenever a relaxation improves
+//! `dist[i][j]` via `dist[i][k] + dist[k][j]`, set
+//! `succ[i][j] = succ[i][k]` — the first hop toward `j` is the first hop
+//! toward the pivot `k`.  Blocked decompositions only change *where* the
+//! `(i, k)` value lives (diagonal tile, column panel, detached super-tile),
+//! never the rule, which is what lets successor tracking ride the fast
+//! paths in [`super::blocked`], [`super::parallel`], and
+//! [`crate::superblock`] unchanged; this solver is the reference those
+//! tiers are differentially tested against (`rust/tests/conformance.rs`).
 
 use crate::graph::DistMatrix;
 
 /// APSP result with path reconstruction support.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PathsResult {
     pub dist: DistMatrix,
     /// `succ[i*n + j]` = next vertex after `i` on the shortest i→j path;
@@ -19,11 +30,11 @@ pub struct PathsResult {
 /// No-successor sentinel.
 pub const NO_PATH: usize = usize::MAX;
 
-/// Floyd-Warshall with successor tracking (naive loop order; used where
-/// paths are needed, not on the benchmark hot path).
-pub fn solve(w: &DistMatrix) -> PathsResult {
+/// Direct-edge successor initialization: `succ[i][j] = j` for every finite
+/// off-diagonal edge, [`NO_PATH`] elsewhere.  Every successor-tracking
+/// solver starts from this matrix.
+pub fn init_succ(w: &DistMatrix) -> Vec<usize> {
     let n = w.n();
-    let mut dist = w.clone();
     let mut succ = vec![NO_PATH; n * n];
     for i in 0..n {
         for j in 0..n {
@@ -32,6 +43,15 @@ pub fn solve(w: &DistMatrix) -> PathsResult {
             }
         }
     }
+    succ
+}
+
+/// Floyd-Warshall with successor tracking (naive loop order; the reference
+/// implementation the fast tiers are tested against).
+pub fn solve(w: &DistMatrix) -> PathsResult {
+    let n = w.n();
+    let mut dist = w.clone();
+    let mut succ = init_succ(w);
     {
         let d = dist.as_mut_slice();
         for k in 0..n {
@@ -54,8 +74,35 @@ pub fn solve(w: &DistMatrix) -> PathsResult {
 }
 
 impl PathsResult {
+    /// Assemble a result from a distance closure and a successor matrix
+    /// (`succ.len()` must be `n²`).  Used by the blocked/parallel/superblock
+    /// path tiers and by the wire codec when a response carries successors.
+    pub fn from_parts(dist: DistMatrix, succ: Vec<usize>) -> PathsResult {
+        let n = dist.n();
+        assert_eq!(succ.len(), n * n, "succ length {} != {n}²", succ.len());
+        PathsResult { dist, succ }
+    }
+
     pub fn n(&self) -> usize {
         self.dist.n()
+    }
+
+    /// Consume into `(dist, succ)` — lets the serving layer move both
+    /// matrices into a response without an O(n²) copy.
+    pub fn into_parts(self) -> (DistMatrix, Vec<usize>) {
+        (self.dist, self.succ)
+    }
+
+    /// The raw successor matrix, row-major (`NO_PATH` = unreachable).
+    pub fn succ(&self) -> &[usize] {
+        &self.succ
+    }
+
+    /// Next hop on the shortest i→j path, or `NO_PATH`.
+    pub fn succ_at(&self, i: usize, j: usize) -> usize {
+        let n = self.n();
+        debug_assert!(i < n && j < n);
+        self.succ[i * n + j]
     }
 
     /// The vertex sequence of a shortest i→j path (inclusive of both
@@ -158,6 +205,34 @@ mod tests {
         let g = generators::ring(6);
         let r = solve(&g);
         assert_eq!(r.path(1, 0), Some(vec![1, 2, 3, 4, 5, 0]));
+    }
+
+    #[test]
+    fn from_parts_roundtrips_solver_output() {
+        let g = generators::grid(4, 3);
+        let r = solve(&g);
+        let rebuilt = PathsResult::from_parts(r.dist.clone(), r.succ().to_vec());
+        assert_eq!(rebuilt, r);
+        assert_eq!(rebuilt.succ_at(0, 0), NO_PATH);
+    }
+
+    #[test]
+    #[should_panic(expected = "succ length")]
+    fn from_parts_rejects_wrong_length() {
+        let g = generators::ring(4);
+        PathsResult::from_parts(g, vec![NO_PATH; 3]);
+    }
+
+    #[test]
+    fn init_succ_marks_direct_edges_only() {
+        let mut g = DistMatrix::unconnected(3);
+        g.set(0, 1, 2.0);
+        g.set(2, 0, 1.0);
+        let succ = init_succ(&g);
+        assert_eq!(succ[1], 1); // (0, 1): direct edge
+        assert_eq!(succ[6], 0); // (2, 0): direct edge
+        assert_eq!(succ[2], NO_PATH); // (0, 2): no edge
+        assert_eq!(succ[4], NO_PATH); // (1, 1): diagonal
     }
 
     #[test]

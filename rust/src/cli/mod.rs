@@ -4,14 +4,20 @@
 //! ```text
 //! fw-stage solve     --input g.gr [--variant staged|superblock] [--artifacts DIR]
 //!                    [--superblock-bucket N] [--superblock-workers W] [--output d.dist]
+//!                    [--paths --src A --dst B]
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
 //!                    [--superblock-bucket N] [--superblock-workers W]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
+//!                    [--paths --src A --dst B]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
 //! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
 //! fw-stage info      [--artifacts DIR]
 //! ```
+//!
+//! `--paths` asks the coordinator for successor tracking; with `--src`/
+//! `--dst` the reconstructed hop sequence and its cost are printed instead
+//! of the distance matrix.
 
 pub mod args;
 
@@ -20,8 +26,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::apsp::paths::PathsResult;
 use crate::coordinator::{self, Coordinator};
-use crate::graph::{generators, io};
+use crate::graph::{generators, io, DistMatrix};
 use crate::simulator::{self, table, Variant};
 use crate::util::stats::Samples;
 use args::Args;
@@ -98,11 +105,14 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
 }
 
 fn cmd_solve(rest: &[String]) -> Result<()> {
-    let args = Args::parse(rest, &["quiet"])?;
+    let args = Args::parse(rest, &["quiet", "paths"])?;
     let input = args.get("input").context("--input <graph file> required")?;
     let variant = args.get_or("variant", "staged").to_string();
     let output = args.get("output").map(PathBuf::from);
     let quiet = args.get_bool("quiet");
+    let want_paths = args.get_bool("paths");
+    let src = args.get_usize("src", 0)?;
+    let dst = args.get_usize("dst", 0)?;
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
@@ -119,6 +129,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
         graph: graph.clone(),
         variant,
         no_cache: false,
+        want_paths,
     })?;
     let dt = t0.elapsed().as_secs_f64();
     if !quiet {
@@ -132,9 +143,43 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
             n * n * n / dt,
         );
     }
+    if want_paths {
+        let succ = resp.succ.context("response is missing successors")?;
+        print_path(&graph, resp.dist.clone(), succ, src, dst)?;
+        if let Some(path) = &output {
+            io::save(&resp.dist, path)?;
+        }
+        return Ok(());
+    }
     match output {
         Some(path) => io::save(&resp.dist, &path)?,
         None => print!("{}", io::to_matrix_text(&resp.dist)),
+    }
+    Ok(())
+}
+
+/// Reconstruct and print one (src, dst) path from a succ-carrying response.
+fn print_path(
+    graph: &DistMatrix,
+    dist: DistMatrix,
+    succ: Vec<usize>,
+    src: usize,
+    dst: usize,
+) -> Result<()> {
+    let n = graph.n();
+    if src >= n || dst >= n {
+        bail!("--src/--dst must be < n={n} (got {src}, {dst})");
+    }
+    let r = PathsResult::from_parts(dist, succ);
+    match r.path(src, dst) {
+        Some(p) => {
+            let hops: Vec<String> = p.iter().map(|v| v.to_string()).collect();
+            let cost = r
+                .path_weight(graph, src, dst)
+                .context("reconstructed path uses a non-edge")?;
+            println!("path {src} -> {dst}: {} (cost {cost:.2})", hops.join(" -> "));
+        }
+        None => println!("path {src} -> {dst}: unreachable"),
     }
     Ok(())
 }
@@ -166,9 +211,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_client(rest: &[String]) -> Result<()> {
-    let args = Args::parse(rest, &["stats"])?;
+    let args = Args::parse(rest, &["stats", "paths"])?;
     let addr = args.get("addr").context("--addr HOST:PORT required")?;
     let want_stats = args.get_bool("stats");
+    let want_paths = args.get_bool("paths");
+    let src = args.get_usize("src", 0)?;
+    let dst = args.get_usize("dst", 0)?;
     let input = args.get("input").map(str::to_string);
     let variant = args.get_or("variant", "staged").to_string();
     let output = args.get("output").map(PathBuf::from);
@@ -181,7 +229,11 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     }
     let input = input.context("--input <graph file> required (or --stats)")?;
     let graph = io::load(Path::new(&input))?;
-    let resp = client.solve(&graph, &variant)?;
+    let resp = if want_paths {
+        client.solve_paths(&graph, &variant)?
+    } else {
+        client.solve(&graph, &variant)?
+    };
     eprintln!(
         "server solved n={} via {} (bucket {}) in {:.4}s",
         graph.n(),
@@ -189,6 +241,14 @@ fn cmd_client(rest: &[String]) -> Result<()> {
         resp.bucket,
         resp.seconds
     );
+    if want_paths {
+        let succ = resp.succ.context("server response is missing successors")?;
+        print_path(&graph, resp.dist.clone(), succ, src, dst)?;
+        if let Some(path) = &output {
+            io::save(&resp.dist, path)?;
+        }
+        return Ok(());
+    }
     match output {
         Some(path) => io::save(&resp.dist, &path)?,
         None => print!("{}", io::to_matrix_text(&resp.dist)),
@@ -296,6 +356,7 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
                 graph: g,
                 variant: variant.clone(),
                 no_cache: true,
+                want_paths: false,
             })
             .context("bench solve")?;
         samples.push(t0.elapsed().as_secs_f64());

@@ -37,6 +37,15 @@ pub fn graph_fingerprint(g: &DistMatrix) -> u64 {
     h
 }
 
+/// The cache key every lookup and insert shares: (variant, n, fingerprint).
+fn make_key(variant: &str, g: &DistMatrix) -> Key {
+    Key {
+        variant: variant.to_string(),
+        n: g.n(),
+        fingerprint: graph_fingerprint(g),
+    }
+}
+
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 struct Key {
     variant: String,
@@ -46,6 +55,10 @@ struct Key {
 
 struct Entry {
     dist: DistMatrix,
+    /// Successor matrix, present once a path-carrying solve has been
+    /// cached for this key (same fingerprint — the key contract is shared
+    /// with distance-only entries; paths *upgrade* an entry in place).
+    succ: Option<Vec<usize>>,
     /// Monotone counter value at last touch (LRU eviction order).
     last_used: u64,
 }
@@ -81,11 +94,7 @@ impl ResultCache {
         if self.capacity == 0 {
             return None;
         }
-        let key = Key {
-            variant: variant.to_string(),
-            n: g.n(),
-            fingerprint: graph_fingerprint(g),
-        };
+        let key = make_key(variant, g);
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -103,19 +112,65 @@ impl ResultCache {
         }
     }
 
-    pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
+    /// Closure + successor lookup: hits only entries a path-carrying solve
+    /// has populated (a distance-only entry cannot serve a paths request).
+    pub fn get_paths(&self, variant: &str, g: &DistMatrix) -> Option<(DistMatrix, Vec<usize>)> {
         if self.capacity == 0 {
-            return;
+            return None;
         }
-        let key = Key {
-            variant: variant.to_string(),
-            n: g.n(),
-            fingerprint: graph_fingerprint(g),
-        };
+        let key = make_key(variant, g);
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
-        if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {
+        match inner.map.get_mut(&key) {
+            Some(Entry { dist, succ: Some(succ), last_used }) => {
+                *last_used = clock;
+                let hit = (dist.clone(), succ.clone());
+                inner.hits += 1;
+                Some(hit)
+            }
+            _ => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
+        self.insert(variant, g, dist, None);
+    }
+
+    /// Cache a path-carrying solve: the distance closure plus the successor
+    /// matrix, under the same fingerprint key distance entries use.
+    pub fn put_paths(&self, variant: &str, g: &DistMatrix, dist: DistMatrix, succ: Vec<usize>) {
+        self.insert(variant, g, dist, Some(succ));
+    }
+
+    fn insert(&self, variant: &str, g: &DistMatrix, dist: DistMatrix, succ: Option<Vec<usize>>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = make_key(variant, g);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(entry) = inner.map.get_mut(&key) {
+            // refresh in place.  A distance-only insert must neither
+            // discard successors a paths solve already paid for NOR
+            // overwrite their paired distances: different tiers can
+            // produce bitwise-different (equally valid) closures, and a
+            // (dist, succ) pair must stay internally consistent — so a
+            // succ-less put against a succ-carrying entry only bumps LRU.
+            if succ.is_some() {
+                entry.dist = dist;
+                entry.succ = succ;
+            } else if entry.succ.is_none() {
+                entry.dist = dist;
+            }
+            entry.last_used = clock;
+            return;
+        }
+        if inner.map.len() >= self.capacity {
             // evict the least-recently-used entry
             if let Some(victim) = inner
                 .map
@@ -130,6 +185,7 @@ impl ResultCache {
             key,
             Entry {
                 dist,
+                succ,
                 last_used: clock,
             },
         );
@@ -188,6 +244,38 @@ mod tests {
         assert!(cache.get("v", &g1).is_some());
         assert!(cache.get("v", &g3).is_some());
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn distance_entry_cannot_serve_paths() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(6);
+        cache.put("staged", &g, crate::apsp::naive::solve(&g));
+        assert!(cache.get_paths("staged", &g).is_none());
+        // ...but the distance half still hits
+        assert!(cache.get("staged", &g).is_some());
+    }
+
+    #[test]
+    fn paths_entry_serves_both_and_survives_distance_put() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(6);
+        let r = crate::apsp::paths::solve(&g);
+        cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
+        let (dist, succ) = cache.get_paths("staged", &g).expect("paths hit");
+        assert_eq!(dist, r.dist);
+        assert_eq!(succ, r.succ());
+        assert_eq!(cache.get("staged", &g), Some(r.dist.clone()));
+        // a later distance-only put must not discard the successors — nor
+        // replace their paired distances with a different (equally valid)
+        // closure, which would make the stored (dist, succ) inconsistent
+        let mut other_dist = r.dist.clone();
+        other_dist.set(0, 1, other_dist.get(0, 1) + 1e-4);
+        cache.put("staged", &g, other_dist);
+        let (dist2, succ2) = cache.get_paths("staged", &g).expect("pair intact");
+        assert_eq!(dist2, r.dist, "distance-only put must not split the pair");
+        assert_eq!(succ2, r.succ());
+        assert_eq!(cache.len(), 1, "same fingerprint key, one entry");
     }
 
     #[test]

@@ -42,6 +42,21 @@ impl Client {
 
     /// Solve a graph; returns the full response (distances + metadata).
     pub fn solve(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
+        self.request(graph, variant, false)
+    }
+
+    /// Solve a graph *with successor tracking*: the response carries the
+    /// successor matrix (`Response::succ` is guaranteed present), from
+    /// which [`crate::apsp::paths::PathsResult`] reconstructs actual paths.
+    pub fn solve_paths(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
+        let resp = self.request(graph, variant, true)?;
+        if resp.succ.is_none() {
+            bail!("server response is missing the successor matrix");
+        }
+        Ok(resp)
+    }
+
+    fn request(&mut self, graph: &DistMatrix, variant: &str, want_paths: bool) -> Result<Response> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request {
@@ -49,6 +64,7 @@ impl Client {
             graph: graph.clone(),
             variant: variant.to_string(),
             no_cache: false,
+            want_paths,
         };
         let reply = self.roundtrip(&encode_request(&req))?;
         let resp = decode_response(&reply)?;

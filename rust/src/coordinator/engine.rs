@@ -26,6 +26,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::batcher::{plan, BatchPolicy, Item};
 use super::metrics::Metrics;
+use crate::apsp;
 use crate::graph::DistMatrix;
 use crate::runtime::ExecutorPool;
 
@@ -120,6 +121,42 @@ impl Engine {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Successor-tracking fallback for device-scale path requests.
+    ///
+    /// The AOT artifacts compute distances only (succ tracking has no
+    /// lowered kernel), so a `want_paths` request that routed to the
+    /// device tier is served by the multithreaded CPU blocked solver
+    /// instead.  It runs on the **calling thread**, deliberately bypassing
+    /// the engine channel: path solves must not serialize behind (or stall)
+    /// the device batch queue, and the solver fans out over its own scoped
+    /// threads anyway.
+    ///
+    /// Sizes that are not a multiple of `tile` are padded up and truncated
+    /// (exactly the device tier's own padding trick) so every device-scale
+    /// n takes the banded fast path rather than degrading to the
+    /// single-threaded reference solver.  Padding never changes distances,
+    /// and padded vertices are unreachable, so no surviving successor can
+    /// reference one.
+    pub fn solve_paths(&self, graph: &DistMatrix, tile: usize) -> apsp::paths::PathsResult {
+        use crate::apsp::paths::{PathsResult, NO_PATH};
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let n = graph.n();
+        if n == 0 || tile == 0 || n % tile == 0 {
+            return apsp::parallel::solve_paths(graph, tile, threads);
+        }
+        let padded_n = n.div_ceil(tile) * tile;
+        let r = apsp::parallel::solve_paths(&graph.padded(padded_n), tile, threads);
+        let dist = r.dist.truncated(n);
+        let mut succ = vec![NO_PATH; n * n];
+        for i in 0..n {
+            succ[i * n..(i + 1) * n]
+                .copy_from_slice(&r.succ()[i * padded_n..i * padded_n + n]);
+        }
+        PathsResult::from_parts(dist, succ)
     }
 }
 

@@ -147,14 +147,22 @@ impl Coordinator {
             .validate()
             .map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
 
-        // cache
+        // cache (paths requests only hit entries that carry successors)
         if !req.no_cache {
-            if let Some(dist) = self.cache.get(&req.variant, &req.graph) {
+            let hit = if req.want_paths {
+                self.cache
+                    .get_paths(&req.variant, &req.graph)
+                    .map(|(dist, succ)| (dist, Some(succ)))
+            } else {
+                self.cache.get(&req.variant, &req.graph).map(|d| (d, None))
+            };
+            if let Some((dist, succ)) = hit {
                 let seconds = t0.elapsed().as_secs_f64();
                 self.metrics.record_solve(Source::Cache, seconds);
                 return Ok(Response {
                     id: req.id,
                     dist,
+                    succ,
                     source: Source::Cache,
                     bucket: req.graph.n(),
                     seconds,
@@ -163,21 +171,35 @@ impl Coordinator {
         }
 
         // route
-        let route = router::route(&self.router, &req.variant, req.graph.n())
+        let route = router::route(&self.router, &req.variant, req.graph.n(), req.want_paths)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let (dist, source, bucket) = match route {
+        let (dist, succ, source, bucket) = match route {
             router::Route::Cpu { tile } => {
-                let dist = apsp::blocked::solve(&req.graph, tile);
-                (dist, Source::Cpu, req.graph.n())
+                if req.want_paths {
+                    let (dist, succ) = apsp::blocked::solve_paths(&req.graph, tile).into_parts();
+                    (dist, Some(succ), Source::Cpu, req.graph.n())
+                } else {
+                    let dist = apsp::blocked::solve(&req.graph, tile);
+                    (dist, None, Source::Cpu, req.graph.n())
+                }
             }
             router::Route::Johnson => {
+                // the router rejects want_paths for johnson before this arm
                 let dist = apsp::johnson::solve(&req.graph)
                     .map_err(|e| anyhow::anyhow!("johnson: {e}"))?;
-                (dist, Source::Cpu, req.graph.n())
+                (dist, None, Source::Cpu, req.graph.n())
             }
             router::Route::Device => {
-                let solve = self.engine.solve(&req.variant, req.graph.clone())?;
-                (solve.dist, Source::Device, solve.bucket)
+                if req.want_paths {
+                    // distances-only artifacts: CPU path fallback
+                    // (Engine::solve_paths documents why)
+                    let r = self.engine.solve_paths(&req.graph, self.router.cpu_tile);
+                    let (dist, succ) = r.into_parts();
+                    (dist, Some(succ), Source::Cpu, req.graph.n())
+                } else {
+                    let solve = self.engine.solve(&req.variant, req.graph.clone())?;
+                    (solve.dist, None, Source::Device, solve.bucket)
+                }
             }
             router::Route::SuperBlock { bucket } => {
                 // the paper's three-phase schedule over device-bucket
@@ -210,25 +232,44 @@ impl Coordinator {
                     bucket,
                     workers: self.superblock_workers,
                 };
-                let (dist, report) = superblock::solve_with(&req.graph, &cfg, |tile| {
-                    Ok(self.engine.solve(diag_variant, tile)?.dist)
-                })?;
-                self.metrics.record_superblock(
-                    report.round_count() as u64,
-                    report.total_tiles() as u64,
-                );
-                (dist, Source::SuperBlock, bucket)
+                if req.want_paths {
+                    // path mode carries successor tiles through the same
+                    // pool; diagonal tiles run the CPU succ kernel (no
+                    // successor-tracking artifact exists to dispatch)
+                    let (r, report) = superblock::solve_paths(&req.graph, &cfg);
+                    self.metrics.record_superblock(
+                        report.round_count() as u64,
+                        report.total_tiles() as u64,
+                    );
+                    let (dist, succ) = r.into_parts();
+                    (dist, Some(succ), Source::SuperBlock, bucket)
+                } else {
+                    let (dist, report) = superblock::solve_with(&req.graph, &cfg, |tile| {
+                        Ok(self.engine.solve(diag_variant, tile)?.dist)
+                    })?;
+                    self.metrics.record_superblock(
+                        report.round_count() as u64,
+                        report.total_tiles() as u64,
+                    );
+                    (dist, None, Source::SuperBlock, bucket)
+                }
             }
         };
 
         if !req.no_cache {
-            self.cache.put(&req.variant, &req.graph, dist.clone());
+            match &succ {
+                Some(succ) => {
+                    self.cache.put_paths(&req.variant, &req.graph, dist.clone(), succ.clone())
+                }
+                None => self.cache.put(&req.variant, &req.graph, dist.clone()),
+            }
         }
         let seconds = t0.elapsed().as_secs_f64();
         self.metrics.record_solve(source, seconds);
         Ok(Response {
             id: req.id,
             dist,
+            succ,
             source,
             bucket,
             seconds,
@@ -242,7 +283,27 @@ impl Coordinator {
             graph: graph.clone(),
             variant: variant.to_string(),
             no_cache: false,
+            want_paths: false,
         })?;
         Ok(resp.dist)
+    }
+
+    /// Convenience: solve a bare graph and reconstruct paths.
+    pub fn solve_graph_paths(
+        &self,
+        graph: &DistMatrix,
+        variant: &str,
+    ) -> Result<apsp::paths::PathsResult> {
+        let resp = self.solve(&Request {
+            id: 0,
+            graph: graph.clone(),
+            variant: variant.to_string(),
+            no_cache: false,
+            want_paths: true,
+        })?;
+        let succ = resp
+            .succ
+            .ok_or_else(|| anyhow::anyhow!("paths requested but response has no successors"))?;
+        Ok(apsp::paths::PathsResult::from_parts(resp.dist, succ))
     }
 }

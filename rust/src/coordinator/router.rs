@@ -60,14 +60,35 @@ impl Default for RouterConfig {
     }
 }
 
-/// Decide the route for (variant, n). Errors on unknown variants.
-pub fn route(config: &RouterConfig, variant: &str, n: usize) -> Result<Route, String> {
+/// Decide the route for (variant, n, want_paths). Errors on unknown
+/// variants and on path requests no tier can serve.
+///
+/// `want_paths` mostly rides the distance policy unchanged — the CPU and
+/// superblock tiers have successor-tracking twins, and a Device route is
+/// downgraded to the engine's CPU path fallback at dispatch
+/// ([`super::engine::Engine::solve_paths`]; the AOT artifacts compute
+/// distances only).  The exception is Johnson: its Dijkstra inner loop has
+/// no successor matrix, so path requests for it are rejected here, before
+/// any work is queued.
+pub fn route(
+    config: &RouterConfig,
+    variant: &str,
+    n: usize,
+    want_paths: bool,
+) -> Result<Route, String> {
     if variant == "cpu" {
         return Ok(Route::Cpu {
             tile: config.cpu_tile,
         });
     }
     if variant == "johnson" {
+        if want_paths {
+            return Err(
+                "paths are not available for the johnson variant \
+                 (use cpu, staged, or superblock)"
+                    .to_string(),
+            );
+        }
         return Ok(Route::Johnson);
     }
     if variant == "superblock" {
@@ -158,29 +179,29 @@ mod tests {
 
     #[test]
     fn small_graphs_go_cpu() {
-        assert_eq!(route(&cfg(), "staged", 16).unwrap(), Route::Cpu { tile: 32 });
-        assert_eq!(route(&cfg(), "staged", 32).unwrap(), Route::Cpu { tile: 32 });
+        assert_eq!(route(&cfg(), "staged", 16, false).unwrap(), Route::Cpu { tile: 32 });
+        assert_eq!(route(&cfg(), "staged", 32, false).unwrap(), Route::Cpu { tile: 32 });
     }
 
     #[test]
     fn large_graphs_go_device() {
-        assert_eq!(route(&cfg(), "staged", 33).unwrap(), Route::Device);
-        assert_eq!(route(&cfg(), "blocked", 512).unwrap(), Route::Device);
+        assert_eq!(route(&cfg(), "staged", 33, false).unwrap(), Route::Device);
+        assert_eq!(route(&cfg(), "blocked", 512, false).unwrap(), Route::Device);
     }
 
     #[test]
     fn oversize_goes_superblock() {
         // pre-superblock these were batcher `bucket == 0` hard errors
         assert_eq!(
-            route(&cfg(), "staged", 1024).unwrap(),
+            route(&cfg(), "staged", 1024, false).unwrap(),
             Route::SuperBlock { bucket: 256 }
         );
         assert_eq!(
-            route(&cfg(), "staged", 768).unwrap(),
+            route(&cfg(), "staged", 768, false).unwrap(),
             Route::SuperBlock { bucket: 256 }
         );
         assert_eq!(
-            route(&cfg(), "naive", 513).unwrap(),
+            route(&cfg(), "naive", 513, false).unwrap(),
             Route::SuperBlock { bucket: 64 }
         );
     }
@@ -188,12 +209,12 @@ mod tests {
     #[test]
     fn explicit_superblock_variant() {
         assert_eq!(
-            route(&cfg(), "superblock", 1024).unwrap(),
+            route(&cfg(), "superblock", 1024, false).unwrap(),
             Route::SuperBlock { bucket: 256 }
         );
         // even below the largest bucket the explicit variant is honored
         assert_eq!(
-            route(&cfg(), "superblock", 100).unwrap(),
+            route(&cfg(), "superblock", 100, false).unwrap(),
             Route::SuperBlock { bucket: 128 }
         );
     }
@@ -203,11 +224,11 @@ mod tests {
         let mut c = cfg();
         c.superblock_bucket = Some(512);
         assert_eq!(
-            route(&c, "staged", 2048).unwrap(),
+            route(&c, "staged", 2048, false).unwrap(),
             Route::SuperBlock { bucket: 512 }
         );
         c.superblock_bucket = Some(100); // not a lowered size
-        let err = route(&c, "staged", 2048).unwrap_err();
+        let err = route(&c, "staged", 2048, false).unwrap_err();
         assert!(err.contains("not a lowered artifact size"), "{err}");
     }
 
@@ -229,18 +250,18 @@ mod tests {
 
     #[test]
     fn explicit_cpu_always_cpu() {
-        assert_eq!(route(&cfg(), "cpu", 4096).unwrap(), Route::Cpu { tile: 32 });
+        assert_eq!(route(&cfg(), "cpu", 4096, false).unwrap(), Route::Cpu { tile: 32 });
     }
 
     #[test]
     fn explicit_johnson_routes_to_johnson() {
-        assert_eq!(route(&cfg(), "johnson", 4096).unwrap(), Route::Johnson);
-        assert_eq!(route(&cfg(), "johnson", 4).unwrap(), Route::Johnson);
+        assert_eq!(route(&cfg(), "johnson", 4096, false).unwrap(), Route::Johnson);
+        assert_eq!(route(&cfg(), "johnson", 4, false).unwrap(), Route::Johnson);
     }
 
     #[test]
     fn unknown_variant_rejected() {
-        let err = route(&cfg(), "warp9", 64).unwrap_err();
+        let err = route(&cfg(), "warp9", 64, false).unwrap_err();
         assert!(err.contains("warp9"));
         assert!(err.contains("staged"));
         assert!(err.contains("superblock"));
@@ -254,8 +275,8 @@ mod tests {
             device_variants: vec!["staged".into()],
             ..RouterConfig::default()
         };
-        assert_eq!(route(&c, "staged", 4096).unwrap(), Route::Device);
-        let err = route(&c, "superblock", 4096).unwrap_err();
+        assert_eq!(route(&c, "staged", 4096, false).unwrap(), Route::Device);
+        let err = route(&c, "superblock", 4096, false).unwrap_err();
         assert!(err.contains("no device buckets"), "{err}");
     }
 
@@ -263,6 +284,6 @@ mod tests {
     fn threshold_configurable() {
         let mut c = cfg();
         c.cpu_threshold = 0;
-        assert_eq!(route(&c, "staged", 1).unwrap(), Route::Device);
+        assert_eq!(route(&c, "staged", 1, false).unwrap(), Route::Device);
     }
 }

@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::apsp::paths::NO_PATH;
 use crate::graph::DistMatrix;
 use crate::util::json::Json;
 use crate::INF;
@@ -22,6 +23,9 @@ pub struct Request {
     pub variant: String,
     /// Skip the result cache when true.
     pub no_cache: bool,
+    /// Also compute the successor matrix (wire key `"paths"`); the
+    /// response then carries `succ` for path reconstruction.
+    pub want_paths: bool,
 }
 
 /// Where a response was computed.
@@ -54,6 +58,10 @@ impl Source {
 pub struct Response {
     pub id: u64,
     pub dist: DistMatrix,
+    /// Row-major successor matrix ([`NO_PATH`] = unreachable), present iff
+    /// the request set `want_paths`; travels as `succ` rows with `null`
+    /// for "no successor".
+    pub succ: Option<Vec<usize>>,
     pub source: Source,
     /// Padding bucket used (device responses), super-tile size (superblock
     /// responses), or n otherwise.
@@ -86,6 +94,7 @@ pub fn encode_request(req: &Request) -> String {
         ("n", Json::num(n as f64)),
         ("variant", Json::str(req.variant.clone())),
         ("no_cache", Json::Bool(req.no_cache)),
+        ("paths", Json::Bool(req.want_paths)),
         ("edges", Json::Arr(edges)),
     ])
     .to_string()
@@ -137,6 +146,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
         graph,
         variant,
         no_cache: v.get("no_cache").as_bool().unwrap_or(false),
+        want_paths: v.get("paths").as_bool().unwrap_or(false),
     })
 }
 
@@ -177,11 +187,35 @@ pub fn encode_response(resp: &Response) -> String {
     }
     let _ = write!(
         out,
-        "],\"id\":{},\"n\":{n},\"seconds\":{},\"source\":\"{}\",\"type\":\"result\"}}",
+        "],\"id\":{},\"n\":{n},\"seconds\":{},\"source\":\"{}\"",
         resp.id,
         if resp.seconds.is_finite() { resp.seconds } else { 0.0 },
         resp.source.name(),
     );
+    // successor rows ride the same fast writer; NO_PATH travels as null
+    if let Some(succ) = &resp.succ {
+        debug_assert_eq!(succ.len(), n * n);
+        out.push_str(",\"succ\":[");
+        for i in 0..n {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (j, &s) in succ[i * n..(i + 1) * n].iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                if s == NO_PATH {
+                    out.push_str("null");
+                } else {
+                    let _ = write!(out, "{s}");
+                }
+            }
+            out.push(']');
+        }
+        out.push(']');
+    }
+    out.push_str(",\"type\":\"result\"}");
     out
 }
 
@@ -223,9 +257,38 @@ pub fn decode_response(line: &str) -> Result<Response> {
         Some("superblock") => Source::SuperBlock,
         other => bail!("bad source {other:?}"),
     };
+    let succ = match v.get("succ").as_arr() {
+        None => None,
+        Some(rows) => {
+            if rows.len() != n {
+                bail!("succ has {} rows, expected {n}", rows.len());
+            }
+            let mut succ = vec![NO_PATH; n * n];
+            for (i, row) in rows.iter().enumerate() {
+                let row = row.as_arr().context("succ row not an array")?;
+                if row.len() != n {
+                    bail!("succ row {i} has {} cols, expected {n}", row.len());
+                }
+                for (j, cell) in row.iter().enumerate() {
+                    match cell {
+                        Json::Null => {}
+                        other => {
+                            let s = other.as_usize().context("bad succ cell")?;
+                            if s >= n {
+                                bail!("succ[{i}][{j}] = {s} out of range for n={n}");
+                            }
+                            succ[i * n + j] = s;
+                        }
+                    }
+                }
+            }
+            Some(succ)
+        }
+    };
     Ok(Response {
         id,
         dist,
+        succ,
         source,
         bucket: v.get("bucket").as_usize().unwrap_or(n),
         seconds: v.get("seconds").as_f64().unwrap_or(0.0),
@@ -253,6 +316,7 @@ mod tests {
             graph: generators::erdos_renyi(24, 0.3, 5),
             variant: "staged".into(),
             no_cache: false,
+            want_paths: false,
         }
     }
 
@@ -263,6 +327,18 @@ mod tests {
         assert_eq!(back.id, 42);
         assert_eq!(back.variant, "staged");
         assert_eq!(back.graph, req.graph);
+        assert!(!back.want_paths);
+    }
+
+    #[test]
+    fn want_paths_flag_roundtrips() {
+        let mut req = sample_request();
+        req.want_paths = true;
+        let back = decode_request(&encode_request(&req)).unwrap();
+        assert!(back.want_paths);
+        // absent key defaults to false (older clients)
+        let legacy = decode_request(r#"{"type":"solve","n":3,"edges":[]}"#).unwrap();
+        assert!(!legacy.want_paths);
     }
 
     #[test]
@@ -270,6 +346,7 @@ mod tests {
         let resp = Response {
             id: 11,
             dist: DistMatrix::unconnected(2),
+            succ: None,
             source: Source::SuperBlock,
             bucket: 256,
             seconds: 1.25,
@@ -287,6 +364,7 @@ mod tests {
         let resp = Response {
             id: 7,
             dist,
+            succ: None,
             source: Source::Device,
             bucket: 64,
             seconds: 0.01,
@@ -296,7 +374,43 @@ mod tests {
         assert_eq!(back.bucket, 64);
         assert_eq!(back.source, Source::Device);
         assert_eq!(back.dist, resp.dist);
+        assert!(back.succ.is_none());
         assert!(back.dist.get(1, 2).is_infinite());
+    }
+
+    #[test]
+    fn successors_roundtrip_over_the_wire() {
+        // a real solve so the succ matrix is meaningful end to end
+        let mut g = DistMatrix::unconnected(3);
+        g.set(0, 2, 2.0);
+        g.set(2, 1, 3.0);
+        let r = crate::apsp::paths::solve(&g);
+        let resp = Response {
+            id: 9,
+            dist: r.dist.clone(),
+            succ: Some(r.succ().to_vec()),
+            source: Source::Cpu,
+            bucket: 3,
+            seconds: 0.0,
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        let back_succ = back.succ.expect("succ present");
+        assert_eq!(back_succ, r.succ());
+        assert_eq!(back.dist, r.dist);
+        // NO_PATH travelled as null and came back as NO_PATH
+        assert_eq!(back_succ[3], NO_PATH); // (1, 0): unreachable
+        assert_eq!(back_succ[2], 2); // (0, 2) → first hop 2
+        assert_eq!(back_succ[1], 2); // (0, 1) → via 2
+    }
+
+    #[test]
+    fn malformed_succ_rejected() {
+        // row count mismatch
+        let line = r#"{"bucket":2,"dist":[[0,1],[1,0]],"id":1,"n":2,"seconds":0,"source":"cpu","succ":[[null,1]],"type":"result"}"#;
+        assert!(decode_response(line).unwrap_err().to_string().contains("succ"));
+        // out-of-range successor id
+        let line = r#"{"bucket":2,"dist":[[0,1],[1,0]],"id":1,"n":2,"seconds":0,"source":"cpu","succ":[[null,7],[null,null]],"type":"result"}"#;
+        assert!(decode_response(line).unwrap_err().to_string().contains("out of range"));
     }
 
     #[test]

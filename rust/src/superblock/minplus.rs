@@ -105,6 +105,185 @@ pub fn interior(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
     }
 }
 
+// ------------------------------------------------- successor tracking --
+//
+// Each primitive below is the successor-tracking twin of the one above:
+// identical distance arithmetic and loop order (so distances stay bitwise
+// equal to the distance-only tier), with a parallel `b × b` successor tile
+// updated by the shared rule — an improvement via pivot `k` copies the
+// successor of the `(i, k)` dependency.  Successor values are *global*
+// vertex ids (the orchestrator initializes them before splitting tiles),
+// so copying them between detached tiles is position-independent.
+
+/// [`phase1`] with successor tracking: pivot column `(i, k)` is in the
+/// diagonal tile itself.
+pub fn phase1_succ(diag: &mut [f32], dsucc: &mut [usize], b: usize) {
+    debug_assert_eq!(diag.len(), b * b);
+    debug_assert_eq!(dsucc.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            if i == k {
+                continue;
+            }
+            let wik = diag[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = dsucc[i * b + k];
+            for j in 0..b {
+                let cand = wik + diag[k * b + j];
+                if cand < diag[i * b + j] {
+                    diag[i * b + j] = cand;
+                    dsucc[i * b + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// [`panel_row`] with successor tracking: the `(i, k)` dependency lives in
+/// the diagonal tile, so the successor source is `dsucc`.
+pub fn panel_row_succ(
+    tile: &mut [f32],
+    tsucc: &mut [usize],
+    diag: &[f32],
+    dsucc: &[usize],
+    b: usize,
+) {
+    debug_assert_eq!(tile.len(), b * b);
+    debug_assert_eq!(tsucc.len(), b * b);
+    debug_assert_eq!(diag.len(), b * b);
+    debug_assert_eq!(dsucc.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            if i == k {
+                continue;
+            }
+            let dik = diag[i * b + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            let sik = dsucc[i * b + k];
+            for j in 0..b {
+                let cand = dik + tile[k * b + j];
+                if cand < tile[i * b + j] {
+                    tile[i * b + j] = cand;
+                    tsucc[i * b + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// [`panel_col`] with successor tracking: the `(i, k)` dependency lives in
+/// the panel itself, so no diagonal successors are needed.
+pub fn panel_col_succ(tile: &mut [f32], tsucc: &mut [usize], diag: &[f32], b: usize) {
+    debug_assert_eq!(tile.len(), b * b);
+    debug_assert_eq!(tsucc.len(), b * b);
+    debug_assert_eq!(diag.len(), b * b);
+    for k in 0..b {
+        for i in 0..b {
+            let wik = tile[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = tsucc[i * b + k];
+            for j in 0..b {
+                let cand = wik + diag[k * b + j];
+                if cand < tile[i * b + j] {
+                    tile[i * b + j] = cand;
+                    tsucc[i * b + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// [`interior`] with successor tracking: the `(i, k)` dependency is the
+/// finalized column-panel tile, so the successor source is `colsucc`.
+pub fn interior_succ(
+    c: &mut [f32],
+    csucc: &mut [usize],
+    col: &[f32],
+    colsucc: &[usize],
+    row: &[f32],
+    b: usize,
+) {
+    debug_assert_eq!(c.len(), b * b);
+    debug_assert_eq!(csucc.len(), b * b);
+    debug_assert_eq!(col.len(), b * b);
+    debug_assert_eq!(colsucc.len(), b * b);
+    debug_assert_eq!(row.len(), b * b);
+    for i in 0..b {
+        for k in 0..b {
+            let wik = col[i * b + k];
+            if !wik.is_finite() {
+                continue;
+            }
+            let sik = colsucc[i * b + k];
+            let row_k = &row[k * b..(k + 1) * b];
+            for j in 0..b {
+                let cand = wik + row_k[j];
+                if cand < c[i * b + j] {
+                    c[i * b + j] = cand;
+                    csucc[i * b + j] = sik;
+                }
+            }
+        }
+    }
+}
+
+/// Parallel path for [`interior_succ`]: split the tile's rows (of both the
+/// distance and successor tiles) over `threads` scoped workers — the path
+/// tier's mirror of [`interior_parallel`], for the same degenerate
+/// super-grids (a 2×2 grid has one interior tile per round, so tile-level
+/// pooling alone leaves workers idle).  Row bands of `c`/`csucc` are
+/// disjoint and `col`/`colsucc`/`row` are read-only, so no locking.
+pub fn interior_succ_parallel(
+    c: &mut [f32],
+    csucc: &mut [usize],
+    col: &[f32],
+    colsucc: &[usize],
+    row: &[f32],
+    b: usize,
+    threads: usize,
+) {
+    if threads <= 1 || b == 0 {
+        interior_succ(c, csucc, col, colsucc, row, b);
+        return;
+    }
+    let rows_per_band = b.div_ceil(threads.min(b));
+    std::thread::scope(|scope| {
+        let bands = c
+            .chunks_mut(rows_per_band * b)
+            .zip(csucc.chunks_mut(rows_per_band * b));
+        for (band_idx, (band, succ_band)) in bands.enumerate() {
+            scope.spawn(move || {
+                let first_row = band_idx * rows_per_band;
+                let band_rows = band.len() / b;
+                for i_local in 0..band_rows {
+                    let i = first_row + i_local;
+                    for k in 0..b {
+                        let wik = col[i * b + k];
+                        if !wik.is_finite() {
+                            continue;
+                        }
+                        let sik = colsucc[i * b + k];
+                        let row_k = &row[k * b..(k + 1) * b];
+                        for j in 0..b {
+                            let cand = wik + row_k[j];
+                            if cand < band[i_local * b + j] {
+                                band[i_local * b + j] = cand;
+                                succ_band[i_local * b + j] = sik;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Parallel path for [`interior`]: split the tile's rows over `threads`
 /// scoped workers.  Row bands of `c` (and the matching rows of `col`) are
 /// disjoint and `row` is read-only, so this needs no locking; it exists for
@@ -226,6 +405,111 @@ mod tests {
             interior_parallel(&mut par, &col, &row, B, threads);
             assert_eq!(serial, par, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn succ_variants_leave_distances_bitwise_unchanged() {
+        // the documented contract: the succ twins perform identical float
+        // arithmetic, so every distance tile matches the distance-only run
+        let w = full_matrix();
+        let n = w.n();
+        let succ_of = |bi: usize, bj: usize| -> Vec<usize> {
+            let full = crate::apsp::paths::init_succ(&w);
+            let mut out = vec![0usize; B * B];
+            for i in 0..B {
+                for j in 0..B {
+                    out[i * B + j] = full[(bi * B + i) * n + bj * B + j];
+                }
+            }
+            out
+        };
+
+        // phase 1
+        let mut d_plain = tile_of(&w, 0, 0);
+        let mut d_succ = d_plain.clone();
+        let mut dsucc = succ_of(0, 0);
+        phase1(&mut d_plain, B);
+        phase1_succ(&mut d_succ, &mut dsucc, B);
+        assert_eq!(d_plain, d_succ);
+
+        // panels against the solved diagonal
+        let mut row_plain = tile_of(&w, 0, 1);
+        let mut row_succ_t = row_plain.clone();
+        let mut rsucc = succ_of(0, 1);
+        panel_row(&mut row_plain, &d_plain, B);
+        panel_row_succ(&mut row_succ_t, &mut rsucc, &d_succ, &dsucc, B);
+        assert_eq!(row_plain, row_succ_t);
+
+        let mut col_plain = tile_of(&w, 1, 0);
+        let mut col_succ_t = col_plain.clone();
+        let mut csucc = succ_of(1, 0);
+        panel_col(&mut col_plain, &d_plain, B);
+        panel_col_succ(&mut col_succ_t, &mut csucc, &d_succ, B);
+        assert_eq!(col_plain, col_succ_t);
+
+        // interior against the solved panels
+        let mut int_plain = tile_of(&w, 1, 1);
+        let mut int_succ_t = int_plain.clone();
+        let mut isucc = succ_of(1, 1);
+        interior(&mut int_plain, &col_plain, &row_plain, B);
+        interior_succ(&mut int_succ_t, &mut isucc, &col_succ_t, &csucc, &row_plain, B);
+        assert_eq!(int_plain, int_succ_t);
+    }
+
+    #[test]
+    fn interior_succ_parallel_is_bitwise_equal_to_serial() {
+        let w = full_matrix();
+        let full = crate::apsp::paths::init_succ(&w);
+        let n = w.n();
+        let succ_of = |bi: usize, bj: usize| -> Vec<usize> {
+            let mut out = vec![0usize; B * B];
+            for i in 0..B {
+                for j in 0..B {
+                    out[i * B + j] = full[(bi * B + i) * n + bj * B + j];
+                }
+            }
+            out
+        };
+        let col = tile_of(&w, 1, 0);
+        let colsucc = succ_of(1, 0);
+        let row = tile_of(&w, 0, 1);
+        let mut serial_d = tile_of(&w, 1, 1);
+        let mut serial_s = succ_of(1, 1);
+        interior_succ(&mut serial_d, &mut serial_s, &col, &colsucc, &row, B);
+        for threads in [2, 3, 8, 64] {
+            let mut par_d = tile_of(&w, 1, 1);
+            let mut par_s = succ_of(1, 1);
+            interior_succ_parallel(&mut par_d, &mut par_s, &col, &colsucc, &row, B, threads);
+            assert_eq!(serial_d, par_d, "threads={threads}");
+            assert_eq!(serial_s, par_s, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn succ_updates_record_the_pivot_hop() {
+        // 0 → 2 → 1 shortcut inside one phase-1 tile: succ(0,1) must become
+        // succ(0,2) (= 2, the first hop of the improving path)
+        let b = 3;
+        let inf = f32::INFINITY;
+        let mut diag = vec![
+            0.0, 10.0, 2.0, //
+            inf, 0.0, inf, //
+            inf, 3.0, 0.0,
+        ];
+        let mut dsucc = vec![
+            crate::apsp::paths::NO_PATH,
+            1,
+            2,
+            crate::apsp::paths::NO_PATH,
+            crate::apsp::paths::NO_PATH,
+            crate::apsp::paths::NO_PATH,
+            crate::apsp::paths::NO_PATH,
+            1,
+            crate::apsp::paths::NO_PATH,
+        ];
+        phase1_succ(&mut diag, &mut dsucc, b);
+        assert_eq!(diag[1], 5.0); // 0→2→1
+        assert_eq!(dsucc[1], 2); // first hop goes through vertex 2
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //! solver applies phase-1 order ([`solve_cpu`]) the result is *bitwise*
 //! equal to `apsp::blocked::solve(padded, bucket)` — regardless of pool
 //! width.  Tests pin this.
+//!
+//! **Path mode.** [`solve_paths`] runs the same schedule with a successor
+//! tile carried alongside every distance tile (successors are global
+//! vertex ids, so detached tiles copy them freely); distances stay bitwise
+//! equal to [`solve_cpu`] while the successor matrix reconstructs real
+//! shortest paths (DESIGN.md §Path tier).
 
 pub mod minplus;
 pub mod pool;
@@ -38,6 +44,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::apsp::paths::{self, PathsResult, NO_PATH};
 use crate::graph::DistMatrix;
 pub use progress::Report;
 use schedule::TileOp;
@@ -179,6 +186,171 @@ pub fn solve_cpu(graph: &DistMatrix, config: &SuperBlockConfig) -> (DistMatrix, 
     .expect("CPU diagonal solver is infallible")
 }
 
+/// One detached super-tile in path mode: distances plus the matching
+/// successor tile.  Successor values are global vertex ids (assigned before
+/// the split), so tiles can copy them between each other freely.
+struct PathTile {
+    dist: Vec<f32>,
+    succ: Vec<usize>,
+}
+
+/// Super-blocked APSP with successor tracking: the same three-phase
+/// schedule as [`solve_with`], with a successor tile carried alongside
+/// every distance tile through the worker pool
+/// ([`minplus::panel_row_succ`] / [`minplus::panel_col_succ`] /
+/// [`minplus::interior_succ`]).
+///
+/// Diagonal tiles are solved by the CPU phase-1 kernel with successor
+/// tracking ([`minplus::phase1_succ`]) — the AOT device artifacts compute
+/// distances only, so path mode cannot loop diagonal tiles back through
+/// the device engine.  Because `phase1_succ` applies phase-1 relaxation
+/// order and every succ primitive performs the distance arithmetic of its
+/// distance-only twin, the returned distances are **bitwise equal** to
+/// [`solve_cpu`] (and hence to `apsp::blocked::solve(padded, bucket)`),
+/// regardless of pool width.  Infallible: no pluggable solver is involved.
+pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResult, Report) {
+    let n = graph.n();
+    let b = config.bucket;
+    assert!(b > 0, "superblock bucket must be positive");
+    let workers = config.effective_workers();
+    if n == 0 {
+        return (
+            PathsResult::from_parts(graph.clone(), Vec::new()),
+            Report::new(0, 0, b, 0, workers),
+        );
+    }
+    let blocks = n.div_ceil(b);
+    let padded_n = blocks * b;
+    let padded = if padded_n == n {
+        graph.clone()
+    } else {
+        graph.padded(padded_n)
+    };
+    let full_succ = paths::init_succ(&padded);
+
+    let tiles = split_path_tiles(&padded, &full_succ, blocks, b);
+    let mut report = Report::new(n, padded_n, b, blocks, workers);
+
+    for k in 0..blocks {
+        // ---- phase 1: diagonal super-tile, CPU succ kernel in place
+        let t0 = Instant::now();
+        let diag_idx = k * blocks + k;
+        let (diag, dsucc) = {
+            let mut guard = tiles[diag_idx].write().unwrap();
+            let tile = &mut *guard;
+            minplus::phase1_succ(&mut tile.dist, &mut tile.succ, b);
+            (tile.dist.clone(), tile.succ.clone())
+        };
+        let diag_seconds = t0.elapsed().as_secs_f64();
+
+        // ---- phases 2 + 3: stream tiles through the pool as deps resolve
+        let t1 = Instant::now();
+        let plan = schedule::round_plan(blocks, k);
+        // same degenerate-grid escape hatch as the distance tier: split
+        // interior rows across spare pool width when there are fewer
+        // interior tiles than workers
+        let intra_threads = match plan.interior_tiles() {
+            n_int if n_int > 0 && n_int < workers => (workers / n_int).max(1),
+            _ => 1,
+        };
+        pool::run_tasks(&plan.dep_graph(), workers, |id| match plan.tasks[id].op {
+            TileOp::PanelRow { bj } => {
+                let mut guard = tiles[k * blocks + bj].write().unwrap();
+                let tile = &mut *guard;
+                minplus::panel_row_succ(&mut tile.dist, &mut tile.succ, &diag, &dsucc, b);
+            }
+            TileOp::PanelCol { bi } => {
+                let mut guard = tiles[bi * blocks + k].write().unwrap();
+                let tile = &mut *guard;
+                minplus::panel_col_succ(&mut tile.dist, &mut tile.succ, &diag, b);
+            }
+            TileOp::Interior { bi, bj } => {
+                let col = tiles[bi * blocks + k].read().unwrap();
+                let row = tiles[k * blocks + bj].read().unwrap();
+                let mut guard = tiles[bi * blocks + bj].write().unwrap();
+                let tile = &mut *guard;
+                minplus::interior_succ_parallel(
+                    &mut tile.dist,
+                    &mut tile.succ,
+                    &col.dist,
+                    &col.succ,
+                    &row.dist,
+                    b,
+                    intra_threads,
+                );
+            }
+        });
+        report.rounds.push(progress::RoundStats {
+            round: k,
+            diag_seconds,
+            tile_seconds: t1.elapsed().as_secs_f64(),
+            panel_tiles: plan.panel_tiles(),
+            interior_tiles: plan.interior_tiles(),
+        });
+    }
+
+    let (mut dist, mut succ) = join_path_tiles(&tiles, blocks, b);
+    if padded_n != n {
+        // truncate both matrices; padded vertices are unreachable, so no
+        // surviving successor can reference one
+        let mut cut = vec![NO_PATH; n * n];
+        for i in 0..n {
+            cut[i * n..(i + 1) * n].copy_from_slice(&succ[i * padded_n..i * padded_n + n]);
+        }
+        succ = cut;
+        dist = dist.truncated(n);
+    }
+    (PathsResult::from_parts(dist, succ), report)
+}
+
+/// Cut the padded matrix + successor matrix into detached path tiles.
+fn split_path_tiles(
+    w: &DistMatrix,
+    full_succ: &[usize],
+    blocks: usize,
+    b: usize,
+) -> Vec<RwLock<PathTile>> {
+    let m = w.n();
+    debug_assert_eq!(m, blocks * b);
+    debug_assert_eq!(full_succ.len(), m * m);
+    let mut tiles = Vec::with_capacity(blocks * blocks);
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            let mut dist = Vec::with_capacity(b * b);
+            let mut succ = Vec::with_capacity(b * b);
+            for i in 0..b {
+                let base = (bi * b + i) * m + bj * b;
+                dist.extend_from_slice(&w.as_slice()[base..base + b]);
+                succ.extend_from_slice(&full_succ[base..base + b]);
+            }
+            tiles.push(RwLock::new(PathTile { dist, succ }));
+        }
+    }
+    tiles
+}
+
+/// Reassemble path tiles into one `(blocks·b) × (blocks·b)` matrix pair.
+fn join_path_tiles(
+    tiles: &[RwLock<PathTile>],
+    blocks: usize,
+    b: usize,
+) -> (DistMatrix, Vec<usize>) {
+    let m = blocks * b;
+    let mut dist = vec![0f32; m * m];
+    let mut succ = vec![NO_PATH; m * m];
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            let tile = tiles[bi * blocks + bj].read().unwrap();
+            for i in 0..b {
+                let base = (bi * b + i) * m + bj * b;
+                dist[base..base + b].copy_from_slice(&tile.dist[i * b..(i + 1) * b]);
+                succ[base..base + b].copy_from_slice(&tile.succ[i * b..(i + 1) * b]);
+            }
+        }
+    }
+    (DistMatrix::from_vec(m, dist), succ)
+}
+
 /// Cut the padded matrix into row-major `b × b` tile buffers (row-major
 /// super-grid order).
 fn split_tiles(w: &DistMatrix, blocks: usize, b: usize) -> Vec<RwLock<Vec<f32>>> {
@@ -318,6 +490,67 @@ mod tests {
         let (dist, _) = solve_with(&g, &cfg(16, 2), |tile| Ok(apsp::naive::solve(&tile)))
             .unwrap();
         assert!(dist.allclose(&apsp::naive::solve(&g), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn paths_distances_bitwise_equal_to_distance_tier() {
+        // path mode's documented contract, across pool widths
+        let g = generators::erdos_renyi(96, 0.3, 11);
+        let oracle = apsp::blocked::solve(&g, 32);
+        for workers in [1, 2, 4] {
+            let (r, report) = solve_paths(&g, &cfg(32, workers));
+            assert_eq!(r.dist, oracle, "workers={workers}");
+            assert_eq!(report.round_count(), 3);
+        }
+    }
+
+    #[test]
+    fn paths_non_multiple_n_pads_truncates_and_reconstructs() {
+        let g = generators::erdos_renyi(50, 0.4, 13);
+        let (r, report) = solve_paths(&g, &cfg(16, 4));
+        assert_eq!(report.padded, 64);
+        assert_eq!(r.n(), 50);
+        // distances bitwise vs the padded blocked oracle
+        let oracle = apsp::blocked::solve(&g.padded(64), 16).truncated(50);
+        assert_eq!(r.dist, oracle);
+        // every reconstructed path is a real edge walk of the right weight,
+        // and no successor references a padded vertex
+        for i in 0..50 {
+            for j in 0..50 {
+                let s = r.succ_at(i, j);
+                assert!(
+                    s == crate::apsp::paths::NO_PATH || s < 50,
+                    "({i},{j}) references padded vertex {s}"
+                );
+                match r.path(i, j) {
+                    Some(_) => {
+                        let w = r.path_weight(&g, i, j).expect("valid edge walk");
+                        let d = r.dist.get(i, j) as f64;
+                        assert!((w - d).abs() < 1e-3, "({i},{j}): {w} vs {d}");
+                    }
+                    None => assert!(!r.dist.get(i, j).is_finite() || i == j),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paths_pool_width_cannot_perturb_successors() {
+        // panel/interior writes only read finalized inputs, so even the
+        // successor matrix is schedule-independent
+        let g = generators::erdos_renyi(80, 0.35, 17);
+        let (serial, _) = solve_paths(&g, &cfg(16, 1));
+        for workers in [2, 4, 8] {
+            let (par, _) = solve_paths(&g, &cfg(16, workers));
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn paths_empty_graph() {
+        let (r, report) = solve_paths(&DistMatrix::unconnected(0), &cfg(32, 2));
+        assert_eq!(r.n(), 0);
+        assert_eq!(report.round_count(), 0);
     }
 
     #[test]

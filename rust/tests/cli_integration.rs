@@ -146,6 +146,43 @@ fn solve_file_end_to_end() {
 }
 
 #[test]
+fn solve_paths_flag_prints_reconstructed_path() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fw_cli_paths_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.edges");
+    let (ok, _, stderr) = run(&[
+        "gen", "--model", "ring", "--n", "12",
+        "--out", graph_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    // a ring's 0 → 5 path is forced through every intermediate vertex
+    let (ok, stdout, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--paths", "--src", "0", "--dst", "5",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(
+        stdout.contains("path 0 -> 5: 0 -> 1 -> 2 -> 3 -> 4 -> 5"),
+        "unexpected path output: {stdout}"
+    );
+    assert!(stdout.contains("cost"), "{stdout}");
+    // unreachable src/dst out of range is a clean error
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--paths", "--src", "0", "--dst", "99",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--src/--dst"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn info_describes_artifacts() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts/ not built");

@@ -212,6 +212,7 @@ fn oversized_graph_served_by_superblock_tier() {
                 graph: g,
                 variant: "staged".into(),
                 no_cache: true,
+                want_paths: false,
             })
             .expect("oversized graphs are served by the superblock tier");
         assert_eq!(resp.source, coordinator::Source::SuperBlock);
@@ -220,6 +221,45 @@ fn oversized_graph_served_by_superblock_tier() {
         assert!(resp.dist.get(0, 519).is_infinite());
         assert_eq!(resp.dist.get(519, 519), 0.0);
         let _ = server;
+    });
+}
+
+#[test]
+fn device_scale_paths_request_falls_back_to_cpu() {
+    with_server!(|coord, server| {
+        // device-routed size, but want_paths: the artifacts compute
+        // distances only, so the engine's CPU path fallback serves it.
+        // n=100 is NOT a multiple of the tile — the fallback must pad to
+        // 128 and truncate (banded fast path), never degrade to the
+        // single-threaded reference solver
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let g = generators::erdos_renyi(100, 0.3, 317);
+        let resp = client.solve_paths(&g, "staged").unwrap();
+        assert_eq!(resp.source, coordinator::Source::Cpu);
+        let succ = resp.succ.clone().expect("successors present");
+        let r = fw_stage::apsp::paths::PathsResult::from_parts(resp.dist.clone(), succ);
+        // distances bitwise-equal to the padded CPU blocked tier (the
+        // fallback's documented padding trick)
+        assert_eq!(r.dist, apsp::blocked::solve(&g.padded(128), 32).truncated(100));
+        // every reconstructed path is a real walk of the reported length
+        for (i, j) in [(0, 99), (17, 4), (50, 50)] {
+            match r.path(i, j) {
+                Some(_) => {
+                    let w = r.path_weight(&g, i, j).expect("valid edge walk");
+                    let d = r.dist.get(i, j) as f64;
+                    assert!((w - d).abs() < 1e-3, "({i},{j}): {w} vs {d}");
+                }
+                None => assert!(!r.dist.get(i, j).is_finite() || i == j),
+            }
+        }
+        // and a device-routed *distance* request for the same graph still
+        // uses the device, sharing the cache entry without clobbering succ
+        let dist_resp = client.solve(&g, "staged").unwrap();
+        assert_eq!(dist_resp.source, coordinator::Source::Cache);
+        let again = client.solve_paths(&g, "staged").unwrap();
+        assert_eq!(again.source, coordinator::Source::Cache);
+        assert_eq!(again.succ, resp.succ);
+        let _ = coord;
     });
 }
 
@@ -237,6 +277,7 @@ fn invalid_superblock_bucket_override_is_clean_error() {
                     graph: DistMatrix::unconnected(600),
                     variant: "staged".into(),
                     no_cache: true,
+                    want_paths: false,
                 })
                 .unwrap_err();
             assert!(

@@ -247,10 +247,14 @@ fn prop_wire_request_roundtrip() {
             graph,
             variant: ["staged", "blocked", "naive"][rng.range(0, 3)].to_string(),
             no_cache: rng.chance(0.5),
+            want_paths: rng.chance(0.5),
         };
         let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
         if back.id != req.id || back.variant != req.variant || back.graph != req.graph {
             return Err("fields diverged".to_string());
+        }
+        if back.want_paths != req.want_paths {
+            return Err("want_paths diverged".to_string());
         }
         Ok(())
     });

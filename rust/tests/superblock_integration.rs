@@ -95,6 +95,7 @@ fn oversized_request_served_and_cached() {
             graph: g.clone(),
             variant: "staged".into(),
             no_cache: false,
+            want_paths: false,
         };
         let first = coord.solve(&req).expect("n=1024 must be served now");
         assert_eq!(first.source, Source::SuperBlock);
@@ -130,6 +131,7 @@ fn explicit_superblock_variant() {
                 graph: g.clone(),
                 variant: "superblock".into(),
                 no_cache: true,
+                want_paths: false,
             })
             .unwrap();
         assert_eq!(resp.source, Source::SuperBlock);
