@@ -1,54 +1,110 @@
 //! CPU-solver microbenchmarks — the substrate numbers every other bench
 //! builds on: the Table 1 "CPU" column at laptop scale for each solver
-//! family, plus the §4.3 doubly-tiled layout transform (free on the GPU,
-//! priced here because the simulator's bandwidth model assumes it).
+//! family, the register-tiled phase-3 microkernel in isolation (packed vs
+//! strided column panel), plus the §4.3 doubly-tiled layout transform
+//! (free on the GPU, priced here because the simulator's bandwidth model
+//! assumes it).
 //!
 //! Run: `cargo bench --bench apsp`
+//!
+//! Every run also appends a machine-readable entry to the repo's perf
+//! trajectory (`BENCH_apsp.json` at the repo root; `FW_BENCH_JSON=<path>`
+//! redirects, `FW_BENCH_JSON=off` disables) — the file CI uploads and the
+//! README's perf table quotes.
 
 mod common;
 
+use fw_stage::apsp::kernel::{self, PanelBuf};
 use fw_stage::graph::generators;
 use fw_stage::layout;
-use fw_stage::perf::bench;
+use fw_stage::perf::{bench, BenchResult, BenchSink};
+use fw_stage::util::json::Json;
 use fw_stage::{apsp, perf};
+
+/// Print the human line and record the machine one.
+fn emit(sink: &mut BenchSink, r: &BenchResult, units: Option<f64>) {
+    match units {
+        Some(u) => {
+            println!("{}", r.report_throughput(u, "tasks"));
+            sink.record_with(r, vec![("tasks_per_sec", Json::Num(u / r.median_s))]);
+        }
+        None => {
+            println!("{}", r.report());
+            sink.record(r);
+        }
+    }
+}
 
 fn main() {
     let n = if common::fast_mode() { 128 } else { 256 };
     let n3 = (n as f64).powi(3);
     let g = generators::erdos_renyi(n, 0.3, 17);
     let cfg = common::config_for(n);
+    let mut sink = BenchSink::from_env("apsp");
+    sink.set_meta("n", Json::Num(n as f64));
+    sink.set_meta("fast", Json::Bool(common::fast_mode()));
 
     common::banner(&format!("APSP CPU solvers (n={n})"));
     let r = bench("naive triple loop", &cfg, || {
         perf::black_box(apsp::naive::solve(&g));
     });
-    println!("{}", r.report_throughput(n3, "tasks"));
+    emit(&mut sink, &r, Some(n3));
     let r = bench("blocked s=32", &cfg, || {
         perf::black_box(apsp::blocked::solve(&g, 32));
     });
-    println!("{}", r.report_throughput(n3, "tasks"));
+    emit(&mut sink, &r, Some(n3));
     let r = bench("parallel s=32 t=4", &cfg, || {
         perf::black_box(apsp::parallel::solve(&g, 32, 4));
     });
-    println!("{}", r.report_throughput(n3, "tasks"));
+    emit(&mut sink, &r, Some(n3));
     let r = bench("johnson (sparse family)", &cfg, || {
         perf::black_box(apsp::johnson::solve(&g).expect("no negative cycle"));
     });
-    println!("{}", r.report_throughput(n3, "tasks"));
+    emit(&mut sink, &r, Some(n3));
     let r = bench("paths (successor matrix)", &cfg, || {
         perf::black_box(apsp::paths::solve(&g));
     });
-    println!("{}", r.report_throughput(n3, "tasks"));
+    emit(&mut sink, &r, Some(n3));
+
+    common::banner("min-plus microkernel (one phase-3 tile, s=32)");
+    // one doubly-dependent tile update against panels living in the full
+    // n-stride matrix — the unit of work phase 3 performs (nb-1)² times
+    // per stage; `tasks` here is the tile's s³ min-plus updates
+    let s = 32;
+    let s3 = (s as f64).powi(3);
+    let data = g.as_slice();
+    let mut dst = vec![0f32; s * n];
+    dst.copy_from_slice(&data[s * n..2 * s * n]); // tile rows s..2s
+    let col = &data[s * n..]; // col panel at (s, 0), stride n
+    let row = &data[..s * n]; // row panel rows 0..s, stride n
+    let r = bench("phase3 tile strided col", &cfg, || {
+        kernel::minplus_panel(&mut dst[s..], n, col, n, &row[s..], n, s, s, s);
+        perf::black_box(&dst);
+    });
+    emit(&mut sink, &r, Some(s3));
+    let mut pack = PanelBuf::default();
+    let r = bench("phase3 tile packed col", &cfg, || {
+        pack.pack_dist(col, n, s, s);
+        kernel::minplus_panel(&mut dst[s..], n, pack.dist(), s, &row[s..], n, s, s, s);
+        perf::black_box(&dst);
+    });
+    emit(&mut sink, &r, Some(s3));
 
     common::banner("doubly-tiled layout transform (§4.3)");
     let data: Vec<f32> = g.as_slice().to_vec();
     let r = bench("to_doubly_tiled s=32 t=4", &cfg, || {
         perf::black_box(layout::to_doubly_tiled(&data, n, 32, 4));
     });
-    println!("{}", r.report());
+    emit(&mut sink, &r, None);
     let tiled = layout::to_doubly_tiled(&data, n, 32, 4);
     let r = bench("from_doubly_tiled s=32 t=4", &cfg, || {
         perf::black_box(layout::from_doubly_tiled(&tiled, n, 32, 4));
     });
-    println!("{}", r.report());
+    emit(&mut sink, &r, None);
+
+    match sink.finish() {
+        Ok(Some(path)) => println!("\nperf trajectory appended: {}", path.display()),
+        Ok(None) => println!("\nperf trajectory sink disabled (FW_BENCH_JSON=off)"),
+        Err(e) => eprintln!("\nWARN: could not write perf trajectory: {e}"),
+    }
 }

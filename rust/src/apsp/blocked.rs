@@ -5,21 +5,32 @@
 //! 1. **independent block**: full FW on the diagonal tile (sequential k);
 //! 2. **singly dependent blocks**: the i-aligned row panel and j-aligned
 //!    column panel, each relaxed against the final diagonal tile
-//!    (sequential k — one dependency is in the panel itself);
+//!    (sequential k — one dependency is in the panel itself); the inner
+//!    j sweep is branchless ([`kernel::relax_row`]);
 //! 3. **doubly dependent blocks**: every remaining tile relaxed by a
-//!    (min, +) product of its column-panel and row-panel tiles; k is
-//!    *innermost* (Fig. 2 line 37) because both dependencies are final —
-//!    the same order-freedom the GPU kernel exploits.
+//!    (min, +) product of its column-panel and row-panel tiles; both
+//!    dependencies are final, so the whole update is a pure min-reduction
+//!    and runs through the register-tiled microkernel
+//!    ([`kernel::minplus_panel`]) — the CPU analog of the paper's
+//!    multi-stage kernel.  The column-panel tile is packed once per tile
+//!    row ([`kernel::PanelBuf`], the §4.3 coalescing analog), which also
+//!    de-aliases it from the in-place destination rows.
 //!
-//! The phase-3 inner loop is written i-k-j so the innermost loop walks two
-//! rows contiguously — the CPU analog of the coalesced accesses §4.3
-//! engineers on the GPU.
+//! Sizes that are not a tile multiple are **padded to the next multiple
+//! and truncated** (the device tier's own trick — padding adds only
+//! unreachable vertices, so distances among real vertices are unchanged),
+//! keeping every n on the blocked fast path instead of silently degrading
+//! to the O(n³) scalar solver.  The one exception is `n < s`: a single
+//! padded tile runs phase 1 alone, which *is* the naive pivot order, so
+//! the naive solver is called directly — same bits, none of the padded
+//! arithmetic.
 
+use super::kernel::{self, PanelBuf};
 use super::paths::{self, PathsResult};
 use crate::graph::DistMatrix;
 
-/// Blocked FW with tile size `s`. Falls back to the naive solver when
-/// `n % s != 0` — which covers every `0 < n < s`, since then `n % s == n`.
+/// Blocked FW with tile size `s`.  `n % s != 0` pads up and truncates
+/// (see module docs); `s == 0` degrades to the naive solver.
 pub fn solve(w: &DistMatrix, s: usize) -> DistMatrix {
     let mut out = w.clone();
     solve_in_place(&mut out, s);
@@ -34,19 +45,27 @@ pub fn solve(w: &DistMatrix, s: usize) -> DistMatrix {
 /// the same f32 additions in the same order, and the branchy
 /// `cand < cur` accept test picks the same value as the distance-only
 /// branchless `min` (no NaN by [`DistMatrix::validate`], and FW sums never
-/// produce `-0.0`).  Falls back to the reference solver
-/// ([`paths::solve`]) for degenerate params, mirroring the naive fallback.
+/// produce `-0.0`).  Non-multiple sizes pad and truncate exactly like the
+/// distance solver (padded vertices are unreachable, so no surviving
+/// successor can reference one); `n < s` and `s == 0` run the reference
+/// solver ([`paths::solve`]) directly — for a single padded tile that is
+/// the identical pivot order, bit for bit.
 pub fn solve_paths(w: &DistMatrix, s: usize) -> PathsResult {
     let n = w.n();
     if n == 0 {
         return PathsResult::from_parts(w.clone(), Vec::new());
     }
-    if s == 0 || n % s != 0 {
+    if s == 0 || (n % s != 0 && n < s) {
         return paths::solve(w);
+    }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        return solve_paths(&w.padded(padded_n), s).truncated(n);
     }
     let mut dist = w.clone();
     let mut succ = paths::init_succ(w);
     let nb = n / s;
+    let mut pack = PanelBuf::default();
     for b in 0..nb {
         let ks = b * s;
         phase1_diag_succ(&mut dist, &mut succ, ks, s);
@@ -61,9 +80,18 @@ pub fn solve_paths(w: &DistMatrix, s: usize) -> PathsResult {
             }
         }
         for ib in 0..nb {
+            if ib == b {
+                continue;
+            }
+            let is = ib * s;
+            // the column-panel tile (ib, b) is read-only for the rest of
+            // the stage (phase 3 never writes column block b), so one pack
+            // serves every jb
+            pack.pack_dist(&dist.as_slice()[is * n + ks..], n, s, s);
+            pack.pack_succ(&succ[is * n + ks..], n, s, s);
             for jb in 0..nb {
-                if ib != b && jb != b {
-                    phase3_tile_succ(&mut dist, &mut succ, ks, ib * s, jb * s, s);
+                if jb != b {
+                    phase3_tile_succ(&mut dist, &mut succ, &pack, ks, is, jb * s, s);
                 }
             }
         }
@@ -77,11 +105,21 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize) {
     if n == 0 {
         return;
     }
-    if s == 0 || n % s != 0 {
+    if s == 0 || (n % s != 0 && n < s) {
+        // s == 0 is degenerate; n < s is a single padded tile, i.e. pure
+        // phase 1 — the naive pivot order bit for bit, minus the padding
         super::naive::solve_in_place(w);
         return;
     }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        let mut padded = w.padded(padded_n);
+        solve_in_place(&mut padded, s);
+        *w = padded.truncated(n);
+        return;
+    }
     let nb = n / s;
+    let mut pack = PanelBuf::default();
     for b in 0..nb {
         let ks = b * s;
         phase1_diag(w, ks, s);
@@ -96,9 +134,14 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize) {
             }
         }
         for ib in 0..nb {
+            if ib == b {
+                continue;
+            }
+            let is = ib * s;
+            pack.pack_dist(&w.as_slice()[is * n + ks..], n, s, s);
             for jb in 0..nb {
-                if ib != b && jb != b {
-                    phase3_tile(w, ks, ib * s, jb * s, s);
+                if jb != b {
+                    phase3_tile(w, &pack, ks, is, jb * s, s);
                 }
             }
         }
@@ -106,6 +149,7 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize) {
 }
 
 /// Phase 1: full FW restricted to the diagonal tile at (ks, ks).
+/// Sequential k (self-dependent), branchless j sweep.
 pub(crate) fn phase1_diag(w: &mut DistMatrix, ks: usize, s: usize) {
     let n = w.n();
     let data = w.as_mut_slice();
@@ -118,12 +162,8 @@ pub(crate) fn phase1_diag(w: &mut DistMatrix, ks: usize, s: usize) {
             if !wik.is_finite() {
                 continue;
             }
-            for j in ks..ks + s {
-                let cand = wik + data[k * n + j];
-                if cand < data[i * n + j] {
-                    data[i * n + j] = cand;
-                }
-            }
+            let (out, row_k) = kernel::row_pair_mut(data, n, i, k, ks, s);
+            kernel::relax_row(out, row_k, wik);
         }
     }
 }
@@ -142,12 +182,8 @@ pub(crate) fn phase2_row_tile(w: &mut DistMatrix, ks: usize, js: usize, s: usize
             if !dik.is_finite() {
                 continue;
             }
-            for j in js..js + s {
-                let cand = dik + data[k * n + j];
-                if cand < data[i * n + j] {
-                    data[i * n + j] = cand;
-                }
-            }
+            let (out, row_k) = kernel::row_pair_mut(data, n, i, k, js, s);
+            kernel::relax_row(out, row_k, dik);
         }
     }
 }
@@ -163,19 +199,17 @@ pub(crate) fn phase2_col_tile(w: &mut DistMatrix, ks: usize, is: usize, s: usize
             if !wik.is_finite() {
                 continue;
             }
-            for j in ks..ks + s {
-                let cand = wik + data[k * n + j]; // diag row k
-                if cand < data[i * n + j] {
-                    data[i * n + j] = cand;
-                }
-            }
+            // i is outside the diagonal block, so i != k always
+            let (out, row_k) = kernel::row_pair_mut(data, n, i, k, ks, s);
+            kernel::relax_row(out, row_k, wik);
         }
     }
 }
 
 /// Phase 1 with successor tracking (same relaxation order as
 /// [`phase1_diag`]; both the pivot column `(i, k)` and the target live in
-/// the diagonal tile, so the successor source is `succ[i][k]`).
+/// the diagonal tile, so the successor source is `succ[i][k]`).  The succ
+/// write keeps the accept branchy — same values either way.
 pub(crate) fn phase1_diag_succ(w: &mut DistMatrix, succ: &mut [usize], ks: usize, s: usize) {
     let n = w.n();
     let data = w.as_mut_slice();
@@ -261,15 +295,35 @@ pub(crate) fn phase2_col_tile_succ(
     }
 }
 
-/// Phase 3 with successor tracking (order of [`phase3_tile`]; the pivot
-/// column `(i, k)` is in the column panel).  Plain indexed writes instead
-/// of the split-borrow trick — the accept branch needs the comparison
-/// anyway, and the succ write makes the inner loop non-vectorizable
-/// regardless.
+/// Split the matrix into the mutable destination rows (starting at tile
+/// row `is`) and the read-only `s × n` row panel (rows ks..ks+s).  Legal
+/// because phase-3 tiles never sit on the panel rows (`ib != b`).
+fn split_tile_rows(
+    data: &mut [f32],
+    n: usize,
+    s: usize,
+    is: usize,
+    ks: usize,
+) -> (&mut [f32], &[f32]) {
+    debug_assert_ne!(is, ks);
+    if is < ks {
+        let (lo, hi) = data.split_at_mut(ks * n);
+        (&mut lo[is * n..], &hi[..s * n])
+    } else {
+        let (lo, hi) = data.split_at_mut(is * n);
+        (&mut hi[..], &lo[ks * n..(ks + s) * n])
+    }
+}
+
+/// Phase 3 with successor tracking: same microkernel routing as
+/// [`phase3_tile`], with the packed column-panel successors as the copy
+/// source — distances *and* successors bitwise-match the scalar twin
+/// (ascending k, strict accept; see `kernel`'s module docs).
 #[inline]
 fn phase3_tile_succ(
     w: &mut DistMatrix,
     succ: &mut [usize],
+    col: &PanelBuf,
     ks: usize,
     is: usize,
     js: usize,
@@ -277,54 +331,31 @@ fn phase3_tile_succ(
 ) {
     let n = w.n();
     let data = w.as_mut_slice();
-    for i in is..is + s {
-        for k in ks..ks + s {
-            let wik = data[i * n + k];
-            if !wik.is_finite() {
-                continue;
-            }
-            let sik = succ[i * n + k];
-            for j in js..js + s {
-                let cand = wik + data[k * n + j];
-                if cand < data[i * n + j] {
-                    data[i * n + j] = cand;
-                    succ[i * n + j] = sik;
-                }
-            }
-        }
-    }
+    let (dst, panel) = split_tile_rows(data, n, s, is, ks);
+    kernel::minplus_panel_succ(
+        &mut dst[js..],
+        &mut succ[is * n + js..],
+        n,
+        col.dist(),
+        col.succ(),
+        s,
+        &panel[js..],
+        n,
+        s,
+        s,
+        s,
+    );
 }
 
-/// Phase 3: doubly-dependent tile at (is, js) relaxed against column-panel
-/// tile (is, ks) and row-panel tile (ks, js).  i-k-j order: `wik` is hoisted
-/// and both inner-row walks are contiguous.
+/// Phase 3: doubly-dependent tile at (is, js) relaxed against the packed
+/// column-panel tile (is, ks) and the in-place row-panel tile (ks, js),
+/// through the register-tiled microkernel.
 #[inline]
-fn phase3_tile(w: &mut DistMatrix, ks: usize, is: usize, js: usize, s: usize) {
+fn phase3_tile(w: &mut DistMatrix, col: &PanelBuf, ks: usize, is: usize, js: usize, s: usize) {
     let n = w.n();
     let data = w.as_mut_slice();
-    for i in is..is + s {
-        for k in ks..ks + s {
-            let wik = data[i * n + k];
-            if !wik.is_finite() {
-                continue;
-            }
-            let (row_k, row_i) = {
-                // rows i and k never alias in phase 3 (ib != b)
-                debug_assert_ne!(i, k);
-                if i < k {
-                    let (lo, hi) = data.split_at_mut(k * n);
-                    (&hi[js..js + s], &mut lo[i * n + js..i * n + js + s])
-                } else {
-                    let (lo, hi) = data.split_at_mut(i * n);
-                    (&lo[k * n + js..k * n + js + s], &mut hi[js..js + s])
-                }
-            };
-            // branchless min (vectorizes; see naive.rs)
-            for j in 0..s {
-                row_i[j] = row_i[j].min(wik + row_k[j]);
-            }
-        }
-    }
+    let (dst, panel) = split_tile_rows(data, n, s, is, ks);
+    kernel::minplus_panel(&mut dst[js..], n, col.dist(), s, &panel[js..], n, s, s, s);
 }
 
 #[cfg(test)]
@@ -364,9 +395,13 @@ mod tests {
     }
 
     #[test]
-    fn non_multiple_falls_back() {
+    fn non_multiple_pads_and_truncates() {
         let g = generators::erdos_renyi(50, 0.4, 3);
-        assert_matches_naive(&g, 32); // 50 % 32 != 0 → naive path
+        assert_matches_naive(&g, 32); // 50 % 32 != 0 → padded to 64
+        // the pad-and-truncate contract, bitwise: solving the padded graph
+        // directly and cutting the corner is exactly what solve() does
+        let padded = solve(&g.padded(64), 32).truncated(50);
+        assert_eq!(solve(&g, 32), padded);
     }
 
     #[test]
@@ -380,13 +415,15 @@ mod tests {
         // n == s: exactly one diagonal tile, the blocked path with nb = 1
         let exact = generators::erdos_renyi(16, 0.5, 23);
         assert_matches_naive(&exact, 16);
-        // 0 < n < s: n % s == n != 0, so the fallback guard fires without a
-        // separate `n < s` test (the condition this regression test pins)
+        // 0 < n < s: a single padded tile would run phase 1 alone — the
+        // naive pivot order — so the solver calls naive directly; pin the
+        // equivalence the shortcut relies on
         let small = generators::erdos_renyi(20, 0.5, 27);
         assert_matches_naive(&small, 32);
-        // the fallback runs the naive solver itself: bitwise equality
         let tiny = generators::erdos_renyi(7, 0.8, 31);
         assert_eq!(solve(&tiny, 32), naive::solve(&tiny));
+        // ... which must also be bitwise what the padded path computes
+        assert_eq!(solve(&tiny, 32), solve(&tiny.padded(32), 32).truncated(7));
     }
 
     #[test]
@@ -412,6 +449,9 @@ mod tests {
         // negative weights exercise the accept branch both ways
         let neg = generators::layered_dag(8, 8, 7);
         assert_eq!(solve_paths(&neg, 16).dist, solve(&neg, 16));
+        // padded sizes carry the same contract
+        let ragged = generators::erdos_renyi(50, 0.4, 71);
+        assert_eq!(solve_paths(&ragged, 32).dist, solve(&ragged, 32));
     }
 
     #[test]
@@ -435,12 +475,18 @@ mod tests {
     }
 
     #[test]
-    fn paths_degenerate_params_fall_back_to_reference() {
-        // n % s != 0 → the reference solver runs; results are identical
+    fn paths_non_multiple_pads_and_truncates() {
+        // n % s != 0 now pads instead of degrading to the reference
+        // solver: distances match the distance solver bitwise, and the
+        // result is exactly the padded solve, truncated
         let g = generators::erdos_renyi(50, 0.4, 71);
-        let fell_back = solve_paths(&g, 32);
-        let reference = crate::apsp::paths::solve(&g);
-        assert_eq!(fell_back, reference);
+        let r = solve_paths(&g, 32);
+        assert_eq!(r.dist, solve(&g, 32));
+        assert_eq!(r, solve_paths(&g.padded(64), 32).truncated(50));
+        // n < s still runs the reference solver (single padded tile ==
+        // naive pivot order; skip the padded arithmetic)
+        let small = generators::erdos_renyi(20, 0.5, 73);
+        assert_eq!(solve_paths(&small, 32), crate::apsp::paths::solve(&small));
         // empty graph
         let empty = solve_paths(&DistMatrix::unconnected(0), 16);
         assert_eq!(empty.n(), 0);

@@ -1,0 +1,748 @@
+//! Register-tiled (min, +) microkernel — the shared phase-3 engine of
+//! every blocked tier.
+//!
+//! The paper's 5× win comes from a multi-stage kernel in which each thread
+//! computes **multiple output cells from registers**, cutting shared-memory
+//! traffic until the scheduler can hide what latency remains (§4.2).  This
+//! module is the CPU analog: one microkernel computes an `MR × NR` register
+//! block of outputs per outer step, so the inner k-walk performs
+//! `MR + NR` loads per `MR · NR` min-plus updates instead of the
+//! `2 · NR` loads *plus `NR` stores per `NR` updates* of the scalar
+//! one-row-at-a-time loop it replaces (Rucci et al. report the same
+//! transformation carrying the blocked-FW schedule on KNL; PAPERS.md).
+//!
+//! Every caller — `apsp::blocked`, `apsp::parallel`,
+//! `superblock::minplus` — routes its doubly-dependent (phase-3) updates
+//! through [`minplus_panel`] / [`minplus_panel_succ`], and its phase-1/2
+//! branchless j-sweeps through [`relax_row`].  The conformance suite pins
+//! the tiers against each other bitwise, so the rules that make the
+//! tiling legal are load-bearing:
+//!
+//! * **Phase 3 is a pure min-reduction.**  `dst`, `col`, and `row` are
+//!   disjoint and final for the duration of the call, so for each output
+//!   cell the result is a fold of `min` over `k`-indexed candidates
+//!   `col[r][k] + row[k][c]`.  f32 `min` over NaN-free, `-0.0`-free inputs
+//!   ([`crate::graph::DistMatrix::validate`] rejects NaN, `-inf`, *and*
+//!   `-0.0`, and the coordinator validates every request; FW sums never
+//!   create `-0.0` from clean inputs) is associative and commutative
+//!   **bitwise**,
+//!   so register blocking, write-once accumulation, and the hoisted
+//!   finiteness guard cannot perturb a single bit relative to the scalar
+//!   conditional-store loop.  The kernel tests pin this against a scalar
+//!   reference across tile sizes, infinity densities, and ragged edges.
+//! * **Phases 1–2 are not.**  Their `k` loop carries a dependency (row
+//!   `k` / column `k` are updated while still in use), so only the inner
+//!   `j` sweep may go branchless ([`relax_row`] — value-identical to the
+//!   branchy accept because `min` picks the same value); reassociating or
+//!   blocking `k` there would change results.  Callers keep `k` sequential.
+//! * **Successor twins replay the same accept sequence.**  The succ
+//!   kernel processes `k` in ascending order per cell with the strict
+//!   `cand < acc` accept, which is exactly the scalar order — so both the
+//!   distances *and* the successor matrix match the scalar twin bitwise.
+//!
+//! [`PanelBuf`] packs a strided column panel into a contiguous tile — the
+//! coalescing analog of the paper's §4.3 layout transform — which both
+//! feeds the microkernel unit-stride `k`-walks and resolves the borrow
+//! overlap when the column panel shares rows with `dst` (the in-place and
+//! banded tiers).  [`should_pack`] documents when packing pays on its own.
+
+/// Register-block rows: output cells each microkernel step holds per row
+/// group.  4 broadcast values per k-step.
+pub const MR: usize = 4;
+/// Register-block columns: one 8-wide f32 vector per accumulator row.
+pub const NR: usize = 8;
+
+/// Stride (in elements) past which packing a column panel into a
+/// contiguous buffer pays for itself even absent borrow aliasing: beyond
+/// ~a cache line per row-step the strided k-walk starts missing L1 and
+/// costing TLB entries, and the `rows × kk` copy is `1/cols` of the tile's
+/// arithmetic.  Drivers whose column panel shares rows with `dst`
+/// (in-place and banded phase 3) must pack regardless.
+pub const PACK_MIN_STRIDE: usize = 128;
+
+/// Whether packing a `rows × kk` column panel read at `stride` is worth
+/// the copy when the caller has a choice (detached tiles are already
+/// contiguous, `stride == kk`, and never repack).
+#[inline]
+pub fn should_pack(stride: usize, kk: usize) -> bool {
+    stride >= PACK_MIN_STRIDE && stride > kk
+}
+
+/// Branchless (min, +) row sweep shared by the phase-1/2 bodies:
+/// `out[j] = min(out[j], wik + row_k[j])`.
+///
+/// Value-identical to the branchy `if cand < out[j]` accept (no NaN, no
+/// `-0.0`, and equal floats share one bit pattern), and free of the store
+/// branch, so the sweep autovectorizes.  Callers must keep `k` sequential
+/// — see the module docs for why phases 1–2 admit only this much.
+#[inline(always)]
+pub fn relax_row(out: &mut [f32], row_k: &[f32], wik: f32) {
+    debug_assert_eq!(out.len(), row_k.len());
+    let len = out.len().min(row_k.len());
+    for j in 0..len {
+        out[j] = out[j].min(wik + row_k[j]);
+    }
+}
+
+/// Disjoint `(&mut row_i[j0..j0+len], &row_k[j0..j0+len])` views of two
+/// distinct rows of a row-major `… × n` matrix — the split-borrow that
+/// lets the in-place phase-1/2 sweeps run branchless without indexing
+/// through the full buffer on every element.
+#[inline]
+pub fn row_pair_mut(
+    data: &mut [f32],
+    n: usize,
+    i: usize,
+    k: usize,
+    j0: usize,
+    len: usize,
+) -> (&mut [f32], &[f32]) {
+    debug_assert_ne!(i, k, "row_pair_mut requires distinct rows");
+    if i < k {
+        let (lo, hi) = data.split_at_mut(k * n);
+        (&mut lo[i * n + j0..i * n + j0 + len], &hi[j0..j0 + len])
+    } else {
+        let (lo, hi) = data.split_at_mut(i * n);
+        (&mut hi[j0..j0 + len], &lo[k * n + j0..k * n + j0 + len])
+    }
+}
+
+/// Phase-3 panel update, distance-only: for every cell of the
+/// `rows × cols` block at `dst` (row-major, `dst_stride`),
+///
+/// ```text
+/// dst[r][c] = min(dst[r][c], min over k < kk of col[r][k] + row[k][c])
+/// ```
+///
+/// `col` is the `rows × kk` column-panel block (`col_stride`), `row` the
+/// `kk × cols` row-panel block (`row_stride`).  All three regions must be
+/// disjoint (the packed-panel path exists for callers whose column panel
+/// aliases `dst` rows).  Bitwise-identical to the scalar i-k-j
+/// conditional-store loop — see the module docs for the argument and the
+/// tests that pin it.
+pub fn minplus_panel(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    debug_assert!(rows == 0 || cols == 0 || (rows - 1) * dst_stride + cols <= dst.len());
+    debug_assert!(rows == 0 || kk == 0 || (rows - 1) * col_stride + kk <= col.len());
+    debug_assert!(kk == 0 || cols == 0 || (kk - 1) * row_stride + cols <= row.len());
+    let mut rb = 0;
+    while rb + MR <= rows {
+        let col_rows = &col[rb * col_stride..];
+        let mut cb = 0;
+        while cb + NR <= cols {
+            micro_full(
+                &mut dst[rb * dst_stride + cb..],
+                dst_stride,
+                col_rows,
+                col_stride,
+                &row[cb..],
+                row_stride,
+                kk,
+            );
+            cb += NR;
+        }
+        if cb < cols {
+            micro_edge(
+                &mut dst[rb * dst_stride + cb..],
+                dst_stride,
+                col_rows,
+                col_stride,
+                &row[cb..],
+                row_stride,
+                MR,
+                cols - cb,
+                kk,
+            );
+        }
+        rb += MR;
+    }
+    if rb < rows {
+        micro_edge(
+            &mut dst[rb * dst_stride..],
+            dst_stride,
+            &col[rb * col_stride..],
+            col_stride,
+            row,
+            row_stride,
+            rows - rb,
+            cols,
+            kk,
+        );
+    }
+}
+
+/// Scalar i-k-j conditional-store reference for [`minplus_panel`] — the
+/// loop shape every phase-3 body had before the microkernel, kept as the
+/// one source of truth the register path is differentially pinned against
+/// (kernel unit tests and `tests/conformance.rs` both use it; mirrors how
+/// `apsp::paths::solve` serves as the path tier's reference).  Not a hot
+/// path: O(rows·kk·cols) with a store branch per accept.
+pub fn minplus_panel_reference(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    for r in 0..rows {
+        for k in 0..kk {
+            let a = col[r * col_stride + k];
+            if !a.is_finite() {
+                continue;
+            }
+            for c in 0..cols {
+                let cand = a + row[k * row_stride + c];
+                if cand < dst[r * dst_stride + c] {
+                    dst[r * dst_stride + c] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Full `MR × NR` register block: load the outputs once, fold the whole
+/// k-walk in registers, store once.  The finiteness guard is hoisted out
+/// of the inner sweep: a k-step is skipped only when **all** `MR`
+/// column-panel values are `+inf` (their `min` is then `+inf`; any finite
+/// value would make it finite), and `+inf` candidates never lower a `min`,
+/// so the skip is a bitwise no-op.
+#[inline(always)]
+fn micro_full(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    kk: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for r in 0..MR {
+        acc[r].copy_from_slice(&dst[r * dst_stride..r * dst_stride + NR]);
+    }
+    for k in 0..kk {
+        let a = [
+            col[k],
+            col[col_stride + k],
+            col[2 * col_stride + k],
+            col[3 * col_stride + k],
+        ];
+        if !a[0].min(a[1]).min(a[2]).min(a[3]).is_finite() {
+            continue;
+        }
+        let row_k = &row[k * row_stride..k * row_stride + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            for c in 0..NR {
+                acc[r][c] = acc[r][c].min(ar + row_k[c]);
+            }
+        }
+    }
+    for r in 0..MR {
+        dst[r * dst_stride..r * dst_stride + NR].copy_from_slice(&acc[r]);
+    }
+}
+
+/// Ragged-edge fallback for blocks narrower than `MR × NR`: a plain scalar
+/// fold per cell, still ascending in `k`, so edges carry the same bitwise
+/// guarantee as the register path.
+#[inline]
+fn micro_edge(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    for r in 0..rows {
+        let out = &mut dst[r * dst_stride..r * dst_stride + cols];
+        for k in 0..kk {
+            let a = col[r * col_stride + k];
+            if !a.is_finite() {
+                continue;
+            }
+            let row_k = &row[k * row_stride..k * row_stride + cols];
+            for c in 0..cols {
+                out[c] = out[c].min(a + row_k[c]);
+            }
+        }
+    }
+}
+
+/// Successor-tracking twin of [`minplus_panel`]: identical distance
+/// arithmetic and k order, with the strict `cand < acc` accept copying the
+/// column-panel successor `colsucc[r][k]` — so distances *and* successors
+/// are bitwise equal to the scalar succ loop.  `dsucc` shares
+/// `dst_stride`; `colsucc` shares `col_stride`.
+pub fn minplus_panel_succ(
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    debug_assert!(rows == 0 || cols == 0 || (rows - 1) * dst_stride + cols <= dsucc.len());
+    debug_assert!(rows == 0 || kk == 0 || (rows - 1) * col_stride + kk <= colsucc.len());
+    let mut rb = 0;
+    while rb + MR <= rows {
+        let col_rows = &col[rb * col_stride..];
+        let csucc_rows = &colsucc[rb * col_stride..];
+        let mut cb = 0;
+        while cb + NR <= cols {
+            micro_full_succ(
+                &mut dst[rb * dst_stride + cb..],
+                &mut dsucc[rb * dst_stride + cb..],
+                dst_stride,
+                col_rows,
+                csucc_rows,
+                col_stride,
+                &row[cb..],
+                row_stride,
+                kk,
+            );
+            cb += NR;
+        }
+        if cb < cols {
+            micro_edge_succ(
+                &mut dst[rb * dst_stride + cb..],
+                &mut dsucc[rb * dst_stride + cb..],
+                dst_stride,
+                col_rows,
+                csucc_rows,
+                col_stride,
+                &row[cb..],
+                row_stride,
+                MR,
+                cols - cb,
+                kk,
+            );
+        }
+        rb += MR;
+    }
+    if rb < rows {
+        micro_edge_succ(
+            &mut dst[rb * dst_stride..],
+            &mut dsucc[rb * dst_stride..],
+            dst_stride,
+            &col[rb * col_stride..],
+            &colsucc[rb * col_stride..],
+            col_stride,
+            row,
+            row_stride,
+            rows - rb,
+            cols,
+            kk,
+        );
+    }
+}
+
+/// `MR × NR` register block with successor accumulators.  The accept stays
+/// branchy (the successor write needs the comparison anyway) but both
+/// accumulator blocks live in registers/L1 across the whole k-walk, so the
+/// store traffic of the scalar loop is still gone.
+#[inline(always)]
+fn micro_full_succ(
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    kk: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    let mut sacc = [[0usize; NR]; MR];
+    for r in 0..MR {
+        acc[r].copy_from_slice(&dst[r * dst_stride..r * dst_stride + NR]);
+        sacc[r].copy_from_slice(&dsucc[r * dst_stride..r * dst_stride + NR]);
+    }
+    for k in 0..kk {
+        let a = [
+            col[k],
+            col[col_stride + k],
+            col[2 * col_stride + k],
+            col[3 * col_stride + k],
+        ];
+        if !a[0].min(a[1]).min(a[2]).min(a[3]).is_finite() {
+            continue;
+        }
+        let row_k = &row[k * row_stride..k * row_stride + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            let sr = colsucc[r * col_stride + k];
+            for c in 0..NR {
+                let cand = ar + row_k[c];
+                if cand < acc[r][c] {
+                    acc[r][c] = cand;
+                    sacc[r][c] = sr;
+                }
+            }
+        }
+    }
+    for r in 0..MR {
+        dst[r * dst_stride..r * dst_stride + NR].copy_from_slice(&acc[r]);
+        dsucc[r * dst_stride..r * dst_stride + NR].copy_from_slice(&sacc[r]);
+    }
+}
+
+/// Ragged-edge successor fallback (ascending k, strict accept — the scalar
+/// order).
+#[inline]
+fn micro_edge_succ(
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    for r in 0..rows {
+        for k in 0..kk {
+            let a = col[r * col_stride + k];
+            if !a.is_finite() {
+                continue;
+            }
+            let sr = colsucc[r * col_stride + k];
+            let row_k = &row[k * row_stride..k * row_stride + cols];
+            for c in 0..cols {
+                let cand = a + row_k[c];
+                if cand < dst[r * dst_stride + c] {
+                    dst[r * dst_stride + c] = cand;
+                    dsucc[r * dst_stride + c] = sr;
+                }
+            }
+        }
+    }
+}
+
+/// Reusable packing buffers for column panels (and their successor twins).
+///
+/// Packing copies a `rows × kk` panel read at a large stride into a
+/// contiguous tile — the coalescing analog of the paper's §4.3 layout
+/// transform.  The in-place (`apsp::blocked`) and banded
+/// (`apsp::parallel`) phase-3 drivers *must* pack: their column panel
+/// shares rows with `dst`, and the copy is what turns the aliased region
+/// into a disjoint input the kernel's borrow contract requires.  Detached
+/// tiles (`superblock::minplus`) are contiguous already and skip it — see
+/// [`should_pack`].
+#[derive(Default)]
+pub struct PanelBuf {
+    dist: Vec<f32>,
+    succ: Vec<usize>,
+}
+
+impl PanelBuf {
+    /// Pack the `rows × kk` distance panel at `src` (row stride `stride`).
+    pub fn pack_dist(&mut self, src: &[f32], stride: usize, rows: usize, kk: usize) {
+        self.dist.clear();
+        self.dist.reserve(rows * kk);
+        for r in 0..rows {
+            self.dist.extend_from_slice(&src[r * stride..r * stride + kk]);
+        }
+    }
+
+    /// Pack the matching `rows × kk` successor panel.
+    pub fn pack_succ(&mut self, src: &[usize], stride: usize, rows: usize, kk: usize) {
+        self.succ.clear();
+        self.succ.reserve(rows * kk);
+        for r in 0..rows {
+            self.succ.extend_from_slice(&src[r * stride..r * stride + kk]);
+        }
+    }
+
+    /// The packed distance panel (contiguous, stride = kk).
+    pub fn dist(&self) -> &[f32] {
+        &self.dist
+    }
+
+    /// The packed successor panel (contiguous, stride = kk).
+    pub fn succ(&self) -> &[usize] {
+        &self.succ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// The bitwise oracle is the exported scalar loop itself.
+    use super::minplus_panel_reference as scalar_reference;
+
+    fn scalar_reference_succ(
+        dst: &mut [f32],
+        dsucc: &mut [usize],
+        ds: usize,
+        col: &[f32],
+        colsucc: &[usize],
+        cs: usize,
+        row: &[f32],
+        rs: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        for r in 0..rows {
+            for k in 0..kk {
+                let a = col[r * cs + k];
+                if !a.is_finite() {
+                    continue;
+                }
+                let s = colsucc[r * cs + k];
+                for c in 0..cols {
+                    let cand = a + row[k * rs + c];
+                    if cand < dst[r * ds + c] {
+                        dst[r * ds + c] = cand;
+                        dsucc[r * ds + c] = s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `rows × cols` buffer with an `inf_density` fraction of `+inf`
+    /// entries (the finiteness-guard stressor), embedded in a row-major
+    /// buffer of stride `stride ≥ cols`.
+    fn arb_panel(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        stride: usize,
+        inf_density: f64,
+    ) -> Vec<f32> {
+        assert!(stride >= cols);
+        let mut out = vec![f32::INFINITY; rows.max(1) * stride];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[r * stride + c] = if rng.next_f64() < inf_density {
+                    f32::INFINITY
+                } else {
+                    (rng.next_f64() * 15.0 - 5.0) as f32
+                };
+            }
+        }
+        out
+    }
+
+    fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn matches_scalar_reference_across_tiles_and_densities() {
+        // the pinned contract: register tiling, the hoisted all-inf guard,
+        // and write-once accumulation are bitwise no-ops for every tile
+        // size (incl. 33: ragged in both dimensions) and inf density
+        let mut rng = Rng::new(0xA11CE);
+        for s in [8usize, 16, 32, 33] {
+            for density in [0.0, 0.3, 0.9, 1.0] {
+                let stride = s + 7; // non-trivial strides
+                let base = arb_panel(&mut rng, s, s, stride, density);
+                let col = arb_panel(&mut rng, s, s, stride, density);
+                let row = arb_panel(&mut rng, s, s, stride, density);
+
+                let mut expect = base.clone();
+                scalar_reference(&mut expect, stride, &col, stride, &row, stride, s, s, s);
+                let mut got = base.clone();
+                minplus_panel(&mut got, stride, &col, stride, &row, stride, s, s, s);
+                assert!(bitwise_eq(&expect, &got), "s={s} density={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_rows_cols_k_match_scalar() {
+        // every remainder combination around the MR×NR register block
+        let mut rng = Rng::new(0xBEEF);
+        for rows in [1usize, 3, 4, 5, 7, 9] {
+            for cols in [1usize, 7, 8, 9, 15, 17] {
+                for kk in [0usize, 1, 5, 8, 13] {
+                    let ks = kk.max(1); // col/row strides (kk = 0 still allocates)
+                    let base = arb_panel(&mut rng, rows, cols, cols, 0.4);
+                    let col = arb_panel(&mut rng, rows, ks, ks, 0.4);
+                    let row = arb_panel(&mut rng, ks, cols, cols, 0.4);
+                    let mut expect = base.clone();
+                    scalar_reference(&mut expect, cols, &col, ks, &row, cols, rows, cols, kk);
+                    let mut got = base.clone();
+                    minplus_panel(&mut got, cols, &col, ks, &row, cols, rows, cols, kk);
+                    assert!(bitwise_eq(&expect, &got), "rows={rows} cols={cols} kk={kk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_equals_unpacked_bitwise() {
+        // PanelBuf packing is a pure copy: the kernel on the packed panel
+        // (stride = kk) must match the kernel on the strided original
+        let mut rng = Rng::new(0xC0FFEE);
+        for s in [8usize, 16, 32, 33] {
+            let stride = 2 * s + 3;
+            let base = arb_panel(&mut rng, s, s, stride, 0.3);
+            let col = arb_panel(&mut rng, s, s, stride, 0.3);
+            let row = arb_panel(&mut rng, s, s, stride, 0.3);
+
+            let mut strided = base.clone();
+            minplus_panel(&mut strided, stride, &col, stride, &row, stride, s, s, s);
+
+            let mut pack = PanelBuf::default();
+            pack.pack_dist(&col, stride, s, s);
+            let mut packed = base.clone();
+            minplus_panel(&mut packed, stride, pack.dist(), s, &row, stride, s, s, s);
+            assert!(bitwise_eq(&strided, &packed), "s={s}");
+        }
+    }
+
+    #[test]
+    fn succ_twin_matches_scalar_bitwise_dist_and_succ() {
+        let mut rng = Rng::new(0xD00D);
+        for s in [8usize, 16, 32, 33] {
+            for density in [0.0, 0.4, 0.95] {
+                let stride = s + 5;
+                let base = arb_panel(&mut rng, s, s, stride, density);
+                let col = arb_panel(&mut rng, s, s, stride, density);
+                let row = arb_panel(&mut rng, s, s, stride, density);
+                let base_succ: Vec<usize> = (0..s * stride).collect();
+                let col_succ: Vec<usize> = (0..s * stride).map(|v| v + 10_000).collect();
+
+                let mut ed = base.clone();
+                let mut es = base_succ.clone();
+                scalar_reference_succ(
+                    &mut ed, &mut es, stride, &col, &col_succ, stride, &row, stride, s, s, s,
+                );
+                let mut gd = base.clone();
+                let mut gs = base_succ.clone();
+                minplus_panel_succ(
+                    &mut gd, &mut gs, stride, &col, &col_succ, stride, &row, stride, s, s, s,
+                );
+                assert!(bitwise_eq(&ed, &gd), "dist s={s} density={density}");
+                assert_eq!(es, gs, "succ s={s} density={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn succ_twin_distances_equal_distance_only_kernel() {
+        // the cross-twin contract the path tier leans on
+        let mut rng = Rng::new(0xFACE);
+        let s = 32;
+        let base = arb_panel(&mut rng, s, s, s, 0.5);
+        let col = arb_panel(&mut rng, s, s, s, 0.5);
+        let row = arb_panel(&mut rng, s, s, s, 0.5);
+        let mut dist_only = base.clone();
+        minplus_panel(&mut dist_only, s, &col, s, &row, s, s, s, s);
+        let mut with_succ = base.clone();
+        let mut succ = vec![0usize; s * s];
+        let col_succ = vec![7usize; s * s];
+        minplus_panel_succ(
+            &mut with_succ, &mut succ, s, &col, &col_succ, s, &row, s, s, s, s,
+        );
+        assert!(bitwise_eq(&dist_only, &with_succ));
+    }
+
+    #[test]
+    fn relax_row_equals_branchy_accept() {
+        let mut rng = Rng::new(0x5EED);
+        for _ in 0..50 {
+            let len = 1 + (rng.next_u64() % 40) as usize;
+            let mut branchy = arb_panel(&mut rng, 1, len, len, 0.3);
+            let row_k = arb_panel(&mut rng, 1, len, len, 0.3);
+            let wik = if rng.next_f64() < 0.2 {
+                f32::INFINITY
+            } else {
+                (rng.next_f64() * 10.0 - 3.0) as f32
+            };
+            let mut branchless = branchy.clone();
+            for j in 0..len {
+                let cand = wik + row_k[j];
+                if cand < branchy[j] {
+                    branchy[j] = cand;
+                }
+            }
+            relax_row(&mut branchless, &row_k, wik);
+            assert!(bitwise_eq(&branchy, &branchless));
+        }
+    }
+
+    #[test]
+    fn row_pair_mut_returns_disjoint_rows_both_orders() {
+        let n = 6;
+        let mut data: Vec<f32> = (0..n * n).map(|v| v as f32).collect();
+        {
+            let (out, row_k) = row_pair_mut(&mut data, n, 1, 4, 2, 3);
+            assert_eq!(&out[..], &[8.0, 9.0, 10.0][..]); // row 1, cols 2..5
+            assert_eq!(row_k, &[26.0, 27.0, 28.0][..]); // row 4, cols 2..5
+            out[0] = -1.0;
+        }
+        {
+            let (out, row_k) = row_pair_mut(&mut data, n, 4, 1, 0, 2);
+            assert_eq!(&out[..], &[24.0, 25.0][..]); // row 4
+            assert_eq!(row_k, &[6.0, 7.0][..]); // row 1 (col 0..2)
+        }
+        assert_eq!(data[8], -1.0); // write landed
+    }
+
+    #[test]
+    fn all_infinite_panel_is_a_no_op() {
+        // the hoisted guard path: a fully unreachable column panel leaves
+        // dst untouched (and is the fast exit the guard exists for)
+        let s = 16;
+        let mut rng = Rng::new(0x1F1F);
+        let base = arb_panel(&mut rng, s, s, s, 0.2);
+        let col = vec![f32::INFINITY; s * s];
+        let row = arb_panel(&mut rng, s, s, s, 0.2);
+        let mut got = base.clone();
+        minplus_panel(&mut got, s, &col, s, &row, s, s, s, s);
+        assert!(bitwise_eq(&base, &got));
+    }
+
+    #[test]
+    fn should_pack_heuristic_shape() {
+        assert!(!should_pack(32, 32)); // contiguous detached tile
+        assert!(!should_pack(64, 64));
+        assert!(should_pack(256, 32)); // large-n in-place panel
+        assert!(should_pack(4096, 512));
+        assert!(!should_pack(96, 32)); // small n: panel fits L1 anyway
+    }
+
+    #[test]
+    fn zero_sized_calls_are_no_ops() {
+        let mut dst: Vec<f32> = vec![1.0; 8];
+        minplus_panel(&mut dst, 8, &[], 1, &[], 1, 0, 8, 0);
+        minplus_panel(&mut dst, 8, &[], 1, &[], 1, 1, 0, 0);
+        assert!(dst.iter().all(|v| *v == 1.0));
+        let mut pack = PanelBuf::default();
+        pack.pack_dist(&[], 4, 0, 0);
+        assert!(pack.dist().is_empty());
+    }
+}

@@ -10,10 +10,13 @@
 //!
 //! All solvers consume a [`crate::graph::DistMatrix`] and return the closed
 //! matrix; [`paths`] additionally reconstructs shortest paths via a
-//! successor matrix.
+//! successor matrix.  The hot phase-3 inner loops of every blocked tier
+//! ([`blocked`], [`parallel`], and `crate::superblock::minplus`) share one
+//! register-tiled (min, +) microkernel ([`kernel`]).
 
 pub mod blocked;
 pub mod johnson;
+pub mod kernel;
 pub mod naive;
 pub mod parallel;
 pub mod paths;

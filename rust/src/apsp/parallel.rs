@@ -4,14 +4,22 @@
 //! independent within a stage (both dependencies — the row and column
 //! panels — are final), so it parallelizes embarrassingly.  This solver
 //! runs phases 1–2 sequentially (Θ(n²·s) work) and fans phase 3 out over
-//! `threads` row bands using `std::thread::scope`.
+//! `threads` row bands using `std::thread::scope`; each band drives the
+//! shared register-tiled microkernel ([`kernel::minplus_panel`]) over its
+//! tiles, packing the band-local column-panel tile once per tile row.
 //!
 //! Safety model (no `unsafe`): before phase 3, the stage's row panel is
 //! copied to a scratch buffer (every thread reads it, one thread owns its
 //! rows).  The matrix rows are then split into disjoint `&mut` bands with
 //! `chunks_mut`; each band's column-panel dependency (`w[i][k]`) lives in
-//! the band's own rows, so no cross-band reads are needed.
+//! the band's own rows and is packed into a band-local buffer
+//! ([`kernel::PanelBuf`]) — which is also what presents the kernel with
+//! disjoint inputs despite the panel aliasing the band.
+//!
+//! Sizes that are not a tile multiple pad to the next multiple and
+//! truncate, exactly like [`super::blocked`] (and bitwise equal to it).
 
+use super::kernel::{self, PanelBuf};
 use super::paths::{self, PathsResult};
 use crate::graph::DistMatrix;
 
@@ -29,17 +37,22 @@ pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
 /// The safety model extends unchanged: the distance row panel is
 /// snapshotted before phase 3 (every band reads it), while the successor
 /// source of a phase-3 update is `succ[i][k]` — the *column-panel* entry,
-/// which lives in the band's own rows — so no successor snapshot is needed
-/// and bands stay disjoint in both matrices.  Distances are bitwise equal
-/// to [`solve`] (and hence to `blocked::solve`); degenerate parameters
-/// fall back to [`super::blocked::solve_paths`].
+/// which lives in the band's own rows and is packed alongside the
+/// distances — so no successor snapshot is needed and bands stay disjoint
+/// in both matrices.  Distances are bitwise equal to [`solve`] (and hence
+/// to `blocked::solve`); non-multiple sizes pad and truncate; degenerate
+/// parameters fall back to [`super::blocked::solve_paths`].
 pub fn solve_paths(w: &DistMatrix, s: usize, threads: usize) -> PathsResult {
     let n = w.n();
     if n == 0 {
         return PathsResult::from_parts(w.clone(), Vec::new());
     }
-    if threads <= 1 || s == 0 || n % s != 0 {
+    if threads <= 1 || s == 0 || (n % s != 0 && n < s) {
         return super::blocked::solve_paths(w, s);
+    }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        return solve_paths(&w.padded(padded_n), s, threads).truncated(n);
     }
     let mut dist = w.clone();
     let mut succ = paths::init_succ(w);
@@ -87,6 +100,7 @@ fn phase3_parallel_succ(
         for (band_idx, (band, succ_band)) in bands.enumerate() {
             let row_panel = &row_panel[..];
             scope.spawn(move || {
+                let mut pack = PanelBuf::default();
                 let first_block = band_idx * blocks_per_band;
                 let band_blocks = band.len() / (s * n);
                 for ib_local in 0..band_blocks {
@@ -94,19 +108,26 @@ fn phase3_parallel_succ(
                     if ib == b {
                         continue; // panel rows are final
                     }
+                    let is = ib_local * s;
+                    pack.pack_dist(&band[is * n + ks..], n, s, s);
+                    pack.pack_succ(&succ_band[is * n + ks..], n, s, s);
                     for jb in 0..nb {
                         if jb == b {
                             continue;
                         }
-                        phase3_tile_band_succ(
-                            band,
-                            succ_band,
-                            row_panel,
+                        let js = jb * s;
+                        kernel::minplus_panel_succ(
+                            &mut band[is * n + js..],
+                            &mut succ_band[is * n + js..],
+                            n,
+                            pack.dist(),
+                            pack.succ(),
+                            s,
+                            &row_panel[js..],
                             n,
                             s,
-                            ib_local * s,
-                            ks,
-                            jb * s,
+                            s,
+                            s,
                         );
                     }
                 }
@@ -115,47 +136,22 @@ fn phase3_parallel_succ(
     });
 }
 
-/// Successor-tracking twin of [`phase3_tile_band`]: distance reads/writes
-/// are identical; the successor source `succ[i][k]` sits in the band's own
-/// rows (column panel), so `succ_band` alone suffices.
-#[inline]
-fn phase3_tile_band_succ(
-    band: &mut [f32],
-    succ_band: &mut [usize],
-    row_panel: &[f32],
-    n: usize,
-    s: usize,
-    is_local: usize,
-    ks: usize,
-    js: usize,
-) {
-    for i in is_local..is_local + s {
-        for k in 0..s {
-            let wik = band[i * n + ks + k];
-            if !wik.is_finite() {
-                continue;
-            }
-            let sik = succ_band[i * n + ks + k];
-            for j in js..js + s {
-                let cand = wik + row_panel[k * n + j];
-                if cand < band[i * n + j] {
-                    band[i * n + j] = cand;
-                    succ_band[i * n + j] = sik;
-                }
-            }
-        }
-    }
-}
-
 /// In-place parallel blocked FW.  Falls back to the sequential blocked
-/// solver for degenerate parameters.
+/// solver for degenerate parameters; non-multiple sizes pad and truncate.
 pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
     let n = w.n();
     if n == 0 {
         return;
     }
-    if threads <= 1 || s == 0 || n % s != 0 {
+    if threads <= 1 || s == 0 || (n % s != 0 && n < s) {
         super::blocked::solve_in_place(w, s);
+        return;
+    }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        let mut padded = w.padded(padded_n);
+        solve_in_place(&mut padded, s, threads);
+        *w = padded.truncated(n);
         return;
     }
     let nb = n / s;
@@ -179,7 +175,9 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
     }
 }
 
-/// Fan the stage's doubly-dependent tiles out over row bands.
+/// Fan the stage's doubly-dependent tiles out over row bands; each band
+/// packs its column-panel tile once per tile row and sweeps the row of
+/// tiles through the microkernel.
 fn phase3_parallel(
     w: &mut DistMatrix,
     row_panel: &[f32],
@@ -200,6 +198,7 @@ fn phase3_parallel(
         for (band_idx, band) in data.chunks_mut(rows_per_band * n).enumerate() {
             let row_panel = &row_panel[..];
             scope.spawn(move || {
+                let mut pack = PanelBuf::default();
                 let first_block = band_idx * blocks_per_band;
                 let band_blocks = band.len() / (s * n);
                 for ib_local in 0..band_blocks {
@@ -207,48 +206,29 @@ fn phase3_parallel(
                     if ib == b {
                         continue; // panel rows are final
                     }
+                    let is = ib_local * s;
+                    pack.pack_dist(&band[is * n + ks..], n, s, s);
                     for jb in 0..nb {
                         if jb == b {
                             continue;
                         }
-                        phase3_tile_band(band, row_panel, n, s, ib_local * s, ks, jb * s);
+                        let js = jb * s;
+                        kernel::minplus_panel(
+                            &mut band[is * n + js..],
+                            n,
+                            pack.dist(),
+                            s,
+                            &row_panel[js..],
+                            n,
+                            s,
+                            s,
+                            s,
+                        );
                     }
                 }
             });
         }
     });
-}
-
-/// Phase-3 tile relaxation where the tile rows live in `band` (a disjoint
-/// row range of the matrix) and row-panel reads come from the snapshot.
-///
-/// * `band`: `band_rows × n` row-major slice; tile rows start at `is_local`.
-/// * `row_panel`: `s × n` snapshot of matrix rows `ks..ks+s`.
-#[inline]
-fn phase3_tile_band(
-    band: &mut [f32],
-    row_panel: &[f32],
-    n: usize,
-    s: usize,
-    is_local: usize,
-    ks: usize,
-    js: usize,
-) {
-    for i in is_local..is_local + s {
-        let row_i = &mut band[i * n..(i + 1) * n];
-        for k in 0..s {
-            let wik = row_i[ks + k]; // column-panel value, inside this band
-            if !wik.is_finite() {
-                continue;
-            }
-            let row_k = &row_panel[k * n + js..k * n + js + s];
-            let out = &mut row_i[js..js + s];
-            // branchless min (vectorizes; see naive.rs)
-            for j in 0..s {
-                out[j] = out[j].min(wik + row_k[j]);
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -305,9 +285,13 @@ mod tests {
     }
 
     #[test]
-    fn degenerate_params_fall_back() {
+    fn non_multiple_pads_bitwise_like_blocked() {
+        // the padded path re-enters the banded solver, and bands never
+        // change relaxation order — so even padded sizes match the
+        // sequential blocked solver bit for bit
         let g = generators::erdos_renyi(48, 0.4, 43);
-        assert_matches_naive(&g, 32, 4); // 48 % 32 != 0
+        assert_matches_naive(&g, 32, 4); // 48 % 32 != 0 → pads to 64
+        assert_eq!(solve(&g, 32, 4), super::super::blocked::solve(&g, 32));
         assert_matches_naive(&g, 16, 0); // 0 threads → sequential
     }
 
@@ -354,11 +338,13 @@ mod tests {
     }
 
     #[test]
-    fn paths_degenerate_params_fall_back() {
+    fn paths_non_multiple_pads_bitwise_like_blocked() {
         let g = generators::erdos_renyi(48, 0.4, 43);
-        // 48 % 32 != 0 → blocked::solve_paths → reference solver
+        // 48 % 32 != 0 → pads to 64; the banded solver on the padded graph
+        // matches the sequential blocked path solver bit for bit (both
+        // distances and successors)
         let r = solve_paths(&g, 32, 4);
-        assert_eq!(r, crate::apsp::paths::solve(&g));
+        assert_eq!(r, super::super::blocked::solve_paths(&g, 32));
         // 0 threads → sequential blocked path solver
         let seq = solve_paths(&g, 16, 0);
         assert_eq!(seq, super::super::blocked::solve_paths(&g, 16));

@@ -130,6 +130,23 @@ impl PathsResult {
         None
     }
 
+    /// Take the top-left `m × m` corner of both matrices — the inverse of
+    /// solving a padded graph ([`DistMatrix::padded`]).  Padded vertices
+    /// are unreachable (no edges in or out), so no successor surviving in
+    /// the corner can reference one; the corner is a self-contained
+    /// result.  Shared by every tier that pads non-tile-multiple sizes
+    /// (blocked, parallel, superblock, and the engine's path fallback).
+    pub fn truncated(&self, m: usize) -> PathsResult {
+        let n = self.n();
+        assert!(m <= n, "cannot truncate {n} up to {m}");
+        let dist = self.dist.truncated(m);
+        let mut succ = vec![NO_PATH; m * m];
+        for i in 0..m {
+            succ[i * m..(i + 1) * m].copy_from_slice(&self.succ[i * n..i * n + m]);
+        }
+        PathsResult { dist, succ }
+    }
+
     /// Sum of edge weights along [`PathsResult::path`] in the *original*
     /// graph — used by tests to confirm path length equals reported distance.
     pub fn path_weight(&self, original: &DistMatrix, i: usize, j: usize) -> Option<f64> {
@@ -233,6 +250,20 @@ mod tests {
         assert_eq!(succ[6], 0); // (2, 0): direct edge
         assert_eq!(succ[2], NO_PATH); // (0, 2): no edge
         assert_eq!(succ[4], NO_PATH); // (1, 1): diagonal
+    }
+
+    #[test]
+    fn truncated_inverts_padding_bitwise() {
+        // padded vertices are unreachable, so solving the padded graph and
+        // cutting the corner is the solve of the original — same pivots in
+        // the same order, identical accepts, for dist and succ alike
+        let g = generators::erdos_renyi(12, 0.4, 77);
+        let cut = solve(&g.padded(16)).truncated(12);
+        assert_eq!(cut, solve(&g));
+        // trivial cases
+        let r = solve(&g);
+        assert_eq!(r.truncated(12), r);
+        assert_eq!(r.truncated(0).n(), 0);
     }
 
     #[test]

@@ -133,30 +133,17 @@ impl Engine {
     /// the device batch queue, and the solver fans out over its own scoped
     /// threads anyway.
     ///
-    /// Sizes that are not a multiple of `tile` are padded up and truncated
-    /// (exactly the device tier's own padding trick) so every device-scale
-    /// n takes the banded fast path rather than degrading to the
-    /// single-threaded reference solver.  Padding never changes distances,
-    /// and padded vertices are unreachable, so no surviving successor can
-    /// reference one.
+    /// Sizes that are not a multiple of `tile` pad up and truncate inside
+    /// the solver itself (`apsp::parallel::solve_paths` — the device
+    /// tier's own padding trick) so every device-scale n takes the banded
+    /// fast path rather than degrading to the single-threaded reference
+    /// solver.  Padding never changes distances, and padded vertices are
+    /// unreachable, so no surviving successor can reference one.
     pub fn solve_paths(&self, graph: &DistMatrix, tile: usize) -> apsp::paths::PathsResult {
-        use crate::apsp::paths::{PathsResult, NO_PATH};
         let threads = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1);
-        let n = graph.n();
-        if n == 0 || tile == 0 || n % tile == 0 {
-            return apsp::parallel::solve_paths(graph, tile, threads);
-        }
-        let padded_n = n.div_ceil(tile) * tile;
-        let r = apsp::parallel::solve_paths(&graph.padded(padded_n), tile, threads);
-        let dist = r.dist.truncated(n);
-        let mut succ = vec![NO_PATH; n * n];
-        for i in 0..n {
-            succ[i * n..(i + 1) * n]
-                .copy_from_slice(&r.succ()[i * padded_n..i * padded_n + n]);
-        }
-        PathsResult::from_parts(dist, succ)
+        apsp::parallel::solve_paths(graph, tile, threads)
     }
 }
 

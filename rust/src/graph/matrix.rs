@@ -10,6 +10,12 @@ use crate::{Dist, INF};
 /// * `get(i, i) == 0` for graphs produced by generators/IO (APSP *outputs*
 ///   keep whatever the solver computed — 0 unless a negative cycle exists)
 /// * missing edges are `+inf`, never NaN
+/// * no `-0.0` (a `-0.0`/`+0.0` tie is the one case where a branchless
+///   `f32::min` may pick a different bit pattern than the branchy accept,
+///   and the blocked tiers' bitwise-equality contracts assume it cannot
+///   happen; FW sums never *create* `-0.0` from clean inputs, so rejecting
+///   it at the boundary — the coordinator validates every request — keeps
+///   the whole stack clean)
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistMatrix {
     n: usize,
@@ -128,6 +134,9 @@ impl DistMatrix {
                 if w == f32::NEG_INFINITY {
                     return Err(format!("-inf at ({i}, {j})"));
                 }
+                if w == 0.0 && w.is_sign_negative() {
+                    return Err(format!("-0.0 at ({i}, {j})"));
+                }
             }
         }
         Ok(())
@@ -216,13 +225,20 @@ mod tests {
     }
 
     #[test]
-    fn validate_catches_nan_and_neg_inf() {
+    fn validate_catches_nan_neg_inf_and_neg_zero() {
         let mut m = DistMatrix::unconnected(2);
         assert!(m.validate().is_ok());
         m.set(0, 1, f32::NAN);
         assert!(m.validate().unwrap_err().contains("NaN"));
         m.set(0, 1, f32::NEG_INFINITY);
         assert!(m.validate().unwrap_err().contains("-inf"));
+        // -0.0 would let min-based (branchless) and compare-based (branchy)
+        // relaxations pick different zero bit patterns on a tie; the blocked
+        // tiers' bitwise contracts assume it never enters the stack
+        m.set(0, 1, -0.0);
+        assert!(m.validate().unwrap_err().contains("-0.0"));
+        m.set(0, 1, 0.0);
+        assert!(m.validate().is_ok());
     }
 
     #[test]

@@ -3,9 +3,18 @@
 //! [`bench`] runs a closure with warm-up, auto-scaled iteration counts,
 //! and outlier-aware summary statistics, printing one criterion-style line
 //! per benchmark.  `cargo bench` targets under `rust/benches/` drive it.
+//!
+//! Results are also machine-readable: [`BenchResult::to_json`] serializes
+//! one measurement, and [`BenchSink`] accumulates a bench run into the
+//! repo's perf-trajectory file (`BENCH_<name>.json` at the repo root by
+//! default; `FW_BENCH_JSON=<path>` overrides, `FW_BENCH_JSON=off`
+//! disables).  Each `cargo bench` invocation appends one run object, so
+//! the file records how the hot paths move across PRs.
 
-use std::time::{Duration, Instant};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
+use crate::util::json::Json;
 use crate::util::stats::Samples;
 
 /// Harness configuration.
@@ -108,6 +117,136 @@ impl BenchResult {
             units / self.median_s
         )
     }
+
+    /// Machine-readable form of one measurement (seconds per iteration;
+    /// object keys are sorted by the codec, so output is deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("median_s", Json::Num(self.median_s)),
+            ("stddev_s", Json::Num(self.stddev_s)),
+            ("samples", Json::Num(self.samples.len() as f64)),
+        ])
+    }
+}
+
+/// Accumulates one bench run and appends it to a perf-trajectory file:
+///
+/// ```json
+/// {"bench": "apsp", "runs": [{"unix_time": …, "meta": {…}, "results": […]}]}
+/// ```
+///
+/// The default path is `BENCH_<name>.json` at the repo root (one directory
+/// above the crate), so `cargo bench --bench apsp` grows the trajectory in
+/// place; `FW_BENCH_JSON=<path>` redirects it and `FW_BENCH_JSON=off`
+/// (or `0`, or empty) disables the sink.  A corrupt or foreign existing
+/// file is replaced rather than appended to.
+pub struct BenchSink {
+    bench: String,
+    path: Option<PathBuf>,
+    meta: Vec<(String, Json)>,
+    results: Vec<Json>,
+}
+
+impl BenchSink {
+    /// Sink for the named bench, honoring `FW_BENCH_JSON`.
+    pub fn from_env(bench: &str) -> BenchSink {
+        let path = match std::env::var("FW_BENCH_JSON") {
+            Ok(v) if v.is_empty() || v == "off" || v == "0" => None,
+            Ok(v) => Some(PathBuf::from(v)),
+            Err(_) => Some(default_trajectory_path(bench)),
+        };
+        BenchSink {
+            bench: bench.to_string(),
+            path,
+            meta: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Sink writing to an explicit path (tests; tooling).
+    pub fn to_path(bench: &str, path: impl Into<PathBuf>) -> BenchSink {
+        BenchSink {
+            bench: bench.to_string(),
+            path: Some(path.into()),
+            meta: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Whether `finish` will write anywhere.
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Attach run-level metadata (problem size, fast mode, …).
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Record one measurement.
+    pub fn record(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Record one measurement with extra per-result fields (e.g. the
+    /// throughput figure the human-readable report derives).
+    pub fn record_with(&mut self, r: &BenchResult, extras: Vec<(&str, Json)>) {
+        let mut obj = match r.to_json() {
+            Json::Obj(map) => map,
+            _ => unreachable!("to_json returns an object"),
+        };
+        for (k, v) in extras {
+            obj.insert(k.to_string(), v);
+        }
+        self.results.push(Json::Obj(obj));
+    }
+
+    /// Append this run to the trajectory file.  Returns the path written,
+    /// or `None` when the sink is disabled.
+    pub fn finish(self) -> std::io::Result<Option<PathBuf>> {
+        let Some(path) = self.path else {
+            return Ok(None);
+        };
+        let mut runs: Vec<Json> = match std::fs::read_to_string(&path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(v) if v.get("bench").as_str() == Some(self.bench.as_str()) => {
+                    v.get("runs").as_arr().map(<[Json]>::to_vec).unwrap_or_default()
+                }
+                _ => Vec::new(),
+            },
+            Err(_) => Vec::new(),
+        };
+        let unix_time = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        runs.push(Json::obj(vec![
+            ("unix_time", Json::Num(unix_time)),
+            (
+                "meta",
+                Json::Obj(self.meta.into_iter().collect()),
+            ),
+            ("results", Json::Arr(self.results)),
+        ]));
+        let doc = Json::obj(vec![
+            ("bench", Json::str(self.bench)),
+            ("runs", Json::Arr(runs)),
+        ]);
+        std::fs::write(&path, doc.to_string())?;
+        Ok(Some(path))
+    }
+}
+
+/// `BENCH_<name>.json` at the repo root (the crate's parent directory —
+/// benches compile inside the workspace, so the manifest dir is `rust/`).
+fn default_trajectory_path(bench: &str) -> PathBuf {
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    crate_dir
+        .parent()
+        .unwrap_or(crate_dir)
+        .join(format!("BENCH_{bench}.json"))
 }
 
 /// Human-friendly time formatting (s/ms/µs/ns).
@@ -167,5 +306,66 @@ mod tests {
         });
         let line = r.report_throughput(1e6, "tasks");
         assert!(line.contains("tasks/s"));
+    }
+
+    fn tiny_config() -> BenchConfig {
+        BenchConfig {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            max_samples: 10,
+            min_samples: 3,
+        }
+    }
+
+    #[test]
+    fn to_json_carries_the_summary_fields() {
+        let r = bench("shape", &tiny_config(), || {
+            black_box(1 + 1);
+        });
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("shape"));
+        for key in ["mean_s", "median_s", "stddev_s", "samples"] {
+            assert!(j.get(key).as_f64().is_some(), "missing {key}");
+        }
+        // deterministic serialization (sorted keys) round-trips
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn sink_accumulates_runs_across_invocations() {
+        let path = std::env::temp_dir().join(format!(
+            "fw-stage-perf-sink-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let r = bench("noop", &tiny_config(), || {
+            black_box(1 + 1);
+        });
+        for round in 1..=2 {
+            let mut sink = BenchSink::to_path("selftest", &path);
+            assert!(sink.enabled());
+            sink.set_meta("n", Json::Num(64.0));
+            sink.record(&r);
+            sink.record_with(&r, vec![("tasks_per_sec", Json::Num(123.0))]);
+            let written = sink.finish().unwrap().expect("sink enabled");
+            assert_eq!(written, path);
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(doc.get("bench").as_str(), Some("selftest"));
+            let runs = doc.get("runs").as_arr().unwrap();
+            assert_eq!(runs.len(), round, "one run appended per invocation");
+            let results = runs[round - 1].get("results").as_arr().unwrap();
+            assert_eq!(results.len(), 2);
+            assert_eq!(results[0].get("name").as_str(), Some("noop"));
+            assert_eq!(results[1].get("tasks_per_sec").as_f64(), Some(123.0));
+            assert_eq!(runs[round - 1].get("meta").get("n").as_f64(), Some(64.0));
+        }
+        // a foreign file is replaced, not appended to
+        std::fs::write(&path, r#"{"bench":"other","runs":[1,2,3]}"#).unwrap();
+        let mut sink = BenchSink::to_path("selftest", &path);
+        sink.record(&r);
+        sink.finish().unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

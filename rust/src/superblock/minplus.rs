@@ -2,14 +2,21 @@
 //!
 //! These are the paper's three phase bodies (Fig. 2) operating on
 //! *detached* `b × b` tile buffers instead of in-place windows of one big
-//! matrix.  Loop order, finiteness guards, and the branchless phase-3 inner
-//! loop mirror [`crate::apsp::blocked`] line for line, which buys a strong
-//! property the tests pin: a super-blocked solve whose diagonal tiles are
-//! solved in phase-1 order is **bitwise identical** to
+//! matrix.  Loop order and finiteness guards mirror
+//! [`crate::apsp::blocked`] line for line — phases 1–2 through the shared
+//! branchless row sweep ([`kernel::relax_row`], sequential k), phase 3
+//! through the shared register-tiled microkernel
+//! ([`kernel::minplus_panel`]; detached tiles are contiguous, so no
+//! packing is needed — `should_pack(b, b)` is false by construction).
+//! This buys a strong property the tests pin: a super-blocked solve whose
+//! diagonal tiles are solved in phase-1 order is **bitwise identical** to
 //! `apsp::blocked::solve(g, bucket)` — every relaxation performs the same
-//! f32 additions on the same values, and tile updates within a phase only
-//! read finalized inputs, so execution order (and hence pool parallelism)
-//! cannot perturb a single bit.
+//! f32 additions on the same values (phase 3 is a pure min-reduction, so
+//! the register tiling cannot perturb a bit; see `kernel`'s module docs),
+//! and tile updates within a phase only read finalized inputs, so
+//! execution order (and hence pool parallelism) cannot either.
+
+use crate::apsp::kernel;
 
 /// Phase 1: full Floyd-Warshall on a detached `b × b` diagonal tile
 /// (sequential k; the order of `apsp::blocked::phase1_diag`).
@@ -24,12 +31,8 @@ pub fn phase1(diag: &mut [f32], b: usize) {
             if !wik.is_finite() {
                 continue;
             }
-            for j in 0..b {
-                let cand = wik + diag[k * b + j];
-                if cand < diag[i * b + j] {
-                    diag[i * b + j] = cand;
-                }
-            }
+            let (out, row_k) = kernel::row_pair_mut(diag, b, i, k, 0, b);
+            kernel::relax_row(out, row_k, wik);
         }
     }
 }
@@ -49,12 +52,8 @@ pub fn panel_row(tile: &mut [f32], diag: &[f32], b: usize) {
             if !dik.is_finite() {
                 continue;
             }
-            for j in 0..b {
-                let cand = dik + tile[k * b + j];
-                if cand < tile[i * b + j] {
-                    tile[i * b + j] = cand;
-                }
-            }
+            let (out, row_k) = kernel::row_pair_mut(tile, b, i, k, 0, b);
+            kernel::relax_row(out, row_k, dik);
         }
     }
 }
@@ -71,38 +70,25 @@ pub fn panel_col(tile: &mut [f32], diag: &[f32], b: usize) {
             if !wik.is_finite() {
                 continue;
             }
-            for j in 0..b {
-                let cand = wik + diag[k * b + j];
-                if cand < tile[i * b + j] {
-                    tile[i * b + j] = cand;
-                }
-            }
+            let row_k = &diag[k * b..(k + 1) * b];
+            let out = &mut tile[i * b..(i + 1) * b];
+            kernel::relax_row(out, row_k, wik);
         }
     }
 }
 
 /// Phase 3, interior: `c <- min(c, col ⊗ row)` where `⊗` is the (min, +)
 /// tile product, `col` is the finalized column-panel tile `(bi, k)` and
-/// `row` the finalized row-panel tile `(k, bj)`.  i-k-j order with a
-/// hoisted `wik` and a branchless inner min, exactly like
-/// `apsp::blocked::phase3_tile`, so the inner loop vectorizes.
+/// `row` the finalized row-panel tile `(k, bj)`.  Routed through the
+/// shared register-tiled microkernel; all three tiles are detached and
+/// contiguous, so the kernel's disjointness contract holds trivially.
 pub fn interior(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
     debug_assert_eq!(c.len(), b * b);
     debug_assert_eq!(col.len(), b * b);
     debug_assert_eq!(row.len(), b * b);
-    for i in 0..b {
-        let out = &mut c[i * b..(i + 1) * b];
-        for k in 0..b {
-            let wik = col[i * b + k];
-            if !wik.is_finite() {
-                continue;
-            }
-            let row_k = &row[k * b..(k + 1) * b];
-            for j in 0..b {
-                out[j] = out[j].min(wik + row_k[j]);
-            }
-        }
-    }
+    // detached tiles are contiguous: repacking would be a pure copy
+    debug_assert!(!kernel::should_pack(b, b));
+    kernel::minplus_panel(c, b, col, b, row, b, b, b, b);
 }
 
 // ------------------------------------------------- successor tracking --
@@ -201,6 +187,8 @@ pub fn panel_col_succ(tile: &mut [f32], tsucc: &mut [usize], diag: &[f32], b: us
 
 /// [`interior`] with successor tracking: the `(i, k)` dependency is the
 /// finalized column-panel tile, so the successor source is `colsucc`.
+/// Routed through the register-tiled succ microkernel (same accept
+/// sequence as the scalar loop — distances *and* successors bitwise).
 pub fn interior_succ(
     c: &mut [f32],
     csucc: &mut [usize],
@@ -214,23 +202,7 @@ pub fn interior_succ(
     debug_assert_eq!(col.len(), b * b);
     debug_assert_eq!(colsucc.len(), b * b);
     debug_assert_eq!(row.len(), b * b);
-    for i in 0..b {
-        for k in 0..b {
-            let wik = col[i * b + k];
-            if !wik.is_finite() {
-                continue;
-            }
-            let sik = colsucc[i * b + k];
-            let row_k = &row[k * b..(k + 1) * b];
-            for j in 0..b {
-                let cand = wik + row_k[j];
-                if cand < c[i * b + j] {
-                    c[i * b + j] = cand;
-                    csucc[i * b + j] = sik;
-                }
-            }
-        }
-    }
+    kernel::minplus_panel_succ(c, csucc, b, col, colsucc, b, row, b, b, b, b);
 }
 
 /// Parallel path for [`interior_succ`]: split the tile's rows (of both the
@@ -238,7 +210,8 @@ pub fn interior_succ(
 /// tier's mirror of [`interior_parallel`], for the same degenerate
 /// super-grids (a 2×2 grid has one interior tile per round, so tile-level
 /// pooling alone leaves workers idle).  Row bands of `c`/`csucc` are
-/// disjoint and `col`/`colsucc`/`row` are read-only, so no locking.
+/// disjoint and `col`/`colsucc`/`row` are read-only, so no locking; each
+/// band is one microkernel call over its rows.
 pub fn interior_succ_parallel(
     c: &mut [f32],
     csucc: &mut [usize],
@@ -261,24 +234,21 @@ pub fn interior_succ_parallel(
             scope.spawn(move || {
                 let first_row = band_idx * rows_per_band;
                 let band_rows = band.len() / b;
-                for i_local in 0..band_rows {
-                    let i = first_row + i_local;
-                    for k in 0..b {
-                        let wik = col[i * b + k];
-                        if !wik.is_finite() {
-                            continue;
-                        }
-                        let sik = colsucc[i * b + k];
-                        let row_k = &row[k * b..(k + 1) * b];
-                        for j in 0..b {
-                            let cand = wik + row_k[j];
-                            if cand < band[i_local * b + j] {
-                                band[i_local * b + j] = cand;
-                                succ_band[i_local * b + j] = sik;
-                            }
-                        }
-                    }
-                }
+                let col_rows = &col[first_row * b..];
+                let colsucc_rows = &colsucc[first_row * b..];
+                kernel::minplus_panel_succ(
+                    band,
+                    succ_band,
+                    b,
+                    col_rows,
+                    colsucc_rows,
+                    b,
+                    row,
+                    b,
+                    band_rows,
+                    b,
+                    b,
+                );
             });
         }
     });
@@ -300,20 +270,8 @@ pub fn interior_parallel(c: &mut [f32], col: &[f32], row: &[f32], b: usize, thre
             scope.spawn(move || {
                 let first_row = band_idx * rows_per_band;
                 let band_rows = band.len() / b;
-                for i_local in 0..band_rows {
-                    let i = first_row + i_local;
-                    let out = &mut band[i_local * b..(i_local + 1) * b];
-                    for k in 0..b {
-                        let wik = col[i * b + k];
-                        if !wik.is_finite() {
-                            continue;
-                        }
-                        let row_k = &row[k * b..(k + 1) * b];
-                        for j in 0..b {
-                            out[j] = out[j].min(wik + row_k[j]);
-                        }
-                    }
-                }
+                let col_rows = &col[first_row * b..];
+                kernel::minplus_panel(band, b, col_rows, b, row, b, band_rows, b, b);
             });
         }
     });
@@ -374,7 +332,8 @@ mod tests {
     fn interior_matches_naive_min_fold_bitwise() {
         // For a fixed (i, j) the interior update applies min over ascending
         // k with identical f32 additions, and f32 min is exact — so a naive
-        // i-j-k fold is a bitwise oracle.
+        // i-j-k fold is a bitwise oracle (this is the reassociation freedom
+        // the register-tiled kernel leans on).
         let w = full_matrix();
         let col = tile_of(&w, 1, 0);
         let row = tile_of(&w, 0, 1);

@@ -289,18 +289,13 @@ pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResul
         });
     }
 
-    let (mut dist, mut succ) = join_path_tiles(&tiles, blocks, b);
+    let (dist, succ) = join_path_tiles(&tiles, blocks, b);
+    let mut result = PathsResult::from_parts(dist, succ);
     if padded_n != n {
-        // truncate both matrices; padded vertices are unreachable, so no
-        // surviving successor can reference one
-        let mut cut = vec![NO_PATH; n * n];
-        for i in 0..n {
-            cut[i * n..(i + 1) * n].copy_from_slice(&succ[i * padded_n..i * padded_n + n]);
-        }
-        succ = cut;
-        dist = dist.truncated(n);
+        // padded vertices are unreachable, so the corner is self-contained
+        result = result.truncated(n);
     }
-    (PathsResult::from_parts(dist, succ), report)
+    (result, report)
 }
 
 /// Cut the padded matrix + successor matrix into detached path tiles.

@@ -9,7 +9,12 @@
 //! * **bitwise** within the blocked family: `blocked(s)`, `parallel(s, t)`,
 //!   and `superblock(bucket = s)` share relaxation order, so their
 //!   distances must be identical to the last bit — including each tier's
-//!   successor-tracking variant against its distance-only twin;
+//!   successor-tracking variant against its distance-only twin.  All three
+//!   route phase 3 through the shared register-tiled microkernel
+//!   (`apsp::kernel`), whose own bitwise contract against a scalar
+//!   reference is pinned here too (phase 3 is a pure min-reduction over
+//!   NaN-free, `-0.0`-free candidates, so register blocking cannot perturb
+//!   a bit — the property that makes one kernel serve every tier);
 //! * **tolerance** across algorithm families: naive FW and Johnson
 //!   associate float additions differently, so they agree within
 //!   `allclose` bounds, never bitwise.
@@ -139,13 +144,97 @@ fn prop_blocked_family_distances_bitwise_equal() {
     });
 }
 
+// ------------------------------------------ microkernel bitwise contract --
+
+// The scalar oracle is `apsp::kernel::minplus_panel_reference` — the one
+// exported source of truth the register path is pinned against (the kernel
+// unit tests use the same function).
+use fw_stage::apsp::kernel::minplus_panel_reference as scalar_phase3;
+
+/// `rows × stride` buffer with a `density` fraction of `+inf` entries —
+/// the finiteness-guard stressor the kernel property sweeps over.
+fn arb_kernel_panel(rng: &mut Rng, rows: usize, stride: usize, density: f64) -> Vec<f32> {
+    let mut out = vec![f32::INFINITY; rows * stride];
+    for v in out.iter_mut() {
+        if rng.next_f64() >= density {
+            *v = (rng.next_f64() * 20.0 - 5.0) as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_microkernel_bitwise_vs_scalar_reference() {
+    // the contract every tier's phase 3 now rests on: packed and unpacked,
+    // succ and dist-only register tiling is bitwise equal to the scalar
+    // loop across tile sizes (33 = ragged in both register dimensions) and
+    // infinite-weight densities
+    let cfg = Config { cases: 48, max_size: 4, ..Config::default() };
+    check("microkernel vs scalar phase-3", cfg, |rng, _size| {
+        let s = [8usize, 16, 32, 33][rng.range(0, 4)];
+        let density = [0.0, 0.3, 0.9, 1.0][rng.range(0, 4)];
+        let stride = s + rng.range(0, 40);
+        let base = arb_kernel_panel(rng, s, stride, density);
+        let col = arb_kernel_panel(rng, s, stride, density);
+        let row = arb_kernel_panel(rng, s, stride, density);
+
+        let mut expect = base.clone();
+        scalar_phase3(&mut expect, stride, &col, stride, &row, stride, s, s, s);
+
+        // unpacked (strided column panel)
+        let mut got = base.clone();
+        apsp::kernel::minplus_panel(&mut got, stride, &col, stride, &row, stride, s, s, s);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("strided kernel != scalar (s={s}, density={density})"));
+        }
+
+        // packed column panel (the §4.3 coalescing analog)
+        let mut pack = apsp::kernel::PanelBuf::default();
+        pack.pack_dist(&col, stride, s, s);
+        let mut got = base.clone();
+        apsp::kernel::minplus_panel(&mut got, stride, pack.dist(), s, &row, stride, s, s, s);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("packed kernel != scalar (s={s}, density={density})"));
+        }
+
+        // succ twin: distances must stay bitwise identical to the
+        // distance-only kernel (accept order is the scalar order)
+        let mut got = base.clone();
+        let mut dsucc: Vec<usize> = (0..s * stride).collect();
+        let colsucc: Vec<usize> = (0..s * stride).map(|v| v + 10_000).collect();
+        apsp::kernel::minplus_panel_succ(
+            &mut got, &mut dsucc, stride, &col, &colsucc, stride, &row, stride, s, s, s,
+        );
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("succ kernel dist != scalar (s={s}, density={density})"));
+        }
+
+        // ragged remainder blocks (rows/cols/k straddling the register
+        // tile; all bounded by the panel stride so views stay in range)
+        let rr = 1 + rng.range(0, 9);
+        let cc = 1 + rng.range(0, stride.min(17));
+        let kk = rng.range(0, stride.min(13));
+        let base = arb_kernel_panel(rng, rr, stride, density);
+        let col = arb_kernel_panel(rng, rr, stride, density);
+        let row = arb_kernel_panel(rng, kk.max(1), stride, density);
+        let mut expect = base.clone();
+        scalar_phase3(&mut expect, stride, &col, stride, &row, stride, rr, cc, kk);
+        let mut got = base.clone();
+        apsp::kernel::minplus_panel(&mut got, stride, &col, stride, &row, stride, rr, cc, kk);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("ragged kernel != scalar ({rr}x{cc}x{kk}, stride={stride})"));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_algorithm_families_distances_close() {
     let cfg = Config { cases: 24, max_size: 48, ..Config::default() };
     check("naive/johnson/blocked tolerance distances", cfg, |rng, size| {
         let n = 2 + rng.range(0, size.max(2));
         let g = arb_graph(rng, n);
-        let s = 1 + rng.range(0, 24); // any tile: non-multiples fall back
+        let s = 1 + rng.range(0, 24); // any tile: non-multiples pad + truncate
         let naive = apsp::naive::solve(&g);
         let blocked = apsp::blocked::solve(&g, s);
         if !blocked.allclose(&naive, 1e-4, 1e-4) {
