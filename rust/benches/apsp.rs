@@ -90,6 +90,54 @@ fn main() {
     });
     emit(&mut sink, &r, Some(s3));
 
+    common::banner("incremental update vs full recompute (dynamic-graph tier)");
+    // the workload the dynamic tier exists for: a small edge-delta batch
+    // against an already-solved closure.  `tasks` stays n³ for every row
+    // so the tasks/s figures are directly comparable — the incremental
+    // rows deliver the same logical result (the closure of the mutated
+    // graph) for a fraction of the work.
+    use fw_stage::apsp::incremental::{self, EdgeUpdate, UpdateConfig};
+    let base = apsp::parallel::solve_paths(&g, 32, 4);
+    let ucfg = UpdateConfig { tile: 32, threads: 4, ..UpdateConfig::default() };
+    // four decreases on edges the base graph actually has (deterministic)
+    let mut dec_batch = Vec::new();
+    'dec: for i in 0..n {
+        for j in 0..n {
+            if i != j && g.get(i, j).is_finite() {
+                dec_batch.push(EdgeUpdate { src: i, dst: j, weight: g.get(i, j) * 0.5 });
+                if dec_batch.len() == 4 {
+                    break 'dec;
+                }
+            }
+        }
+    }
+    let g_dec = incremental::mutated(&g, &dec_batch).expect("valid batch");
+    let r = bench("update 4-edge decrease batch", &cfg, || {
+        perf::black_box(
+            incremental::update_paths(&g, &base, &dec_batch, &ucfg).expect("update"),
+        );
+    });
+    emit(&mut sink, &r, Some(n3));
+    let r = bench("recompute after 4-edge decrease", &cfg, || {
+        perf::black_box(apsp::parallel::solve_paths(&g_dec, 32, 4));
+    });
+    emit(&mut sink, &r, Some(n3));
+    // one deletion: the increase path (successor-forest damage detection +
+    // row-bounded re-solve, or a threshold recompute when damage is wide)
+    let del = dec_batch[0];
+    let inc_batch = vec![EdgeUpdate { src: del.src, dst: del.dst, weight: f32::INFINITY }];
+    let g_inc = incremental::mutated(&g, &inc_batch).expect("valid batch");
+    let r = bench("update 1-edge deletion", &cfg, || {
+        perf::black_box(
+            incremental::update_paths(&g, &base, &inc_batch, &ucfg).expect("update"),
+        );
+    });
+    emit(&mut sink, &r, Some(n3));
+    let r = bench("recompute after 1-edge deletion", &cfg, || {
+        perf::black_box(apsp::parallel::solve_paths(&g_inc, 32, 4));
+    });
+    emit(&mut sink, &r, Some(n3));
+
     common::banner("doubly-tiled layout transform (§4.3)");
     let data: Vec<f32> = g.as_slice().to_vec();
     let r = bench("to_doubly_tiled s=32 t=4", &cfg, || {

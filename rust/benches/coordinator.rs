@@ -8,11 +8,16 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use fw_stage::coordinator::{client::Client, server::Server, Config, Coordinator, Request};
+use fw_stage::apsp::incremental::{self, EdgeUpdate};
+use fw_stage::coordinator::cache::graph_fingerprint;
+use fw_stage::coordinator::{
+    client::Client, server::Server, Config, Coordinator, Request, UpdateOutcome, UpdateRequest,
+};
 use fw_stage::graph::generators;
 use fw_stage::perf::{bench, black_box, format_time};
 use fw_stage::superblock::{self, SuperBlockConfig};
 use fw_stage::util::stats::Samples;
+use fw_stage::workload::{self, TraceConfig};
 
 /// Super-block schedule with the CPU diagonal tier: single-thread schedule
 /// vs the dependency-streaming pool.  Needs no artifacts — the tile math is
@@ -128,6 +133,120 @@ fn main() {
         "cache hit              {}   ({:.0}× faster than device solve)",
         format_time(hit.median_s),
         engine.median_s / hit.median_s
+    );
+
+    // ---- incremental update path vs full recompute through the stack ----
+    // the dynamic-graph tier: a cached (dist, succ) closure is the base
+    // state; update requests ship only edge deltas against its fingerprint
+    common::banner("incremental update vs recompute — coordinator request path");
+    let g_upd = generators::erdos_renyi(n, 0.3, 77);
+    coord
+        .solve(&Request {
+            id: 0,
+            graph: g_upd.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: true, // successor-carrying base: increases stay incremental
+        })
+        .expect("prime update base");
+    let mut delta = Vec::new();
+    'delta: for i in 0..n {
+        for j in 0..n {
+            if i != j && g_upd.get(i, j).is_finite() {
+                delta.push(EdgeUpdate { src: i, dst: j, weight: g_upd.get(i, j) * 0.5 });
+                if delta.len() == 4 {
+                    break 'delta;
+                }
+            }
+        }
+    }
+    let fp = graph_fingerprint(&g_upd);
+    let upd = bench("coordinator.update (4-edge delta)", &common::config_for(64), || {
+        let outcome = coord
+            .update(&UpdateRequest {
+                id: 0,
+                variant: "staged".into(),
+                n: g_upd.n(),
+                base_fingerprint: fp,
+                updates: delta.clone(),
+                want_paths: false,
+            })
+            .expect("update");
+        match outcome {
+            UpdateOutcome::Solved(resp) => black_box(resp),
+            UpdateOutcome::BaseMissing { .. } => panic!("base evicted mid-bench"),
+        };
+    });
+    let g_upd_mut = incremental::mutated(&g_upd, &delta).expect("valid batch");
+    let recompute = bench("full solve of mutated graph", &cfg, || {
+        black_box(
+            coord
+                .solve(&Request {
+                    id: 0,
+                    graph: g_upd_mut.clone(),
+                    variant: "staged".into(),
+                    no_cache: true,
+                    want_paths: false,
+                })
+                .expect("solve"),
+        );
+    });
+    println!(
+        "update (incremental)   {}",
+        format_time(upd.median_s)
+    );
+    println!(
+        "recompute (no cache)   {}   (incremental is {:.1}× faster)",
+        format_time(recompute.median_s),
+        recompute.median_s / upd.median_s
+    );
+
+    // short update-heavy trace replay: deltas chain across fingerprints
+    let trace = workload::generate(&TraceConfig {
+        count: 16,
+        ..TraceConfig::update_heavy(0xD17A)
+    });
+    let mut current: std::collections::HashMap<(usize, u64), fw_stage::graph::DistMatrix> =
+        std::collections::HashMap::new();
+    let t0 = Instant::now();
+    let mut applied = 0u64;
+    for item in &trace {
+        let key = (item.n, item.seed);
+        let base = current.entry(key).or_insert_with(|| item.graph());
+        if item.updates.is_empty() {
+            coord
+                .solve(&Request {
+                    id: 0,
+                    graph: base.clone(),
+                    variant: "staged".into(),
+                    no_cache: false,
+                    want_paths: true,
+                })
+                .expect("trace solve");
+            continue;
+        }
+        let outcome = coord
+            .update(&UpdateRequest {
+                id: 0,
+                variant: "staged".into(),
+                n: base.n(),
+                base_fingerprint: graph_fingerprint(base),
+                updates: item.updates.clone(),
+                want_paths: false,
+            })
+            .expect("trace update");
+        if matches!(outcome, UpdateOutcome::Solved(_)) {
+            applied += 1;
+        }
+        *base = incremental::mutated(base, &item.updates).expect("valid trace batch");
+    }
+    let trace_s = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics().snapshot();
+    println!(
+        "update-heavy trace     {}   ({applied} chained updates; {} edges, {} recomputes)",
+        format_time(trace_s),
+        snap.get("update_edges"),
+        snap.get("update_recomputes"),
     );
 
     // ---- batching throughput: packable small graphs vs sequential ----

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         heavy_tail: true,
         kinds: vec![GraphKind::ErdosRenyi, GraphKind::Grid, GraphKind::ScaleFree],
         seed: 0xBEEF,
+        ..TraceConfig::default()
     });
     let span = trace.last().unwrap().at.as_secs_f64();
     println!("trace: {} requests over {span:.2}s (heavy-tail sizes)", trace.len());
@@ -137,6 +138,49 @@ fn main() -> anyhow::Result<()> {
         snapshot.get("superblock_solves"),
         snapshot.get("superblock_rounds"),
         snapshot.get("superblock_tiles")
+    );
+
+    // ---- update-heavy regime: edge-delta traffic over cached closures ----
+    // base graphs are solved once (with paths, so increases stay
+    // incremental); every later item ships only a delta batch against the
+    // running graph, exercising the coordinator's fingerprint chains
+    let updates = generate(&TraceConfig {
+        count: 24,
+        ..TraceConfig::update_heavy(0xCAFE)
+    });
+    let mut current: std::collections::HashMap<(usize, u64), fw_stage::graph::DistMatrix> =
+        std::collections::HashMap::new();
+    let mut update_lat = Samples::new();
+    let mut served_incremental = 0u64;
+    for item in &updates {
+        let key = (item.n, item.seed);
+        let base = current.entry(key).or_insert_with(|| item.graph());
+        if item.updates.is_empty() {
+            client.solve_paths(base, "staged")?;
+            continue;
+        }
+        let t0 = Instant::now();
+        let resp = client.update_or_solve(base, &item.updates, "staged", false)?;
+        update_lat.push(t0.elapsed().as_secs_f64());
+        if resp.source == fw_stage::coordinator::Source::Incremental {
+            served_incremental += 1;
+        }
+        // chase the chain: the next delta applies to the mutated graph
+        *base = fw_stage::apsp::incremental::mutated(base, &item.updates)
+            .map_err(anyhow::Error::msg)?;
+    }
+    println!(
+        "update regime: {} delta batches, {} served incrementally, p50 {:.2}ms",
+        update_lat.len(),
+        served_incremental,
+        update_lat.percentile(50.0) * 1e3,
+    );
+    let snapshot = coord.metrics().snapshot();
+    println!(
+        "incremental: {} solves, {} edges applied, {} recomputes",
+        snapshot.get("incremental_solves"),
+        snapshot.get("update_edges"),
+        snapshot.get("update_recomputes")
     );
     println!("serve_demo OK");
     Ok(())

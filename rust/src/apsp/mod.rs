@@ -12,9 +12,12 @@
 //! matrix; [`paths`] additionally reconstructs shortest paths via a
 //! successor matrix.  The hot phase-3 inner loops of every blocked tier
 //! ([`blocked`], [`parallel`], and `crate::superblock::minplus`) share one
-//! register-tiled (min, +) microkernel ([`kernel`]).
+//! register-tiled (min, +) microkernel ([`kernel`]).  [`incremental`]
+//! applies edge-weight deltas to an existing `(dist, succ)` closure — the
+//! dynamic-graph tier the coordinator serves `"update"` requests with.
 
 pub mod blocked;
+pub mod incremental;
 pub mod johnson;
 pub mod kernel;
 pub mod naive;

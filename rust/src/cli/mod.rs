@@ -4,11 +4,12 @@
 //! ```text
 //! fw-stage solve     --input g.gr [--variant staged|superblock] [--artifacts DIR]
 //!                    [--superblock-bucket N] [--superblock-workers W] [--output d.dist]
-//!                    [--paths --src A --dst B]
+//!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
 //!                    [--superblock-bucket N] [--superblock-workers W]
+//!                    [--update-max-chain K]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
-//!                    [--paths --src A --dst B]
+//!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
 //! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
@@ -18,6 +19,13 @@
 //! `--paths` asks the coordinator for successor tracking; with `--src`/
 //! `--dst` the reconstructed hop sequence and its cost are printed instead
 //! of the distance matrix.
+//!
+//! `--update` applies an edge-delta batch to the *cached closure* of the
+//! input graph (the dynamic-graph tier): semicolon-separated `src,dst,w`
+//! triples, `w = inf` deletes the edge.  `solve` primes the cache with the
+//! base closure and then updates it; `client` sends only the deltas plus
+//! the base fingerprint, falling back to a full solve of the mutated graph
+//! when the server has no cached base.
 
 pub mod args;
 
@@ -26,6 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::apsp::incremental::{self, EdgeUpdate};
 use crate::apsp::paths::PathsResult;
 use crate::coordinator::{self, Coordinator};
 use crate::graph::{generators, io, DistMatrix};
@@ -101,7 +110,41 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         config.router.superblock_bucket = Some(sb_bucket);
     }
     config.superblock_workers = args.get_usize("superblock-workers", 0)?;
+    config.update_max_chain = args.get_usize("update-max-chain", 8)? as u32;
     Coordinator::start(config)
+}
+
+/// Parse `--update "src,dst,w[;src,dst,w…]"` (`w = inf` deletes the edge).
+fn parse_updates(spec: &str) -> Result<Vec<EdgeUpdate>> {
+    let mut out = Vec::new();
+    for (i, triple) in spec.split(';').enumerate() {
+        let triple = triple.trim();
+        if triple.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = triple.split(',').map(str::trim).collect();
+        if parts.len() != 3 {
+            bail!("--update triple #{i} {triple:?} must be src,dst,w");
+        }
+        let src: usize = parts[0]
+            .parse()
+            .with_context(|| format!("--update triple #{i}: bad src {:?}", parts[0]))?;
+        let dst: usize = parts[1]
+            .parse()
+            .with_context(|| format!("--update triple #{i}: bad dst {:?}", parts[1]))?;
+        let weight: f32 = if parts[2].eq_ignore_ascii_case("inf") {
+            f32::INFINITY
+        } else {
+            parts[2]
+                .parse()
+                .with_context(|| format!("--update triple #{i}: bad weight {:?}", parts[2]))?
+        };
+        out.push(EdgeUpdate { src, dst, weight });
+    }
+    if out.is_empty() {
+        bail!("--update spec {spec:?} contains no src,dst,w triples");
+    }
+    Ok(out)
 }
 
 fn cmd_solve(rest: &[String]) -> Result<()> {
@@ -113,24 +156,69 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let want_paths = args.get_bool("paths");
     let src = args.get_usize("src", 0)?;
     let dst = args.get_usize("dst", 0)?;
+    let update_spec = args.get("update").map(str::to_string);
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
     let _ = args.get("cpu-threshold");
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
+    let _ = args.get("update-max-chain");
     args.reject_unknown()?;
 
     let graph = io::load(Path::new(input))?;
     let coord = start_coordinator(&args)?;
+    // with --update, `graph` is the *base*: prime the cache with its
+    // closure (outside the timed window — the headline number must be the
+    // update's own cost, not the from-scratch solve's), then apply the
+    // delta batch through the incremental tier; path costs reconstruct
+    // against the mutated graph
+    let prepared = match &update_spec {
+        None => None,
+        Some(spec) => {
+            let updates = parse_updates(spec)?;
+            let mutated = incremental::mutated(&graph, &updates)
+                .map_err(|e| anyhow::anyhow!("invalid --update batch: {e}"))?;
+            coord.solve(&coordinator::Request {
+                id: 1,
+                graph: graph.clone(),
+                variant: variant.clone(),
+                no_cache: false,
+                want_paths: true, // successor-carrying base keeps increases incremental
+            })?;
+            Some((updates, mutated))
+        }
+    };
     let t0 = std::time::Instant::now();
-    let resp = coord.solve(&coordinator::Request {
-        id: 1,
-        graph: graph.clone(),
-        variant,
-        no_cache: false,
-        want_paths,
-    })?;
+    let (resp, effective_graph) = match prepared {
+        None => {
+            let resp = coord.solve(&coordinator::Request {
+                id: 1,
+                graph: graph.clone(),
+                variant,
+                no_cache: false,
+                want_paths,
+            })?;
+            (resp, graph.clone())
+        }
+        Some((updates, mutated)) => {
+            let outcome = coord.update(&coordinator::UpdateRequest {
+                id: 2,
+                variant,
+                n: graph.n(),
+                base_fingerprint: coordinator::cache::graph_fingerprint(&graph),
+                updates,
+                want_paths,
+            })?;
+            match outcome {
+                coordinator::UpdateOutcome::Solved(resp) => (resp, mutated),
+                coordinator::UpdateOutcome::BaseMissing { fingerprint } => bail!(
+                    "internal: base closure {fingerprint:016x} vanished from the cache \
+                     (is --cache 0?)"
+                ),
+            }
+        }
+    };
     let dt = t0.elapsed().as_secs_f64();
     if !quiet {
         let n = graph.n() as f64;
@@ -145,7 +233,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     }
     if want_paths {
         let succ = resp.succ.context("response is missing successors")?;
-        print_path(&graph, resp.dist.clone(), succ, src, dst)?;
+        print_path(&effective_graph, resp.dist.clone(), succ, src, dst)?;
         if let Some(path) = &output {
             io::save(&resp.dist, path)?;
         }
@@ -193,6 +281,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let _ = args.get("cpu-threshold");
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
+    let _ = args.get("update-max-chain");
     args.reject_unknown()?;
 
     let coord = Arc::new(start_coordinator(&args)?);
@@ -220,6 +309,7 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     let input = args.get("input").map(str::to_string);
     let variant = args.get_or("variant", "staged").to_string();
     let output = args.get("output").map(PathBuf::from);
+    let update_spec = args.get("update").map(str::to_string);
     args.reject_unknown()?;
 
     let mut client = coordinator::client::Client::connect(addr)?;
@@ -229,10 +319,24 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     }
     let input = input.context("--input <graph file> required (or --stats)")?;
     let graph = io::load(Path::new(&input))?;
-    let resp = if want_paths {
-        client.solve_paths(&graph, &variant)?
-    } else {
-        client.solve(&graph, &variant)?
+    let (resp, effective_graph) = match &update_spec {
+        None => {
+            let resp = if want_paths {
+                client.solve_paths(&graph, &variant)?
+            } else {
+                client.solve(&graph, &variant)?
+            };
+            (resp, graph.clone())
+        }
+        Some(spec) => {
+            // only the deltas + the base fingerprint travel; on a server
+            // cache miss the client re-sends the mutated graph in full
+            let updates = parse_updates(spec)?;
+            let mutated = incremental::mutated(&graph, &updates)
+                .map_err(|e| anyhow::anyhow!("invalid --update batch: {e}"))?;
+            let resp = client.update_or_solve(&graph, &updates, &variant, want_paths)?;
+            (resp, mutated)
+        }
     };
     eprintln!(
         "server solved n={} via {} (bucket {}) in {:.4}s",
@@ -243,7 +347,7 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     );
     if want_paths {
         let succ = resp.succ.context("server response is missing successors")?;
-        print_path(&graph, resp.dist.clone(), succ, src, dst)?;
+        print_path(&effective_graph, resp.dist.clone(), succ, src, dst)?;
         if let Some(path) = &output {
             io::save(&resp.dist, path)?;
         }
@@ -340,6 +444,7 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
     let _ = args.get("cpu-threshold");
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
+    let _ = args.get("update-max-chain");
     args.reject_unknown()?;
 
     let coord = start_coordinator(&args)?;
@@ -379,6 +484,25 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_updates_triples() {
+        let ups = parse_updates("0,1,2.5; 3,4,inf").unwrap();
+        assert_eq!(ups.len(), 2);
+        assert_eq!((ups[0].src, ups[0].dst, ups[0].weight), (0, 1, 2.5));
+        assert_eq!((ups[1].src, ups[1].dst), (3, 4));
+        assert!(ups[1].weight.is_infinite());
+        // trailing separators tolerated; empty/garbage rejected
+        assert_eq!(parse_updates("5,6,0.25;").unwrap().len(), 1);
+        assert!(parse_updates("").is_err());
+        assert!(parse_updates("1,2").is_err());
+        assert!(parse_updates("a,2,3").is_err());
+    }
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {

@@ -54,13 +54,32 @@ struct Key {
 }
 
 struct Entry {
+    /// The solved graph itself.  Kept so `"update"` requests can chain:
+    /// an edge-delta batch needs the base weights to classify deltas and
+    /// to fall back to a full solve (roughly triples the entry footprint;
+    /// capacity bounds total memory as before).
+    graph: DistMatrix,
     dist: DistMatrix,
     /// Successor matrix, present once a path-carrying solve has been
     /// cached for this key (same fingerprint — the key contract is shared
     /// with distance-only entries; paths *upgrade* an entry in place).
     succ: Option<Vec<usize>>,
+    /// Incremental updates applied since the last from-scratch solve of
+    /// this closure (0 = a baseline).  The coordinator re-baselines when a
+    /// chain exceeds its cap.
+    chain: u32,
     /// Monotone counter value at last touch (LRU eviction order).
     last_used: u64,
+}
+
+/// A cached base closure an `"update"` request chains from — an atomic
+/// snapshot of one entry (graph, closure, chain depth), taken under the
+/// cache lock so a concurrent put can never hand out a split pair.
+pub struct CachedBase {
+    pub graph: DistMatrix,
+    pub dist: DistMatrix,
+    pub succ: Option<Vec<usize>>,
+    pub chain: u32,
 }
 
 /// A thread-safe LRU result cache.
@@ -137,16 +156,76 @@ impl ResultCache {
     }
 
     pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
-        self.insert(variant, g, dist, None);
+        self.insert(variant, g, dist, None, 0);
     }
 
     /// Cache a path-carrying solve: the distance closure plus the successor
     /// matrix, under the same fingerprint key distance entries use.
     pub fn put_paths(&self, variant: &str, g: &DistMatrix, dist: DistMatrix, succ: Vec<usize>) {
-        self.insert(variant, g, dist, Some(succ));
+        self.insert(variant, g, dist, Some(succ), 0);
     }
 
-    fn insert(&self, variant: &str, g: &DistMatrix, dist: DistMatrix, succ: Option<Vec<usize>>) {
+    /// Cache an incrementally updated closure for the *mutated* graph `g`,
+    /// recording how many updates separate it from its baseline.  A chain
+    /// of updates is itself cache-hittable: the coordinator keys each link
+    /// by the mutated graph's fingerprint, so replaying the same deltas —
+    /// or solving the mutated graph outright — hits this entry.
+    pub fn put_chained(
+        &self,
+        variant: &str,
+        g: &DistMatrix,
+        dist: DistMatrix,
+        succ: Option<Vec<usize>>,
+        chain: u32,
+    ) {
+        self.insert(variant, g, dist, succ, chain);
+    }
+
+    /// Atomic base-closure lookup for an `"update"` request, addressed by
+    /// fingerprint (the request carries no graph — that is the point).
+    /// Misses when the closure was never solved here or has been evicted;
+    /// the caller surfaces that as a typed error the client retries as a
+    /// full solve.  Like every lookup, trusts the 64-bit fingerprint not
+    /// to collide (the request-path `get` makes the same bet).
+    pub fn get_base(&self, variant: &str, n: usize, fingerprint: u64) -> Option<CachedBase> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let key = Key {
+            variant: variant.to_string(),
+            n,
+            fingerprint,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = clock;
+                let base = CachedBase {
+                    graph: entry.graph.clone(),
+                    dist: entry.dist.clone(),
+                    succ: entry.succ.clone(),
+                    chain: entry.chain,
+                };
+                inner.hits += 1;
+                Some(base)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(
+        &self,
+        variant: &str,
+        g: &DistMatrix,
+        dist: DistMatrix,
+        succ: Option<Vec<usize>>,
+        chain: u32,
+    ) {
         if self.capacity == 0 {
             return;
         }
@@ -160,12 +239,18 @@ impl ResultCache {
             // overwrite their paired distances: different tiers can
             // produce bitwise-different (equally valid) closures, and a
             // (dist, succ) pair must stay internally consistent — so a
-            // succ-less put against a succ-carrying entry only bumps LRU.
+            // succ-less put against a succ-carrying entry only bumps LRU
+            // (the surviving pair keeps its own chain depth; re-baselining
+            // then happens at the pair's cadence, never against a mix).
             if succ.is_some() {
+                entry.graph = g.clone();
                 entry.dist = dist;
                 entry.succ = succ;
+                entry.chain = chain;
             } else if entry.succ.is_none() {
+                entry.graph = g.clone();
                 entry.dist = dist;
+                entry.chain = chain;
             }
             entry.last_used = clock;
             return;
@@ -184,8 +269,10 @@ impl ResultCache {
         inner.map.insert(
             key,
             Entry {
+                graph: g.clone(),
                 dist,
                 succ,
+                chain,
                 last_used: clock,
             },
         );
@@ -276,6 +363,55 @@ mod tests {
         assert_eq!(dist2, r.dist, "distance-only put must not split the pair");
         assert_eq!(succ2, r.succ());
         assert_eq!(cache.len(), 1, "same fingerprint key, one entry");
+    }
+
+    #[test]
+    fn get_base_roundtrips_graph_closure_and_chain() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(6);
+        let r = crate::apsp::paths::solve(&g);
+        cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
+        let fp = graph_fingerprint(&g);
+        let base = cache.get_base("staged", g.n(), fp).expect("base hit");
+        assert_eq!(base.graph, g);
+        assert_eq!(base.dist, r.dist);
+        assert_eq!(base.succ.as_deref(), Some(r.succ()));
+        assert_eq!(base.chain, 0);
+        // unknown fingerprint misses; n is part of the key
+        assert!(cache.get_base("staged", g.n(), fp ^ 1).is_none());
+        assert!(cache.get_base("staged", g.n() + 1, fp).is_none());
+        // chained put records depth under the mutated graph's own key
+        let mut g2 = g.clone();
+        g2.set(0, 3, 1.5);
+        let r2 = crate::apsp::paths::solve(&g2);
+        cache.put_chained("staged", &g2, r2.dist.clone(), Some(r2.succ().to_vec()), 3);
+        let b2 = cache
+            .get_base("staged", g2.n(), graph_fingerprint(&g2))
+            .expect("chained hit");
+        assert_eq!(b2.chain, 3);
+        assert_eq!(b2.graph, g2);
+        // ...and the ordinary lookups see the chained closure too
+        assert_eq!(cache.get("staged", &g2), Some(r2.dist.clone()));
+        let (d, s) = cache.get_paths("staged", &g2).expect("paths hit");
+        assert_eq!(d, r2.dist);
+        assert_eq!(s, r2.succ());
+    }
+
+    #[test]
+    fn chained_dist_only_put_never_splits_a_pair() {
+        let cache = ResultCache::new(4);
+        let g = generators::ring(5);
+        let r = crate::apsp::paths::solve(&g);
+        cache.put_paths("v", &g, r.dist.clone(), r.succ().to_vec());
+        // dist-only chained put against the succ-carrying entry: the pair
+        // survives intact, chain depth included
+        let mut other = r.dist.clone();
+        other.set(0, 1, other.get(0, 1) + 1e-3);
+        cache.put_chained("v", &g, other, None, 5);
+        let base = cache.get_base("v", g.n(), graph_fingerprint(&g)).unwrap();
+        assert_eq!(base.dist, r.dist);
+        assert_eq!(base.succ.as_deref(), Some(r.succ()));
+        assert_eq!(base.chain, 0, "surviving pair keeps its own chain depth");
     }
 
     #[test]

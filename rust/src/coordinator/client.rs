@@ -6,9 +6,24 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
-use super::types::{decode_response, encode_request, Request, Response};
+use super::cache::graph_fingerprint;
+use super::types::{
+    decode_response, encode_request, encode_update_request, Request, Response, UpdateRequest,
+    CODE_UPDATE_BASE_MISSING,
+};
+use crate::apsp::incremental::{self, EdgeUpdate};
 use crate::graph::DistMatrix;
 use crate::util::json::Json;
+
+/// What an update request came back as.
+pub enum UpdateReply {
+    /// Served (incrementally or via a server-side re-baseline).
+    Solved(Response),
+    /// The base closure is not cached server-side; retry as a full solve
+    /// of the mutated graph ([`Client::update_or_solve`] does exactly
+    /// that).
+    BaseMissing,
+}
 
 /// One connection to a running `fw-stage serve`.
 pub struct Client {
@@ -72,6 +87,70 @@ impl Client {
             bail!("response id {} for request {id}", resp.id);
         }
         Ok(resp)
+    }
+
+    /// Send an edge-delta batch against `base`'s cached closure.  The
+    /// fingerprint is computed client-side from the base graph (the same
+    /// function the server keys its cache with), so only the deltas
+    /// travel.  A typed `update_base_missing` error maps to
+    /// [`UpdateReply::BaseMissing`]; every other error is a real failure.
+    pub fn update(
+        &mut self,
+        base: &DistMatrix,
+        updates: &[EdgeUpdate],
+        variant: &str,
+        want_paths: bool,
+    ) -> Result<UpdateReply> {
+        // fail before encoding: the wire has no rendering for NaN/-inf
+        // (null means "+inf, delete"), so a malformed weight must not
+        // silently travel as a deletion
+        incremental::validate_batch(base.n(), updates)
+            .map_err(|e| anyhow::anyhow!("invalid update batch: {e}"))?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = UpdateRequest {
+            id,
+            variant: variant.to_string(),
+            n: base.n(),
+            base_fingerprint: graph_fingerprint(base),
+            updates: updates.to_vec(),
+            want_paths,
+        };
+        let reply = self.roundtrip(&encode_update_request(&req))?;
+        let v = Json::parse(&reply).context("update reply is not valid JSON")?;
+        if v.get("type").as_str() == Some("error")
+            && v.get("code").as_str() == Some(CODE_UPDATE_BASE_MISSING)
+        {
+            return Ok(UpdateReply::BaseMissing);
+        }
+        let resp = decode_response(&reply)?;
+        if resp.id != id {
+            bail!("response id {} for request {id}", resp.id);
+        }
+        if want_paths && resp.succ.is_none() {
+            bail!("update response is missing the successor matrix");
+        }
+        Ok(UpdateReply::Solved(resp))
+    }
+
+    /// Update with transparent fallback: on a cache miss the mutated graph
+    /// is solved from scratch (one extra round trip, and the server caches
+    /// the fresh closure — so the *next* delta against it chains).
+    pub fn update_or_solve(
+        &mut self,
+        base: &DistMatrix,
+        updates: &[EdgeUpdate],
+        variant: &str,
+        want_paths: bool,
+    ) -> Result<Response> {
+        match self.update(base, updates, variant, want_paths)? {
+            UpdateReply::Solved(resp) => Ok(resp),
+            UpdateReply::BaseMissing => {
+                let mutated = incremental::mutated(base, updates)
+                    .map_err(|e| anyhow::anyhow!("invalid update batch: {e}"))?;
+                self.request(&mutated, variant, want_paths)
+            }
+        }
     }
 
     /// Liveness check.

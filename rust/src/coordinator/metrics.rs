@@ -22,6 +22,9 @@ struct Inner {
     superblock_solves: u64,
     superblock_rounds: u64,
     superblock_tiles: u64,
+    incremental_solves: u64,
+    update_edges: u64,
+    update_recomputes: u64,
     batches: u64,
     batched_items: u64,
     latency: Samples,
@@ -51,6 +54,7 @@ impl Metrics {
             super::types::Source::Cpu => m.cpu_solves += 1,
             super::types::Source::Cache => m.cache_hits += 1,
             super::types::Source::SuperBlock => m.superblock_solves += 1,
+            super::types::Source::Incremental => m.incremental_solves += 1,
         }
         m.latency.push(seconds);
     }
@@ -62,6 +66,17 @@ impl Metrics {
         m.superblock_tiles += tiles;
     }
 
+    /// Account one `"update"` request: the edge-delta count it carried and
+    /// whether it fell back to a full recompute (re-baseline, threshold, or
+    /// a successor-less base).
+    pub fn record_update(&self, edges: u64, recomputed: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.update_edges += edges;
+        if recomputed {
+            m.update_recomputes += 1;
+        }
+    }
+
     pub fn record_batch(&self, items: usize, device_seconds: f64) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
@@ -70,10 +85,18 @@ impl Metrics {
     }
 
     /// Snapshot as a JSON object (served by the `stats` request).
+    ///
+    /// With no latency samples yet, the summary fields render as `"-"`:
+    /// `Samples` reports the empty case as NaN by contract (never a panic
+    /// or a silent 0 — see `util::stats`), NaN has no JSON rendering, and
+    /// `"-"` keeps "no data" distinguishable from "0 seconds" for humans
+    /// and dashboards alike.
     pub fn snapshot(&self) -> Json {
         let mut m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
         let percentiles = m.latency.percentiles(&[50.0, 95.0, 99.0]);
+        let empty = m.latency.is_empty();
+        let latency = |v: f64| if empty { Json::str("-") } else { Json::num(v) };
         Json::obj(vec![
             ("uptime_seconds", Json::num(uptime)),
             ("requests", Json::num(m.requests as f64)),
@@ -84,14 +107,17 @@ impl Metrics {
             ("superblock_solves", Json::num(m.superblock_solves as f64)),
             ("superblock_rounds", Json::num(m.superblock_rounds as f64)),
             ("superblock_tiles", Json::num(m.superblock_tiles as f64)),
+            ("incremental_solves", Json::num(m.incremental_solves as f64)),
+            ("update_edges", Json::num(m.update_edges as f64)),
+            ("update_recomputes", Json::num(m.update_recomputes as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("batched_items", Json::num(m.batched_items as f64)),
             ("device_seconds", Json::num(m.device_seconds)),
-            ("latency_mean_s", Json::num(m.latency.mean())),
-            ("latency_p50_s", Json::num(percentiles[0])),
-            ("latency_p95_s", Json::num(percentiles[1])),
-            ("latency_p99_s", Json::num(percentiles[2])),
-            ("latency_max_s", Json::num(m.latency.max())),
+            ("latency_mean_s", latency(m.latency.mean())),
+            ("latency_p50_s", latency(percentiles[0])),
+            ("latency_p95_s", latency(percentiles[1])),
+            ("latency_p99_s", latency(percentiles[2])),
+            ("latency_max_s", latency(m.latency.max())),
         ])
     }
 }
@@ -151,13 +177,40 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_with_no_latency_is_nan_free_json() {
+    fn snapshot_with_no_latency_renders_dash() {
+        // the empty sample set is pinned end to end: Samples reports NaN
+        // (util::stats), and the snapshot renders the absence as "-" —
+        // valid JSON, and distinguishable from a real 0-second latency
         let m = Metrics::new();
-        // mean of zero samples is NaN; it must still serialize (as NaN→"NaN"
-        // would be invalid JSON, f64 NaN formats as NaN... guard: parse back)
-        let text = m.snapshot().to_string();
-        // NaN is not valid JSON; ensure we can reparse
-        let reparsed = Json::parse(&text);
-        assert!(reparsed.is_ok(), "snapshot not parseable: {text}");
+        let snap = m.snapshot();
+        for key in [
+            "latency_mean_s",
+            "latency_p50_s",
+            "latency_p95_s",
+            "latency_p99_s",
+            "latency_max_s",
+        ] {
+            assert_eq!(snap.get(key).as_str(), Some("-"), "{key}");
+        }
+        let reparsed = Json::parse(&snap.to_string());
+        assert!(reparsed.is_ok(), "snapshot not parseable: {snap}");
+        // one recorded solve flips every field back to numbers
+        m.record_solve(Source::Cpu, 0.25);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("latency_p99_s").as_f64(), Some(0.25));
+        assert_eq!(snap.get("latency_max_s").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn update_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_solve(Source::Incremental, 0.002);
+        m.record_solve(Source::Incremental, 0.003);
+        m.record_update(4, false);
+        m.record_update(2, true);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("incremental_solves").as_usize(), Some(2));
+        assert_eq!(snap.get("update_edges").as_usize(), Some(6));
+        assert_eq!(snap.get("update_recomputes").as_usize(), Some(1));
     }
 }

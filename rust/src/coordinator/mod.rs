@@ -40,7 +40,7 @@ use crate::runtime::Manifest;
 use crate::superblock;
 
 pub use engine::{Engine, EngineConfig};
-pub use types::{Request, Response, Source};
+pub use types::{Request, Response, Source, UpdateRequest};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -52,6 +52,11 @@ pub struct Config {
     pub cache_capacity: usize,
     /// Phase-2/3 pool width for the superblock tier; 0 = one per core.
     pub superblock_workers: usize,
+    /// Max incremental updates chained onto one baseline closure before an
+    /// update request is served by a full re-solve instead (bounding the
+    /// float-association drift a long chain could accumulate at arbitrary
+    /// weights; DESIGN.md §Incremental tier).
+    pub update_max_chain: u32,
 }
 
 impl Config {
@@ -63,8 +68,17 @@ impl Config {
             router: router::RouterConfig::default(),
             cache_capacity: 128,
             superblock_workers: 0,
+            update_max_chain: 8,
         }
     }
+}
+
+/// Outcome of an `"update"` request: a response, or the one typed miss the
+/// client is expected to handle by re-solving the mutated graph from
+/// scratch (wire code [`types::CODE_UPDATE_BASE_MISSING`]).
+pub enum UpdateOutcome {
+    Solved(Response),
+    BaseMissing { fingerprint: u64 },
 }
 
 /// The coordinator: validates, routes, caches, and dispatches solves.
@@ -83,6 +97,7 @@ pub struct Coordinator {
     /// names the "superblock" pseudo-variant.
     superblock_variant: String,
     superblock_workers: usize,
+    update_max_chain: u32,
 }
 
 /// What the coordinator knows about the artifacts (for `info` requests and
@@ -128,6 +143,7 @@ impl Coordinator {
             manifest,
             superblock_variant,
             superblock_workers: config.superblock_workers,
+            update_max_chain: config.update_max_chain,
         })
     }
 
@@ -141,8 +157,17 @@ impl Coordinator {
 
     /// Serve one request (blocking). This is the whole request path.
     pub fn solve(&self, req: &Request) -> Result<Response> {
-        let t0 = Instant::now();
         self.metrics.record_request();
+        self.solve_impl(req, true)
+    }
+
+    /// The request path, with per-request metrics (request count, solve
+    /// counters, latency samples) optionally suppressed — the update
+    /// tier's re-baselining runs a full solve *inside* one wire request
+    /// and must not double-count it.  Work-level metrics (superblock
+    /// rounds/tiles, engine batches) still record: that work really ran.
+    fn solve_impl(&self, req: &Request, record: bool) -> Result<Response> {
+        let t0 = Instant::now();
         req.graph
             .validate()
             .map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
@@ -158,7 +183,9 @@ impl Coordinator {
             };
             if let Some((dist, succ)) = hit {
                 let seconds = t0.elapsed().as_secs_f64();
-                self.metrics.record_solve(Source::Cache, seconds);
+                if record {
+                    self.metrics.record_solve(Source::Cache, seconds);
+                }
                 return Ok(Response {
                     id: req.id,
                     dist,
@@ -265,7 +292,9 @@ impl Coordinator {
             }
         }
         let seconds = t0.elapsed().as_secs_f64();
-        self.metrics.record_solve(source, seconds);
+        if record {
+            self.metrics.record_solve(source, seconds);
+        }
         Ok(Response {
             id: req.id,
             dist,
@@ -274,6 +303,95 @@ impl Coordinator {
             bucket,
             seconds,
         })
+    }
+
+    /// Serve one incremental `"update"` request: apply an edge-delta batch
+    /// to a cached base closure, addressed by fingerprint.
+    ///
+    /// The cache chains: the result is stored under the *mutated* graph's
+    /// fingerprint with `chain = base.chain + 1`, so a follow-up update
+    /// against that fingerprint keeps chaining — and a plain solve of the
+    /// mutated graph hits the same entry.  A chain longer than
+    /// [`Config::update_max_chain`] re-baselines: the batch is served by a
+    /// full solve dispatched through [`Coordinator::solve`] (so device- and
+    /// superblock-scale re-baselines still reach their fast tiers, and the
+    /// fresh closure is cached with `chain = 0`).  The same full-solve path
+    /// serves the two cases the incremental kernels cannot: a paths request
+    /// against a successor-less base entry, and an effective *increase*
+    /// against one (damage detection needs the stored successor forest).
+    pub fn update(&self, req: &types::UpdateRequest) -> Result<UpdateOutcome> {
+        let t0 = Instant::now();
+        self.metrics.record_request();
+        router::route_update(&self.router, &req.variant, req.n, req.want_paths)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let Some(base) = self
+            .cache
+            .get_base(&req.variant, req.n, req.base_fingerprint)
+        else {
+            return Ok(UpdateOutcome::BaseMissing {
+                fingerprint: req.base_fingerprint,
+            });
+        };
+        let g_new = apsp::incremental::mutated(&base.graph, &req.updates)
+            .map_err(|e| anyhow::anyhow!("invalid update batch: {e}"))?;
+        let needs_succ_rebaseline = base.succ.is_none()
+            && (req.want_paths
+                || apsp::incremental::has_effective_increase(&base.graph, &req.updates)
+                    .map_err(|e| anyhow::anyhow!("invalid update batch: {e}"))?);
+        let rebaseline = base.chain + 1 > self.update_max_chain || needs_succ_rebaseline;
+
+        let ucfg = apsp::incremental::UpdateConfig {
+            tile: self.router.cpu_tile,
+            ..apsp::incremental::UpdateConfig::default()
+        };
+        let (dist, succ, recomputed) = if rebaseline {
+            // full solve through the normal routing (device/superblock
+            // tiers included); it caches the fresh baseline itself.  The
+            // per-request metrics stay suppressed — this is still the one
+            // wire request recorded as Source::Incremental below
+            let resp = self.solve_impl(
+                &Request {
+                    id: req.id,
+                    graph: g_new,
+                    variant: req.variant.clone(),
+                    no_cache: false,
+                    want_paths: req.want_paths || base.succ.is_some(),
+                },
+                false,
+            )?;
+            (resp.dist, resp.succ, true)
+        } else if let Some(base_succ) = base.succ {
+            let closure = apsp::paths::PathsResult::from_parts(base.dist, base_succ);
+            let (r, stats) =
+                apsp::incremental::update_paths(&base.graph, &closure, &req.updates, &ucfg)
+                    .map_err(|e| anyhow::anyhow!("update: {e}"))?;
+            let (dist, succ) = r.into_parts();
+            let chain = if stats.recomputed { 0 } else { base.chain + 1 };
+            self.cache
+                .put_chained(&req.variant, &g_new, dist.clone(), Some(succ.clone()), chain);
+            (dist, Some(succ), stats.recomputed)
+        } else {
+            // decrease-only batch against a distance-only entry
+            let (dist, stats) =
+                apsp::incremental::update_dist(&base.graph, &base.dist, &req.updates, &ucfg)
+                    .map_err(|e| anyhow::anyhow!("update: {e}"))?;
+            let chain = if stats.recomputed { 0 } else { base.chain + 1 };
+            self.cache
+                .put_chained(&req.variant, &g_new, dist.clone(), None, chain);
+            (dist, None, stats.recomputed)
+        };
+        self.metrics
+            .record_update(req.updates.len() as u64, recomputed);
+        let seconds = t0.elapsed().as_secs_f64();
+        self.metrics.record_solve(Source::Incremental, seconds);
+        Ok(UpdateOutcome::Solved(Response {
+            id: req.id,
+            dist,
+            succ: if req.want_paths { succ } else { None },
+            source: Source::Incremental,
+            bucket: req.n,
+            seconds,
+        }))
     }
 
     /// Convenience: solve a bare graph with defaults.

@@ -113,6 +113,48 @@ pub fn route(
     }
 }
 
+/// Pure pre-check for `"update"` requests: which variants the incremental
+/// tier may chain from.  The base-closure *lookup* (and the typed
+/// cache-miss error) happens in the coordinator — this rejects what no
+/// cache state could fix, before any cache traffic:
+///
+/// * unknown variants, exactly like [`route`];
+/// * `johnson` — its closures come from a different algorithm family
+///   (bitwise-incompatible association, no successor matrix), so chaining
+///   incremental relaxations onto them would silently mix families; the
+///   client re-solves instead.
+///
+/// `want_paths` rides along unchanged: the incremental tier maintains
+/// successors whenever the base entry carries them, and the coordinator
+/// re-baselines through a full path solve when it does not.
+pub fn route_update(
+    config: &RouterConfig,
+    variant: &str,
+    n: usize,
+    _want_paths: bool,
+) -> Result<(), String> {
+    if n == 0 {
+        return Err("empty graph".to_string());
+    }
+    if variant == "johnson" {
+        return Err(
+            "updates are not available for the johnson variant \
+             (re-solve the mutated graph instead)"
+                .to_string(),
+        );
+    }
+    if variant == "cpu"
+        || variant == "superblock"
+        || config.device_variants.iter().any(|v| v == variant)
+    {
+        return Ok(());
+    }
+    Err(format!(
+        "unknown variant {variant:?} (available: cpu, superblock, {})",
+        config.device_variants.join(", ")
+    ))
+}
+
 fn superblock_route(config: &RouterConfig, n: usize) -> Result<Route, String> {
     let bucket = match config.superblock_bucket {
         Some(b) => {
@@ -278,6 +320,22 @@ mod tests {
         assert_eq!(route(&c, "staged", 4096, false).unwrap(), Route::Device);
         let err = route(&c, "superblock", 4096, false).unwrap_err();
         assert!(err.contains("no device buckets"), "{err}");
+    }
+
+    #[test]
+    fn update_routing_policy() {
+        // every cached-closure variant is updatable...
+        for variant in ["cpu", "superblock", "staged", "blocked", "naive"] {
+            assert!(route_update(&cfg(), variant, 64, false).is_ok(), "{variant}");
+            assert!(route_update(&cfg(), variant, 64, true).is_ok(), "{variant}");
+        }
+        // ...except johnson (different algorithm family; no successors)
+        let err = route_update(&cfg(), "johnson", 64, false).unwrap_err();
+        assert!(err.contains("johnson"), "{err}");
+        // unknown variants rejected with the same shape as route()
+        let err = route_update(&cfg(), "warp9", 64, false).unwrap_err();
+        assert!(err.contains("warp9") && err.contains("staged"), "{err}");
+        assert!(route_update(&cfg(), "staged", 0, false).is_err());
     }
 
     #[test]

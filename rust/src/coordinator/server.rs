@@ -3,6 +3,10 @@
 //! Request types:
 //! * `{"type":"solve", "id", "n", "variant", "edges": [[u,v,w],…]}` →
 //!   `{"type":"result", …}` (see [`super::types`])
+//! * `{"type":"update", "id", "n", "variant", "base": "<hex fingerprint>",
+//!   "updates": [[u,v,w],…]}` → `{"type":"result", …}` from the
+//!   incremental tier, or a typed `{"type":"error",
+//!   "code":"update_base_missing"}` the client retries as a full solve
 //! * `{"type":"ping"}` → `{"type":"pong"}`
 //! * `{"type":"stats"}` → metrics snapshot
 //! * `{"type":"info"}` → artifact variants/buckets
@@ -18,8 +22,11 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::types::{decode_request, encode_error, encode_response};
-use super::Coordinator;
+use super::types::{
+    decode_request, decode_update_request, encode_error, encode_error_coded, encode_response,
+    CODE_UPDATE_BASE_MISSING,
+};
+use super::{Coordinator, UpdateOutcome};
 use crate::util::json::Json;
 
 /// A running server (owns the accept thread).
@@ -135,6 +142,30 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
         "solve" => match decode_request(line) {
             Ok(req) => match coord.solve(&req) {
                 Ok(resp) => encode_response(&resp),
+                Err(e) => {
+                    coord.metrics().record_error();
+                    encode_error(req.id, &format!("{e:#}"))
+                }
+            },
+            Err(e) => {
+                coord.metrics().record_error();
+                encode_error(0, &format!("{e:#}"))
+            }
+        },
+        "update" => match decode_update_request(line) {
+            Ok(req) => match coord.update(&req) {
+                Ok(UpdateOutcome::Solved(resp)) => encode_response(&resp),
+                // the one *typed* error: the client retries as a full
+                // solve of the mutated graph (not an operator-visible
+                // failure, so it does not count as an error metric)
+                Ok(UpdateOutcome::BaseMissing { fingerprint }) => encode_error_coded(
+                    req.id,
+                    CODE_UPDATE_BASE_MISSING,
+                    &format!(
+                        "base closure {fingerprint:016x} is not cached \
+                         (evicted or never solved here); re-solve the mutated graph"
+                    ),
+                ),
                 Err(e) => {
                     coord.metrics().record_error();
                     encode_error(req.id, &format!("{e:#}"))

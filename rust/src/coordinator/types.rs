@@ -7,10 +7,19 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::apsp::incremental::EdgeUpdate;
 use crate::apsp::paths::NO_PATH;
 use crate::graph::DistMatrix;
 use crate::util::json::Json;
 use crate::INF;
+
+/// Server-side cap on request sizes (shared by solve and update decoding).
+const MAX_N: usize = 4096;
+
+/// Wire error code for an update whose base closure is not cached — the
+/// one failure a client is expected to *handle* (retry as a full solve of
+/// the mutated graph) rather than report.
+pub const CODE_UPDATE_BASE_MISSING: &str = "update_base_missing";
 
 /// A solve request.
 #[derive(Clone, Debug)]
@@ -28,6 +37,27 @@ pub struct Request {
     pub want_paths: bool,
 }
 
+/// An incremental `"update"` request: an edge-delta batch against a cached
+/// base closure, addressed by the base graph's fingerprint
+/// ([`crate::coordinator::cache::graph_fingerprint`]).  The graph itself
+/// never travels — that is the point of the dynamic tier.
+#[derive(Clone, Debug)]
+pub struct UpdateRequest {
+    /// Client-chosen id echoed in the response.
+    pub id: u64,
+    /// Variant whose cached closure this chains from.
+    pub variant: String,
+    /// Vertex count of the base graph (part of the cache key).
+    pub n: usize,
+    /// Fingerprint of the base graph.  Travels as a 16-hex-digit string:
+    /// JSON numbers are f64 and cannot carry 64 bits losslessly.
+    pub base_fingerprint: u64,
+    /// Edge-delta batch; the last write to an edge wins.
+    pub updates: Vec<EdgeUpdate>,
+    /// Also return the successor matrix (wire key `"paths"`).
+    pub want_paths: bool,
+}
+
 /// Where a response was computed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Source {
@@ -40,6 +70,9 @@ pub enum Source {
     /// Super-blocked schedule over device buckets (n larger than every
     /// artifact bucket; the attached bucket is the super-tile size).
     SuperBlock,
+    /// Incremental update applied to a cached closure (the dynamic-graph
+    /// tier; re-baselining full solves report their own tier instead).
+    Incremental,
 }
 
 impl Source {
@@ -49,6 +82,7 @@ impl Source {
             Source::Cpu => "cpu",
             Source::Cache => "cache",
             Source::SuperBlock => "superblock",
+            Source::Incremental => "incremental",
         }
     }
 }
@@ -112,7 +146,6 @@ pub fn decode_request(line: &str) -> Result<Request> {
     if n == 0 {
         bail!("empty graph");
     }
-    const MAX_N: usize = 4096;
     if n > MAX_N {
         bail!("n={n} exceeds server limit {MAX_N}");
     }
@@ -146,6 +179,106 @@ pub fn decode_request(line: &str) -> Result<Request> {
         graph,
         variant,
         no_cache: v.get("no_cache").as_bool().unwrap_or(false),
+        want_paths: v.get("paths").as_bool().unwrap_or(false),
+    })
+}
+
+/// Encode an update request as one JSON line.  Edge deltas travel as
+/// `[src, dst, w]` triples with `null` for "+inf" (delete the edge) — the
+/// same unreachable convention the distance rows use.  Weights must be
+/// pre-validated ([`crate::apsp::incremental::validate_batch`];
+/// `Client::update` does): NaN and `-inf` have no wire rendering and
+/// would otherwise travel as `null`, silently becoming deletions.
+pub fn encode_update_request(req: &UpdateRequest) -> String {
+    let updates = req
+        .updates
+        .iter()
+        .map(|u| {
+            Json::Arr(vec![
+                Json::num(u.src as f64),
+                Json::num(u.dst as f64),
+                if u.weight.is_finite() {
+                    Json::num(u.weight as f64)
+                } else {
+                    Json::Null
+                },
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("type", Json::str("update")),
+        ("id", Json::num(req.id as f64)),
+        ("n", Json::num(req.n as f64)),
+        ("variant", Json::str(req.variant.clone())),
+        ("base", Json::str(format!("{:016x}", req.base_fingerprint))),
+        ("paths", Json::Bool(req.want_paths)),
+        ("updates", Json::Arr(updates)),
+    ])
+    .to_string()
+}
+
+/// Decode an update request line.  Unlike solve's edge list (where
+/// self-loops are silently dropped — a generator convenience), a self-loop
+/// *delta* is rejected: it can only be a client bug.
+pub fn decode_update_request(line: &str) -> Result<UpdateRequest> {
+    let v = Json::parse(line).context("request is not valid JSON")?;
+    if v.get("type").as_str() != Some("update") {
+        bail!("not an update request");
+    }
+    let id = v.get("id").as_f64().unwrap_or(0.0) as u64;
+    let n = v.get("n").as_usize().context("update missing 'n'")?;
+    if n == 0 {
+        bail!("empty graph");
+    }
+    if n > MAX_N {
+        bail!("n={n} exceeds server limit {MAX_N}");
+    }
+    let base = v
+        .get("base")
+        .as_str()
+        .context("update missing 'base' fingerprint")?;
+    let base_fingerprint = u64::from_str_radix(base.trim_start_matches("0x"), 16)
+        .ok()
+        .with_context(|| format!("bad base fingerprint {base:?} (expected hex)"))?;
+    let variant = v.get("variant").as_str().unwrap_or("staged").to_string();
+    let arr = v.get("updates").as_arr().context("update missing 'updates'")?;
+    let mut updates = Vec::with_capacity(arr.len());
+    for (idx, e) in arr.iter().enumerate() {
+        let e = e
+            .as_arr()
+            .with_context(|| format!("updates[{idx}] not an array"))?;
+        if e.len() != 3 {
+            bail!("updates[{idx}] must be [src, dst, w]");
+        }
+        let src = e[0]
+            .as_usize()
+            .with_context(|| format!("updates[{idx}] bad src"))?;
+        let dst = e[1]
+            .as_usize()
+            .with_context(|| format!("updates[{idx}] bad dst"))?;
+        let weight = match &e[2] {
+            Json::Null => INF,
+            other => other
+                .as_f64()
+                .with_context(|| format!("updates[{idx}] bad weight"))? as f32,
+        };
+        if src >= n || dst >= n {
+            bail!("updates[{idx}] endpoint out of range");
+        }
+        if src == dst {
+            bail!("updates[{idx}] is a self-loop (the diagonal is pinned to 0)");
+        }
+        if weight.is_nan() {
+            bail!("updates[{idx}] weight is NaN");
+        }
+        updates.push(EdgeUpdate { src, dst, weight });
+    }
+    Ok(UpdateRequest {
+        id,
+        variant,
+        n,
+        base_fingerprint,
+        updates,
         want_paths: v.get("paths").as_bool().unwrap_or(false),
     })
 }
@@ -255,6 +388,7 @@ pub fn decode_response(line: &str) -> Result<Response> {
         Some("cpu") => Source::Cpu,
         Some("cache") => Source::Cache,
         Some("superblock") => Source::SuperBlock,
+        Some("incremental") => Source::Incremental,
         other => bail!("bad source {other:?}"),
     };
     let succ = match v.get("succ").as_arr() {
@@ -300,6 +434,18 @@ pub fn encode_error(id: u64, message: &str) -> String {
     Json::obj(vec![
         ("type", Json::str("error")),
         ("id", Json::num(id as f64)),
+        ("message", Json::str(message)),
+    ])
+    .to_string()
+}
+
+/// Encode a *typed* error: same shape plus a machine-readable `code` the
+/// client can dispatch on (see [`CODE_UPDATE_BASE_MISSING`]).
+pub fn encode_error_coded(id: u64, code: &str, message: &str) -> String {
+    Json::obj(vec![
+        ("type", Json::str("error")),
+        ("id", Json::num(id as f64)),
+        ("code", Json::str(code)),
         ("message", Json::str(message)),
     ])
     .to_string()
@@ -431,6 +577,87 @@ mod tests {
         let line = encode_error(3, "boom");
         let err = decode_response(&line).unwrap_err();
         assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn update_request_roundtrip() {
+        let req = UpdateRequest {
+            id: 13,
+            variant: "staged".into(),
+            n: 24,
+            base_fingerprint: 0x4820_083e_b15f_2d0d,
+            updates: vec![
+                EdgeUpdate { src: 0, dst: 1, weight: 2.5 },
+                EdgeUpdate { src: 3, dst: 4, weight: INF }, // deletion → null
+            ],
+            want_paths: true,
+        };
+        let line = encode_update_request(&req);
+        // the fingerprint travels as a hex string — a JSON f64 would
+        // silently round 64-bit fingerprints
+        assert!(line.contains("\"4820083eb15f2d0d\""), "{line}");
+        let back = decode_update_request(&line).unwrap();
+        assert_eq!(back.id, 13);
+        assert_eq!(back.n, 24);
+        assert_eq!(back.base_fingerprint, req.base_fingerprint);
+        assert_eq!(back.updates, req.updates);
+        assert!(back.want_paths);
+        assert!(back.updates[1].weight.is_infinite());
+    }
+
+    #[test]
+    fn update_request_rejects_malformed() {
+        let ok = r#"{"type":"update","n":4,"base":"00000000000000ff","updates":[[0,1,2.0]]}"#;
+        assert_eq!(decode_update_request(ok).unwrap().base_fingerprint, 0xff);
+        for (line, needle) in [
+            (r#"{"type":"solve","n":4}"#, "not an update"),
+            (r#"{"type":"update","n":4,"updates":[]}"#, "base"),
+            (r#"{"type":"update","base":"ff","updates":[]}"#, "'n'"),
+            (r#"{"type":"update","n":0,"base":"ff","updates":[]}"#, "empty"),
+            (r#"{"type":"update","n":4,"base":"zz","updates":[]}"#, "fingerprint"),
+            (r#"{"type":"update","n":4,"base":"ff"}"#, "updates"),
+            (
+                r#"{"type":"update","n":4,"base":"ff","updates":[[0,9,1.0]]}"#,
+                "out of range",
+            ),
+            (
+                r#"{"type":"update","n":4,"base":"ff","updates":[[2,2,1.0]]}"#,
+                "self-loop",
+            ),
+            (
+                r#"{"type":"update","n":4,"base":"ff","updates":[[0,1]]}"#,
+                "must be",
+            ),
+        ] {
+            let err = decode_update_request(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "{line}: {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn coded_errors_carry_their_code() {
+        let line = encode_error_coded(7, CODE_UPDATE_BASE_MISSING, "base not cached");
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get("type").as_str(), Some("error"));
+        assert_eq!(v.get("code").as_str(), Some(CODE_UPDATE_BASE_MISSING));
+        assert_eq!(v.get("id").as_f64(), Some(7.0));
+        // still a normal error to a client that ignores codes
+        assert!(decode_response(&line).unwrap_err().to_string().contains("base not cached"));
+    }
+
+    #[test]
+    fn incremental_source_roundtrips() {
+        let resp = Response {
+            id: 5,
+            dist: DistMatrix::unconnected(2),
+            succ: None,
+            source: Source::Incremental,
+            bucket: 2,
+            seconds: 0.001,
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(back.source, Source::Incremental);
+        assert_eq!(Source::Incremental.name(), "incremental");
     }
 
     #[test]

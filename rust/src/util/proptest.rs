@@ -120,6 +120,23 @@ impl Config {
     }
 }
 
+/// `base` scaled by the `FW_PROPTEST_CASES` environment factor.
+///
+/// The dedicated CI conformance job runs the same property suites with an
+/// elevated case count (`FW_PROPTEST_CASES=8` → 8× the in-test default)
+/// without forking the test code; unset or unparsable values leave the
+/// default untouched, so the fast suite stays fast.
+pub fn env_cases(base: u32) -> u32 {
+    scale_cases(base, std::env::var("FW_PROPTEST_CASES").ok().as_deref())
+}
+
+fn scale_cases(base: u32, factor: Option<&str>) -> u32 {
+    match factor.and_then(|f| f.trim().parse::<u32>().ok()) {
+        Some(f) if f >= 1 => base.saturating_mul(f),
+        _ => base,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +213,18 @@ mod tests {
         let a = check_quiet(cfg, &mut prop).map(|f| (f.case, f.seed));
         let b = check_quiet(cfg, &mut prop).map(|f| (f.case, f.seed));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn case_scaling_shape() {
+        // the env wrapper is a thin shim over this (env vars are global
+        // state; the logic is what needs pinning)
+        assert_eq!(scale_cases(24, None), 24);
+        assert_eq!(scale_cases(24, Some("8")), 192);
+        assert_eq!(scale_cases(24, Some(" 2 ")), 48);
+        assert_eq!(scale_cases(24, Some("0")), 24);
+        assert_eq!(scale_cases(24, Some("lots")), 24);
+        assert_eq!(scale_cases(u32::MAX, Some("8")), u32::MAX, "saturates");
     }
 
     #[test]

@@ -85,7 +85,23 @@ impl Samples {
 
     /// Several percentiles at once (one sort, amortized over the batch —
     /// the metrics snapshot asks for p50/p95/p99 together).
+    ///
+    /// The empty sample set is part of the contract, not an accident: each
+    /// requested percentile comes back as NaN — never a panic, never a
+    /// silent 0 (a latency summary of 0s would read as "instant", which an
+    /// idle server is not).  Out-of-range percentiles are still rejected
+    /// even when empty.  Callers that show these values render the NaNs
+    /// explicitly (the coordinator snapshot prints `-`).
     pub fn percentiles(&mut self, ps: &[f64]) -> Vec<f64> {
+        if self.xs.is_empty() {
+            return ps
+                .iter()
+                .map(|&p| {
+                    assert!((0.0..=100.0).contains(&p), "percentile {p}");
+                    f64::NAN
+                })
+                .collect();
+        }
         ps.iter().map(|&p| self.percentile(p)).collect()
     }
 
@@ -151,6 +167,22 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn empty_percentiles_are_explicit_nans() {
+        // pinned: one NaN per requested percentile — no panic, no silent 0
+        let mut s = Samples::new();
+        let ps = s.percentiles(&[0.0, 50.0, 95.0, 99.0, 100.0]);
+        assert_eq!(ps.len(), 5);
+        assert!(ps.iter().all(|p| p.is_nan()), "{ps:?}");
+        assert!(s.percentiles(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile")]
+    fn empty_percentiles_still_reject_out_of_range() {
+        Samples::new().percentiles(&[101.0]);
     }
 
     #[test]

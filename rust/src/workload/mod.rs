@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::apsp::incremental::EdgeUpdate;
 use crate::graph::{generators, DistMatrix};
 use crate::util::prng::Rng;
 
@@ -27,6 +28,13 @@ pub struct TraceItem {
     pub n: usize,
     pub kind: GraphKind,
     pub seed: u64,
+    /// Edge-delta batch.  Empty = a plain solve of [`TraceItem::graph`];
+    /// non-empty = an `"update"` request against the graph of the earlier
+    /// trace item with the same `(n, kind, seed)` (the update regime emits
+    /// that base as a plain solve first).  Successive batches against one
+    /// base are meant to be applied cumulatively by the replayer, so a
+    /// trace exercises the coordinator's delta chains.
+    pub updates: Vec<EdgeUpdate>,
 }
 
 impl TraceItem {
@@ -57,6 +65,16 @@ pub struct TraceConfig {
     /// Generator families the trace draws from (uniformly).
     pub kinds: Vec<GraphKind>,
     pub seed: u64,
+    /// Fraction of items (after the warm-up bases) that are edge-delta
+    /// update batches against an earlier base solve.  0.0 disables the
+    /// regime — and draws nothing from the RNG for it, so pre-existing
+    /// trace configs reproduce byte-identically across PRs.  Regimes using
+    /// this must stick to size-preserving kinds (`ErdosRenyi`/`ScaleFree`
+    /// with n ≥ 4): update endpoints are drawn from the item's `n`, and
+    /// `Grid` rounds its vertex count to a square.
+    pub update_fraction: f64,
+    /// Edges per update batch.
+    pub update_batch: usize,
 }
 
 impl Default for TraceConfig {
@@ -68,6 +86,8 @@ impl Default for TraceConfig {
             heavy_tail: true,
             kinds: vec![GraphKind::ErdosRenyi, GraphKind::Grid, GraphKind::ScaleFree],
             seed: 0xACE,
+            update_fraction: 0.0,
+            update_batch: 4,
         }
     }
 }
@@ -87,22 +107,90 @@ impl TraceConfig {
             heavy_tail: false,
             kinds: vec![GraphKind::Grid, GraphKind::ScaleFree],
             seed,
+            update_fraction: 0.0,
+            update_batch: 4,
+        }
+    }
+
+    /// Update-heavy regime: a handful of base topologies each solved once,
+    /// then a stream of small edge-delta batches against them — the
+    /// dynamic-graph traffic shape the incremental tier exists for.
+    /// Weights are multiples of 0.25 (with occasional deletions), keeping
+    /// batch sums exactly representable; kinds are size-preserving so
+    /// update endpoints always index into the materialized graph.
+    pub fn update_heavy(seed: u64) -> TraceConfig {
+        TraceConfig {
+            rate_hz: 120.0,
+            count: 48,
+            sizes: vec![48, 96],
+            heavy_tail: false,
+            kinds: vec![GraphKind::ErdosRenyi, GraphKind::ScaleFree],
+            seed,
+            update_fraction: 0.8,
+            update_batch: 4,
         }
     }
 }
 
 /// Generate a deterministic trace.
+///
+/// When [`TraceConfig::update_fraction`] is positive, the first
+/// `min(count, 3)` items are base solves; later items flip an
+/// update-fraction coin and either reference one of those bases with a
+/// fresh edge-delta batch or stay plain solves.  With the fraction at 0
+/// none of the update draws happen, so legacy configs generate the exact
+/// byte-identical traces they always did (pinned by the regression tests
+/// below — bench trajectories across PRs must compare like with like).
 pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
     assert!(!config.sizes.is_empty(), "trace needs candidate sizes");
     assert!(!config.kinds.is_empty(), "trace needs generator kinds");
     assert!(config.rate_hz > 0.0);
     let mut rng = Rng::new(config.seed);
     let mut at = 0f64;
+    let n_bases = if config.update_fraction > 0.0 {
+        config.count.min(3)
+    } else {
+        0
+    };
+    let mut bases: Vec<(usize, GraphKind, u64)> = Vec::new();
     let mut items = Vec::with_capacity(config.count);
     for i in 0..config.count {
         // exponential inter-arrival gap
         let u = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
         at += -u.ln() / config.rate_hz;
+        // short-circuit order matters: with the regime off (or during the
+        // warm-up bases) no update coin is drawn at all
+        let is_update = i >= n_bases
+            && !bases.is_empty()
+            && config.update_fraction > 0.0
+            && rng.next_f64() < config.update_fraction;
+        if is_update {
+            let (bn, bkind, bseed) = bases[rng.range(0, bases.len())];
+            assert!(bn >= 2, "update regime needs n >= 2");
+            let mut updates = Vec::with_capacity(config.update_batch.max(1));
+            for _ in 0..config.update_batch.max(1) {
+                let src = rng.range(0, bn);
+                let mut dst = rng.range(0, bn - 1);
+                if dst >= src {
+                    dst += 1; // uniform over dst != src
+                }
+                // quarter-integer weights (exact sums); 1-in-8 deletions
+                let weight = if rng.next_below(8) == 0 {
+                    crate::INF
+                } else {
+                    (1 + rng.next_below(64)) as f32 * 0.25
+                };
+                updates.push(EdgeUpdate { src, dst, weight });
+            }
+            items.push(TraceItem {
+                at: Duration::from_secs_f64(at),
+                n: bn,
+                kind: bkind,
+                seed: bseed,
+                updates,
+            });
+            continue;
+        }
         let idx = if config.heavy_tail {
             // Zipf-ish: P(bucket k) ∝ 1/(k+1)
             let weights: Vec<f64> = (0..config.sizes.len())
@@ -123,11 +211,16 @@ pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
             rng.range(0, config.sizes.len())
         };
         let kind = config.kinds[rng.next_below(config.kinds.len() as u64) as usize];
+        let seed = config.seed.wrapping_add(i as u64 * 7919);
+        if i < n_bases {
+            bases.push((config.sizes[idx], kind, seed));
+        }
         items.push(TraceItem {
             at: Duration::from_secs_f64(at),
             n: config.sizes[idx],
             kind,
-            seed: config.seed.wrapping_add(i as u64 * 7919),
+            seed,
+            updates: Vec::new(),
         });
     }
     items
@@ -139,14 +232,131 @@ mod tests {
 
     #[test]
     fn deterministic_by_seed() {
-        let cfg = TraceConfig::default();
-        let a = generate(&cfg);
-        let b = generate(&cfg);
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.at, y.at);
-            assert_eq!(x.n, y.n);
-            assert_eq!(x.seed, y.seed);
+        for cfg in [TraceConfig::default(), TraceConfig::update_heavy(0xFEED)] {
+            let a = generate(&cfg);
+            let b = generate(&cfg);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.at, y.at);
+                assert_eq!(x.n, y.n);
+                assert_eq!(x.kind, y.kind);
+                assert_eq!(x.seed, y.seed);
+                assert_eq!(x.updates, y.updates);
+            }
+        }
+    }
+
+    fn kind_tag(k: GraphKind) -> u8 {
+        match k {
+            GraphKind::ErdosRenyi => 0,
+            GraphKind::Grid => 1,
+            GraphKind::ScaleFree => 2,
+        }
+    }
+
+    #[test]
+    fn default_trace_head_pinned() {
+        // frozen (n, kind, seed) triples, cross-computed with an
+        // independent implementation of the PRNG and generator: bench
+        // trajectories across PRs compare like with like only if the
+        // trace a config names never silently changes — a generator edit
+        // must fail here loudly (note the update machinery draws nothing
+        // when update_fraction is 0, so this also pins that legacy
+        // configs are byte-identical to their pre-dynamic-tier selves)
+        let items = generate(&TraceConfig {
+            count: 4,
+            ..TraceConfig::default()
+        });
+        let shape: Vec<(usize, u8, u64)> =
+            items.iter().map(|t| (t.n, kind_tag(t.kind), t.seed)).collect();
+        assert_eq!(
+            shape,
+            vec![(60, 2, 2766), (60, 2, 10685), (48, 2, 18604), (100, 0, 26523)]
+        );
+        assert!(items.iter().all(|t| t.updates.is_empty()));
+    }
+
+    #[test]
+    fn update_heavy_trace_head_pinned() {
+        // same contract for the new regime, updates included (weights are
+        // quarter-integers, pinned as weight·4; -1 = deletion)
+        let items = generate(&TraceConfig {
+            count: 8,
+            ..TraceConfig::update_heavy(0x5EED)
+        });
+        let shape: Vec<_> = items
+            .iter()
+            .map(|t| {
+                (
+                    t.n,
+                    kind_tag(t.kind),
+                    t.seed,
+                    t.updates
+                        .iter()
+                        .map(|u| {
+                            (
+                                u.src,
+                                u.dst,
+                                if u.weight.is_finite() {
+                                    (u.weight * 4.0) as i64
+                                } else {
+                                    -1
+                                },
+                            )
+                        })
+                        .collect::<Vec<(usize, usize, i64)>>(),
+                )
+            })
+            .collect();
+        assert_eq!(
+            shape,
+            vec![
+                (96, 0, 24301, vec![]),
+                (48, 0, 32220, vec![]),
+                (96, 0, 40139, vec![]),
+                (48, 2, 48058, vec![]),
+                (96, 0, 24301, vec![(0, 54, 61), (15, 92, 18), (58, 85, -1), (90, 70, 45)]),
+                (96, 0, 24301, vec![(50, 88, 15), (9, 35, 32), (67, 27, -1), (76, 43, 31)]),
+                (96, 0, 71815, vec![]),
+                (96, 0, 24301, vec![(83, 74, -1), (16, 36, 17), (23, 54, -1), (32, 63, 19)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn update_heavy_regime_shape() {
+        let cfg = TraceConfig::update_heavy(7);
+        let items = generate(&cfg);
+        assert_eq!(items.len(), cfg.count);
+        // warm-up: the first three items are plain base solves
+        for item in &items[..3] {
+            assert!(item.updates.is_empty());
+        }
+        let n_updates = items.iter().filter(|t| !t.updates.is_empty()).count();
+        assert!(
+            n_updates > cfg.count / 2,
+            "update-heavy produced only {n_updates} update items"
+        );
+        let bases: Vec<(usize, GraphKind, u64)> =
+            items[..3].iter().map(|t| (t.n, t.kind, t.seed)).collect();
+        for item in items.iter().filter(|t| !t.updates.is_empty()) {
+            assert!(
+                bases.contains(&(item.n, item.kind, item.seed)),
+                "update item references a non-base graph"
+            );
+            assert_eq!(item.updates.len(), cfg.update_batch);
+            // kinds are size-preserving, so endpoints index the graph
+            let g = item.graph();
+            assert_eq!(g.n(), item.n);
+            for u in &item.updates {
+                assert!(u.src < item.n && u.dst < item.n && u.src != u.dst);
+                assert!(
+                    u.weight.is_infinite()
+                        || (u.weight > 0.0 && (u.weight * 4.0).fract() == 0.0),
+                    "weight {} not a quarter-integer",
+                    u.weight
+                );
+            }
         }
     }
 

@@ -183,6 +183,52 @@ fn solve_paths_flag_prints_reconstructed_path() {
 }
 
 #[test]
+fn solve_update_applies_edge_deltas_incrementally() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fw_cli_update_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.edges");
+    let (ok, _, stderr) = run(&[
+        "gen", "--model", "ring", "--n", "12",
+        "--out", graph_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    // insert a shortcut 0 → 5: the updated closure must route through it
+    let (ok, stdout, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--update", "0,5,0.5",
+        "--paths", "--src", "0", "--dst", "5",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stderr.contains("via incremental"), "{stderr}");
+    assert!(stdout.contains("path 0 -> 5: 0 -> 5"), "{stdout}");
+    // delete the ring's only 4 → 5 edge: 0 → 5 becomes unreachable
+    // (increase path: successor-forest damage detection)
+    let (ok, stdout, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--update", "4,5,inf",
+        "--paths", "--src", "0", "--dst", "5",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stderr.contains("via incremental"), "{stderr}");
+    assert!(stdout.contains("path 0 -> 5: unreachable"), "{stdout}");
+    // malformed spec is a clean error
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--update", "nope",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--update"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn info_describes_artifacts() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts/ not built");

@@ -25,22 +25,48 @@
 //! distance* (and agree exactly on reachability), not hop through the same
 //! vertices.
 //!
+//! The **update-conformance** section gates the dynamic-graph tier
+//! (`apsp::incremental`): random update batches — decrease-only,
+//! increase-only, mixed, with no-op and duplicate-edge updates — applied
+//! to a cached closure must reproduce a from-scratch
+//! `parallel::solve_paths` of the mutated graph.  Distances are compared
+//! **bitwise** on the dyadic-lattice workload (weights k/16: every path
+//! sum is exact in f32, so any correct algorithm returns identical bits —
+//! the one regime where bitwise equality across *different* algorithms is
+//! a meaningful and complete oracle), and to `allclose` tolerance at
+//! arbitrary float weights, where the incremental candidates associate
+//! additions differently than a from-scratch pivot order.  Successors are
+//! compared semantically (exact reachability agreement + valid walks of
+//! the recomputed cost) — equal-cost ties may legally pick different
+//! hops — and bitwise on the recompute fallback, which runs the oracle's
+//! exact call.
+//!
 //! The suite also covers the serving surface: wire-protocol robustness for
 //! `server::handle_line` (via a synthetic manifest, so it runs without
-//! `make artifacts`), a client → server → cache paths round-trip, and
-//! batch-plan determinism (the cache-key contract).
+//! `make artifacts`), a client → server → cache paths round-trip,
+//! update-request round-trips with fingerprint chaining, a cache
+//! concurrency property (no torn `(dist, succ)` pairs under interleaved
+//! puts), and batch-plan determinism (the cache-key contract).
+//!
+//! Every property here sizes its case count through
+//! `util::proptest::env_cases`, so the dedicated CI conformance job can
+//! run the same suites harder (`FW_PROPTEST_CASES=8`) without forking the
+//! test code.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use fw_stage::apsp::incremental::{self, EdgeUpdate, UpdateConfig};
 use fw_stage::apsp::{self, paths::PathsResult, paths::NO_PATH};
 use fw_stage::coordinator::batcher::{plan, BatchPolicy, Item};
-use fw_stage::coordinator::{self, server, Coordinator, Source};
+use fw_stage::coordinator::cache::{graph_fingerprint, ResultCache};
+use fw_stage::coordinator::{self, server, types, Coordinator, Source, UpdateOutcome};
 use fw_stage::graph::{generators, DistMatrix};
 use fw_stage::superblock::{self, SuperBlockConfig};
 use fw_stage::util::json::Json;
 use fw_stage::util::prng::Rng;
-use fw_stage::util::proptest::{check, Config};
+use fw_stage::util::proptest::{check, env_cases, Config};
+use fw_stage::INF;
 
 // ------------------------------------------------------------ generators --
 
@@ -114,7 +140,7 @@ fn assert_paths_valid(g: &DistMatrix, r: &PathsResult, label: &str) -> Result<()
 
 #[test]
 fn prop_blocked_family_distances_bitwise_equal() {
-    let cfg = Config { cases: 24, max_size: 4, ..Config::default() };
+    let cfg = Config { cases: env_cases(24), max_size: 4, ..Config::default() };
     check("blocked-family bitwise distances", cfg, |rng, size| {
         let s = [8, 16][rng.range(0, 2)];
         let n = s * (1 + rng.range(0, size.max(1))); // multiple of the tile
@@ -169,7 +195,7 @@ fn prop_microkernel_bitwise_vs_scalar_reference() {
     // succ and dist-only register tiling is bitwise equal to the scalar
     // loop across tile sizes (33 = ragged in both register dimensions) and
     // infinite-weight densities
-    let cfg = Config { cases: 48, max_size: 4, ..Config::default() };
+    let cfg = Config { cases: env_cases(48), max_size: 4, ..Config::default() };
     check("microkernel vs scalar phase-3", cfg, |rng, _size| {
         let s = [8usize, 16, 32, 33][rng.range(0, 4)];
         let density = [0.0, 0.3, 0.9, 1.0][rng.range(0, 4)];
@@ -230,7 +256,7 @@ fn prop_microkernel_bitwise_vs_scalar_reference() {
 
 #[test]
 fn prop_algorithm_families_distances_close() {
-    let cfg = Config { cases: 24, max_size: 48, ..Config::default() };
+    let cfg = Config { cases: env_cases(24), max_size: 48, ..Config::default() };
     check("naive/johnson/blocked tolerance distances", cfg, |rng, size| {
         let n = 2 + rng.range(0, size.max(2));
         let g = arb_graph(rng, n);
@@ -258,7 +284,7 @@ fn prop_algorithm_families_distances_close() {
 
 #[test]
 fn prop_every_path_tier_reconstructs_reference_distances() {
-    let cfg = Config { cases: 16, max_size: 40, ..Config::default() };
+    let cfg = Config { cases: env_cases(16), max_size: 40, ..Config::default() };
     check("successor agreement vs paths::solve", cfg, |rng, size| {
         let n = 2 + rng.range(0, size.max(2));
         let g = arb_graph(rng, n);
@@ -310,12 +336,290 @@ fn prop_every_path_tier_reconstructs_reference_distances() {
 fn prop_path_validity_holds_for_reference_solver() {
     // the reference itself must satisfy the validity property the tiers
     // are measured against
-    let cfg = Config { cases: 16, max_size: 40, ..Config::default() };
+    let cfg = Config { cases: env_cases(16), max_size: 40, ..Config::default() };
     check("path validity (reference)", cfg, |rng, size| {
         let n = 2 + rng.range(0, size.max(2));
         let g = arb_graph(rng, n);
         assert_paths_valid(&g, &apsp::paths::solve(&g), "reference")
     });
+}
+
+// ---------------------------------------- update conformance (dynamic) --
+
+/// Dyadic-lattice graph: weights k/16 with k ∈ [1, 2048].  Any sum of up
+/// to ~40 such terms stays below 2¹⁸ lattice units — comfortably inside
+/// f32's 24-bit mantissa — so every path sum is *exact* and any correct
+/// APSP algorithm returns the same bits.  This is the one regime where
+/// bitwise distance equality across different algorithms is a complete
+/// correctness oracle, which is exactly what the update property needs.
+fn arb_lattice_graph(rng: &mut Rng, n: usize, edge_p: f64) -> DistMatrix {
+    let mut g = DistMatrix::unconnected(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && rng.next_f64() < edge_p {
+                g.set(i, j, (rng.range(1, 2049) as f32) * 0.0625);
+            }
+        }
+    }
+    g
+}
+
+/// Update batch of the given character (0 = decrease-only, 1 =
+/// increase-only, 2 = mixed) against `g`, staying on the lattice.
+/// Randomly appends an explicit no-op (rewrite an edge to its current
+/// weight) and a duplicate-edge update (same endpoints twice; the last
+/// write must win).
+fn arb_lattice_batch(rng: &mut Rng, g: &DistMatrix, kind: usize) -> Vec<EdgeUpdate> {
+    fn pick_pair(rng: &mut Rng, n: usize) -> (usize, usize) {
+        let src = rng.range(0, n);
+        let mut dst = rng.range(0, n - 1);
+        if dst >= src {
+            dst += 1;
+        }
+        (src, dst)
+    }
+    let n = g.n();
+    let mut batch = Vec::new();
+    for _ in 0..(1 + rng.range(0, 4)) {
+        let (src, dst) = pick_pair(rng, n);
+        let old = g.get(src, dst);
+        let decrease = match kind {
+            0 => true,
+            1 => false,
+            _ => rng.next_f64() < 0.5,
+        };
+        let weight = if decrease {
+            if old.is_finite() {
+                // at or below the current lattice weight (equality: no-op)
+                (rng.range(1, (old * 16.0) as usize + 1) as f32) * 0.0625
+            } else {
+                (rng.range(1, 2049) as f32) * 0.0625 // insertion
+            }
+        } else if old.is_finite() && rng.next_f64() < 0.8 {
+            // strictly above the current weight, ≤ 4096/16 (sums stay exact)
+            (rng.range((old * 16.0) as usize + 1, (old * 16.0) as usize + 2049) as f32) * 0.0625
+        } else {
+            INF // deletion (a no-op when the edge does not exist)
+        };
+        batch.push(EdgeUpdate { src, dst, weight });
+    }
+    if rng.next_f64() < 0.5 {
+        // explicit no-op: rewrite an edge to its current weight
+        let (src, dst) = pick_pair(rng, n);
+        let old = g.get(src, dst);
+        batch.push(EdgeUpdate {
+            src,
+            dst,
+            weight: if old.is_finite() { old } else { INF },
+        });
+    }
+    if rng.next_f64() < 0.5 {
+        // duplicate-edge update: re-issue the first target; the kind-pure
+        // extremes (lattice minimum / deletion) can never flip the batch's
+        // character, and the *last* write must win
+        let first = batch[0];
+        let weight = match kind {
+            0 => 0.0625,
+            1 => INF,
+            _ => 0.5,
+        };
+        batch.push(EdgeUpdate { src: first.src, dst: first.dst, weight });
+    }
+    batch
+}
+
+#[test]
+fn prop_incremental_update_bitwise_equals_recompute() {
+    // THE update-conformance gate: for random lattice graphs and random
+    // batches of every character, the incremental tier's distances are
+    // bitwise-equal to a from-scratch parallel::solve_paths of the mutated
+    // graph — across tile sizes {8, 16, 32, 33} (33 = the n < s reference
+    // path for small n), edge/inf densities, thread counts, and all three
+    // internal serving paths (pure relaxation, bounded re-solve, threshold
+    // recompute — swept via recompute_fraction).
+    let cfg = Config { cases: env_cases(36), max_size: 5, ..Config::default() };
+    check("incremental update vs recompute (lattice, bitwise)", cfg, |rng, size| {
+        let s = [8usize, 16, 32, 33][rng.range(0, 4)];
+        let n = 4 + rng.range(0, 6 * size.max(1));
+        let edge_p = [0.05, 0.3, 0.9][rng.range(0, 3)];
+        let g = arb_lattice_graph(rng, n, edge_p);
+        let threads = 1 + rng.range(0, 3);
+        let base = apsp::parallel::solve_paths(&g, s, threads);
+        let kind = rng.range(0, 3);
+        let batch = arb_lattice_batch(rng, &g, kind);
+        let ucfg = UpdateConfig {
+            recompute_fraction: [0.0, 0.25, 1.0][rng.range(0, 3)],
+            tile: s,
+            threads,
+        };
+        let (got, stats) = incremental::update_paths(&g, &base, &batch, &ucfg)
+            .map_err(|e| format!("update failed: {e}"))?;
+        let g2 = incremental::mutated(&g, &batch).map_err(|e| format!("mutated: {e}"))?;
+        let expect = apsp::parallel::solve_paths(&g2, s, threads);
+        if got.dist != expect.dist {
+            return Err(format!(
+                "dist mismatch (n={n}, s={s}, kind={kind}, batch={batch:?}, stats={stats:?})"
+            ));
+        }
+        // successors: bitwise reachability agreement, walks of the exact
+        // recomputed cost (ties may pick different hops)
+        for i in 0..n {
+            for j in 0..n {
+                if (got.succ_at(i, j) == NO_PATH) != (expect.succ_at(i, j) == NO_PATH) {
+                    return Err(format!("reachability differs at ({i},{j})"));
+                }
+            }
+        }
+        assert_paths_valid(&g2, &got, "incremental")?;
+        if stats.recomputed && got.succ() != expect.succ() {
+            // the recompute fallback runs the oracle's exact call, so even
+            // the successor matrix must match bit for bit there
+            return Err("recompute path diverged in succ".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_update_close_on_arbitrary_floats() {
+    // arbitrary float weights: the incremental candidates associate
+    // additions differently than the from-scratch pivot order, so the
+    // honest contract is tolerance + path validity, not bits
+    let cfg = Config { cases: env_cases(16), max_size: 36, ..Config::default() };
+    check("incremental update vs recompute (floats, tolerance)", cfg, |rng, size| {
+        let n = 4 + rng.range(0, size.max(2));
+        let g = generators::erdos_renyi_weighted(n, 0.25, 0.1, 10.0, rng.next_u64());
+        let base = apsp::parallel::solve_paths(&g, 16, 2);
+        let mut batch = Vec::new();
+        for _ in 0..(1 + rng.range(0, 4)) {
+            let src = rng.range(0, n);
+            let mut dst = rng.range(0, n - 1);
+            if dst >= src {
+                dst += 1;
+            }
+            let weight = match rng.range(0, 3) {
+                0 => (rng.next_f64() * 0.09 + 0.001) as f32, // below every weight
+                1 => (rng.next_f64() * 30.0 + 10.0) as f32,  // above every weight
+                _ => INF,                                    // deletion
+            };
+            batch.push(EdgeUpdate { src, dst, weight });
+        }
+        let ucfg = UpdateConfig { recompute_fraction: 0.25, tile: 16, threads: 2 };
+        let (got, _) = incremental::update_paths(&g, &base, &batch, &ucfg)
+            .map_err(|e| format!("update: {e}"))?;
+        let g2 = incremental::mutated(&g, &batch).map_err(|e| format!("mutated: {e}"))?;
+        let expect = apsp::parallel::solve_paths(&g2, 16, 2);
+        if !got.dist.allclose(&expect.dist, 1e-4, 1e-4) {
+            return Err(format!(
+                "diverges by {} (n={n}, batch={batch:?})",
+                got.dist.max_abs_diff(&expect.dist)
+            ));
+        }
+        assert_paths_valid(&g2, &got, "incremental-float")
+    });
+}
+
+// ---------------------------------------------- cache concurrency (pairs) --
+
+#[test]
+fn cache_concurrent_puts_never_split_pairs_or_serve_stale() {
+    // Writers only ever insert members of a closed set of internally
+    // consistent closures; readers assert every observation is a member.
+    // Any torn write — a dist from one pair with the succ of another, a
+    // dist-only put clobbering a cached successor matrix, or a chained
+    // re-baseline handing out half-updated state — fails deterministically
+    // under *any* thread interleaving (no timing assumptions).
+    let graphs = [generators::ring(12), generators::erdos_renyi(12, 0.4, 99)];
+    let mut pair_a = Vec::new();
+    let mut pair_b = Vec::new();
+    let mut lone = Vec::new();
+    for g in &graphs {
+        let a = apsp::blocked::solve_paths(g, 8);
+        let b = apsp::paths::solve(g); // different solver: a distinct valid pair
+        let mut c = a.dist.clone();
+        let v = c.get(0, 1);
+        c.set(0, 1, if v.is_finite() { v + 0.5 } else { 123.0 }); // recognizable lone dist
+        pair_a.push(a);
+        pair_b.push(b);
+        lone.push(c);
+    }
+    let cache = ResultCache::new(4);
+    std::thread::scope(|scope| {
+        for t in 0..6u64 {
+            let cache = &cache;
+            let graphs = &graphs;
+            let pair_a = &pair_a;
+            let pair_b = &pair_b;
+            let lone = &lone;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xCAC4E + t);
+                for _ in 0..250 {
+                    let gi = rng.range(0, graphs.len());
+                    let g = &graphs[gi];
+                    match rng.range(0, 6) {
+                        0 => cache.put("v", g, lone[gi].clone()),
+                        1 => cache.put_paths(
+                            "v",
+                            g,
+                            pair_a[gi].dist.clone(),
+                            pair_a[gi].succ().to_vec(),
+                        ),
+                        2 => cache.put_chained(
+                            "v",
+                            g,
+                            pair_b[gi].dist.clone(),
+                            Some(pair_b[gi].succ().to_vec()),
+                            1 + t as u32,
+                        ),
+                        3 => {
+                            if let Some((d, s)) = cache.get_paths("v", g) {
+                                let ok = (d == pair_a[gi].dist && s == pair_a[gi].succ())
+                                    || (d == pair_b[gi].dist && s == pair_b[gi].succ());
+                                assert!(ok, "split (dist, succ) pair served");
+                            }
+                        }
+                        4 => {
+                            if let Some(base) = cache.get_base("v", g.n(), graph_fingerprint(g))
+                            {
+                                assert_eq!(base.graph, *g, "base graph mismatch");
+                                match &base.succ {
+                                    Some(s) => {
+                                        let ok = (base.dist == pair_a[gi].dist
+                                            && s.as_slice() == pair_a[gi].succ())
+                                            || (base.dist == pair_b[gi].dist
+                                                && s.as_slice() == pair_b[gi].succ());
+                                        assert!(ok, "stale or torn base closure");
+                                    }
+                                    None => assert_eq!(
+                                        base.dist, lone[gi],
+                                        "dist-only base must be the lone closure"
+                                    ),
+                                }
+                            }
+                        }
+                        _ => {
+                            if let Some(d) = cache.get("v", g) {
+                                assert!(
+                                    d == pair_a[gi].dist || d == pair_b[gi].dist || d == lone[gi],
+                                    "unknown distance closure served"
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // quiescent state: whatever pair won, it is still internally consistent
+    for (gi, g) in graphs.iter().enumerate() {
+        if let Some(base) = cache.get_base("v", g.n(), graph_fingerprint(g)) {
+            if let Some(s) = &base.succ {
+                let ok = (base.dist == pair_a[gi].dist && s.as_slice() == pair_a[gi].succ())
+                    || (base.dist == pair_b[gi].dist && s.as_slice() == pair_b[gi].succ());
+                assert!(ok);
+            }
+        }
+    }
 }
 
 // --------------------------------------------------- batcher determinism --
@@ -376,6 +680,11 @@ static SYNTH_DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
 /// is never compiled (warm-up is disabled and the tests below never route
 /// to the device tier).
 fn synthetic_coordinator() -> Coordinator {
+    synthetic_coordinator_with(|_| {})
+}
+
+/// [`synthetic_coordinator`] with a config tweak (chain caps, cache sizes).
+fn synthetic_coordinator_with(tweak: impl FnOnce(&mut coordinator::Config)) -> Coordinator {
     let dir = std::env::temp_dir().join(format!(
         "fw-stage-conformance-{}-{}",
         std::process::id(),
@@ -394,6 +703,7 @@ fn synthetic_coordinator() -> Coordinator {
     std::fs::write(dir.join("manifest.json"), manifest).expect("write manifest");
     let mut config = coordinator::Config::new(&dir);
     config.engine.warm_variants = Vec::new();
+    tweak(&mut config);
     Coordinator::start(config).expect("synthetic coordinator")
 }
 
@@ -510,6 +820,205 @@ fn paths_roundtrip_client_server_cache() {
     assert_eq!(dist_only.source, Source::Cache);
     assert!(dist_only.succ.is_none(), "distance responses carry no succ");
     assert_eq!(dist_only.dist, first.dist);
+}
+
+// ------------------------------------------ updates over the wire --
+
+#[test]
+fn update_roundtrip_chains_through_server_and_cache() {
+    let coord = synthetic_coordinator();
+    let g = generators::erdos_renyi(24, 0.3, 606); // n ≤ cpu_threshold → CPU tier
+    // prime: solve the base with paths, so the cached closure carries
+    // successors and increases stay incremental
+    let prime = server::handle_line(
+        &coord,
+        &types::encode_request(&coordinator::Request {
+            id: 1,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: true,
+        }),
+    );
+    assert_eq!(Json::parse(&prime).unwrap().get("type").as_str(), Some("result"));
+
+    let batch = vec![EdgeUpdate { src: 0, dst: 7, weight: 0.01 }];
+    let reply = server::handle_line(
+        &coord,
+        &types::encode_update_request(&types::UpdateRequest {
+            id: 2,
+            variant: "staged".into(),
+            n: g.n(),
+            base_fingerprint: graph_fingerprint(&g),
+            updates: batch.clone(),
+            want_paths: true,
+        }),
+    );
+    let resp = types::decode_response(&reply).expect("update served");
+    assert_eq!(resp.source, Source::Incremental);
+    // the served closure is exactly what the local incremental tier
+    // computes from the same base (same code path, same config)
+    let base = apsp::blocked::solve_paths(&g, 32);
+    let ucfg = UpdateConfig { tile: 32, ..UpdateConfig::default() };
+    let (expect, _) = incremental::update_paths(&g, &base, &batch, &ucfg).unwrap();
+    assert_eq!(resp.dist, expect.dist);
+    assert_eq!(resp.succ.as_deref(), Some(expect.succ()));
+
+    // chaining, leg 1: a plain solve of the *mutated* graph hits the cache
+    let g2 = incremental::mutated(&g, &batch).unwrap();
+    let hit = server::handle_line(
+        &coord,
+        &types::encode_request(&coordinator::Request {
+            id: 3,
+            graph: g2.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: true,
+        }),
+    );
+    let hit = types::decode_response(&hit).expect("cache hit");
+    assert_eq!(hit.source, Source::Cache);
+    assert_eq!(hit.dist, expect.dist);
+
+    // chaining, leg 2: a second delta against the mutated fingerprint is
+    // itself served incrementally (the chain is cache-hittable)
+    let batch2 = vec![EdgeUpdate { src: 3, dst: 11, weight: 0.02 }];
+    let reply2 = server::handle_line(
+        &coord,
+        &types::encode_update_request(&types::UpdateRequest {
+            id: 4,
+            variant: "staged".into(),
+            n: g2.n(),
+            base_fingerprint: graph_fingerprint(&g2),
+            updates: batch2.clone(),
+            want_paths: false,
+        }),
+    );
+    let resp2 = types::decode_response(&reply2).expect("chained update served");
+    assert_eq!(resp2.source, Source::Incremental);
+    let (expect2, _) = incremental::update_paths(&g2, &expect, &batch2, &ucfg).unwrap();
+    assert_eq!(resp2.dist, expect2.dist);
+    assert!(resp2.succ.is_none(), "paths not requested");
+}
+
+#[test]
+fn update_base_missing_is_typed_and_client_falls_back() {
+    let coord = Arc::new(synthetic_coordinator());
+    // server side: unknown fingerprint → the typed error, not a plain one
+    let reply = server::handle_line(
+        &coord,
+        &types::encode_update_request(&types::UpdateRequest {
+            id: 9,
+            variant: "staged".into(),
+            n: 8,
+            base_fingerprint: 0xDEAD_BEEF,
+            updates: vec![EdgeUpdate { src: 0, dst: 1, weight: 1.0 }],
+            want_paths: false,
+        }),
+    );
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("type").as_str(), Some("error"));
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_UPDATE_BASE_MISSING));
+    assert_eq!(v.get("id").as_f64(), Some(9.0));
+
+    // client side: update_or_solve transparently re-solves the mutated
+    // graph on the miss — and *that* primes the cache, so the next delta
+    // against the mutated graph is served incrementally
+    let srv = server::Server::spawn(coord.clone(), "127.0.0.1:0").expect("server");
+    let mut client =
+        coordinator::client::Client::connect(&srv.addr().to_string()).expect("connect");
+    let g = generators::erdos_renyi(16, 0.3, 707);
+    let batch = vec![EdgeUpdate { src: 1, dst: 2, weight: 0.01 }];
+    let resp = client
+        .update_or_solve(&g, &batch, "staged", false)
+        .expect("fallback");
+    assert_ne!(resp.source, Source::Incremental, "fresh server must miss");
+    let g2 = incremental::mutated(&g, &batch).unwrap();
+    assert_eq!(resp.dist, apsp::blocked::solve(&g2, 32));
+    let resp2 = client
+        .update_or_solve(&g2, &[EdgeUpdate { src: 2, dst: 3, weight: 0.02 }], "staged", false)
+        .expect("chained");
+    assert_eq!(resp2.source, Source::Incremental);
+}
+
+#[test]
+fn chain_cap_rebaselines_through_a_full_solve() {
+    let coord = synthetic_coordinator_with(|c| c.update_max_chain = 1);
+    let g = generators::erdos_renyi(20, 0.3, 808);
+    coord
+        .solve(&coordinator::Request {
+            id: 0,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: true,
+        })
+        .expect("prime");
+    let solve_update = |base: &DistMatrix, batch: &[EdgeUpdate]| {
+        match coord
+            .update(&types::UpdateRequest {
+                id: 0,
+                variant: "staged".into(),
+                n: base.n(),
+                base_fingerprint: graph_fingerprint(base),
+                updates: batch.to_vec(),
+                want_paths: false,
+            })
+            .expect("update")
+        {
+            UpdateOutcome::Solved(resp) => resp,
+            UpdateOutcome::BaseMissing { .. } => panic!("base should be cached"),
+        }
+    };
+    // chain 1: incremental
+    let b1 = vec![EdgeUpdate { src: 0, dst: 5, weight: 0.01 }];
+    let r1 = solve_update(&g, &b1);
+    assert_eq!(r1.source, Source::Incremental);
+    let g2 = incremental::mutated(&g, &b1).unwrap();
+    // chain 2 > cap: re-baselined by a full solve of the mutated graph —
+    // still reported as the update tier, closure bitwise-equal to the CPU
+    // tier's from-scratch solve, and cached with a fresh chain
+    let b2 = vec![EdgeUpdate { src: 1, dst: 6, weight: 0.02 }];
+    let r2 = solve_update(&g2, &b2);
+    let g3 = incremental::mutated(&g2, &b2).unwrap();
+    assert_eq!(r2.source, Source::Incremental);
+    assert_eq!(r2.dist, apsp::blocked::solve_paths(&g3, 32).dist);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.get("update_recomputes").as_usize(), Some(1));
+    // chain restarts at the fresh baseline: next delta is incremental again
+    let b3 = vec![EdgeUpdate { src: 2, dst: 7, weight: 0.03 }];
+    let r3 = solve_update(&g3, &b3);
+    assert_eq!(r3.source, Source::Incremental);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.get("update_recomputes").as_usize(), Some(1), "no second re-baseline");
+    assert_eq!(snap.get("incremental_solves").as_usize(), Some(3));
+}
+
+#[test]
+fn handle_line_update_error_shapes() {
+    let coord = synthetic_coordinator();
+    // malformed deltas keep the pinned error shape
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"update","n":8,"base":"00ff","updates":[[1,1,2.0]]}"#,
+    );
+    assert_error_shape(&reply, "self-loop");
+    let reply = server::handle_line(&coord, r#"{"type":"update","n":8,"updates":[]}"#);
+    assert_error_shape(&reply, "base");
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"update","n":8,"base":"00ff","updates":[[0,9,1.0]]}"#,
+    );
+    assert_error_shape(&reply, "out of range");
+    // johnson is rejected by policy before any cache traffic, id echoed
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"update","id":4,"n":8,"variant":"johnson","base":"00ff","updates":[[0,1,2.0]]}"#,
+    );
+    assert_error_shape(&reply, "johnson");
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("id").as_f64(), Some(4.0));
+    assert!(v.get("code").is_null(), "only base-miss errors are typed");
 }
 
 #[test]
