@@ -15,6 +15,7 @@
 mod common;
 
 use fw_stage::apsp::kernel::{self, PanelBuf};
+use fw_stage::apsp::semiring::{self, MinPlus, Objective};
 use fw_stage::graph::generators;
 use fw_stage::layout;
 use fw_stage::perf::{bench, BenchResult, BenchSink};
@@ -89,6 +90,24 @@ fn main() {
         perf::black_box(&dst);
     });
     emit(&mut sink, &r, Some(s3));
+    // the generic kernel monomorphized at (min,+) — the semiring refactor's
+    // zero-cost claim, priced next to the specialized entry it replaced
+    let r = bench("phase3 tile generic<MinPlus>", &cfg, || {
+        kernel::panel::<MinPlus>(&mut dst[s..], n, col, n, &row[s..], n, s, s, s);
+        perf::black_box(&dst);
+    });
+    emit(&mut sink, &r, Some(s3));
+
+    common::banner("semiring objectives, blocked s=32");
+    // one row per non-(min,+) serving objective: the same blocked schedule
+    // driving a different (⊕, ⊗) pair over the objective-prepared graph
+    for obj in [Objective::Bottleneck, Objective::Minimax, Objective::Reachability] {
+        let prepared = obj.prepare(&g).expect("generator weights valid for every objective");
+        let r = bench(&format!("blocked s=32 {}", obj.name()), &cfg, || {
+            perf::black_box(semiring::blocked_solve(obj, &prepared, 32));
+        });
+        emit(&mut sink, &r, Some(n3));
+    }
 
     common::banner("incremental update vs full recompute (dynamic-graph tier)");
     // the workload the dynamic tier exists for: a small edge-delta batch

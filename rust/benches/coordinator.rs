@@ -85,6 +85,7 @@ fn main() {
                     variant: "staged".into(),
                     no_cache: true,
                     want_paths: false,
+                    objective: "shortest".into(),
                 })
                 .expect("solve"),
         );
@@ -125,6 +126,7 @@ fn main() {
                     variant: "staged".into(),
                     no_cache: false,
                     want_paths: false,
+                    objective: "shortest".into(),
                 })
                 .expect("hit"),
         );
@@ -147,6 +149,7 @@ fn main() {
             variant: "staged".into(),
             no_cache: false,
             want_paths: true, // successor-carrying base: increases stay incremental
+            objective: "shortest".into(),
         })
         .expect("prime update base");
     let mut delta = Vec::new();
@@ -170,6 +173,7 @@ fn main() {
                 base_fingerprint: fp,
                 updates: delta.clone(),
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .expect("update");
         match outcome {
@@ -187,6 +191,7 @@ fn main() {
                     variant: "staged".into(),
                     no_cache: true,
                     want_paths: false,
+                    objective: "shortest".into(),
                 })
                 .expect("solve"),
         );
@@ -221,6 +226,7 @@ fn main() {
                     variant: "staged".into(),
                     no_cache: false,
                     want_paths: true,
+                    objective: "shortest".into(),
                 })
                 .expect("trace solve");
             continue;
@@ -233,6 +239,7 @@ fn main() {
                 base_fingerprint: graph_fingerprint(base),
                 updates: item.updates.clone(),
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .expect("trace update");
         if matches!(outcome, UpdateOutcome::Solved(_)) {
@@ -278,6 +285,7 @@ fn main() {
                 variant: "staged".into(),
                 no_cache: true,
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .expect("sequential");
     }
@@ -327,6 +335,7 @@ fn main() {
             variant: "staged".into(),
             no_cache: true,
             want_paths: false,
+            objective: "shortest".into(),
         })
         .expect("superblock solve");
     let sb_seconds = t0.elapsed().as_secs_f64();

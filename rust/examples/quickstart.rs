@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         variant: "staged".into(),
         no_cache: true,
         want_paths: false,
+        objective: "shortest".into(),
     })?;
     let device_s = t0.elapsed().as_secs_f64();
     let tasks = (resp.bucket as f64).powi(3);

@@ -12,9 +12,15 @@
 //! matrix; [`paths`] additionally reconstructs shortest paths via a
 //! successor matrix.  The hot phase-3 inner loops of every blocked tier
 //! ([`blocked`], [`parallel`], and `crate::superblock::minplus`) share one
-//! register-tiled (min, +) microkernel ([`kernel`]).  [`incremental`]
-//! applies edge-weight deltas to an existing `(dist, succ)` closure — the
-//! dynamic-graph tier the coordinator serves `"update"` requests with.
+//! register-tiled microkernel ([`kernel`]), generic over the closed
+//! semiring ([`semiring`]) — the blocked schedule only ever uses
+//! `⊕`/`⊗` algebra, so the same tiers serve shortest path `(min, +)`,
+//! bottleneck `(max, min)`, minimax `(min, max)`, and transitive closure
+//! `(or, and)`; `(min, +)` stays the monomorphized, bitwise-pinned
+//! specialization.  [`incremental`] applies edge-weight deltas to an
+//! existing `(dist, succ)` closure — the dynamic-graph tier the
+//! coordinator serves `"update"` requests with (shortest-only, as is
+//! [`johnson`]).
 
 pub mod blocked;
 pub mod incremental;
@@ -23,6 +29,7 @@ pub mod kernel;
 pub mod naive;
 pub mod parallel;
 pub mod paths;
+pub mod semiring;
 pub mod validate;
 
 pub use validate::{check_invariants, negative_cycle_vertices};

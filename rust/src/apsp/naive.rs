@@ -5,6 +5,7 @@
 //! Kept deliberately simple: this is both the baseline whose constant we
 //! re-measure (EXPERIMENTS.md E7) and the most trustworthy oracle.
 
+use super::semiring::Semiring;
 use crate::graph::DistMatrix;
 
 /// In-place Floyd-Warshall over `w` (paper Fig. 1).
@@ -45,6 +46,50 @@ pub fn solve_in_place(w: &mut DistMatrix) {
 pub fn solve(w: &DistMatrix) -> DistMatrix {
     let mut out = w.clone();
     solve_in_place(&mut out);
+    out
+}
+
+/// In-place generic Floyd-Warshall: the triple loop of [`solve_in_place`]
+/// with `(min, +, <, is_finite)` replaced by the [`Semiring`] hooks.  The
+/// most trustworthy oracle for the non-shortest objectives, exactly as the
+/// specialized loop is for `(min, +)`: these semirings are selection-only
+/// (`⊕`/`⊗` return an operand, never a rounded sum), so every tier is
+/// pinned against this loop with exact `==` in `tests/conformance.rs`.
+///
+/// Expects the matrix in the semiring's domain — `S::ONE` diagonal,
+/// `S::ZERO` for absent edges (what `Objective::prepare` produces).
+pub fn solve_in_place_semiring<S: Semiring>(w: &mut DistMatrix) {
+    let n = w.n();
+    let data = w.as_mut_slice();
+    for k in 0..n {
+        for i in 0..n {
+            let wik = data[i * n + k];
+            if S::is_zero(wik) {
+                continue; // no i→k path: row k cannot improve row i this round
+            }
+            let (row_k, row_i) = if i < k {
+                let (lo, hi) = data.split_at_mut(k * n);
+                (&hi[..n], &mut lo[i * n..i * n + n])
+            } else if i > k {
+                let (lo, hi) = data.split_at_mut(i * n);
+                (&lo[k * n..k * n + n], &mut hi[..n])
+            } else {
+                continue; // i == k: ⊗ by the ONE diagonal is a no-op
+            };
+            for j in 0..n {
+                let cand = S::extend(wik, row_k[j]);
+                if S::improves(cand, row_i[j]) {
+                    row_i[j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Functional wrapper over [`solve_in_place_semiring`].
+pub fn solve_semiring<S: Semiring>(w: &DistMatrix) -> DistMatrix {
+    let mut out = w.clone();
+    solve_in_place_semiring::<S>(&mut out);
     out
 }
 
@@ -103,6 +148,39 @@ mod tests {
         assert_eq!(d0.n(), 0);
         let d1 = solve(&DistMatrix::unconnected(1));
         assert_eq!(d1.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn generic_minplus_is_bitwise_the_specialized_loop() {
+        use crate::apsp::semiring::MinPlus;
+        let g = generators::erdos_renyi(40, 0.3, 23);
+        let spec = solve(&g);
+        let gen = solve_semiring::<MinPlus>(&g);
+        assert!(spec
+            .as_slice()
+            .iter()
+            .zip(gen.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn generic_maxmin_solves_widest_path() {
+        use crate::apsp::semiring::MaxMin;
+        // bottleneck domain: diag = ONE (inf), absent = ZERO (0), capacities > 0
+        let mut m = DistMatrix::unconnected(3); // diag 0, off-diag inf — wrong domain
+        let n = m.n();
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, if i == j { INF } else { 0.0 });
+            }
+        }
+        m.set(0, 1, 2.0); // thin direct pipe
+        m.set(0, 2, 8.0);
+        m.set(2, 1, 5.0); // fat detour: bottleneck 5
+        let d = solve_semiring::<MaxMin>(&m);
+        assert_eq!(d.get(0, 1), 5.0);
+        assert_eq!(d.get(0, 2), 8.0);
+        assert_eq!(d.get(1, 0), 0.0); // unreachable stays ZERO
     }
 
     #[test]

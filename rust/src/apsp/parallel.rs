@@ -18,15 +18,28 @@
 //!
 //! Sizes that are not a tile multiple pad to the next multiple and
 //! truncate, exactly like [`super::blocked`] (and bitwise equal to it).
+//!
+//! Like the sequential tier, the banded drivers are generic over the
+//! [`Semiring`] ([`solve_semiring`], [`solve_paths_semiring`]); the public
+//! `(min, +)` entry points are the generics monomorphized at
+//! [`MinPlus`](crate::apsp::semiring::MinPlus), bitwise-pinned as before.
 
 use super::kernel::{self, PanelBuf};
 use super::paths::{self, PathsResult};
+use super::semiring::{padded_semiring, MinPlus, Semiring};
 use crate::graph::DistMatrix;
 
 /// Blocked FW with tile size `s` and phase-3 parallelism of `threads`.
 pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
+    solve_semiring::<MinPlus>(w, s, threads)
+}
+
+/// Generic banded blocked FW — [`solve`] over any [`Semiring`].  Expects
+/// the matrix in the semiring's domain (`S::ONE` diagonal, `S::ZERO`
+/// absent edges).
+pub fn solve_semiring<S: Semiring>(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
     let mut out = w.clone();
-    solve_in_place(&mut out, s, threads);
+    solve_in_place_semiring::<S>(&mut out, s, threads);
     out
 }
 
@@ -43,43 +56,54 @@ pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
 /// to `blocked::solve`); non-multiple sizes pad and truncate; degenerate
 /// parameters fall back to [`super::blocked::solve_paths`].
 pub fn solve_paths(w: &DistMatrix, s: usize, threads: usize) -> PathsResult {
+    solve_paths_semiring::<MinPlus>(w, s, threads)
+}
+
+/// Generic banded blocked FW with successor tracking — [`solve_paths`]
+/// over any [`Semiring`].
+pub fn solve_paths_semiring<S: Semiring>(w: &DistMatrix, s: usize, threads: usize) -> PathsResult {
     let n = w.n();
     if n == 0 {
         return PathsResult::from_parts(w.clone(), Vec::new());
     }
     if threads <= 1 || s == 0 || (n % s != 0 && n < s) {
-        return super::blocked::solve_paths(w, s);
+        return super::blocked::solve_paths_semiring::<S>(w, s);
     }
     if n % s != 0 {
         let padded_n = n.div_ceil(s) * s;
-        return solve_paths(&w.padded(padded_n), s, threads).truncated(n);
+        return solve_paths_semiring::<S>(&padded_semiring::<S>(w, padded_n), s, threads)
+            .truncated(n);
     }
     let mut dist = w.clone();
-    let mut succ = paths::init_succ(w);
+    let mut succ = paths::init_succ_semiring::<S>(w);
     let nb = n / s;
     let mut row_panel = vec![0f32; s * n];
     for b in 0..nb {
         let ks = b * s;
-        super::blocked::phase1_diag_succ(&mut dist, &mut succ, ks, s);
+        super::blocked::phase1_diag_succ_semiring::<S>(&mut dist, &mut succ, ks, s);
         for jb in 0..nb {
             if jb != b {
-                super::blocked::phase2_row_tile_succ(&mut dist, &mut succ, ks, jb * s, s);
+                super::blocked::phase2_row_tile_succ_semiring::<S>(
+                    &mut dist, &mut succ, ks, jb * s, s,
+                );
             }
         }
         for ib in 0..nb {
             if ib != b {
-                super::blocked::phase2_col_tile_succ(&mut dist, &mut succ, ks, ib * s, s);
+                super::blocked::phase2_col_tile_succ_semiring::<S>(
+                    &mut dist, &mut succ, ks, ib * s, s,
+                );
             }
         }
         row_panel.copy_from_slice(&dist.as_slice()[ks * n..(ks + s) * n]);
-        phase3_parallel_succ(&mut dist, &mut succ, &row_panel, ks, s, threads);
+        phase3_parallel_succ::<S>(&mut dist, &mut succ, &row_panel, ks, s, threads);
     }
     PathsResult::from_parts(dist, succ)
 }
 
 /// Fan the stage's doubly-dependent tiles out over row bands, tracking
 /// successors.  Mirrors [`phase3_parallel`] with a second banded matrix.
-fn phase3_parallel_succ(
+fn phase3_parallel_succ<S: Semiring>(
     w: &mut DistMatrix,
     succ: &mut [usize],
     row_panel: &[f32],
@@ -116,7 +140,7 @@ fn phase3_parallel_succ(
                             continue;
                         }
                         let js = jb * s;
-                        kernel::minplus_panel_succ(
+                        kernel::panel_succ::<S>(
                             &mut band[is * n + js..],
                             &mut succ_band[is * n + js..],
                             n,
@@ -139,18 +163,24 @@ fn phase3_parallel_succ(
 /// In-place parallel blocked FW.  Falls back to the sequential blocked
 /// solver for degenerate parameters; non-multiple sizes pad and truncate.
 pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
+    solve_in_place_semiring::<MinPlus>(w, s, threads);
+}
+
+/// Generic in-place banded blocked FW — the driver behind
+/// [`solve_in_place`].
+pub fn solve_in_place_semiring<S: Semiring>(w: &mut DistMatrix, s: usize, threads: usize) {
     let n = w.n();
     if n == 0 {
         return;
     }
     if threads <= 1 || s == 0 || (n % s != 0 && n < s) {
-        super::blocked::solve_in_place(w, s);
+        super::blocked::solve_in_place_semiring::<S>(w, s);
         return;
     }
     if n % s != 0 {
         let padded_n = n.div_ceil(s) * s;
-        let mut padded = w.padded(padded_n);
-        solve_in_place(&mut padded, s, threads);
+        let mut padded = padded_semiring::<S>(w, padded_n);
+        solve_in_place_semiring::<S>(&mut padded, s, threads);
         *w = padded.truncated(n);
         return;
     }
@@ -158,27 +188,27 @@ pub fn solve_in_place(w: &mut DistMatrix, s: usize, threads: usize) {
     let mut row_panel = vec![0f32; s * n];
     for b in 0..nb {
         let ks = b * s;
-        super::blocked::phase1_diag(w, ks, s);
+        super::blocked::phase1_diag_semiring::<S>(w, ks, s);
         for jb in 0..nb {
             if jb != b {
-                super::blocked::phase2_row_tile(w, ks, jb * s, s);
+                super::blocked::phase2_row_tile_semiring::<S>(w, ks, jb * s, s);
             }
         }
         for ib in 0..nb {
             if ib != b {
-                super::blocked::phase2_col_tile(w, ks, ib * s, s);
+                super::blocked::phase2_col_tile_semiring::<S>(w, ks, ib * s, s);
             }
         }
         // snapshot the (final) row panel so phase-3 bands can read it freely
         row_panel.copy_from_slice(&w.as_slice()[ks * n..(ks + s) * n]);
-        phase3_parallel(w, &row_panel, ks, s, threads);
+        phase3_parallel::<S>(w, &row_panel, ks, s, threads);
     }
 }
 
 /// Fan the stage's doubly-dependent tiles out over row bands; each band
 /// packs its column-panel tile once per tile row and sweeps the row of
 /// tiles through the microkernel.
-fn phase3_parallel(
+fn phase3_parallel<S: Semiring>(
     w: &mut DistMatrix,
     row_panel: &[f32],
     ks: usize,
@@ -213,7 +243,7 @@ fn phase3_parallel(
                             continue;
                         }
                         let js = jb * s;
-                        kernel::minplus_panel(
+                        kernel::panel::<S>(
                             &mut band[is * n + js..],
                             n,
                             pack.dist(),
@@ -334,6 +364,25 @@ mod tests {
                     None => assert!(!r.dist.get(i, j).is_finite() || i == j),
                 }
             }
+        }
+    }
+
+    #[test]
+    fn generic_semirings_banded_equal_sequential() {
+        // bands re-partition, never re-order — so banded generic output is
+        // exactly the sequential generic output (selection semirings are
+        // exact, minplus is bitwise by the shared schedule)
+        use crate::apsp::semiring::{MaxMin, Objective};
+        let g = generators::erdos_renyi(80, 0.3, 67);
+        let prepared = Objective::Bottleneck.prepare(&g).unwrap();
+        let seq = super::super::blocked::solve_semiring::<MaxMin>(&prepared, 16);
+        for threads in [2, 4] {
+            assert_eq!(solve_semiring::<MaxMin>(&prepared, 16, threads), seq);
+            assert_eq!(
+                solve_paths_semiring::<MaxMin>(&prepared, 16, threads).dist,
+                seq,
+                "threads={threads}"
+            );
         }
     }
 

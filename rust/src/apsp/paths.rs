@@ -16,6 +16,7 @@
 //! [`crate::superblock`] unchanged; this solver is the reference those
 //! tiers are differentially tested against (`rust/tests/conformance.rs`).
 
+use super::semiring::Semiring;
 use crate::graph::DistMatrix;
 
 /// APSP result with path reconstruction support.
@@ -63,6 +64,53 @@ pub fn solve(w: &DistMatrix) -> PathsResult {
                 for j in 0..n {
                     let cand = dik + d[k * n + j];
                     if cand < d[i * n + j] {
+                        d[i * n + j] = cand;
+                        succ[i * n + j] = succ[i * n + k];
+                    }
+                }
+            }
+        }
+    }
+    PathsResult { dist, succ }
+}
+
+/// Direct-edge successor initialization in a semiring's domain:
+/// `succ[i][j] = j` wherever the off-diagonal entry is a live edge
+/// (not `S::ZERO`).  At `MinPlus` this is exactly [`init_succ`].
+pub fn init_succ_semiring<S: Semiring>(w: &DistMatrix) -> Vec<usize> {
+    let n = w.n();
+    let mut succ = vec![NO_PATH; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && !S::is_zero(w.get(i, j)) {
+                succ[i * n + j] = j; // direct edge
+            }
+        }
+    }
+    succ
+}
+
+/// Generic Floyd-Warshall with successor tracking — [`solve`] over any
+/// [`Semiring`], sharing the strict-accept rule: a successor changes only
+/// when [`Semiring::improves`] holds, so ties keep the earliest-pivot
+/// witness in every instance.  The reference the generic fast tiers are
+/// differentially tested against.  Expects the matrix in the semiring's
+/// domain (`S::ONE` diagonal, `S::ZERO` absent).
+pub fn solve_semiring<S: Semiring>(w: &DistMatrix) -> PathsResult {
+    let n = w.n();
+    let mut dist = w.clone();
+    let mut succ = init_succ_semiring::<S>(w);
+    {
+        let d = dist.as_mut_slice();
+        for k in 0..n {
+            for i in 0..n {
+                let dik = d[i * n + k];
+                if S::is_zero(dik) || i == k {
+                    continue;
+                }
+                for j in 0..n {
+                    let cand = S::extend(dik, d[k * n + j]);
+                    if S::improves(cand, d[i * n + j]) {
                         d[i * n + j] = cand;
                         succ[i * n + j] = succ[i * n + k];
                     }
@@ -264,6 +312,35 @@ mod tests {
         let r = solve(&g);
         assert_eq!(r.truncated(12), r);
         assert_eq!(r.truncated(0).n(), 0);
+    }
+
+    #[test]
+    fn generic_minplus_matches_specialized_exactly() {
+        use crate::apsp::semiring::MinPlus;
+        let g = generators::erdos_renyi(40, 0.3, 91);
+        let spec = solve(&g);
+        let gen = solve_semiring::<MinPlus>(&g);
+        assert_eq!(spec, gen); // dist bitwise (PartialEq on f32) and succ
+        assert_eq!(init_succ(&g), init_succ_semiring::<MinPlus>(&g));
+    }
+
+    #[test]
+    fn generic_maxmin_successors_trace_the_widest_route() {
+        use crate::apsp::semiring::MaxMin;
+        let n = 3;
+        let mut g = DistMatrix::unconnected(n);
+        for i in 0..n {
+            for j in 0..n {
+                g.set(i, j, if i == j { crate::INF } else { 0.0 });
+            }
+        }
+        g.set(0, 1, 2.0);
+        g.set(0, 2, 8.0);
+        g.set(2, 1, 5.0);
+        let r = solve_semiring::<MaxMin>(&g);
+        assert_eq!(r.dist.get(0, 1), 5.0);
+        assert_eq!(r.path(0, 1), Some(vec![0, 2, 1])); // widest route detours
+        assert_eq!(r.path(1, 2), None);
     }
 
     #[test]

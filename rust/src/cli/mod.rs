@@ -3,12 +3,14 @@
 //!
 //! ```text
 //! fw-stage solve     --input g.gr [--variant staged|superblock] [--artifacts DIR]
+//!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--superblock-bucket N] [--superblock-workers W] [--output d.dist]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
 //!                    [--superblock-bucket N] [--superblock-workers W]
 //!                    [--update-max-chain K]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
+//!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
@@ -26,6 +28,12 @@
 //! base closure and then updates it; `client` sends only the deltas plus
 //! the base fingerprint, falling back to a full solve of the mutated graph
 //! when the server has no cached base.
+//!
+//! `--objective` selects the closed semiring the closure is taken over:
+//! `shortest` (min, +; the default), `bottleneck` (max, min — widest
+//! path), `minimax` (min, max — smallest maximum edge), or `reachability`
+//! (or, and — transitive closure).  The dynamic tier (`--update`) and the
+//! johnson variant are shortest-only.
 
 pub mod args;
 
@@ -157,6 +165,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let src = args.get_usize("src", 0)?;
     let dst = args.get_usize("dst", 0)?;
     let update_spec = args.get("update").map(str::to_string);
+    let objective = args.get_or("objective", "shortest").to_string();
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
@@ -165,6 +174,9 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
     args.reject_unknown()?;
+    if update_spec.is_some() && objective != "shortest" {
+        bail!("--update serves the shortest objective only (got --objective {objective})");
+    }
 
     let graph = io::load(Path::new(input))?;
     let coord = start_coordinator(&args)?;
@@ -185,6 +197,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
                 variant: variant.clone(),
                 no_cache: false,
                 want_paths: true, // successor-carrying base keeps increases incremental
+                objective: "shortest".into(),
             })?;
             Some((updates, mutated))
         }
@@ -198,6 +211,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
                 variant,
                 no_cache: false,
                 want_paths,
+                objective: objective.clone(),
             })?;
             (resp, graph.clone())
         }
@@ -209,6 +223,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
                 base_fingerprint: coordinator::cache::graph_fingerprint(&graph),
                 updates,
                 want_paths,
+                objective: "shortest".into(),
             })?;
             match outcome {
                 coordinator::UpdateOutcome::Solved(resp) => (resp, mutated),
@@ -233,7 +248,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     }
     if want_paths {
         let succ = resp.succ.context("response is missing successors")?;
-        print_path(&effective_graph, resp.dist.clone(), succ, src, dst)?;
+        print_path(&effective_graph, resp.dist.clone(), succ, src, dst, &objective)?;
         if let Some(path) = &output {
             io::save(&resp.dist, path)?;
         }
@@ -253,6 +268,7 @@ fn print_path(
     succ: Vec<usize>,
     src: usize,
     dst: usize,
+    objective: &str,
 ) -> Result<()> {
     let n = graph.n();
     if src >= n || dst >= n {
@@ -262,10 +278,20 @@ fn print_path(
     match r.path(src, dst) {
         Some(p) => {
             let hops: Vec<String> = p.iter().map(|v| v.to_string()).collect();
-            let cost = r
-                .path_weight(graph, src, dst)
-                .context("reconstructed path uses a non-edge")?;
-            println!("path {src} -> {dst}: {} (cost {cost:.2})", hops.join(" -> "));
+            if objective == "shortest" {
+                let cost = r
+                    .path_weight(graph, src, dst)
+                    .context("reconstructed path uses a non-edge")?;
+                println!("path {src} -> {dst}: {} (cost {cost:.2})", hops.join(" -> "));
+            } else {
+                // non-(min,+) path values do not sum along raw edge
+                // weights; report the semiring value the solver computed
+                let value = r.dist.get(src, dst);
+                println!(
+                    "path {src} -> {dst}: {} ({objective} {value:.2})",
+                    hops.join(" -> ")
+                );
+            }
         }
         None => println!("path {src} -> {dst}: unreachable"),
     }
@@ -310,7 +336,11 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     let variant = args.get_or("variant", "staged").to_string();
     let output = args.get("output").map(PathBuf::from);
     let update_spec = args.get("update").map(str::to_string);
+    let objective = args.get_or("objective", "shortest").to_string();
     args.reject_unknown()?;
+    if update_spec.is_some() && objective != "shortest" {
+        bail!("--update serves the shortest objective only (got --objective {objective})");
+    }
 
     let mut client = coordinator::client::Client::connect(addr)?;
     if want_stats {
@@ -322,9 +352,9 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     let (resp, effective_graph) = match &update_spec {
         None => {
             let resp = if want_paths {
-                client.solve_paths(&graph, &variant)?
+                client.solve_paths_objective(&graph, &variant, &objective)?
             } else {
-                client.solve(&graph, &variant)?
+                client.solve_objective(&graph, &variant, &objective)?
             };
             (resp, graph.clone())
         }
@@ -347,7 +377,7 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     );
     if want_paths {
         let succ = resp.succ.context("server response is missing successors")?;
-        print_path(&effective_graph, resp.dist.clone(), succ, src, dst)?;
+        print_path(&effective_graph, resp.dist.clone(), succ, src, dst, &objective)?;
         if let Some(path) = &output {
             io::save(&resp.dist, path)?;
         }
@@ -462,6 +492,7 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
                 variant: variant.clone(),
                 no_cache: true,
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .context("bench solve")?;
         samples.push(t0.elapsed().as_secs_f64());

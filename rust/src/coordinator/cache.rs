@@ -1,14 +1,21 @@
-//! Result cache: LRU over (variant, graph-content hash).
+//! Result cache: LRU over (objective, variant, graph-content hash).
 //!
 //! APSP is expensive and deterministic — identical graphs recur in routing
 //! workloads (topology changes are much rarer than queries).  Keyed by an
-//! FNV-1a hash of the matrix bytes plus n and variant; collisions are
-//! guarded by storing the full key (n, variant, hash) and verifying n.
+//! FNV-1a hash of the matrix bytes plus n and variant, with the serving
+//! objective mixed into the hash ([`objective_fingerprint`]) so a closure
+//! taken over one semiring can never answer a request for another;
+//! collisions are guarded by storing the full key (n, variant, hash) and
+//! verifying n.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::apsp::semiring::Objective;
 use crate::graph::DistMatrix;
+
+const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const PRIME: u64 = 0x0000_0100_0000_01B3;
 
 /// FNV-1a-style hash over the matrix's raw f32 bits (stable across runs).
 ///
@@ -19,8 +26,6 @@ use crate::graph::DistMatrix;
 /// prime construction.  An odd trailing word is folded on its own.  The
 /// pinned-value tests below freeze the exact function.
 pub fn graph_fingerprint(g: &DistMatrix) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01B3;
     let mut h = OFFSET;
     h ^= g.n() as u64;
     h = h.wrapping_mul(PRIME);
@@ -37,12 +42,27 @@ pub fn graph_fingerprint(g: &DistMatrix) -> u64 {
     h
 }
 
-/// The cache key every lookup and insert shares: (variant, n, fingerprint).
-fn make_key(variant: &str, g: &DistMatrix) -> Key {
+/// [`graph_fingerprint`] with the serving objective folded in: one extra
+/// xor-multiply round over the objective tag.  `Objective::Shortest` is
+/// the **identity** — tag 0 would xor nothing, so the round is skipped
+/// outright — which keeps every pre-semiring fingerprint (pinned values,
+/// `"update"` wire `base` fields, persisted client state) valid verbatim.
+/// The pinned-value tests below freeze the mixing.
+pub fn objective_fingerprint(g: &DistMatrix, objective: Objective) -> u64 {
+    let h = graph_fingerprint(g);
+    match objective.tag() {
+        0 => h,
+        tag => (h ^ tag).wrapping_mul(PRIME),
+    }
+}
+
+/// The cache key every lookup and insert shares:
+/// (variant, n, objective-mixed fingerprint).
+fn make_key(objective: Objective, variant: &str, g: &DistMatrix) -> Key {
     Key {
         variant: variant.to_string(),
         n: g.n(),
-        fingerprint: graph_fingerprint(g),
+        fingerprint: objective_fingerprint(g, objective),
     }
 }
 
@@ -110,10 +130,20 @@ impl ResultCache {
     }
 
     pub fn get(&self, variant: &str, g: &DistMatrix) -> Option<DistMatrix> {
+        self.get_for(Objective::Shortest, variant, g)
+    }
+
+    /// [`ResultCache::get`] under an explicit serving objective.
+    pub fn get_for(
+        &self,
+        objective: Objective,
+        variant: &str,
+        g: &DistMatrix,
+    ) -> Option<DistMatrix> {
         if self.capacity == 0 {
             return None;
         }
-        let key = make_key(variant, g);
+        let key = make_key(objective, variant, g);
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -134,10 +164,20 @@ impl ResultCache {
     /// Closure + successor lookup: hits only entries a path-carrying solve
     /// has populated (a distance-only entry cannot serve a paths request).
     pub fn get_paths(&self, variant: &str, g: &DistMatrix) -> Option<(DistMatrix, Vec<usize>)> {
+        self.get_paths_for(Objective::Shortest, variant, g)
+    }
+
+    /// [`ResultCache::get_paths`] under an explicit serving objective.
+    pub fn get_paths_for(
+        &self,
+        objective: Objective,
+        variant: &str,
+        g: &DistMatrix,
+    ) -> Option<(DistMatrix, Vec<usize>)> {
         if self.capacity == 0 {
             return None;
         }
-        let key = make_key(variant, g);
+        let key = make_key(objective, variant, g);
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -156,13 +196,30 @@ impl ResultCache {
     }
 
     pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
-        self.insert(variant, g, dist, None, 0);
+        self.insert(Objective::Shortest, variant, g, dist, None, 0);
+    }
+
+    /// [`ResultCache::put`] under an explicit serving objective.
+    pub fn put_for(&self, objective: Objective, variant: &str, g: &DistMatrix, dist: DistMatrix) {
+        self.insert(objective, variant, g, dist, None, 0);
     }
 
     /// Cache a path-carrying solve: the distance closure plus the successor
     /// matrix, under the same fingerprint key distance entries use.
     pub fn put_paths(&self, variant: &str, g: &DistMatrix, dist: DistMatrix, succ: Vec<usize>) {
-        self.insert(variant, g, dist, Some(succ), 0);
+        self.insert(Objective::Shortest, variant, g, dist, Some(succ), 0);
+    }
+
+    /// [`ResultCache::put_paths`] under an explicit serving objective.
+    pub fn put_paths_for(
+        &self,
+        objective: Objective,
+        variant: &str,
+        g: &DistMatrix,
+        dist: DistMatrix,
+        succ: Vec<usize>,
+    ) {
+        self.insert(objective, variant, g, dist, Some(succ), 0);
     }
 
     /// Cache an incrementally updated closure for the *mutated* graph `g`,
@@ -170,6 +227,7 @@ impl ResultCache {
     /// of updates is itself cache-hittable: the coordinator keys each link
     /// by the mutated graph's fingerprint, so replaying the same deltas —
     /// or solving the mutated graph outright — hits this entry.
+    /// Chained closures are shortest-only, like the dynamic tier itself.
     pub fn put_chained(
         &self,
         variant: &str,
@@ -178,7 +236,7 @@ impl ResultCache {
         succ: Option<Vec<usize>>,
         chain: u32,
     ) {
-        self.insert(variant, g, dist, succ, chain);
+        self.insert(Objective::Shortest, variant, g, dist, succ, chain);
     }
 
     /// Atomic base-closure lookup for an `"update"` request, addressed by
@@ -220,6 +278,7 @@ impl ResultCache {
 
     fn insert(
         &self,
+        objective: Objective,
         variant: &str,
         g: &DistMatrix,
         dist: DistMatrix,
@@ -229,7 +288,7 @@ impl ResultCache {
         if self.capacity == 0 {
             return;
         }
-        let key = make_key(variant, g);
+        let key = make_key(objective, variant, g);
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -443,6 +502,93 @@ mod tests {
             graph_fingerprint(&DistMatrix::unconnected(1)),
             0x082f_2207_b4e8_8cc4
         );
+    }
+
+    #[test]
+    fn objective_fingerprint_values_pinned() {
+        // The objective mixing is part of the cache-key contract too.
+        // Shortest is the identity — pre-semiring fingerprints (including
+        // every wire `base` field) stay valid verbatim.
+        let g = DistMatrix::unconnected(2);
+        assert_eq!(
+            objective_fingerprint(&g, Objective::Shortest),
+            graph_fingerprint(&g)
+        );
+        // Values computed independently: (h ^ tag) * PRIME mod 2^64.
+        assert_eq!(
+            objective_fingerprint(&g, Objective::Bottleneck),
+            0xed9b_0e87_64b9_8b64
+        );
+        assert_eq!(
+            objective_fingerprint(&g, Objective::Minimax),
+            0xed9b_1187_64b9_907d
+        );
+        assert_eq!(
+            objective_fingerprint(&g, Objective::Reachability),
+            0xed9b_1087_64b9_8eca
+        );
+    }
+
+    #[test]
+    fn objective_fingerprints_all_distinct() {
+        for g in [DistMatrix::unconnected(2), generators::erdos_renyi(16, 0.5, 1)] {
+            let fps: Vec<u64> = Objective::ALL
+                .iter()
+                .map(|&o| objective_fingerprint(&g, o))
+                .collect();
+            for i in 0..fps.len() {
+                for j in i + 1..fps.len() {
+                    assert_ne!(
+                        fps[i], fps[j],
+                        "{:?} vs {:?} collide on the same graph",
+                        Objective::ALL[i],
+                        Objective::ALL[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn objectives_never_share_cache_entries() {
+        // a closure cached under one objective must not answer another:
+        // the numbers would be algebra-correct for the wrong question
+        let cache = ResultCache::new(8);
+        let g = generators::ring(6);
+        let shortest = crate::apsp::naive::solve(&g);
+        cache.put("staged", &g, shortest.clone());
+        for o in [Objective::Bottleneck, Objective::Minimax, Objective::Reachability] {
+            assert!(cache.get_for(o, "staged", &g).is_none(), "{o:?} hit shortest entry");
+        }
+        // and the reverse: a bottleneck entry is invisible to shortest
+        let widest = crate::apsp::naive::solve_semiring::<crate::apsp::semiring::MaxMin>(
+            &Objective::Bottleneck.prepare(&g).unwrap(),
+        );
+        cache.put_for(Objective::Bottleneck, "staged", &g, widest.clone());
+        assert_eq!(cache.get("staged", &g), Some(shortest));
+        assert_eq!(cache.get_for(Objective::Bottleneck, "staged", &g), Some(widest));
+        assert_eq!(cache.len(), 2, "distinct keys, distinct entries");
+    }
+
+    #[test]
+    fn paths_pair_cached_under_one_objective_stays_there() {
+        let cache = ResultCache::new(8);
+        let g = generators::ring(6);
+        let prepared = Objective::Bottleneck.prepare(&g).unwrap();
+        let r = crate::apsp::paths::solve_semiring::<crate::apsp::semiring::MaxMin>(&prepared);
+        cache.put_paths_for(Objective::Bottleneck, "staged", &g, r.dist.clone(), r.succ().to_vec());
+        // the pair serves its own objective...
+        let (d, s) = cache
+            .get_paths_for(Objective::Bottleneck, "staged", &g)
+            .expect("bottleneck paths hit");
+        assert_eq!(d, r.dist);
+        assert_eq!(s, r.succ());
+        // ...and no other — neither paths nor plain distance lookups
+        assert!(cache.get_paths("staged", &g).is_none());
+        assert!(cache.get("staged", &g).is_none());
+        for o in [Objective::Minimax, Objective::Reachability] {
+            assert!(cache.get_paths_for(o, "staged", &g).is_none());
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use super::cache::graph_fingerprint;
 use super::types::{
     decode_response, encode_request, encode_update_request, Request, Response, UpdateRequest,
-    CODE_UPDATE_BASE_MISSING,
+    CODE_UPDATE_BASE_MISSING, DEFAULT_OBJECTIVE,
 };
 use crate::apsp::incremental::{self, EdgeUpdate};
 use crate::graph::DistMatrix;
@@ -57,21 +57,50 @@ impl Client {
 
     /// Solve a graph; returns the full response (distances + metadata).
     pub fn solve(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
-        self.request(graph, variant, false)
+        self.request(graph, variant, false, DEFAULT_OBJECTIVE)
+    }
+
+    /// Solve a graph under an explicit serving objective (`"shortest"`,
+    /// `"bottleneck"`, `"minimax"`, `"reachability"`).  An objective the
+    /// server does not serve on this variant comes back as an error
+    /// carrying [`super::types::CODE_OBJECTIVE_UNSUPPORTED`].
+    pub fn solve_objective(
+        &mut self,
+        graph: &DistMatrix,
+        variant: &str,
+        objective: &str,
+    ) -> Result<Response> {
+        self.request(graph, variant, false, objective)
     }
 
     /// Solve a graph *with successor tracking*: the response carries the
     /// successor matrix (`Response::succ` is guaranteed present), from
     /// which [`crate::apsp::paths::PathsResult`] reconstructs actual paths.
     pub fn solve_paths(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
-        let resp = self.request(graph, variant, true)?;
+        self.solve_paths_objective(graph, variant, DEFAULT_OBJECTIVE)
+    }
+
+    /// [`Client::solve_paths`] under an explicit serving objective.
+    pub fn solve_paths_objective(
+        &mut self,
+        graph: &DistMatrix,
+        variant: &str,
+        objective: &str,
+    ) -> Result<Response> {
+        let resp = self.request(graph, variant, true, objective)?;
         if resp.succ.is_none() {
             bail!("server response is missing the successor matrix");
         }
         Ok(resp)
     }
 
-    fn request(&mut self, graph: &DistMatrix, variant: &str, want_paths: bool) -> Result<Response> {
+    fn request(
+        &mut self,
+        graph: &DistMatrix,
+        variant: &str,
+        want_paths: bool,
+        objective: &str,
+    ) -> Result<Response> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request {
@@ -80,6 +109,7 @@ impl Client {
             variant: variant.to_string(),
             no_cache: false,
             want_paths,
+            objective: objective.to_string(),
         };
         let reply = self.roundtrip(&encode_request(&req))?;
         let resp = decode_response(&reply)?;
@@ -115,6 +145,7 @@ impl Client {
             base_fingerprint: graph_fingerprint(base),
             updates: updates.to_vec(),
             want_paths,
+            objective: DEFAULT_OBJECTIVE.to_string(),
         };
         let reply = self.roundtrip(&encode_update_request(&req))?;
         let v = Json::parse(&reply).context("update reply is not valid JSON")?;
@@ -148,7 +179,7 @@ impl Client {
             UpdateReply::BaseMissing => {
                 let mutated = incremental::mutated(base, updates)
                     .map_err(|e| anyhow::anyhow!("invalid update batch: {e}"))?;
-                self.request(&mutated, variant, want_paths)
+                self.request(&mutated, variant, want_paths, DEFAULT_OBJECTIVE)
             }
         }
     }

@@ -35,6 +35,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::apsp;
+use crate::apsp::semiring::Objective;
 use crate::graph::DistMatrix;
 use crate::runtime::Manifest;
 use crate::superblock;
@@ -168,18 +169,33 @@ impl Coordinator {
     /// rounds/tiles, engine batches) still record: that work really ran.
     fn solve_impl(&self, req: &Request, record: bool) -> Result<Response> {
         let t0 = Instant::now();
+        let objective = router::objective_gate(&req.variant, &req.objective)
+            .map_err(|e| anyhow::anyhow!(e))?;
         req.graph
             .validate()
             .map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        // non-shortest objectives rewrite the graph into the semiring's
+        // domain (and reject weights outside it) before any solver runs;
+        // cache keys stay on the *raw* request graph, with the objective
+        // mixed into the fingerprint.  Shortest skips the rewrite — its
+        // request path is byte-identical to the pre-semiring stack.
+        let prepared = match objective {
+            Objective::Shortest => None,
+            other => Some(other.prepare(&req.graph).map_err(|e| {
+                anyhow::anyhow!("objective {:?}: {e}", other.name())
+            })?),
+        };
 
         // cache (paths requests only hit entries that carry successors)
         if !req.no_cache {
             let hit = if req.want_paths {
                 self.cache
-                    .get_paths(&req.variant, &req.graph)
+                    .get_paths_for(objective, &req.variant, &req.graph)
                     .map(|(dist, succ)| (dist, Some(succ)))
             } else {
-                self.cache.get(&req.variant, &req.graph).map(|d| (d, None))
+                self.cache
+                    .get_for(objective, &req.variant, &req.graph)
+                    .map(|d| (d, None))
             };
             if let Some((dist, succ)) = hit {
                 let seconds = t0.elapsed().as_secs_f64();
@@ -198,18 +214,37 @@ impl Coordinator {
         }
 
         // route
-        let route = router::route(&self.router, &req.variant, req.graph.n(), req.want_paths)
-            .map_err(|e| anyhow::anyhow!(e))?;
+        let route = router::route_objective(
+            &self.router,
+            &req.variant,
+            req.graph.n(),
+            req.want_paths,
+            objective,
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
         let (dist, succ, source, bucket) = match route {
-            router::Route::Cpu { tile } => {
-                if req.want_paths {
-                    let (dist, succ) = apsp::blocked::solve_paths(&req.graph, tile).into_parts();
-                    (dist, Some(succ), Source::Cpu, req.graph.n())
-                } else {
-                    let dist = apsp::blocked::solve(&req.graph, tile);
-                    (dist, None, Source::Cpu, req.graph.n())
+            router::Route::Cpu { tile } => match &prepared {
+                None => {
+                    if req.want_paths {
+                        let (dist, succ) =
+                            apsp::blocked::solve_paths(&req.graph, tile).into_parts();
+                        (dist, Some(succ), Source::Cpu, req.graph.n())
+                    } else {
+                        let dist = apsp::blocked::solve(&req.graph, tile);
+                        (dist, None, Source::Cpu, req.graph.n())
+                    }
                 }
-            }
+                Some(g) => {
+                    if req.want_paths {
+                        let (dist, succ) =
+                            apsp::semiring::blocked_solve_paths(objective, g, tile).into_parts();
+                        (dist, Some(succ), Source::Cpu, req.graph.n())
+                    } else {
+                        let dist = apsp::semiring::blocked_solve(objective, g, tile);
+                        (dist, None, Source::Cpu, req.graph.n())
+                    }
+                }
+            },
             router::Route::Johnson => {
                 // the router rejects want_paths for johnson before this arm
                 let dist = apsp::johnson::solve(&req.graph)
@@ -226,6 +261,33 @@ impl Coordinator {
                 } else {
                     let solve = self.engine.solve(&req.variant, req.graph.clone())?;
                     (solve.dist, None, Source::Device, solve.bucket)
+                }
+            }
+            router::Route::SuperBlock { bucket } if prepared.is_some() => {
+                // non-shortest objectives: the same three-phase schedule,
+                // but diagonal tiles run the CPU semiring kernel — the AOT
+                // artifacts bake in (min, +) — so the routed bucket is used
+                // as-is (no manifest re-pick for a diagonal variant)
+                let g = prepared.as_ref().unwrap();
+                let cfg = superblock::SuperBlockConfig {
+                    bucket,
+                    workers: self.superblock_workers,
+                };
+                if req.want_paths {
+                    let (r, report) = superblock::solve_paths_objective(objective, g, &cfg);
+                    self.metrics.record_superblock(
+                        report.round_count() as u64,
+                        report.total_tiles() as u64,
+                    );
+                    let (dist, succ) = r.into_parts();
+                    (dist, Some(succ), Source::SuperBlock, bucket)
+                } else {
+                    let (dist, report) = superblock::solve_cpu_objective(objective, g, &cfg);
+                    self.metrics.record_superblock(
+                        report.round_count() as u64,
+                        report.total_tiles() as u64,
+                    );
+                    (dist, None, Source::SuperBlock, bucket)
                 }
             }
             router::Route::SuperBlock { bucket } => {
@@ -285,10 +347,14 @@ impl Coordinator {
 
         if !req.no_cache {
             match &succ {
-                Some(succ) => {
-                    self.cache.put_paths(&req.variant, &req.graph, dist.clone(), succ.clone())
-                }
-                None => self.cache.put(&req.variant, &req.graph, dist.clone()),
+                Some(succ) => self.cache.put_paths_for(
+                    objective,
+                    &req.variant,
+                    &req.graph,
+                    dist.clone(),
+                    succ.clone(),
+                ),
+                None => self.cache.put_for(objective, &req.variant, &req.graph, dist.clone()),
             }
         }
         let seconds = t0.elapsed().as_secs_f64();
@@ -322,6 +388,7 @@ impl Coordinator {
     pub fn update(&self, req: &types::UpdateRequest) -> Result<UpdateOutcome> {
         let t0 = Instant::now();
         self.metrics.record_request();
+        router::objective_gate_update(&req.objective).map_err(|e| anyhow::anyhow!(e))?;
         router::route_update(&self.router, &req.variant, req.n, req.want_paths)
             .map_err(|e| anyhow::anyhow!(e))?;
         let Some(base) = self
@@ -356,6 +423,7 @@ impl Coordinator {
                     variant: req.variant.clone(),
                     no_cache: false,
                     want_paths: req.want_paths || base.succ.is_some(),
+                    objective: types::DEFAULT_OBJECTIVE.into(),
                 },
                 false,
             )?;
@@ -396,12 +464,23 @@ impl Coordinator {
 
     /// Convenience: solve a bare graph with defaults.
     pub fn solve_graph(&self, graph: &DistMatrix, variant: &str) -> Result<DistMatrix> {
+        self.solve_graph_for(graph, variant, types::DEFAULT_OBJECTIVE)
+    }
+
+    /// Convenience: solve a bare graph under an explicit serving objective.
+    pub fn solve_graph_for(
+        &self,
+        graph: &DistMatrix,
+        variant: &str,
+        objective: &str,
+    ) -> Result<DistMatrix> {
         let resp = self.solve(&Request {
             id: 0,
             graph: graph.clone(),
             variant: variant.to_string(),
             no_cache: false,
             want_paths: false,
+            objective: objective.to_string(),
         })?;
         Ok(resp.dist)
     }
@@ -418,6 +497,7 @@ impl Coordinator {
             variant: variant.to_string(),
             no_cache: false,
             want_paths: true,
+            objective: types::DEFAULT_OBJECTIVE.into(),
         })?;
         let succ = resp
             .succ

@@ -15,6 +15,16 @@
 //! coordinator construction ([`super::Coordinator::start`]), never
 //! hardcoded here — new artifact variants become routable without touching
 //! this file.  Pure policy, trivially testable.
+//!
+//! **Objectives.** Non-shortest objectives (bottleneck / minimax /
+//! reachability) are gated ([`objective_gate`]) and routed
+//! ([`route_objective`]) here: the AOT device artifacts bake in `(min, +)`,
+//! so other semirings are downgraded from Device to the semiring-generic
+//! CPU tiers; johnson and the incremental `"update"` tier are
+//! shortest-only and reject with a typed wire code
+//! ([`super::types::CODE_OBJECTIVE_UNSUPPORTED`]).
+
+use crate::apsp::semiring::Objective;
 
 /// Routing decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -153,6 +163,73 @@ pub fn route_update(
         "unknown variant {variant:?} (available: cpu, superblock, {})",
         config.device_variants.join(", ")
     ))
+}
+
+/// Parse and gate a request's objective string against its variant.
+///
+/// Unknown objectives and johnson-with-non-shortest are policy errors the
+/// server surfaces as [`super::types::CODE_OBJECTIVE_UNSUPPORTED`] — johnson
+/// reweights via Dijkstra, which has no meaning outside `(min, +)`.
+pub fn objective_gate(variant: &str, objective: &str) -> Result<Objective, String> {
+    let parsed = Objective::parse(objective).ok_or_else(|| {
+        format!(
+            "unknown objective {objective:?} \
+             (available: shortest, bottleneck, minimax, reachability)"
+        )
+    })?;
+    if variant == "johnson" && parsed != Objective::Shortest {
+        return Err(format!(
+            "the johnson variant serves the shortest objective only \
+             (requested {:?})",
+            parsed.name()
+        ));
+    }
+    Ok(parsed)
+}
+
+/// Gate an `"update"` request's objective: the incremental tier chains
+/// `(min, +)` relaxations and serves nothing else.
+pub fn objective_gate_update(objective: &str) -> Result<(), String> {
+    match Objective::parse(objective) {
+        Some(Objective::Shortest) => Ok(()),
+        Some(other) => Err(format!(
+            "updates serve the shortest objective only (requested {:?})",
+            other.name()
+        )),
+        None => Err(format!(
+            "unknown objective {objective:?} \
+             (available: shortest, bottleneck, minimax, reachability)"
+        )),
+    }
+}
+
+/// [`route`] under an explicit serving objective.  Shortest is exactly
+/// [`route`]; other objectives never yield `Route::Device` or
+/// `Route::Johnson` — the artifacts and Johnson's reweighting are
+/// `(min, +)`-only, so Device downgrades to the CPU blocked tier (the
+/// super-block tier already runs its tiles CPU-side for them).
+pub fn route_objective(
+    config: &RouterConfig,
+    variant: &str,
+    n: usize,
+    want_paths: bool,
+    objective: Objective,
+) -> Result<Route, String> {
+    let r = route(config, variant, n, want_paths)?;
+    if objective == Objective::Shortest {
+        return Ok(r);
+    }
+    match r {
+        Route::Johnson => Err(format!(
+            "the johnson variant serves the shortest objective only \
+             (requested {:?})",
+            objective.name()
+        )),
+        Route::Device => Ok(Route::Cpu {
+            tile: config.cpu_tile,
+        }),
+        other => Ok(other),
+    }
 }
 
 fn superblock_route(config: &RouterConfig, n: usize) -> Result<Route, String> {
@@ -336,6 +413,61 @@ mod tests {
         let err = route_update(&cfg(), "warp9", 64, false).unwrap_err();
         assert!(err.contains("warp9") && err.contains("staged"), "{err}");
         assert!(route_update(&cfg(), "staged", 0, false).is_err());
+    }
+
+    #[test]
+    fn objective_gate_policy() {
+        // every known objective passes for generic-capable variants
+        for (s, o) in [
+            ("shortest", Objective::Shortest),
+            ("bottleneck", Objective::Bottleneck),
+            ("minimax", Objective::Minimax),
+            ("reachability", Objective::Reachability),
+        ] {
+            assert_eq!(objective_gate("staged", s).unwrap(), o, "{s}");
+            assert_eq!(objective_gate("cpu", s).unwrap(), o, "{s}");
+        }
+        // unknown objectives are rejected with the available list
+        let err = objective_gate("staged", "widest").unwrap_err();
+        assert!(err.contains("widest") && err.contains("bottleneck"), "{err}");
+        // johnson is shortest-only
+        assert_eq!(objective_gate("johnson", "shortest").unwrap(), Objective::Shortest);
+        let err = objective_gate("johnson", "bottleneck").unwrap_err();
+        assert!(err.contains("johnson") && err.contains("shortest"), "{err}");
+        // updates are shortest-only regardless of variant
+        assert!(objective_gate_update("shortest").is_ok());
+        let err = objective_gate_update("reachability").unwrap_err();
+        assert!(err.contains("shortest"), "{err}");
+        assert!(objective_gate_update("widest").is_err());
+    }
+
+    #[test]
+    fn non_shortest_objectives_never_route_to_device_or_johnson() {
+        let c = cfg();
+        for o in [Objective::Bottleneck, Objective::Minimax, Objective::Reachability] {
+            // small stays CPU, device-size downgrades to CPU
+            assert_eq!(
+                route_objective(&c, "staged", 16, false, o).unwrap(),
+                Route::Cpu { tile: 32 }
+            );
+            assert_eq!(
+                route_objective(&c, "staged", 300, false, o).unwrap(),
+                Route::Cpu { tile: 32 }
+            );
+            // oversize still goes superblock (CPU-side tiles)
+            assert_eq!(
+                route_objective(&c, "staged", 1024, false, o).unwrap(),
+                Route::SuperBlock { bucket: 256 }
+            );
+            assert!(route_objective(&c, "johnson", 64, false, o).is_err());
+        }
+        // shortest is exactly route()
+        for (variant, n) in [("staged", 16), ("staged", 300), ("johnson", 64), ("cpu", 9)] {
+            assert_eq!(
+                route_objective(&c, variant, n, false, Objective::Shortest).unwrap(),
+                route(&c, variant, n, false).unwrap()
+            );
+        }
     }
 
     #[test]

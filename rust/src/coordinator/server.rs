@@ -22,9 +22,10 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::router;
 use super::types::{
     decode_request, decode_update_request, encode_error, encode_error_coded, encode_response,
-    CODE_UPDATE_BASE_MISSING,
+    CODE_OBJECTIVE_UNSUPPORTED, CODE_UPDATE_BASE_MISSING,
 };
 use super::{Coordinator, UpdateOutcome};
 use crate::util::json::Json;
@@ -140,12 +141,21 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
             .to_string()
         }
         "solve" => match decode_request(line) {
-            Ok(req) => match coord.solve(&req) {
-                Ok(resp) => encode_response(&resp),
-                Err(e) => {
+            // objective policy is pre-checked so the rejection is *typed*
+            // (wire code, not a free-text message): unknown objectives and
+            // johnson-with-non-shortest can be dispatched on by clients
+            Ok(req) => match router::objective_gate(&req.variant, &req.objective) {
+                Err(msg) => {
                     coord.metrics().record_error();
-                    encode_error(req.id, &format!("{e:#}"))
+                    encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
                 }
+                Ok(_) => match coord.solve(&req) {
+                    Ok(resp) => encode_response(&resp),
+                    Err(e) => {
+                        coord.metrics().record_error();
+                        encode_error(req.id, &format!("{e:#}"))
+                    }
+                },
             },
             Err(e) => {
                 coord.metrics().record_error();
@@ -153,6 +163,13 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
             }
         },
         "update" => match decode_update_request(line) {
+            // the dynamic tier chains (min, +) closures only — any other
+            // objective is a typed policy rejection, same code as solve
+            Ok(req) if router::objective_gate_update(&req.objective).is_err() => {
+                coord.metrics().record_error();
+                let msg = router::objective_gate_update(&req.objective).unwrap_err();
+                encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
+            }
             Ok(req) => match coord.update(&req) {
                 Ok(UpdateOutcome::Solved(resp)) => encode_response(&resp),
                 // the one *typed* error: the client retries as a full

@@ -21,6 +21,15 @@ const MAX_N: usize = 4096;
 /// the mutated graph) rather than report.
 pub const CODE_UPDATE_BASE_MISSING: &str = "update_base_missing";
 
+/// Wire error code for a request naming an objective the server either
+/// does not know or cannot serve on the requested tier (incremental
+/// updates and the johnson variant are shortest-only).
+pub const CODE_OBJECTIVE_UNSUPPORTED: &str = "objective_unsupported";
+
+/// The wire default objective: requests that omit the `"objective"` key
+/// (every pre-semiring client) mean shortest path.
+pub const DEFAULT_OBJECTIVE: &str = "shortest";
+
 /// A solve request.
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -35,6 +44,12 @@ pub struct Request {
     /// Also compute the successor matrix (wire key `"paths"`); the
     /// response then carries `succ` for path reconstruction.
     pub want_paths: bool,
+    /// Serving objective — the closed semiring the closure is taken over
+    /// (`"shortest"`, `"bottleneck"`, `"minimax"`, `"reachability"`).
+    /// Decoded as a raw string so the server can reject unknown values
+    /// with a typed error ([`CODE_OBJECTIVE_UNSUPPORTED`]); absent on the
+    /// wire means [`DEFAULT_OBJECTIVE`].
+    pub objective: String,
 }
 
 /// An incremental `"update"` request: an edge-delta batch against a cached
@@ -56,6 +71,11 @@ pub struct UpdateRequest {
     pub updates: Vec<EdgeUpdate>,
     /// Also return the successor matrix (wire key `"paths"`).
     pub want_paths: bool,
+    /// Serving objective.  The dynamic tier only chains shortest-path
+    /// closures, so anything but [`DEFAULT_OBJECTIVE`] is rejected with
+    /// [`CODE_OBJECTIVE_UNSUPPORTED`] — the field exists so that the
+    /// rejection is *typed* rather than a silent wrong answer.
+    pub objective: String,
 }
 
 /// Where a response was computed.
@@ -122,7 +142,7 @@ pub fn encode_request(req: &Request) -> String {
             }
         }
     }
-    Json::obj(vec![
+    let mut fields = vec![
         ("type", Json::str("solve")),
         ("id", Json::num(req.id as f64)),
         ("n", Json::num(n as f64)),
@@ -130,8 +150,13 @@ pub fn encode_request(req: &Request) -> String {
         ("no_cache", Json::Bool(req.no_cache)),
         ("paths", Json::Bool(req.want_paths)),
         ("edges", Json::Arr(edges)),
-    ])
-    .to_string()
+    ];
+    // the key only travels for non-default objectives, so shortest-path
+    // request lines are byte-identical to the pre-semiring wire format
+    if req.objective != DEFAULT_OBJECTIVE {
+        fields.push(("objective", Json::str(req.objective.clone())));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Decode a request line.
@@ -180,6 +205,11 @@ pub fn decode_request(line: &str) -> Result<Request> {
         variant,
         no_cache: v.get("no_cache").as_bool().unwrap_or(false),
         want_paths: v.get("paths").as_bool().unwrap_or(false),
+        objective: v
+            .get("objective")
+            .as_str()
+            .unwrap_or(DEFAULT_OBJECTIVE)
+            .to_string(),
     })
 }
 
@@ -205,7 +235,7 @@ pub fn encode_update_request(req: &UpdateRequest) -> String {
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("type", Json::str("update")),
         ("id", Json::num(req.id as f64)),
         ("n", Json::num(req.n as f64)),
@@ -213,8 +243,11 @@ pub fn encode_update_request(req: &UpdateRequest) -> String {
         ("base", Json::str(format!("{:016x}", req.base_fingerprint))),
         ("paths", Json::Bool(req.want_paths)),
         ("updates", Json::Arr(updates)),
-    ])
-    .to_string()
+    ];
+    if req.objective != DEFAULT_OBJECTIVE {
+        fields.push(("objective", Json::str(req.objective.clone())));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Decode an update request line.  Unlike solve's edge list (where
@@ -280,6 +313,11 @@ pub fn decode_update_request(line: &str) -> Result<UpdateRequest> {
         base_fingerprint,
         updates,
         want_paths: v.get("paths").as_bool().unwrap_or(false),
+        objective: v
+            .get("objective")
+            .as_str()
+            .unwrap_or(DEFAULT_OBJECTIVE)
+            .to_string(),
     })
 }
 
@@ -463,6 +501,7 @@ mod tests {
             variant: "staged".into(),
             no_cache: false,
             want_paths: false,
+            objective: DEFAULT_OBJECTIVE.into(),
         }
     }
 
@@ -485,6 +524,47 @@ mod tests {
         // absent key defaults to false (older clients)
         let legacy = decode_request(r#"{"type":"solve","n":3,"edges":[]}"#).unwrap();
         assert!(!legacy.want_paths);
+    }
+
+    #[test]
+    fn objective_roundtrips_and_defaults() {
+        // non-default objective travels and comes back
+        let mut req = sample_request();
+        req.objective = "bottleneck".into();
+        let line = encode_request(&req);
+        assert!(line.contains("\"objective\":\"bottleneck\""), "{line}");
+        assert_eq!(decode_request(&line).unwrap().objective, "bottleneck");
+        // default objective is omitted: shortest-path lines are
+        // byte-identical to the pre-semiring wire format
+        let line = encode_request(&sample_request());
+        assert!(!line.contains("objective"), "{line}");
+        // absent key decodes as shortest (older clients)
+        let legacy = decode_request(r#"{"type":"solve","n":3,"edges":[]}"#).unwrap();
+        assert_eq!(legacy.objective, DEFAULT_OBJECTIVE);
+        // unknown objectives survive decoding — the server's objective
+        // gate rejects them with a typed error, not the parser
+        let odd =
+            decode_request(r#"{"type":"solve","n":3,"edges":[],"objective":"widest"}"#).unwrap();
+        assert_eq!(odd.objective, "widest");
+    }
+
+    #[test]
+    fn update_objective_roundtrips_and_defaults() {
+        let mut req = UpdateRequest {
+            id: 1,
+            variant: "staged".into(),
+            n: 4,
+            base_fingerprint: 0xff,
+            updates: vec![EdgeUpdate { src: 0, dst: 1, weight: 2.0 }],
+            want_paths: false,
+            objective: DEFAULT_OBJECTIVE.into(),
+        };
+        let line = encode_update_request(&req);
+        assert!(!line.contains("objective"), "{line}");
+        assert_eq!(decode_update_request(&line).unwrap().objective, DEFAULT_OBJECTIVE);
+        req.objective = "reachability".into();
+        let line = encode_update_request(&req);
+        assert_eq!(decode_update_request(&line).unwrap().objective, "reachability");
     }
 
     #[test]
@@ -591,6 +671,7 @@ mod tests {
                 EdgeUpdate { src: 3, dst: 4, weight: INF }, // deletion → null
             ],
             want_paths: true,
+            objective: DEFAULT_OBJECTIVE.into(),
         };
         let line = encode_update_request(&req);
         // the fingerprint travels as a hex string — a JSON f64 would

@@ -14,7 +14,9 @@
 //!   and the super-blocked tier (`superblock`) that serves arbitrary-n
 //!   graphs by running the paper's three-phase schedule over the device
 //!   buckets — plus every substrate the reproduction needs: graph generation and I/O,
-//!   CPU reference solvers, the paper's doubly-tiled data layout (§4.3), and
+//!   CPU reference solvers generic over a closed semiring (`apsp::semiring`:
+//!   shortest / bottleneck / minimax / reachability objectives, selected per
+//!   request), the paper's doubly-tiled data layout (§4.3), and
 //!   an analytical Tesla C1060 performance model that regenerates the
 //!   paper's Table 1 / Figure 7 (DESIGN.md §Substitutions).
 //!

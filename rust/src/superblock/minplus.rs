@@ -1,4 +1,8 @@
-//! Tiled (min, +) update primitives for the super-block tier.
+//! Tiled semiring update primitives for the super-block tier.
+//!
+//! Every primitive is generic over the [`Semiring`] (`*_semiring`
+//! variants); the historical `(min, +)` names are the generics
+//! monomorphized at [`MinPlus`], bitwise-pinned as before.
 //!
 //! These are the paper's three phase bodies (Fig. 2) operating on
 //! *detached* `b × b` tile buffers instead of in-place windows of one big
@@ -17,10 +21,17 @@
 //! execution order (and hence pool parallelism) cannot either.
 
 use crate::apsp::kernel;
+use crate::apsp::semiring::{MinPlus, Semiring};
 
 /// Phase 1: full Floyd-Warshall on a detached `b × b` diagonal tile
-/// (sequential k; the order of `apsp::blocked::phase1_diag`).
+/// (sequential k; the order of `apsp::blocked::phase1_diag`) —
+/// [`phase1_semiring`] at `(min, +)`.
 pub fn phase1(diag: &mut [f32], b: usize) {
+    phase1_semiring::<MinPlus>(diag, b);
+}
+
+/// Generic phase 1 over any [`Semiring`].
+pub fn phase1_semiring<S: Semiring>(diag: &mut [f32], b: usize) {
     debug_assert_eq!(diag.len(), b * b);
     for k in 0..b {
         for i in 0..b {
@@ -28,19 +39,25 @@ pub fn phase1(diag: &mut [f32], b: usize) {
                 continue;
             }
             let wik = diag[i * b + k];
-            if !wik.is_finite() {
+            if S::is_zero(wik) {
                 continue;
             }
             let (out, row_k) = kernel::row_pair_mut(diag, b, i, k, 0, b);
-            kernel::relax_row(out, row_k, wik);
+            kernel::relax_row_semiring::<S>(out, row_k, wik);
         }
     }
 }
 
 /// Phase 2, row panel: tile `(k, bj)` relaxed against the final diagonal
-/// tile — `t[i][j] <- min(t[i][j], diag[i][k] + t[k][j])`, sequential k
-/// (one dependency is in the panel itself).
+/// tile — `t[i][j] <- t[i][j] ⊕ (diag[i][k] ⊗ t[k][j])`, sequential k
+/// (one dependency is in the panel itself) — [`panel_row_semiring`] at
+/// `(min, +)`.
 pub fn panel_row(tile: &mut [f32], diag: &[f32], b: usize) {
+    panel_row_semiring::<MinPlus>(tile, diag, b);
+}
+
+/// Generic phase-2 row panel over any [`Semiring`].
+pub fn panel_row_semiring<S: Semiring>(tile: &mut [f32], diag: &[f32], b: usize) {
     debug_assert_eq!(tile.len(), b * b);
     debug_assert_eq!(diag.len(), b * b);
     for k in 0..b {
@@ -49,46 +66,57 @@ pub fn panel_row(tile: &mut [f32], diag: &[f32], b: usize) {
                 continue;
             }
             let dik = diag[i * b + k];
-            if !dik.is_finite() {
+            if S::is_zero(dik) {
                 continue;
             }
             let (out, row_k) = kernel::row_pair_mut(tile, b, i, k, 0, b);
-            kernel::relax_row(out, row_k, dik);
+            kernel::relax_row_semiring::<S>(out, row_k, dik);
         }
     }
 }
 
 /// Phase 2, column panel: tile `(bi, k)` relaxed against the final
-/// diagonal tile — `t[i][j] <- min(t[i][j], t[i][k] + diag[k][j])`,
-/// sequential k.
+/// diagonal tile — `t[i][j] <- t[i][j] ⊕ (t[i][k] ⊗ diag[k][j])`,
+/// sequential k — [`panel_col_semiring`] at `(min, +)`.
 pub fn panel_col(tile: &mut [f32], diag: &[f32], b: usize) {
+    panel_col_semiring::<MinPlus>(tile, diag, b);
+}
+
+/// Generic phase-2 column panel over any [`Semiring`].
+pub fn panel_col_semiring<S: Semiring>(tile: &mut [f32], diag: &[f32], b: usize) {
     debug_assert_eq!(tile.len(), b * b);
     debug_assert_eq!(diag.len(), b * b);
     for k in 0..b {
         for i in 0..b {
             let wik = tile[i * b + k];
-            if !wik.is_finite() {
+            if S::is_zero(wik) {
                 continue;
             }
             let row_k = &diag[k * b..(k + 1) * b];
             let out = &mut tile[i * b..(i + 1) * b];
-            kernel::relax_row(out, row_k, wik);
+            kernel::relax_row_semiring::<S>(out, row_k, wik);
         }
     }
 }
 
-/// Phase 3, interior: `c <- min(c, col ⊗ row)` where `⊗` is the (min, +)
+/// Phase 3, interior: `c <- c ⊕ (col ⊗ row)` where `⊗` is the semiring
 /// tile product, `col` is the finalized column-panel tile `(bi, k)` and
 /// `row` the finalized row-panel tile `(k, bj)`.  Routed through the
 /// shared register-tiled microkernel; all three tiles are detached and
 /// contiguous, so the kernel's disjointness contract holds trivially.
+/// [`interior_semiring`] at `(min, +)`.
 pub fn interior(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
+    interior_semiring::<MinPlus>(c, col, row, b);
+}
+
+/// Generic phase-3 interior over any [`Semiring`].
+pub fn interior_semiring<S: Semiring>(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
     debug_assert_eq!(c.len(), b * b);
     debug_assert_eq!(col.len(), b * b);
     debug_assert_eq!(row.len(), b * b);
     // detached tiles are contiguous: repacking would be a pure copy
     debug_assert!(!kernel::should_pack(b, b));
-    kernel::minplus_panel(c, b, col, b, row, b, b, b, b);
+    kernel::panel::<S>(c, b, col, b, row, b, b, b, b);
 }
 
 // ------------------------------------------------- successor tracking --
@@ -102,8 +130,13 @@ pub fn interior(c: &mut [f32], col: &[f32], row: &[f32], b: usize) {
 // so copying them between detached tiles is position-independent.
 
 /// [`phase1`] with successor tracking: pivot column `(i, k)` is in the
-/// diagonal tile itself.
+/// diagonal tile itself.  [`phase1_succ_semiring`] at `(min, +)`.
 pub fn phase1_succ(diag: &mut [f32], dsucc: &mut [usize], b: usize) {
+    phase1_succ_semiring::<MinPlus>(diag, dsucc, b);
+}
+
+/// Generic successor-tracking phase 1.
+pub fn phase1_succ_semiring<S: Semiring>(diag: &mut [f32], dsucc: &mut [usize], b: usize) {
     debug_assert_eq!(diag.len(), b * b);
     debug_assert_eq!(dsucc.len(), b * b);
     for k in 0..b {
@@ -112,13 +145,13 @@ pub fn phase1_succ(diag: &mut [f32], dsucc: &mut [usize], b: usize) {
                 continue;
             }
             let wik = diag[i * b + k];
-            if !wik.is_finite() {
+            if S::is_zero(wik) {
                 continue;
             }
             let sik = dsucc[i * b + k];
             for j in 0..b {
-                let cand = wik + diag[k * b + j];
-                if cand < diag[i * b + j] {
+                let cand = S::extend(wik, diag[k * b + j]);
+                if S::improves(cand, diag[i * b + j]) {
                     diag[i * b + j] = cand;
                     dsucc[i * b + j] = sik;
                 }
@@ -129,7 +162,19 @@ pub fn phase1_succ(diag: &mut [f32], dsucc: &mut [usize], b: usize) {
 
 /// [`panel_row`] with successor tracking: the `(i, k)` dependency lives in
 /// the diagonal tile, so the successor source is `dsucc`.
+/// [`panel_row_succ_semiring`] at `(min, +)`.
 pub fn panel_row_succ(
+    tile: &mut [f32],
+    tsucc: &mut [usize],
+    diag: &[f32],
+    dsucc: &[usize],
+    b: usize,
+) {
+    panel_row_succ_semiring::<MinPlus>(tile, tsucc, diag, dsucc, b);
+}
+
+/// Generic successor-tracking phase-2 row panel.
+pub fn panel_row_succ_semiring<S: Semiring>(
     tile: &mut [f32],
     tsucc: &mut [usize],
     diag: &[f32],
@@ -146,13 +191,13 @@ pub fn panel_row_succ(
                 continue;
             }
             let dik = diag[i * b + k];
-            if !dik.is_finite() {
+            if S::is_zero(dik) {
                 continue;
             }
             let sik = dsucc[i * b + k];
             for j in 0..b {
-                let cand = dik + tile[k * b + j];
-                if cand < tile[i * b + j] {
+                let cand = S::extend(dik, tile[k * b + j]);
+                if S::improves(cand, tile[i * b + j]) {
                     tile[i * b + j] = cand;
                     tsucc[i * b + j] = sik;
                 }
@@ -163,20 +208,31 @@ pub fn panel_row_succ(
 
 /// [`panel_col`] with successor tracking: the `(i, k)` dependency lives in
 /// the panel itself, so no diagonal successors are needed.
+/// [`panel_col_succ_semiring`] at `(min, +)`.
 pub fn panel_col_succ(tile: &mut [f32], tsucc: &mut [usize], diag: &[f32], b: usize) {
+    panel_col_succ_semiring::<MinPlus>(tile, tsucc, diag, b);
+}
+
+/// Generic successor-tracking phase-2 column panel.
+pub fn panel_col_succ_semiring<S: Semiring>(
+    tile: &mut [f32],
+    tsucc: &mut [usize],
+    diag: &[f32],
+    b: usize,
+) {
     debug_assert_eq!(tile.len(), b * b);
     debug_assert_eq!(tsucc.len(), b * b);
     debug_assert_eq!(diag.len(), b * b);
     for k in 0..b {
         for i in 0..b {
             let wik = tile[i * b + k];
-            if !wik.is_finite() {
+            if S::is_zero(wik) {
                 continue;
             }
             let sik = tsucc[i * b + k];
             for j in 0..b {
-                let cand = wik + diag[k * b + j];
-                if cand < tile[i * b + j] {
+                let cand = S::extend(wik, diag[k * b + j]);
+                if S::improves(cand, tile[i * b + j]) {
                     tile[i * b + j] = cand;
                     tsucc[i * b + j] = sik;
                 }
@@ -189,7 +245,20 @@ pub fn panel_col_succ(tile: &mut [f32], tsucc: &mut [usize], diag: &[f32], b: us
 /// finalized column-panel tile, so the successor source is `colsucc`.
 /// Routed through the register-tiled succ microkernel (same accept
 /// sequence as the scalar loop — distances *and* successors bitwise).
+/// [`interior_succ_semiring`] at `(min, +)`.
 pub fn interior_succ(
+    c: &mut [f32],
+    csucc: &mut [usize],
+    col: &[f32],
+    colsucc: &[usize],
+    row: &[f32],
+    b: usize,
+) {
+    interior_succ_semiring::<MinPlus>(c, csucc, col, colsucc, row, b);
+}
+
+/// Generic successor-tracking phase-3 interior.
+pub fn interior_succ_semiring<S: Semiring>(
     c: &mut [f32],
     csucc: &mut [usize],
     col: &[f32],
@@ -202,7 +271,7 @@ pub fn interior_succ(
     debug_assert_eq!(col.len(), b * b);
     debug_assert_eq!(colsucc.len(), b * b);
     debug_assert_eq!(row.len(), b * b);
-    kernel::minplus_panel_succ(c, csucc, b, col, colsucc, b, row, b, b, b, b);
+    kernel::panel_succ::<S>(c, csucc, b, col, colsucc, b, row, b, b, b, b);
 }
 
 /// Parallel path for [`interior_succ`]: split the tile's rows (of both the
@@ -221,8 +290,22 @@ pub fn interior_succ_parallel(
     b: usize,
     threads: usize,
 ) {
+    interior_succ_parallel_semiring::<MinPlus>(c, csucc, col, colsucc, row, b, threads);
+}
+
+/// Generic banded successor-tracking interior.
+#[allow(clippy::too_many_arguments)]
+pub fn interior_succ_parallel_semiring<S: Semiring>(
+    c: &mut [f32],
+    csucc: &mut [usize],
+    col: &[f32],
+    colsucc: &[usize],
+    row: &[f32],
+    b: usize,
+    threads: usize,
+) {
     if threads <= 1 || b == 0 {
-        interior_succ(c, csucc, col, colsucc, row, b);
+        interior_succ_semiring::<S>(c, csucc, col, colsucc, row, b);
         return;
     }
     let rows_per_band = b.div_ceil(threads.min(b));
@@ -236,7 +319,7 @@ pub fn interior_succ_parallel(
                 let band_rows = band.len() / b;
                 let col_rows = &col[first_row * b..];
                 let colsucc_rows = &colsucc[first_row * b..];
-                kernel::minplus_panel_succ(
+                kernel::panel_succ::<S>(
                     band,
                     succ_band,
                     b,
@@ -260,8 +343,19 @@ pub fn interior_succ_parallel(
 /// degenerate super-grids (2 × 2 has a single interior tile per round, so
 /// tile-level pooling alone leaves workers idle).
 pub fn interior_parallel(c: &mut [f32], col: &[f32], row: &[f32], b: usize, threads: usize) {
+    interior_parallel_semiring::<MinPlus>(c, col, row, b, threads);
+}
+
+/// Generic banded interior.
+pub fn interior_parallel_semiring<S: Semiring>(
+    c: &mut [f32],
+    col: &[f32],
+    row: &[f32],
+    b: usize,
+    threads: usize,
+) {
     if threads <= 1 || b == 0 {
-        interior(c, col, row, b);
+        interior_semiring::<S>(c, col, row, b);
         return;
     }
     let rows_per_band = b.div_ceil(threads.min(b));
@@ -271,7 +365,7 @@ pub fn interior_parallel(c: &mut [f32], col: &[f32], row: &[f32], b: usize, thre
                 let first_row = band_idx * rows_per_band;
                 let band_rows = band.len() / b;
                 let col_rows = &col[first_row * b..];
-                kernel::minplus_panel(band, b, col_rows, b, row, b, band_rows, b, b);
+                kernel::panel::<S>(band, b, col_rows, b, row, b, band_rows, b, b);
             });
         }
     });

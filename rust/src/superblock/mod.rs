@@ -18,7 +18,8 @@
 //! ```
 //!
 //! * [`schedule`] — pure round plans with dependency edges
-//! * [`minplus`] — the tiled phase-2/3 (min, +) primitives
+//! * [`minplus`] — the tiled phase-2/3 primitives: named for the paper's
+//!   (min, +) algebra, generic over any [`crate::apsp::semiring::Semiring`]
 //! * [`pool`] — the dependency-driven worker pool
 //! * [`progress`] — per-round accounting for the serving metrics
 //!
@@ -45,6 +46,9 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::apsp::paths::{self, PathsResult, NO_PATH};
+use crate::apsp::semiring::{
+    padded_semiring, BoolOrAnd, MaxMin, MinMax, MinPlus, Objective, Semiring,
+};
 use crate::graph::DistMatrix;
 pub use progress::Report;
 use schedule::TileOp;
@@ -85,6 +89,21 @@ impl SuperBlockConfig {
 pub fn solve_with<F>(
     graph: &DistMatrix,
     config: &SuperBlockConfig,
+    diag_solver: F,
+) -> Result<(DistMatrix, Report)>
+where
+    F: FnMut(DistMatrix) -> Result<DistMatrix>,
+{
+    solve_with_semiring::<MinPlus, F>(graph, config, diag_solver)
+}
+
+/// Generic super-blocked solve over any [`Semiring`] — the driver behind
+/// [`solve_with`].  Expects the graph in the semiring's domain; padding
+/// uses the semiring's `ZERO`/`ONE` so padded vertices stay unreachable
+/// under any `⊕`/`⊗`.
+pub fn solve_with_semiring<S: Semiring, F>(
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
     mut diag_solver: F,
 ) -> Result<(DistMatrix, Report)>
 where
@@ -102,7 +121,7 @@ where
     let padded = if padded_n == n {
         graph.clone()
     } else {
-        graph.padded(padded_n)
+        padded_semiring::<S>(graph, padded_n)
     };
 
     let tiles = split_tiles(&padded, blocks, b);
@@ -137,20 +156,26 @@ where
         pool::run_tasks(&plan.dep_graph(), workers, |id| match plan.tasks[id].op {
             TileOp::PanelRow { bj } => {
                 let mut tile = tiles[k * blocks + bj].write().unwrap();
-                minplus::panel_row(&mut tile, &diag, b);
+                minplus::panel_row_semiring::<S>(&mut tile, &diag, b);
             }
             TileOp::PanelCol { bi } => {
                 let mut tile = tiles[bi * blocks + k].write().unwrap();
-                minplus::panel_col(&mut tile, &diag, b);
+                minplus::panel_col_semiring::<S>(&mut tile, &diag, b);
             }
             TileOp::Interior { bi, bj } => {
                 let col = tiles[bi * blocks + k].read().unwrap();
                 let row = tiles[k * blocks + bj].read().unwrap();
                 let mut tile = tiles[bi * blocks + bj].write().unwrap();
                 if intra_threads > 1 {
-                    minplus::interior_parallel(&mut tile, &col, &row, b, intra_threads);
+                    minplus::interior_parallel_semiring::<S>(
+                        &mut tile,
+                        &col,
+                        &row,
+                        b,
+                        intra_threads,
+                    );
                 } else {
-                    minplus::interior(&mut tile, &col, &row, b);
+                    minplus::interior_semiring::<S>(&mut tile, &col, &row, b);
                 }
             }
         });
@@ -178,12 +203,56 @@ where
 /// exactness oracle the tests and benches lean on.  Infallible: the CPU
 /// kernel cannot fail.
 pub fn solve_cpu(graph: &DistMatrix, config: &SuperBlockConfig) -> (DistMatrix, Report) {
-    solve_with(graph, config, |mut tile| {
+    solve_cpu_semiring::<MinPlus>(graph, config)
+}
+
+/// Generic CPU-diagonal super-blocked solve — [`solve_cpu`] for any
+/// [`Semiring`].  Same exactness contract against
+/// `apsp::blocked::solve_semiring::<S>(padded, bucket)`: the phase
+/// primitives perform identical `⊕`/`⊗` applications in identical order.
+pub fn solve_cpu_semiring<S: Semiring>(
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
+) -> (DistMatrix, Report) {
+    solve_with_semiring::<S, _>(graph, config, |mut tile| {
         let s = tile.n();
-        minplus::phase1(tile.as_mut_slice(), s);
+        minplus::phase1_semiring::<S>(tile.as_mut_slice(), s);
         Ok(tile)
     })
     .expect("CPU diagonal solver is infallible")
+}
+
+/// Super-blocked CPU solve dispatched by serving objective.  Expects the
+/// graph already in the objective's domain ([`Objective::prepare`]).  The
+/// coordinator's super-block arm uses this for non-shortest objectives —
+/// the AOT device artifacts are `(min, +)`-only, so other semirings never
+/// loop diagonal tiles through the device engine.
+pub fn solve_cpu_objective(
+    objective: Objective,
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
+) -> (DistMatrix, Report) {
+    match objective {
+        Objective::Shortest => solve_cpu_semiring::<MinPlus>(graph, config),
+        Objective::Bottleneck => solve_cpu_semiring::<MaxMin>(graph, config),
+        Objective::Minimax => solve_cpu_semiring::<MinMax>(graph, config),
+        Objective::Reachability => solve_cpu_semiring::<BoolOrAnd>(graph, config),
+    }
+}
+
+/// Super-blocked path mode dispatched by serving objective — the path-mode
+/// twin of [`solve_cpu_objective`].
+pub fn solve_paths_objective(
+    objective: Objective,
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
+) -> (PathsResult, Report) {
+    match objective {
+        Objective::Shortest => solve_paths_semiring::<MinPlus>(graph, config),
+        Objective::Bottleneck => solve_paths_semiring::<MaxMin>(graph, config),
+        Objective::Minimax => solve_paths_semiring::<MinMax>(graph, config),
+        Objective::Reachability => solve_paths_semiring::<BoolOrAnd>(graph, config),
+    }
 }
 
 /// One detached super-tile in path mode: distances plus the matching
@@ -209,6 +278,17 @@ struct PathTile {
 /// [`solve_cpu`] (and hence to `apsp::blocked::solve(padded, bucket)`),
 /// regardless of pool width.  Infallible: no pluggable solver is involved.
 pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResult, Report) {
+    solve_paths_semiring::<MinPlus>(graph, config)
+}
+
+/// Generic super-blocked path mode — [`solve_paths`] for any [`Semiring`].
+/// Distances stay exactly equal to [`solve_cpu_semiring`]; successors use
+/// the semiring's strict-accept `improves` predicate, so within this
+/// schedule they are pool-width-independent.
+pub fn solve_paths_semiring<S: Semiring>(
+    graph: &DistMatrix,
+    config: &SuperBlockConfig,
+) -> (PathsResult, Report) {
     let n = graph.n();
     let b = config.bucket;
     assert!(b > 0, "superblock bucket must be positive");
@@ -224,9 +304,9 @@ pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResul
     let padded = if padded_n == n {
         graph.clone()
     } else {
-        graph.padded(padded_n)
+        padded_semiring::<S>(graph, padded_n)
     };
-    let full_succ = paths::init_succ(&padded);
+    let full_succ = paths::init_succ_semiring::<S>(&padded);
 
     let tiles = split_path_tiles(&padded, &full_succ, blocks, b);
     let mut report = Report::new(n, padded_n, b, blocks, workers);
@@ -238,7 +318,7 @@ pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResul
         let (diag, dsucc) = {
             let mut guard = tiles[diag_idx].write().unwrap();
             let tile = &mut *guard;
-            minplus::phase1_succ(&mut tile.dist, &mut tile.succ, b);
+            minplus::phase1_succ_semiring::<S>(&mut tile.dist, &mut tile.succ, b);
             (tile.dist.clone(), tile.succ.clone())
         };
         let diag_seconds = t0.elapsed().as_secs_f64();
@@ -257,19 +337,25 @@ pub fn solve_paths(graph: &DistMatrix, config: &SuperBlockConfig) -> (PathsResul
             TileOp::PanelRow { bj } => {
                 let mut guard = tiles[k * blocks + bj].write().unwrap();
                 let tile = &mut *guard;
-                minplus::panel_row_succ(&mut tile.dist, &mut tile.succ, &diag, &dsucc, b);
+                minplus::panel_row_succ_semiring::<S>(
+                    &mut tile.dist,
+                    &mut tile.succ,
+                    &diag,
+                    &dsucc,
+                    b,
+                );
             }
             TileOp::PanelCol { bi } => {
                 let mut guard = tiles[bi * blocks + k].write().unwrap();
                 let tile = &mut *guard;
-                minplus::panel_col_succ(&mut tile.dist, &mut tile.succ, &diag, b);
+                minplus::panel_col_succ_semiring::<S>(&mut tile.dist, &mut tile.succ, &diag, b);
             }
             TileOp::Interior { bi, bj } => {
                 let col = tiles[bi * blocks + k].read().unwrap();
                 let row = tiles[k * blocks + bj].read().unwrap();
                 let mut guard = tiles[bi * blocks + bj].write().unwrap();
                 let tile = &mut *guard;
-                minplus::interior_succ_parallel(
+                minplus::interior_succ_parallel_semiring::<S>(
                     &mut tile.dist,
                     &mut tile.succ,
                     &col.dist,
@@ -546,6 +632,50 @@ mod tests {
         let (r, report) = solve_paths(&DistMatrix::unconnected(0), &cfg(32, 2));
         assert_eq!(r.n(), 0);
         assert_eq!(report.round_count(), 0);
+    }
+
+    #[test]
+    fn generic_semirings_match_blocked_exactly() {
+        // the exactness claim carries over verbatim to every semiring: the
+        // super-blocked primitives apply the same ⊕/⊗ in the same order as
+        // apsp::blocked, so outputs are equal (selection semirings never
+        // round, so `==` is the right comparison)
+        use crate::apsp::semiring::{blocked_solve, MaxMin, Objective};
+        for objective in [
+            Objective::Bottleneck,
+            Objective::Minimax,
+            Objective::Reachability,
+        ] {
+            let raw = generators::erdos_renyi(80, 0.3, 41);
+            let g = objective.prepare(&raw).expect("positive weights");
+            let oracle = blocked_solve(objective, &g, 16);
+            for workers in [1, 4] {
+                let (dist, _) = solve_cpu_objective(objective, &g, &cfg(16, workers));
+                assert_eq!(dist, oracle, "{objective:?} workers={workers}");
+            }
+        }
+        // non-multiple n exercises semiring-aware padding
+        let raw = generators::erdos_renyi(50, 0.4, 43);
+        let g = Objective::Bottleneck.prepare(&raw).unwrap();
+        let (dist, report) = solve_cpu_semiring::<MaxMin>(&g, &cfg(16, 4));
+        assert_eq!(report.padded, 64);
+        assert_eq!(dist, crate::apsp::blocked::solve_semiring::<MaxMin>(&g, 16));
+    }
+
+    #[test]
+    fn generic_paths_pool_width_independent_and_distance_exact() {
+        use crate::apsp::semiring::{MaxMin, Objective};
+        let raw = generators::erdos_renyi(64, 0.35, 47);
+        let g = Objective::Bottleneck.prepare(&raw).unwrap();
+        let (serial, _) = solve_paths_semiring::<MaxMin>(&g, &cfg(16, 1));
+        // distances exactly match the distance-only tier
+        let (dist_only, _) = solve_cpu_semiring::<MaxMin>(&g, &cfg(16, 1));
+        assert_eq!(serial.dist, dist_only);
+        // pool width cannot perturb even the successor matrix
+        for workers in [2, 4] {
+            let (par, _) = solve_paths_semiring::<MaxMin>(&g, &cfg(16, workers));
+            assert_eq!(par, serial, "workers={workers}");
+        }
     }
 
     #[test]

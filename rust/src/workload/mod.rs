@@ -35,6 +35,11 @@ pub struct TraceItem {
     /// base are meant to be applied cumulatively by the replayer, so a
     /// trace exercises the coordinator's delta chains.
     pub updates: Vec<EdgeUpdate>,
+    /// Wire `"objective"` the request is sent under (a semiring name:
+    /// `"shortest"`, `"bottleneck"`, `"minimax"`, `"reachability"`).
+    /// Copied verbatim from the config — never drawn from the PRNG, so the
+    /// pinned trace shapes are objective-independent.
+    pub objective: String,
 }
 
 impl TraceItem {
@@ -75,6 +80,10 @@ pub struct TraceConfig {
     pub update_fraction: f64,
     /// Edges per update batch.
     pub update_batch: usize,
+    /// Objective every item in the trace is requested under.  Stamped onto
+    /// items without consuming PRNG state, so changing it cannot perturb a
+    /// trace's (n, kind, seed, updates) shape.
+    pub objective: String,
 }
 
 impl Default for TraceConfig {
@@ -88,6 +97,7 @@ impl Default for TraceConfig {
             seed: 0xACE,
             update_fraction: 0.0,
             update_batch: 4,
+            objective: "shortest".into(),
         }
     }
 }
@@ -109,6 +119,7 @@ impl TraceConfig {
             seed,
             update_fraction: 0.0,
             update_batch: 4,
+            objective: "shortest".into(),
         }
     }
 
@@ -128,6 +139,31 @@ impl TraceConfig {
             seed,
             update_fraction: 0.8,
             update_batch: 4,
+            objective: "shortest".into(),
+        }
+    }
+
+    /// Bottleneck regime: widest-path traffic (capacity planning over the
+    /// same topologies the default trace uses).  Non-shortest objectives
+    /// are CPU/superblock-routed, so sizes stay modest; shape params other
+    /// than the objective match the default regime for like-with-like
+    /// latency comparisons.
+    pub fn bottleneck(seed: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            objective: "bottleneck".into(),
+            ..TraceConfig::default()
+        }
+    }
+
+    /// Reachability regime: transitive-closure traffic (connectivity
+    /// audits).  Edge weights are irrelevant under (or, and) — the solver
+    /// maps them to booleans — so any generator family works unchanged.
+    pub fn reachability(seed: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            objective: "reachability".into(),
+            ..TraceConfig::default()
         }
     }
 }
@@ -188,6 +224,7 @@ pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
                 kind: bkind,
                 seed: bseed,
                 updates,
+                objective: config.objective.clone(),
             });
             continue;
         }
@@ -221,6 +258,7 @@ pub fn generate(config: &TraceConfig) -> Vec<TraceItem> {
             kind,
             seed,
             updates: Vec::new(),
+            objective: config.objective.clone(),
         });
     }
     items
@@ -274,6 +312,26 @@ mod tests {
             vec![(60, 2, 2766), (60, 2, 10685), (48, 2, 18604), (100, 0, 26523)]
         );
         assert!(items.iter().all(|t| t.updates.is_empty()));
+        assert!(items.iter().all(|t| t.objective == "shortest"));
+    }
+
+    #[test]
+    fn objective_regimes_preserve_trace_shape() {
+        // the objective is stamped on, never drawn from the PRNG: a
+        // bottleneck/reachability trace over the same seed has the exact
+        // (at, n, kind, seed, updates) shape as the shortest one
+        let base = generate(&TraceConfig { seed: 0xACE, ..TraceConfig::default() });
+        for cfg in [TraceConfig::bottleneck(0xACE), TraceConfig::reachability(0xACE)] {
+            let want = cfg.objective.clone();
+            let items = generate(&cfg);
+            assert_eq!(items.len(), base.len());
+            for (x, y) in items.iter().zip(&base) {
+                assert_eq!(x.at, y.at);
+                assert_eq!((x.n, x.kind, x.seed), (y.n, y.kind, y.seed));
+                assert_eq!(x.updates, y.updates);
+                assert_eq!(x.objective, want);
+            }
+        }
     }
 
     #[test]

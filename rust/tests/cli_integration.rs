@@ -229,6 +229,132 @@ fn solve_update_applies_edge_deltas_incrementally() {
 }
 
 #[test]
+fn solve_objective_round_trips() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fw_cli_obj_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.edges");
+    let (ok, _, stderr) = run(&[
+        "gen", "--model", "er", "--n", "40", "--seed", "17",
+        "--out", graph_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let g = fw_stage::graph::io::load(&graph_path).unwrap();
+
+    // bottleneck: the served closure matches the in-process semiring
+    // oracle exactly (non-shortest objectives are CPU-routed at tile 32)
+    use fw_stage::apsp::semiring::{self, Objective};
+    let out_path = dir.join("bottleneck.dist");
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--output", out_path.to_str().unwrap(),
+        "--objective", "bottleneck",
+    ]);
+    assert!(ok, "{stderr}");
+    let served = fw_stage::graph::io::load(&out_path).unwrap();
+    let prepared = Objective::Bottleneck.prepare(&g).unwrap();
+    assert_eq!(served, semiring::blocked_solve(Objective::Bottleneck, &prepared, 32));
+
+    // reachability: the dumped closure is exactly boolean
+    let out_path = dir.join("reach.dist");
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--output", out_path.to_str().unwrap(),
+        "--objective", "reachability",
+    ]);
+    assert!(ok, "{stderr}");
+    let reach = fw_stage::graph::io::load(&out_path).unwrap();
+    assert!(reach.as_slice().iter().all(|&v| v == 0.0 || v == 1.0), "non-boolean closure");
+
+    // unknown objective is a clean typed rejection
+    let (ok, _, stderr) = run(&[
+        "solve",
+        "--input", graph_path.to_str().unwrap(),
+        "--objective", "widest",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("widest"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn solve_update_rejects_non_shortest_objective() {
+    // rejected at flag validation, before any artifact or file I/O
+    let (ok, _, stderr) = run(&[
+        "solve", "--input", "nonexistent.edges",
+        "--update", "0,1,2.0", "--objective", "bottleneck",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("shortest objective only"), "{stderr}");
+}
+
+#[test]
+fn client_objective_round_trips_over_tcp() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    use std::io::{BufRead, BufReader};
+    let dir = std::env::temp_dir().join(format!("fw_cli_obj_tcp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.edges");
+    let (ok, _, stderr) = run(&[
+        "gen", "--model", "er", "--n", "24", "--seed", "23",
+        "--out", graph_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+
+    let mut server = Command::new(binary())
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn serve");
+    let mut reader = BufReader::new(server.stderr.take().unwrap());
+    let mut addr = String::new();
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap_or(0) > 0 {
+        if let Some(rest) = line.strip_prefix("fw-stage serving on ") {
+            addr = rest.split_whitespace().next().unwrap_or("").to_string();
+            break;
+        }
+        line.clear();
+    }
+
+    let out_path = dir.join("bottleneck.dist");
+    let solve = run(&[
+        "client", "--addr", &addr,
+        "--input", graph_path.to_str().unwrap(),
+        "--output", out_path.to_str().unwrap(),
+        "--objective", "bottleneck",
+    ]);
+    let bad = run(&[
+        "client", "--addr", &addr,
+        "--input", graph_path.to_str().unwrap(),
+        "--objective", "widest",
+    ]);
+    let _ = server.kill();
+    let _ = server.wait();
+
+    assert!(!addr.is_empty(), "server never announced its address");
+    assert!(solve.0, "{}", solve.2);
+    let g = fw_stage::graph::io::load(&graph_path).unwrap();
+    let served = fw_stage::graph::io::load(&out_path).unwrap();
+    use fw_stage::apsp::semiring::{self, Objective};
+    let prepared = Objective::Bottleneck.prepare(&g).unwrap();
+    assert_eq!(served, semiring::blocked_solve(Objective::Bottleneck, &prepared, 32));
+    // unknown objective comes back as the server's typed error
+    assert!(!bad.0);
+    assert!(bad.2.contains("widest"), "{}", bad.2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn info_describes_artifacts() {
     if !artifacts_available() {
         eprintln!("SKIP: artifacts/ not built");

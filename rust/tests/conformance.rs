@@ -48,6 +48,17 @@
 //! concurrency property (no torn `(dist, succ)` pairs under interleaved
 //! puts), and batch-plan determinism (the cache-key contract).
 //!
+//! The **semiring conformance** section gates the generic refactor: the
+//! generic kernel monomorphized at `(min, +)` is pinned bitwise against a
+//! frozen copy of the pre-refactor specialized scalar loop (dist and succ,
+//! packed and ragged, tile sizes {8, 16, 32, 33}); the selection-only
+//! semirings — bottleneck `(max, min)`, minimax `(min, max)`,
+//! reachability `(or, and)` — are compared with exact `==` against naive
+//! generic FW and (for reachability) an independent BFS closure, since
+//! their ⊕/⊗ always *select* an operand and never round.  The typed
+//! `objective_unsupported` wire error and per-objective cache isolation
+//! are pinned here too.
+//!
 //! Every property here sizes its case count through
 //! `util::proptest::env_cases`, so the dedicated CI conformance job can
 //! run the same suites harder (`FW_PROPTEST_CASES=8`) without forking the
@@ -57,6 +68,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use fw_stage::apsp::incremental::{self, EdgeUpdate, UpdateConfig};
+use fw_stage::apsp::semiring::{self, BoolOrAnd, MaxMin, MinMax, MinPlus, Objective, Semiring};
 use fw_stage::apsp::{self, paths::PathsResult, paths::NO_PATH};
 use fw_stage::coordinator::batcher::{plan, BatchPolicy, Item};
 use fw_stage::coordinator::cache::{graph_fingerprint, ResultCache};
@@ -838,6 +850,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             variant: "staged".into(),
             no_cache: false,
             want_paths: true,
+            objective: "shortest".into(),
         }),
     );
     assert_eq!(Json::parse(&prime).unwrap().get("type").as_str(), Some("result"));
@@ -852,6 +865,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             base_fingerprint: graph_fingerprint(&g),
             updates: batch.clone(),
             want_paths: true,
+            objective: "shortest".into(),
         }),
     );
     let resp = types::decode_response(&reply).expect("update served");
@@ -874,6 +888,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             variant: "staged".into(),
             no_cache: false,
             want_paths: true,
+            objective: "shortest".into(),
         }),
     );
     let hit = types::decode_response(&hit).expect("cache hit");
@@ -892,6 +907,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             base_fingerprint: graph_fingerprint(&g2),
             updates: batch2.clone(),
             want_paths: false,
+            objective: "shortest".into(),
         }),
     );
     let resp2 = types::decode_response(&reply2).expect("chained update served");
@@ -914,6 +930,7 @@ fn update_base_missing_is_typed_and_client_falls_back() {
             base_fingerprint: 0xDEAD_BEEF,
             updates: vec![EdgeUpdate { src: 0, dst: 1, weight: 1.0 }],
             want_paths: false,
+            objective: "shortest".into(),
         }),
     );
     let v = Json::parse(&reply).unwrap();
@@ -952,6 +969,7 @@ fn chain_cap_rebaselines_through_a_full_solve() {
             variant: "staged".into(),
             no_cache: false,
             want_paths: true,
+            objective: "shortest".into(),
         })
         .expect("prime");
     let solve_update = |base: &DistMatrix, batch: &[EdgeUpdate]| {
@@ -963,6 +981,7 @@ fn chain_cap_rebaselines_through_a_full_solve() {
                 base_fingerprint: graph_fingerprint(base),
                 updates: batch.to_vec(),
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .expect("update")
         {
@@ -1034,6 +1053,7 @@ fn paths_through_coordinator_superblock_tier() {
             variant: "superblock".into(),
             no_cache: false,
             want_paths: true,
+            objective: "shortest".into(),
         })
         .expect("superblock paths solve");
     assert_eq!(resp.source, Source::SuperBlock);
@@ -1043,4 +1063,412 @@ fn paths_through_coordinator_superblock_tier() {
     // distances bitwise vs the CPU superblock tier at the same bucket
     let (oracle, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket: 64, workers: 0 });
     assert_eq!(r.dist, oracle);
+}
+
+// ------------------------------------------------ semiring conformance --
+
+/// The exact phase-3 inner loop the specialized `(min, +)` tiers shipped
+/// before the semiring refactor, frozen verbatim (finiteness guard,
+/// strict `<` conditional store, i-k-j order).  Deliberately NOT written
+/// via `Semiring` — it is the independent record of the pre-refactor
+/// arithmetic the generic kernel must reproduce bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn frozen_minplus_phase3(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    for r in 0..rows {
+        for k in 0..kk {
+            let a = col[r * col_stride + k];
+            if !a.is_finite() {
+                continue;
+            }
+            for c in 0..cols {
+                let cand = a + row[k * row_stride + c];
+                if cand < dst[r * dst_stride + c] {
+                    dst[r * dst_stride + c] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Successor-tracking twin of [`frozen_minplus_phase3`]: the strict accept
+/// copies the column-panel successor, exactly as the pre-refactor succ
+/// kernels did.
+#[allow(clippy::too_many_arguments)]
+fn frozen_minplus_phase3_succ(
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    for r in 0..rows {
+        for k in 0..kk {
+            let a = col[r * col_stride + k];
+            if !a.is_finite() {
+                continue;
+            }
+            for c in 0..cols {
+                let cand = a + row[k * row_stride + c];
+                if cand < dst[r * dst_stride + c] {
+                    dst[r * dst_stride + c] = cand;
+                    dsucc[r * dst_stride + c] = colsucc[r * col_stride + k];
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_generic_minplus_kernel_bitwise_equals_frozen_specialized() {
+    // THE refactor gate: `panel::<MinPlus>` / `panel_succ::<MinPlus>` (the
+    // code every tier now monomorphizes) against the frozen pre-refactor
+    // loop — square tiles {8, 16, 32, 33}, packed column panels, ragged
+    // remainders, dist AND succ, across inf densities
+    let cfg = Config { cases: env_cases(32), max_size: 4, ..Config::default() };
+    check("generic (min,+) vs frozen specialized", cfg, |rng, _size| {
+        let s = [8usize, 16, 32, 33][rng.range(0, 4)];
+        let density = [0.0, 0.4, 1.0][rng.range(0, 3)];
+        let stride = s + rng.range(0, 24);
+        let base = arb_kernel_panel(rng, s, stride, density);
+        let col = arb_kernel_panel(rng, s, stride, density);
+        let row = arb_kernel_panel(rng, s, stride, density);
+
+        let mut expect = base.clone();
+        frozen_minplus_phase3(&mut expect, stride, &col, stride, &row, stride, s, s, s);
+
+        let mut got = base.clone();
+        apsp::kernel::panel::<MinPlus>(&mut got, stride, &col, stride, &row, stride, s, s, s);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("generic panel != frozen (s={s}, density={density})"));
+        }
+
+        // packed column panel
+        let mut pack = apsp::kernel::PanelBuf::default();
+        pack.pack_dist(&col, stride, s, s);
+        let mut got = base.clone();
+        apsp::kernel::panel::<MinPlus>(&mut got, stride, pack.dist(), s, &row, stride, s, s, s);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("generic packed panel != frozen (s={s})"));
+        }
+
+        // succ twin: values AND successors must both match the frozen loop
+        let succ0: Vec<usize> = (0..s * stride).collect();
+        let colsucc: Vec<usize> = (0..s * stride).map(|v| v + 40_000).collect();
+        let (mut edist, mut esucc) = (base.clone(), succ0.clone());
+        frozen_minplus_phase3_succ(
+            &mut edist, &mut esucc, stride, &col, &colsucc, stride, &row, stride, s, s, s,
+        );
+        let (mut gdist, mut gsucc) = (base.clone(), succ0);
+        apsp::kernel::panel_succ::<MinPlus>(
+            &mut gdist, &mut gsucc, stride, &col, &colsucc, stride, &row, stride, s, s, s,
+        );
+        if gdist.iter().zip(&edist).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("generic succ panel dist != frozen (s={s})"));
+        }
+        if gsucc != esucc {
+            return Err(format!("generic succ panel successors != frozen (s={s})"));
+        }
+
+        // ragged remainder blocks
+        let rr = 1 + rng.range(0, 7);
+        let cc = 1 + rng.range(0, stride.min(11));
+        let kk = rng.range(0, stride.min(9));
+        let base = arb_kernel_panel(rng, rr, stride, density);
+        let col = arb_kernel_panel(rng, rr, stride, density);
+        let row = arb_kernel_panel(rng, kk.max(1), stride, density);
+        let mut expect = base.clone();
+        frozen_minplus_phase3(&mut expect, stride, &col, stride, &row, stride, rr, cc, kk);
+        let mut got = base.clone();
+        apsp::kernel::panel::<MinPlus>(&mut got, stride, &col, stride, &row, stride, rr, cc, kk);
+        if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err(format!("generic ragged != frozen ({rr}x{cc}x{kk})"));
+        }
+        Ok(())
+    });
+}
+
+/// Every tier solving a *selection-only* semiring must agree with naive
+/// generic FW with exact `==` — ⊕/⊗ return an operand, so no order of
+/// relaxation can perturb a bit (the module-doc argument).
+fn selection_tiers_agree<S: Semiring>(
+    rng: &mut Rng,
+    size: usize,
+    obj: Objective,
+) -> Result<(), String> {
+    let n = 3 + rng.range(0, 8 * size.max(1));
+    let g = generators::erdos_renyi_weighted(n, 0.25, 0.1, 10.0, rng.next_u64());
+    let prepared = obj.prepare(&g)?;
+    let oracle = apsp::naive::solve_semiring::<S>(&prepared);
+    let s = [8usize, 16, 33][rng.range(0, 3)];
+    let threads = 1 + rng.range(0, 3);
+    if apsp::blocked::solve_semiring::<S>(&prepared, s) != oracle {
+        return Err(format!("{}: blocked(s={s}) != naive (n={n})", S::NAME));
+    }
+    if apsp::parallel::solve_semiring::<S>(&prepared, s, threads) != oracle {
+        return Err(format!("{}: parallel(s={s}, t={threads}) != naive (n={n})", S::NAME));
+    }
+    let bucket = [8, 16][rng.range(0, 2)];
+    let (sb, _) =
+        superblock::solve_cpu_semiring::<S>(&prepared, &SuperBlockConfig { bucket, workers: 2 });
+    if sb != oracle {
+        return Err(format!("{}: superblock(b={bucket}) != naive (n={n})", S::NAME));
+    }
+    // the coordinator's dispatch entry points route to the same code
+    if semiring::blocked_solve(obj, &prepared, s) != oracle {
+        return Err(format!("{}: blocked_solve dispatcher != naive (n={n})", S::NAME));
+    }
+    if semiring::naive_solve(obj, &prepared) != oracle {
+        return Err(format!("{}: naive_solve dispatcher != naive (n={n})", S::NAME));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_selection_semirings_exact_across_tiers() {
+    let cfg = Config { cases: env_cases(18), max_size: 5, ..Config::default() };
+    check("selection semirings exact across tiers", cfg, |rng, size| {
+        selection_tiers_agree::<MaxMin>(rng, size, Objective::Bottleneck)?;
+        selection_tiers_agree::<MinMax>(rng, size, Objective::Minimax)?;
+        selection_tiers_agree::<BoolOrAnd>(rng, size, Objective::Reachability)
+    });
+}
+
+/// Independent reachability oracle: per-source DFS over the *raw* graph's
+/// finite-edge adjacency.
+fn dfs_closure(g: &DistMatrix) -> Vec<bool> {
+    let n = g.n();
+    let mut reach = vec![false; n * n];
+    for s in 0..n {
+        let mut stack = vec![s];
+        reach[s * n + s] = true;
+        while let Some(u) = stack.pop() {
+            for v in 0..n {
+                if v != u && g.get(u, v).is_finite() && !reach[s * n + v] {
+                    reach[s * n + v] = true;
+                    stack.push(v);
+                }
+            }
+        }
+    }
+    reach
+}
+
+#[test]
+fn prop_reachability_closure_matches_dfs() {
+    // (or, and) on the {0.0, 1.0} carrier vs graph search — a genuinely
+    // different algorithm; cells must be *exactly* 1.0 or 0.0, nothing in
+    // between ever leaks out of the f32 kernels
+    let cfg = Config { cases: env_cases(18), max_size: 5, ..Config::default() };
+    check("reachability vs DFS closure", cfg, |rng, size| {
+        let n = 3 + rng.range(0, 8 * size.max(1));
+        let g = arb_graph(rng, n);
+        let prepared = Objective::Reachability.prepare(&g)?;
+        let closure = semiring::blocked_solve(Objective::Reachability, &prepared, 16);
+        let want = dfs_closure(&g);
+        for i in 0..n {
+            for j in 0..n {
+                let v = closure.get(i, j);
+                if v != 0.0 && v != 1.0 {
+                    return Err(format!("non-boolean cell {v} at ({i},{j})"));
+                }
+                if (v == 1.0) != want[i * n + j] {
+                    return Err(format!("closure[{i}][{j}]={v}, DFS says {}", want[i * n + j]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Semantic path witness for a selection semiring: fold `S::extend` along
+/// the reconstructed walk from `S::ONE`; the fold must reproduce the
+/// reported value *bit for bit* (every op selects an operand, so there is
+/// no tolerance to hide behind).  Reachability of succ vs value must agree
+/// exactly.
+fn assert_semiring_walks_exact<S: Semiring>(
+    prepared: &DistMatrix,
+    r: &PathsResult,
+) -> Result<(), String> {
+    let n = prepared.n();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = r.dist.get(i, j);
+            match r.path(i, j) {
+                None => {
+                    if !S::is_zero(d) {
+                        return Err(format!("{}: value {d} but no path at ({i},{j})", S::NAME));
+                    }
+                }
+                Some(p) => {
+                    if S::is_zero(d) {
+                        return Err(format!("{}: path but ZERO value at ({i},{j})", S::NAME));
+                    }
+                    if p[0] != i || *p.last().unwrap() != j {
+                        return Err(format!("{}: bad endpoints {p:?} for ({i},{j})", S::NAME));
+                    }
+                    let mut acc = S::ONE;
+                    for hop in p.windows(2) {
+                        let w = prepared.get(hop[0], hop[1]);
+                        if S::is_zero(w) {
+                            return Err(format!(
+                                "{}: ({i},{j}) walks non-edge {}->{}",
+                                S::NAME,
+                                hop[0],
+                                hop[1]
+                            ));
+                        }
+                        acc = S::extend(acc, w);
+                    }
+                    if acc.to_bits() != d.to_bits() {
+                        return Err(format!(
+                            "{}: ({i},{j}) walk folds to {acc}, value {d}",
+                            S::NAME
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn selection_paths_witness<S: Semiring>(
+    rng: &mut Rng,
+    size: usize,
+    obj: Objective,
+) -> Result<(), String> {
+    let n = 3 + rng.range(0, 8 * size.max(1));
+    let g = generators::erdos_renyi_weighted(n, 0.3, 0.1, 10.0, rng.next_u64());
+    let prepared = obj.prepare(&g)?;
+    let s = [8, 16][rng.range(0, 2)];
+    let r = semiring::blocked_solve_paths(obj, &prepared, s);
+    if r.dist != apsp::blocked::solve_semiring::<S>(&prepared, s) {
+        return Err(format!("{}: paths dist != dist-only twin (n={n}, s={s})", S::NAME));
+    }
+    assert_semiring_walks_exact::<S>(&prepared, &r)
+}
+
+#[test]
+fn prop_selection_semiring_paths_reconstruct_exact_values() {
+    let cfg = Config { cases: env_cases(12), max_size: 4, ..Config::default() };
+    check("selection semiring path witnesses", cfg, |rng, size| {
+        selection_paths_witness::<MaxMin>(rng, size, Objective::Bottleneck)?;
+        selection_paths_witness::<MinMax>(rng, size, Objective::Minimax)?;
+        selection_paths_witness::<BoolOrAnd>(rng, size, Objective::Reachability)
+    });
+}
+
+// ------------------------------------ objective serving + typed errors --
+
+#[test]
+fn handle_line_objective_error_shapes() {
+    let coord = synthetic_coordinator();
+    // unknown objective: the typed code, id echoed, rejected pre-solve
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"solve","id":21,"n":4,"objective":"widest","edges":[[0,1,1.0]]}"#,
+    );
+    assert_error_shape(&reply, "widest");
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_OBJECTIVE_UNSUPPORTED));
+    assert_eq!(v.get("id").as_f64(), Some(21.0));
+
+    // johnson serves the shortest objective only
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"solve","id":22,"n":4,"variant":"johnson","objective":"bottleneck","edges":[[0,1,1.0]]}"#,
+    );
+    assert_error_shape(&reply, "johnson");
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_OBJECTIVE_UNSUPPORTED));
+
+    // the dynamic tier serves the shortest objective only
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"update","id":23,"n":8,"objective":"reachability","base":"00ff","updates":[[0,1,2.0]]}"#,
+    );
+    assert_error_shape(&reply, "shortest");
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_OBJECTIVE_UNSUPPORTED));
+    assert_eq!(v.get("id").as_f64(), Some(23.0));
+
+    // an explicit default objective is NOT an error (wire compatibility)
+    let reply = server::handle_line(
+        &coord,
+        r#"{"type":"solve","id":24,"n":3,"objective":"shortest","edges":[[0,1,2.0]]}"#,
+    );
+    assert_eq!(Json::parse(&reply).unwrap().get("type").as_str(), Some("result"));
+}
+
+#[test]
+fn objective_end_to_end_and_cache_isolation() {
+    // acceptance: all four objectives served client → server → router →
+    // cache, with per-objective cache keys — a closure cached under one
+    // objective is never returned for another
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn(coord.clone(), "127.0.0.1:0").expect("server");
+    let mut client =
+        coordinator::client::Client::connect(&srv.addr().to_string()).expect("connect");
+    let g = generators::erdos_renyi(24, 0.3, 909); // n ≤ cpu_threshold → CPU tier
+
+    let shortest = client.solve(&g, "staged").expect("shortest");
+    assert_ne!(shortest.source, Source::Cache);
+
+    // same graph, same fingerprint base, different objective: MUST miss
+    let bottleneck = client.solve_objective(&g, "staged", "bottleneck").expect("bottleneck");
+    assert_ne!(bottleneck.source, Source::Cache, "objective leaked across cache keys");
+    let prepared = Objective::Bottleneck.prepare(&g).expect("capacities valid");
+    assert_eq!(bottleneck.dist, semiring::blocked_solve(Objective::Bottleneck, &prepared, 32));
+    assert_ne!(bottleneck.dist, shortest.dist);
+
+    // repeats hit each objective's own entry, values intact
+    assert_eq!(client.solve(&g, "staged").unwrap().source, Source::Cache);
+    let again = client.solve_objective(&g, "staged", "bottleneck").unwrap();
+    assert_eq!(again.source, Source::Cache);
+    assert_eq!(again.dist, bottleneck.dist);
+
+    // minimax and reachability round-trip over the wire too
+    let minimax = client.solve_objective(&g, "staged", "minimax").expect("minimax");
+    assert_ne!(minimax.source, Source::Cache);
+    assert_eq!(minimax.dist, semiring::blocked_solve(Objective::Minimax, &g, 32));
+    let reach = client.solve_objective(&g, "staged", "reachability").expect("reachability");
+    assert_ne!(reach.source, Source::Cache);
+    assert!(
+        reach.dist.as_slice().iter().all(|&v| v == 0.0 || v == 1.0),
+        "reachability closure must stay boolean"
+    );
+
+    // paths under a non-shortest objective: cached (dist, succ) pair stays
+    // under its objective and reconstructs exact semiring values
+    let bpaths =
+        client.solve_paths_objective(&g, "staged", "bottleneck").expect("bottleneck paths");
+    let r = PathsResult::from_parts(
+        bpaths.dist.clone(),
+        bpaths.succ.clone().expect("successors present"),
+    );
+    assert_semiring_walks_exact::<MaxMin>(&prepared, &r).expect("bottleneck walks");
+    let spaths = client.solve_paths(&g, "staged").expect("shortest paths");
+    assert_eq!(spaths.dist, shortest.dist, "shortest paths request serves the (min,+) closure");
+    // the bottleneck closure has an inf diagonal (ONE = +inf), the shortest
+    // one a zero diagonal — served pairs can never be confused
+    assert_ne!(spaths.dist, bpaths.dist, "bottleneck pair leaked into a shortest request");
 }

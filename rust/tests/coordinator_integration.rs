@@ -213,6 +213,7 @@ fn oversized_graph_served_by_superblock_tier() {
                 variant: "staged".into(),
                 no_cache: true,
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .expect("oversized graphs are served by the superblock tier");
         assert_eq!(resp.source, coordinator::Source::SuperBlock);
@@ -278,6 +279,7 @@ fn invalid_superblock_bucket_override_is_clean_error() {
                     variant: "staged".into(),
                     no_cache: true,
                     want_paths: false,
+                    objective: "shortest".into(),
                 })
                 .unwrap_err();
             assert!(

@@ -248,6 +248,8 @@ fn prop_wire_request_roundtrip() {
             variant: ["staged", "blocked", "naive"][rng.range(0, 3)].to_string(),
             no_cache: rng.chance(0.5),
             want_paths: rng.chance(0.5),
+            objective: ["shortest", "bottleneck", "minimax", "reachability"][rng.range(0, 4)]
+                .to_string(),
         };
         let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
         if back.id != req.id || back.variant != req.variant || back.graph != req.graph {
@@ -255,6 +257,9 @@ fn prop_wire_request_roundtrip() {
         }
         if back.want_paths != req.want_paths {
             return Err("want_paths diverged".to_string());
+        }
+        if back.objective != req.objective {
+            return Err("objective diverged".to_string());
         }
         Ok(())
     });

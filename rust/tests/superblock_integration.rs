@@ -96,6 +96,7 @@ fn oversized_request_served_and_cached() {
             variant: "staged".into(),
             no_cache: false,
             want_paths: false,
+            objective: "shortest".into(),
         };
         let first = coord.solve(&req).expect("n=1024 must be served now");
         assert_eq!(first.source, Source::SuperBlock);
@@ -132,6 +133,7 @@ fn explicit_superblock_variant() {
                 variant: "superblock".into(),
                 no_cache: true,
                 want_paths: false,
+                objective: "shortest".into(),
             })
             .unwrap();
         assert_eq!(resp.source, Source::SuperBlock);
