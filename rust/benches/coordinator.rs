@@ -22,12 +22,20 @@ use fw_stage::workload::{self, TraceConfig};
 /// Super-block schedule with the CPU diagonal tier: single-thread schedule
 /// vs the dependency-streaming pool.  Needs no artifacts — the tile math is
 /// identical either way (asserted), only the wall clock moves.
+fn sb_cfg(bucket: usize, workers: usize) -> SuperBlockConfig {
+    SuperBlockConfig {
+        bucket,
+        workers,
+        profile: false,
+    }
+}
+
 fn superblock_schedule_section() {
     common::banner("superblock schedule — CPU diagonal tier, pool width sweep");
     let (n, bucket) = if common::fast_mode() { (512, 128) } else { (1024, 256) };
     let g = generators::scale_free(n, 2, 7);
     let t0 = Instant::now();
-    let (single, report) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket, workers: 1 });
+    let (single, report) = superblock::solve_cpu(&g, &sb_cfg(bucket, 1));
     let one = t0.elapsed().as_secs_f64();
     println!(
         "n={n} bucket={bucket} workers=1    {}   ({} rounds, {} tiles)",
@@ -39,7 +47,7 @@ fn superblock_schedule_section() {
         .map(|p| p.get())
         .unwrap_or(1);
     let t0 = Instant::now();
-    let (multi, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket, workers });
+    let (multi, _) = superblock::solve_cpu(&g, &sb_cfg(bucket, workers));
     let many = t0.elapsed().as_secs_f64();
     assert_eq!(single, multi, "pool width changed the closure");
     println!(
@@ -86,6 +94,7 @@ fn main() {
                     no_cache: true,
                     want_paths: false,
                     objective: "shortest".into(),
+                    trace: false,
                 })
                 .expect("solve"),
         );
@@ -127,6 +136,7 @@ fn main() {
                     no_cache: false,
                     want_paths: false,
                     objective: "shortest".into(),
+                    trace: false,
                 })
                 .expect("hit"),
         );
@@ -150,6 +160,7 @@ fn main() {
             no_cache: false,
             want_paths: true, // successor-carrying base: increases stay incremental
             objective: "shortest".into(),
+            trace: false,
         })
         .expect("prime update base");
     let mut delta = Vec::new();
@@ -192,6 +203,7 @@ fn main() {
                     no_cache: true,
                     want_paths: false,
                     objective: "shortest".into(),
+                    trace: false,
                 })
                 .expect("solve"),
         );
@@ -227,6 +239,7 @@ fn main() {
                     no_cache: false,
                     want_paths: true,
                     objective: "shortest".into(),
+                    trace: false,
                 })
                 .expect("trace solve");
             continue;
@@ -286,6 +299,7 @@ fn main() {
                 no_cache: true,
                 want_paths: false,
                 objective: "shortest".into(),
+                trace: false,
             })
             .expect("sequential");
     }
@@ -336,6 +350,7 @@ fn main() {
             no_cache: true,
             want_paths: false,
             objective: "shortest".into(),
+            trace: false,
         })
         .expect("superblock solve");
     let sb_seconds = t0.elapsed().as_secs_f64();

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         no_cache: true,
         want_paths: false,
         objective: "shortest".into(),
+        trace: false,
     })?;
     let device_s = t0.elapsed().as_secs_f64();
     let tasks = (resp.bucket as f64).powi(3);

@@ -209,6 +209,66 @@ fn main() -> anyhow::Result<()> {
         obj_lat.len(),
         obj_lat.percentile(50.0) * 1e3,
     );
+
+    // ---- observability regime: traces, histograms, exposition ----
+    // a traced solve round-trips the request's span tree on the result line
+    let g = fw_stage::graph::generators::erdos_renyi(48, 0.3, 0xB0B);
+    let (resp, span_tree) = client.solve_traced(&g, "staged")?;
+    anyhow::ensure!(resp.dist.n() == g.n());
+    anyhow::ensure!(span_tree.get("name").as_str() == Some("request"));
+    let child_spans = span_tree.get("spans").as_arr().map(<[_]>::len).unwrap_or(0);
+    anyhow::ensure!(child_spans > 0, "trace echo has no child spans");
+    println!(
+        "traced solve: {child_spans} child spans, root {:.2}ms",
+        span_tree.get("seconds").as_f64().unwrap_or(0.0) * 1e3
+    );
+    // the journal serves the same trees back over the wire, newest first
+    let journal = client.trace(4, None, None)?;
+    anyhow::ensure!(journal.get("type").as_str() == Some("trace"));
+    anyhow::ensure!(journal.get("count").as_usize().unwrap_or(0) >= 1);
+    let newest = &journal.get("traces").as_arr().unwrap()[0];
+    anyhow::ensure!(newest.get("root").get("name").as_str() == Some("request"));
+    // FW_TRACE_JSON=<path> dumps a deeper journal listing to disk (CI
+    // uploads it next to the perf trajectory), mirroring FW_BENCH_JSON
+    if let Ok(path) = std::env::var("FW_TRACE_JSON") {
+        if !path.is_empty() {
+            std::fs::write(&path, client.trace(64, None, None)?.to_string())?;
+            println!("trace journal written to {path}");
+        }
+    }
+    // stats break latency out per (source, objective) and errors per code
+    let snapshot = coord.metrics().snapshot();
+    let hist_keys = snapshot
+        .get("latency_hist")
+        .as_obj()
+        .map(|m| m.keys().cloned().collect::<Vec<_>>())
+        .unwrap_or_default();
+    anyhow::ensure!(!hist_keys.is_empty(), "stats carry no latency histograms");
+    anyhow::ensure!(snapshot.get("errors_by_code").as_obj().is_some());
+    println!("latency histograms: {hist_keys:?}");
+    // the Prometheus text exposition round-trips through its own parser
+    let text = client.exposition()?;
+    let series = fw_stage::obs::hist::parse_exposition(&text).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        series.keys().any(|k| k.starts_with("fw_request_seconds")),
+        "exposition is missing the request-latency histogram"
+    );
+    // feed the live serving histograms to the perf-trajectory sink: the
+    // same BENCH_<name>.json machinery `cargo bench` uses, so CI keeps a
+    // row of real end-to-end latency distributions per run
+    let mut sink = fw_stage::perf::BenchSink::from_env("serve_live");
+    sink.set_meta("mode", fw_stage::util::json::Json::str("serve_demo"));
+    sink.set_meta(
+        "requests",
+        fw_stage::util::json::Json::num(trace.len() as f64),
+    );
+    for (key, h) in &series {
+        sink.record_json(h.to_bench_json(key));
+    }
+    if let Some(path) = sink.finish()? {
+        println!("live histogram rows appended to {}", path.display());
+    }
+    println!("observability: trace echo + journal + exposition round-trip verified");
     println!("serve_demo OK");
     Ok(())
 }

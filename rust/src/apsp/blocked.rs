@@ -35,10 +35,37 @@
 //! pivot order, so the naive solver is called directly — same bits, none
 //! of the padded arithmetic.
 
+use std::time::Instant;
+
 use super::kernel::{self, PanelBuf};
 use super::paths::{self, PathsResult};
-use super::semiring::{padded_semiring, MinPlus, Semiring};
+use super::semiring::{padded_semiring, BoolOrAnd, MaxMin, MinMax, MinPlus, Objective, Semiring};
 use crate::graph::DistMatrix;
+
+/// Per-phase wall-clock split of one blocked (or stage-parallel) solve.
+///
+/// Produced by the profiled solver twins ([`solve_profiled`],
+/// [`super::parallel::solve_profiled`]): timing reads happen *between*
+/// phases, never inside a relaxation loop, so a profiled solve is
+/// bitwise-identical to its unprofiled twin (the tests pin this).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Seconds in phase 1 (diagonal-tile FW) across all stages.
+    pub phase1_seconds: f64,
+    /// Seconds in phase 2 (row + column panels) across all stages.
+    pub phase2_seconds: f64,
+    /// Seconds in phase 3 (doubly-dependent tiles, packing included)
+    /// across all stages.
+    pub phase3_seconds: f64,
+    /// Stages (pivot-tile rounds) accounted.
+    pub rounds: usize,
+}
+
+impl PhaseProfile {
+    pub fn total_seconds(&self) -> f64 {
+        self.phase1_seconds + self.phase2_seconds + self.phase3_seconds
+    }
+}
 
 /// Blocked FW with tile size `s`.  `n % s != 0` pads up and truncates
 /// (see module docs); `s == 0` degrades to the naive solver.
@@ -123,6 +150,104 @@ pub fn solve_in_place_semiring<S: Semiring>(w: &mut DistMatrix, s: usize) {
                 }
             }
         }
+    }
+}
+
+/// [`solve`] with a per-phase timing split — bitwise-identical output
+/// (`Instant` reads happen only between phases; no float op moves).
+pub fn solve_profiled(w: &DistMatrix, s: usize) -> (DistMatrix, PhaseProfile) {
+    solve_profiled_semiring::<MinPlus>(w, s)
+}
+
+/// Profiled blocked solve dispatched by serving objective (expects the
+/// graph in the objective's domain) — the traced coordinator's CPU arm.
+pub fn solve_profiled_objective(
+    objective: Objective,
+    w: &DistMatrix,
+    s: usize,
+) -> (DistMatrix, PhaseProfile) {
+    match objective {
+        Objective::Shortest => solve_profiled_semiring::<MinPlus>(w, s),
+        Objective::Bottleneck => solve_profiled_semiring::<MaxMin>(w, s),
+        Objective::Minimax => solve_profiled_semiring::<MinMax>(w, s),
+        Objective::Reachability => solve_profiled_semiring::<BoolOrAnd>(w, s),
+    }
+}
+
+/// Generic profiled blocked solve — [`solve_profiled`] for any
+/// [`Semiring`].
+pub fn solve_profiled_semiring<S: Semiring>(
+    w: &DistMatrix,
+    s: usize,
+) -> (DistMatrix, PhaseProfile) {
+    let mut out = w.clone();
+    let mut prof = PhaseProfile::default();
+    solve_in_place_profiled_semiring::<S>(&mut out, s, &mut prof);
+    (out, prof)
+}
+
+/// The profiled twin of [`solve_in_place_semiring`]: identical dispatch
+/// (naive shortcut, pad/truncate recursion) and identical stage loop, with
+/// `Instant` reads between the three phase sections.
+fn solve_in_place_profiled_semiring<S: Semiring>(
+    w: &mut DistMatrix,
+    s: usize,
+    prof: &mut PhaseProfile,
+) {
+    let n = w.n();
+    if n == 0 {
+        return;
+    }
+    if s == 0 || (n % s != 0 && n < s) {
+        // the naive shortcut *is* pure phase-1 pivot order — account it
+        // there so the split still sums to the whole solve
+        let t0 = Instant::now();
+        super::naive::solve_in_place_semiring::<S>(w);
+        prof.phase1_seconds += t0.elapsed().as_secs_f64();
+        prof.rounds += 1;
+        return;
+    }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        let mut padded = padded_semiring::<S>(w, padded_n);
+        solve_in_place_profiled_semiring::<S>(&mut padded, s, prof);
+        *w = padded.truncated(n);
+        return;
+    }
+    let nb = n / s;
+    let mut pack = PanelBuf::default();
+    for b in 0..nb {
+        let ks = b * s;
+        let t0 = Instant::now();
+        phase1_diag_semiring::<S>(w, ks, s);
+        let t1 = Instant::now();
+        for jb in 0..nb {
+            if jb != b {
+                phase2_row_tile_semiring::<S>(w, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                phase2_col_tile_semiring::<S>(w, ks, ib * s, s);
+            }
+        }
+        let t2 = Instant::now();
+        for ib in 0..nb {
+            if ib == b {
+                continue;
+            }
+            let is = ib * s;
+            pack.pack_dist(&w.as_slice()[is * n + ks..], n, s, s);
+            for jb in 0..nb {
+                if jb != b {
+                    phase3_tile::<S>(w, &pack, ks, is, jb * s, s);
+                }
+            }
+        }
+        prof.phase1_seconds += (t1 - t0).as_secs_f64();
+        prof.phase2_seconds += (t2 - t1).as_secs_f64();
+        prof.phase3_seconds += t2.elapsed().as_secs_f64();
+        prof.rounds += 1;
     }
 }
 
@@ -674,6 +799,42 @@ mod tests {
         check::<MaxMin>(Objective::Bottleneck);
         check::<MinMax>(Objective::Minimax);
         check::<BoolOrAnd>(Objective::Reachability);
+    }
+
+    #[test]
+    fn profiled_solve_is_bitwise_identical() {
+        // the observability contract: the profiled twin runs the same
+        // schedule with timing reads between phases only
+        let g = generators::erdos_renyi(96, 0.3, 53);
+        for s in [16, 32] {
+            let (dist, prof) = solve_profiled(&g, s);
+            assert_eq!(dist, solve(&g, s), "s={s}");
+            assert_eq!(prof.rounds, 96 / s);
+            assert!(prof.phase1_seconds >= 0.0);
+            assert!(prof.total_seconds() > 0.0);
+        }
+        // ragged n takes the pad/truncate recursion; n < s the naive
+        // shortcut (accounted as phase 1); both stay bitwise
+        let ragged = generators::erdos_renyi(50, 0.4, 59);
+        let (dist, prof) = solve_profiled(&ragged, 32);
+        assert_eq!(dist, solve(&ragged, 32));
+        assert_eq!(prof.rounds, 2);
+        let tiny = generators::erdos_renyi(7, 0.8, 61);
+        let (dist, prof) = solve_profiled(&tiny, 32);
+        assert_eq!(dist, solve(&tiny, 32));
+        assert_eq!(prof.rounds, 1);
+        assert_eq!(prof.phase2_seconds, 0.0);
+        // and for every semiring instance
+        for objective in [
+            Objective::Bottleneck,
+            Objective::Minimax,
+            Objective::Reachability,
+        ] {
+            let g = prepared(objective, 48, 43);
+            let (dist, _) = solve_profiled_objective(objective, &g, 16);
+            use crate::apsp::semiring::blocked_solve;
+            assert_eq!(dist, blocked_solve(objective, &g, 16), "{objective:?}");
+        }
     }
 
     #[test]

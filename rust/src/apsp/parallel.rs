@@ -24,6 +24,9 @@
 //! `(min, +)` entry points are the generics monomorphized at
 //! [`MinPlus`](crate::apsp::semiring::MinPlus), bitwise-pinned as before.
 
+use std::time::Instant;
+
+use super::blocked::PhaseProfile;
 use super::kernel::{self, PanelBuf};
 use super::paths::{self, PathsResult};
 use super::semiring::{padded_semiring, MinPlus, Semiring};
@@ -32,6 +35,65 @@ use crate::graph::DistMatrix;
 /// Blocked FW with tile size `s` and phase-3 parallelism of `threads`.
 pub fn solve(w: &DistMatrix, s: usize, threads: usize) -> DistMatrix {
     solve_semiring::<MinPlus>(w, s, threads)
+}
+
+/// [`solve`] with a per-phase timing split — bitwise-identical output
+/// (`Instant` reads happen between the sequential phase sections and
+/// around the phase-3 fan-out, never inside a band).
+pub fn solve_profiled(w: &DistMatrix, s: usize, threads: usize) -> (DistMatrix, PhaseProfile) {
+    solve_profiled_semiring::<MinPlus>(w, s, threads)
+}
+
+/// Generic profiled banded solve — [`solve_profiled`] for any
+/// [`Semiring`].  Degenerate parameters fall back to the sequential
+/// profiled solver (same dispatch rule as [`solve_in_place_semiring`]).
+pub fn solve_profiled_semiring<S: Semiring>(
+    w: &DistMatrix,
+    s: usize,
+    threads: usize,
+) -> (DistMatrix, PhaseProfile) {
+    let n = w.n();
+    if n == 0 {
+        return (w.clone(), PhaseProfile::default());
+    }
+    if threads <= 1 || s == 0 || (n % s != 0 && n < s) {
+        return super::blocked::solve_profiled_semiring::<S>(w, s);
+    }
+    if n % s != 0 {
+        let padded_n = n.div_ceil(s) * s;
+        let (padded, prof) =
+            solve_profiled_semiring::<S>(&padded_semiring::<S>(w, padded_n), s, threads);
+        return (padded.truncated(n), prof);
+    }
+    let mut out = w.clone();
+    let mut prof = PhaseProfile::default();
+    let nb = n / s;
+    let mut row_panel = vec![0f32; s * n];
+    for b in 0..nb {
+        let ks = b * s;
+        let t0 = Instant::now();
+        super::blocked::phase1_diag_semiring::<S>(&mut out, ks, s);
+        let t1 = Instant::now();
+        for jb in 0..nb {
+            if jb != b {
+                super::blocked::phase2_row_tile_semiring::<S>(&mut out, ks, jb * s, s);
+            }
+        }
+        for ib in 0..nb {
+            if ib != b {
+                super::blocked::phase2_col_tile_semiring::<S>(&mut out, ks, ib * s, s);
+            }
+        }
+        let t2 = Instant::now();
+        // snapshot + fan-out, accounted as phase 3 like the sequential twin
+        row_panel.copy_from_slice(&out.as_slice()[ks * n..(ks + s) * n]);
+        phase3_parallel::<S>(&mut out, &row_panel, ks, s, threads);
+        prof.phase1_seconds += (t1 - t0).as_secs_f64();
+        prof.phase2_seconds += (t2 - t1).as_secs_f64();
+        prof.phase3_seconds += t2.elapsed().as_secs_f64();
+        prof.rounds += 1;
+    }
+    (out, prof)
 }
 
 /// Generic banded blocked FW — [`solve`] over any [`Semiring`].  Expects
@@ -384,6 +446,21 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn profiled_solve_is_bitwise_identical() {
+        let g = generators::erdos_renyi(96, 0.3, 71);
+        for threads in [1, 2, 4] {
+            let (dist, prof) = solve_profiled(&g, 32, threads);
+            assert_eq!(dist, solve(&g, 32, threads), "threads={threads}");
+            assert_eq!(prof.rounds, 3);
+            assert!(prof.total_seconds() > 0.0);
+        }
+        // ragged n pads bitwise like the plain solver
+        let ragged = generators::erdos_renyi(48, 0.4, 73);
+        let (dist, _) = solve_profiled(&ragged, 32, 4);
+        assert_eq!(dist, solve(&ragged, 32, 4));
     }
 
     #[test]

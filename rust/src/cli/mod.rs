@@ -8,10 +8,12 @@
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
 //!                    [--superblock-bucket N] [--superblock-workers W]
-//!                    [--update-max-chain K]
+//!                    [--update-max-chain K] [--log-level error|warn|info|debug]
+//!                    [--trace-journal K]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
 //!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
+//!                    [--trace]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
 //! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
@@ -34,6 +36,13 @@
 //! path), `minimax` (min, max — smallest maximum edge), or `reachability`
 //! (or, and — transitive closure).  The dynamic tier (`--update`) and the
 //! johnson variant are shortest-only.
+//!
+//! Observability: `serve --log-level` sets the structured-stderr-log
+//! threshold (default `warn`) and `--trace-journal K` sizes the in-memory
+//! trace ring (0 disables journaling).  `client --trace` asks the server
+//! to echo the request's span tree, printed to stderr alongside the
+//! summary line; `{"type":"trace"}` / `{"type":"exposition"}` wire
+//! requests serve the journal and Prometheus-style metrics text.
 
 pub mod args;
 
@@ -119,6 +128,10 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
     }
     config.superblock_workers = args.get_usize("superblock-workers", 0)?;
     config.update_max_chain = args.get_usize("update-max-chain", 8)? as u32;
+    config.obs.journal_capacity = args.get_usize(
+        "trace-journal",
+        crate::obs::ObsConfig::default().journal_capacity,
+    )?;
     Coordinator::start(config)
 }
 
@@ -173,6 +186,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
+    let _ = args.get("trace-journal");
     args.reject_unknown()?;
     if update_spec.is_some() && objective != "shortest" {
         bail!("--update serves the shortest objective only (got --objective {objective})");
@@ -198,6 +212,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
                 no_cache: false,
                 want_paths: true, // successor-carrying base keeps increases incremental
                 objective: "shortest".into(),
+                trace: false,
             })?;
             Some((updates, mutated))
         }
@@ -212,6 +227,7 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
                 no_cache: false,
                 want_paths,
                 objective: objective.clone(),
+                trace: false,
             })?;
             (resp, graph.clone())
         }
@@ -301,6 +317,7 @@ fn print_path(
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
     let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let log_level = args.get_or("log-level", "warn").to_string();
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
@@ -308,7 +325,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
+    let _ = args.get("trace-journal");
     args.reject_unknown()?;
+    let level = crate::obs::log::Level::parse(&log_level)
+        .with_context(|| format!("--log-level {log_level:?} (error, warn, info, debug)"))?;
+    crate::obs::log::set_level(level);
 
     let coord = Arc::new(start_coordinator(&args)?);
     let summary = coord.manifest_summary().clone();
@@ -326,10 +347,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_client(rest: &[String]) -> Result<()> {
-    let args = Args::parse(rest, &["stats", "paths"])?;
+    let args = Args::parse(rest, &["stats", "paths", "trace"])?;
     let addr = args.get("addr").context("--addr HOST:PORT required")?;
     let want_stats = args.get_bool("stats");
     let want_paths = args.get_bool("paths");
+    let want_trace = args.get_bool("trace");
     let src = args.get_usize("src", 0)?;
     let dst = args.get_usize("dst", 0)?;
     let input = args.get("input").map(str::to_string);
@@ -341,6 +363,9 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     if update_spec.is_some() && objective != "shortest" {
         bail!("--update serves the shortest objective only (got --objective {objective})");
     }
+    if want_trace && (want_paths || update_spec.is_some() || objective != "shortest") {
+        bail!("--trace traces a plain solve (no --paths/--update/--objective)");
+    }
 
     let mut client = coordinator::client::Client::connect(addr)?;
     if want_stats {
@@ -350,6 +375,13 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     let input = input.context("--input <graph file> required (or --stats)")?;
     let graph = io::load(Path::new(&input))?;
     let (resp, effective_graph) = match &update_spec {
+        None if want_trace => {
+            // traced solve: the result line carries the request's span
+            // tree, echoed here for the operator
+            let (resp, trace) = client.solve_traced(&graph, &variant)?;
+            eprintln!("trace: {trace}");
+            (resp, graph.clone())
+        }
         None => {
             let resp = if want_paths {
                 client.solve_paths_objective(&graph, &variant, &objective)?
@@ -475,6 +507,7 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-bucket");
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
+    let _ = args.get("trace-journal");
     args.reject_unknown()?;
 
     let coord = start_coordinator(&args)?;
@@ -493,6 +526,7 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
                 no_cache: true,
                 want_paths: false,
                 objective: "shortest".into(),
+                trace: false,
             })
             .context("bench solve")?;
         samples.push(t0.elapsed().as_secs_f64());

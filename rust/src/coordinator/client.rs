@@ -110,6 +110,7 @@ impl Client {
             no_cache: false,
             want_paths,
             objective: objective.to_string(),
+            trace: false,
         };
         let reply = self.roundtrip(&encode_request(&req))?;
         let resp = decode_response(&reply)?;
@@ -117,6 +118,64 @@ impl Client {
             bail!("response id {} for request {id}", resp.id);
         }
         Ok(resp)
+    }
+
+    /// Solve with `"trace": true`: the result line carries the request's
+    /// span tree, returned here as raw JSON alongside the response
+    /// (`{"name":"request","seconds":…,"spans":[…]}`).
+    pub fn solve_traced(&mut self, graph: &DistMatrix, variant: &str) -> Result<(Response, Json)> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request {
+            id,
+            graph: graph.clone(),
+            variant: variant.to_string(),
+            no_cache: false,
+            want_paths: false,
+            objective: DEFAULT_OBJECTIVE.to_string(),
+            trace: true,
+        };
+        let reply = self.roundtrip(&encode_request(&req))?;
+        let v = Json::parse(&reply).context("traced reply is not valid JSON")?;
+        let trace = v.get("trace").clone();
+        let resp = decode_response(&reply)?;
+        if resp.id != id {
+            bail!("response id {} for request {id}", resp.id);
+        }
+        if trace.is_null() {
+            bail!("server response is missing the trace echo (tracing disabled server-side?)");
+        }
+        Ok((resp, trace))
+    }
+
+    /// Last `k` journaled request traces (newest first), optionally
+    /// filtered by tier source (`"cpu"`, `"superblock"`, …) and/or
+    /// objective name.
+    pub fn trace(
+        &mut self,
+        k: usize,
+        source: Option<&str>,
+        objective: Option<&str>,
+    ) -> Result<Json> {
+        let mut fields = vec![("type", Json::str("trace")), ("k", Json::num(k as f64))];
+        if let Some(s) = source {
+            fields.push(("source", Json::str(s)));
+        }
+        if let Some(o) = objective {
+            fields.push(("objective", Json::str(o)));
+        }
+        let reply = self.roundtrip(&Json::obj(fields).to_string())?;
+        Ok(Json::parse(&reply)?)
+    }
+
+    /// Prometheus-style metrics text (histograms + counters).
+    pub fn exposition(&mut self) -> Result<String> {
+        let reply = self.roundtrip(r#"{"type":"exposition"}"#)?;
+        let v = Json::parse(&reply)?;
+        v.get("text")
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("exposition reply missing text: {reply}"))
     }
 
     /// Send an edge-delta batch against `base`'s cached closure.  The

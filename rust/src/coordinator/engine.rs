@@ -65,6 +65,9 @@ struct Job {
     variant: String,
     graph: DistMatrix,
     reply: mpsc::Sender<Result<EngineSolve>>,
+    /// When the caller enqueued the job — the batcher's queue-wait metric
+    /// is measured from here to the start of the device round.
+    submitted: Instant,
 }
 
 /// A successful engine solve.
@@ -112,6 +115,7 @@ impl Engine {
                 variant: variant.to_string(),
                 graph,
                 reply: reply_tx,
+                submitted: Instant::now(),
             })
             .map_err(|_| anyhow!("engine thread is gone"))?;
         reply_rx
@@ -255,15 +259,17 @@ fn run_round(pool: &ExecutorPool, policy: &BatchPolicy, jobs: Vec<Job>, metrics:
             // assemble block-diagonal input
             let t0 = Instant::now();
             let mut packed = DistMatrix::unconnected(batch.bucket);
+            let mut queue_wait_seconds = 0.0;
             for p in &batch.placements {
                 let job = jobs[p.ticket as usize].as_ref().expect("ticket reuse");
+                queue_wait_seconds += t0.duration_since(job.submitted).as_secs_f64();
                 copy_block(&mut packed, &job.graph, p.offset);
             }
             let solved = pool
                 .model(&variant, batch.bucket)
                 .and_then(|m| m.run(&packed));
             let device_seconds = t0.elapsed().as_secs_f64();
-            metrics.record_batch(batch.placements.len(), device_seconds);
+            metrics.record_batch(batch.placements.len(), device_seconds, queue_wait_seconds);
             match solved {
                 Ok(solved) => {
                     let batch_size = batch.placements.len();

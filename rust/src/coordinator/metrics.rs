@@ -1,8 +1,25 @@
 //! Serving metrics: counters + latency summaries, snapshotable as JSON.
+//!
+//! Two latency views coexist on purpose:
+//!
+//! * `latency` ([`crate::util::stats::Samples`]) — a bounded sliding
+//!   window of raw seconds, for exact recent percentiles;
+//! * `hists` ([`crate::obs::Histogram`]) — log-bucketed histograms keyed
+//!   by `(source, objective)`, O(1) memory forever, mergeable, and
+//!   renderable as Prometheus text ([`Metrics::exposition`]).  These never
+//!   forget: they describe the whole process lifetime, per tier.
+//!
+//! Errors are counted twice as well: the `errors` total (cheap dashboard
+//! number) and `errors_by_code` keyed by the typed wire code, so a spike
+//! can be attributed without grepping logs.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::apsp::semiring::Objective;
+use crate::obs::hist::render_series;
+use crate::obs::Histogram;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
 
@@ -16,6 +33,7 @@ pub struct Metrics {
 struct Inner {
     requests: u64,
     errors: u64,
+    errors_by_code: BTreeMap<String, u64>,
     device_solves: u64,
     cpu_solves: u64,
     cache_hits: u64,
@@ -28,7 +46,9 @@ struct Inner {
     batches: u64,
     batched_items: u64,
     latency: Samples,
+    hists: BTreeMap<(String, String), Histogram>,
     device_seconds: f64,
+    queue_wait_seconds: f64,
 }
 
 impl Metrics {
@@ -43,11 +63,16 @@ impl Metrics {
         self.inner.lock().unwrap().requests += 1;
     }
 
-    pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+    /// Count one error under its typed wire code (e.g.
+    /// [`super::types::CODE_OBJECTIVE_UNSUPPORTED`]); free-form failures
+    /// use `"error"`, the generic wire code.
+    pub fn record_error(&self, code: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.errors += 1;
+        *m.errors_by_code.entry(code.to_string()).or_insert(0) += 1;
     }
 
-    pub fn record_solve(&self, source: super::types::Source, seconds: f64) {
+    pub fn record_solve(&self, source: super::types::Source, objective: Objective, seconds: f64) {
         let mut m = self.inner.lock().unwrap();
         match source {
             super::types::Source::Device => m.device_solves += 1,
@@ -57,6 +82,8 @@ impl Metrics {
             super::types::Source::Incremental => m.incremental_solves += 1,
         }
         m.latency.push(seconds);
+        let key = (source.name().to_string(), objective.name().to_string());
+        m.hists.entry(key).or_default().observe(seconds);
     }
 
     /// Account one superblock solve's schedule (rounds run, tile updates).
@@ -77,11 +104,14 @@ impl Metrics {
         }
     }
 
-    pub fn record_batch(&self, items: usize, device_seconds: f64) {
+    /// Account one engine batch: item count, device-kernel seconds, and
+    /// the summed seconds its jobs sat queued before the round started.
+    pub fn record_batch(&self, items: usize, device_seconds: f64, queue_wait_seconds: f64) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batched_items += items as u64;
         m.device_seconds += device_seconds;
+        m.queue_wait_seconds += queue_wait_seconds;
     }
 
     /// Snapshot as a JSON object (served by the `stats` request).
@@ -91,16 +121,31 @@ impl Metrics {
     /// or a silent 0 — see `util::stats`), NaN has no JSON rendering, and
     /// `"-"` keeps "no data" distinguishable from "0 seconds" for humans
     /// and dashboards alike.
+    ///
+    /// `latency_hist` holds one object per `(source, objective)` pair seen
+    /// so far, keyed `"source/objective"`; `errors_by_code` breaks the
+    /// `errors` total out by typed wire code.
     pub fn snapshot(&self) -> Json {
         let mut m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
         let percentiles = m.latency.percentiles(&[50.0, 95.0, 99.0]);
         let empty = m.latency.is_empty();
         let latency = |v: f64| if empty { Json::str("-") } else { Json::num(v) };
+        let codes = m
+            .errors_by_code
+            .iter()
+            .map(|(code, &count)| (code.clone(), Json::num(count as f64)))
+            .collect();
+        let hists = m
+            .hists
+            .iter()
+            .map(|((source, objective), h)| (format!("{source}/{objective}"), h.to_json()))
+            .collect();
         Json::obj(vec![
             ("uptime_seconds", Json::num(uptime)),
             ("requests", Json::num(m.requests as f64)),
             ("errors", Json::num(m.errors as f64)),
+            ("errors_by_code", Json::Obj(codes)),
             ("device_solves", Json::num(m.device_solves as f64)),
             ("cpu_solves", Json::num(m.cpu_solves as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
@@ -113,12 +158,34 @@ impl Metrics {
             ("batches", Json::num(m.batches as f64)),
             ("batched_items", Json::num(m.batched_items as f64)),
             ("device_seconds", Json::num(m.device_seconds)),
+            ("queue_wait_seconds", Json::num(m.queue_wait_seconds)),
             ("latency_mean_s", latency(m.latency.mean())),
             ("latency_p50_s", latency(percentiles[0])),
             ("latency_p95_s", latency(percentiles[1])),
             ("latency_p99_s", latency(percentiles[2])),
             ("latency_max_s", latency(m.latency.max())),
+            ("latency_hist", Json::Obj(hists)),
         ])
+    }
+
+    /// Prometheus-style text exposition: `fw_requests_total` /
+    /// `fw_errors_total` counters plus one `fw_request_seconds` histogram
+    /// series per `(source, objective)` pair, labeled
+    /// `{objective="…",source="…"}`.  Round-trips through
+    /// [`crate::obs::hist::parse_exposition`].
+    pub fn exposition(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        out.push_str("# TYPE fw_requests_total counter\n");
+        out.push_str(&format!("fw_requests_total {}\n", m.requests));
+        out.push_str("# TYPE fw_errors_total counter\n");
+        out.push_str(&format!("fw_errors_total {}\n", m.errors));
+        out.push_str("# TYPE fw_request_seconds histogram\n");
+        for ((source, objective), h) in &m.hists {
+            let labels = format!("objective=\"{objective}\",source=\"{source}\"");
+            render_series(&mut out, "fw_request_seconds", &labels, h);
+        }
+        out
     }
 }
 
@@ -132,15 +199,16 @@ impl Default for Metrics {
 mod tests {
     use super::super::types::Source;
     use super::*;
+    use crate::obs::hist::parse_exposition;
 
     #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
         m.record_request();
         m.record_request();
-        m.record_solve(Source::Device, 0.010);
-        m.record_solve(Source::Cache, 0.0001);
-        m.record_batch(3, 0.009);
+        m.record_solve(Source::Device, Objective::Shortest, 0.010);
+        m.record_solve(Source::Cache, Objective::Shortest, 0.0001);
+        m.record_batch(3, 0.009, 0.002);
         let snap = m.snapshot();
         assert_eq!(snap.get("requests").as_usize(), Some(2));
         assert_eq!(snap.get("device_solves").as_usize(), Some(1));
@@ -148,12 +216,13 @@ mod tests {
         assert_eq!(snap.get("batches").as_usize(), Some(1));
         assert_eq!(snap.get("batched_items").as_usize(), Some(3));
         assert!(snap.get("latency_mean_s").as_f64().unwrap() > 0.0);
+        assert!(snap.get("queue_wait_seconds").as_f64().unwrap() > 0.0);
     }
 
     #[test]
     fn superblock_counters_accumulate() {
         let m = Metrics::new();
-        m.record_solve(Source::SuperBlock, 1.5);
+        m.record_solve(Source::SuperBlock, Objective::Shortest, 1.5);
         m.record_superblock(4, 60);
         m.record_superblock(3, 24);
         let snap = m.snapshot();
@@ -166,7 +235,7 @@ mod tests {
     fn latency_percentiles_exposed() {
         let m = Metrics::new();
         for i in 1..=100 {
-            m.record_solve(Source::Cpu, i as f64 / 1000.0);
+            m.record_solve(Source::Cpu, Objective::Shortest, i as f64 / 1000.0);
         }
         let snap = m.snapshot();
         let p50 = snap.get("latency_p50_s").as_f64().unwrap();
@@ -195,7 +264,7 @@ mod tests {
         let reparsed = Json::parse(&snap.to_string());
         assert!(reparsed.is_ok(), "snapshot not parseable: {snap}");
         // one recorded solve flips every field back to numbers
-        m.record_solve(Source::Cpu, 0.25);
+        m.record_solve(Source::Cpu, Objective::Shortest, 0.25);
         let snap = m.snapshot();
         assert_eq!(snap.get("latency_p99_s").as_f64(), Some(0.25));
         assert_eq!(snap.get("latency_max_s").as_f64(), Some(0.25));
@@ -204,13 +273,106 @@ mod tests {
     #[test]
     fn update_counters_accumulate() {
         let m = Metrics::new();
-        m.record_solve(Source::Incremental, 0.002);
-        m.record_solve(Source::Incremental, 0.003);
+        m.record_solve(Source::Incremental, Objective::Shortest, 0.002);
+        m.record_solve(Source::Incremental, Objective::Shortest, 0.003);
         m.record_update(4, false);
         m.record_update(2, true);
         let snap = m.snapshot();
         assert_eq!(snap.get("incremental_solves").as_usize(), Some(2));
         assert_eq!(snap.get("update_edges").as_usize(), Some(6));
         assert_eq!(snap.get("update_recomputes").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn errors_break_out_by_code() {
+        let m = Metrics::new();
+        m.record_error("error");
+        m.record_error("objective_unsupported");
+        m.record_error("objective_unsupported");
+        let snap = m.snapshot();
+        assert_eq!(snap.get("errors").as_usize(), Some(3));
+        let codes = snap.get("errors_by_code");
+        assert_eq!(codes.get("error").as_usize(), Some(1));
+        assert_eq!(codes.get("objective_unsupported").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn histograms_key_by_source_and_objective() {
+        let m = Metrics::new();
+        m.record_solve(Source::Cpu, Objective::Shortest, 0.010);
+        m.record_solve(Source::Cpu, Objective::Shortest, 0.020);
+        m.record_solve(Source::Cpu, Objective::Bottleneck, 0.030);
+        m.record_solve(Source::Cache, Objective::Shortest, 0.0001);
+        let snap = m.snapshot();
+        let hists = snap.get("latency_hist");
+        assert_eq!(hists.get("cpu/shortest").get("count").as_usize(), Some(2));
+        assert_eq!(hists.get("cpu/bottleneck").get("count").as_usize(), Some(1));
+        assert_eq!(hists.get("cache/shortest").get("count").as_usize(), Some(1));
+        let sum = hists.get("cpu/shortest").get("sum_s").as_f64().unwrap();
+        assert!((sum - 0.030).abs() < 1e-12, "{sum}");
+    }
+
+    #[test]
+    fn exposition_round_trips() {
+        let m = Metrics::new();
+        m.record_solve(Source::Cpu, Objective::Shortest, 0.010);
+        m.record_solve(Source::Device, Objective::Shortest, 0.002);
+        m.record_solve(Source::Cpu, Objective::Minimax, 0.5);
+        let text = m.exposition();
+        assert!(text.contains("fw_requests_total"), "{text}");
+        let parsed = parse_exposition(&text).unwrap();
+        let cpu = &parsed["fw_request_seconds{objective=\"shortest\",source=\"cpu\"}"];
+        assert_eq!(cpu.count(), 1);
+        assert!((cpu.sum() - 0.010).abs() < 1e-12);
+        let mm = &parsed["fw_request_seconds{objective=\"minimax\",source=\"cpu\"}"];
+        assert_eq!(mm.count(), 1);
+    }
+
+    #[test]
+    fn concurrent_records_never_tear_the_snapshot() {
+        // property: every snapshot taken while writers hammer the metrics
+        // is internally consistent — each histogram parses back whole, and
+        // errors_by_code always sums to the errors total
+        let m = Metrics::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let m = &m;
+                scope.spawn(move || {
+                    for i in 0..200 {
+                        let source = if t % 2 == 0 { Source::Cpu } else { Source::Device };
+                        m.record_solve(source, Objective::Shortest, 1e-5 * (i + 1) as f64);
+                        if i % 7 == 0 {
+                            m.record_error("error");
+                        }
+                    }
+                });
+            }
+            let m = &m;
+            scope.spawn(move || {
+                for _ in 0..50 {
+                    let snap = m.snapshot();
+                    let errors = snap.get("errors").as_usize().unwrap();
+                    let codes = snap.get("errors_by_code").as_obj().unwrap();
+                    let by_code: usize =
+                        codes.values().map(|v| v.as_usize().unwrap()).sum();
+                    assert_eq!(errors, by_code);
+                    // exposition taken mid-flight still parses and obeys
+                    // the cumulative-bucket invariant checked by the parser
+                    parse_exposition(&m.exposition()).unwrap();
+                }
+            });
+        });
+        // final state is exact
+        let snap = m.snapshot();
+        let solves = snap.get("cpu_solves").as_usize().unwrap()
+            + snap.get("device_solves").as_usize().unwrap();
+        assert_eq!(solves, 800);
+        let parsed = parse_exposition(&m.exposition()).unwrap();
+        let total: u64 = parsed
+            .iter()
+            .filter(|(k, _)| k.starts_with("fw_request_seconds"))
+            .map(|(_, h)| h.count())
+            .sum();
+        assert_eq!(total, 800);
     }
 }

@@ -37,6 +37,7 @@ use anyhow::{Context, Result};
 use crate::apsp;
 use crate::apsp::semiring::Objective;
 use crate::graph::DistMatrix;
+use crate::obs::{self, Span};
 use crate::runtime::Manifest;
 use crate::superblock;
 
@@ -58,6 +59,9 @@ pub struct Config {
     /// float-association drift a long chain could accumulate at arbitrary
     /// weights; DESIGN.md §Incremental tier).
     pub update_max_chain: u32,
+    /// Observability: request tracing and the trace-journal ring
+    /// (DESIGN.md §Observability).  Histograms are unconditional.
+    pub obs: obs::ObsConfig,
 }
 
 impl Config {
@@ -70,6 +74,7 @@ impl Config {
             cache_capacity: 128,
             superblock_workers: 0,
             update_max_chain: 8,
+            obs: obs::ObsConfig::default(),
         }
     }
 }
@@ -99,6 +104,8 @@ pub struct Coordinator {
     superblock_variant: String,
     superblock_workers: usize,
     update_max_chain: u32,
+    obs: obs::ObsConfig,
+    journal: Arc<obs::TraceJournal>,
 }
 
 /// What the coordinator knows about the artifacts (for `info` requests and
@@ -145,11 +152,23 @@ impl Coordinator {
             superblock_variant,
             superblock_workers: config.superblock_workers,
             update_max_chain: config.update_max_chain,
+            obs: config.obs,
+            journal: Arc::new(obs::TraceJournal::new(config.obs.journal_capacity)),
         })
     }
 
     pub fn metrics(&self) -> &metrics::Metrics {
         &self.metrics
+    }
+
+    pub fn obs(&self) -> &obs::ObsConfig {
+        &self.obs
+    }
+
+    /// The trace journal (the server records finished request traces here
+    /// and serves them back for `{"type":"trace"}` requests).
+    pub fn journal(&self) -> &obs::TraceJournal {
+        &self.journal
     }
 
     pub fn manifest_summary(&self) -> &ManifestSummary {
@@ -159,7 +178,23 @@ impl Coordinator {
     /// Serve one request (blocking). This is the whole request path.
     pub fn solve(&self, req: &Request) -> Result<Response> {
         self.metrics.record_request();
-        self.solve_impl(req, true)
+        self.solve_impl(req, true, None)
+    }
+
+    /// Serve one request while assembling its span tree: the route
+    /// decision (with the router's reason), the tier solve (with
+    /// phase/round breakdown from the profiled solver twins), and cache
+    /// traffic.  The server journals the returned root and splices in its
+    /// own decode/encode spans.  [`Coordinator::solve`] is the span-free
+    /// path; tracing never changes solver outputs (bitwise — pinned by the
+    /// conformance suite).
+    pub fn solve_spanned(&self, req: &Request) -> Result<(Response, Span)> {
+        self.metrics.record_request();
+        let t0 = Instant::now();
+        let mut root = Span::new("request");
+        let out = self.solve_impl(req, true, Some(&mut root));
+        root.seconds = t0.elapsed().as_secs_f64();
+        out.map(|resp| (resp, root))
     }
 
     /// The request path, with per-request metrics (request count, solve
@@ -167,8 +202,9 @@ impl Coordinator {
     /// tier's re-baselining runs a full solve *inside* one wire request
     /// and must not double-count it.  Work-level metrics (superblock
     /// rounds/tiles, engine batches) still record: that work really ran.
-    fn solve_impl(&self, req: &Request, record: bool) -> Result<Response> {
+    fn solve_impl(&self, req: &Request, record: bool, span: Option<&mut Span>) -> Result<Response> {
         let t0 = Instant::now();
+        let traced = span.is_some();
         let objective = router::objective_gate(&req.variant, &req.objective)
             .map_err(|e| anyhow::anyhow!(e))?;
         req.graph
@@ -188,6 +224,7 @@ impl Coordinator {
 
         // cache (paths requests only hit entries that carry successors)
         if !req.no_cache {
+            let cache_start = Instant::now();
             let hit = if req.want_paths {
                 self.cache
                     .get_paths_for(objective, &req.variant, &req.graph)
@@ -200,7 +237,13 @@ impl Coordinator {
             if let Some((dist, succ)) = hit {
                 let seconds = t0.elapsed().as_secs_f64();
                 if record {
-                    self.metrics.record_solve(Source::Cache, seconds);
+                    self.metrics.record_solve(Source::Cache, objective, seconds);
+                }
+                if let Some(span) = span {
+                    let mut get = Span::new("cache_get");
+                    get.seconds = cache_start.elapsed().as_secs_f64();
+                    get.note("hit", "true");
+                    span.child(get);
                 }
                 return Ok(Response {
                     id: req.id,
@@ -214,7 +257,8 @@ impl Coordinator {
         }
 
         // route
-        let route = router::route_objective(
+        let route_start = Instant::now();
+        let (route, route_reason) = router::route_objective_reasoned(
             &self.router,
             &req.variant,
             req.graph.n(),
@@ -222,6 +266,14 @@ impl Coordinator {
             objective,
         )
         .map_err(|e| anyhow::anyhow!(e))?;
+        let route_seconds = route_start.elapsed().as_secs_f64();
+
+        // solve; traced requests take the profiled solver twins (bitwise
+        // identical to the plain ones — timing reads sit between phases)
+        // so the solve span carries the phase/round breakdown
+        let solve_start = Instant::now();
+        let mut phase_prof: Option<apsp::blocked::PhaseProfile> = None;
+        let mut pool_prof: Option<(f64, f64, f64, usize, usize)> = None;
         let (dist, succ, source, bucket) = match route {
             router::Route::Cpu { tile } => match &prepared {
                 None => {
@@ -229,6 +281,10 @@ impl Coordinator {
                         let (dist, succ) =
                             apsp::blocked::solve_paths(&req.graph, tile).into_parts();
                         (dist, Some(succ), Source::Cpu, req.graph.n())
+                    } else if traced {
+                        let (dist, prof) = apsp::blocked::solve_profiled(&req.graph, tile);
+                        phase_prof = Some(prof);
+                        (dist, None, Source::Cpu, req.graph.n())
                     } else {
                         let dist = apsp::blocked::solve(&req.graph, tile);
                         (dist, None, Source::Cpu, req.graph.n())
@@ -239,6 +295,11 @@ impl Coordinator {
                         let (dist, succ) =
                             apsp::semiring::blocked_solve_paths(objective, g, tile).into_parts();
                         (dist, Some(succ), Source::Cpu, req.graph.n())
+                    } else if traced {
+                        let (dist, prof) =
+                            apsp::blocked::solve_profiled_objective(objective, g, tile);
+                        phase_prof = Some(prof);
+                        (dist, None, Source::Cpu, req.graph.n())
                     } else {
                         let dist = apsp::semiring::blocked_solve(objective, g, tile);
                         (dist, None, Source::Cpu, req.graph.n())
@@ -272,6 +333,7 @@ impl Coordinator {
                 let cfg = superblock::SuperBlockConfig {
                     bucket,
                     workers: self.superblock_workers,
+                    profile: traced,
                 };
                 if req.want_paths {
                     let (r, report) = superblock::solve_paths_objective(objective, g, &cfg);
@@ -279,6 +341,7 @@ impl Coordinator {
                         report.round_count() as u64,
                         report.total_tiles() as u64,
                     );
+                    pool_prof = pool_stats(&report, traced);
                     let (dist, succ) = r.into_parts();
                     (dist, Some(succ), Source::SuperBlock, bucket)
                 } else {
@@ -287,6 +350,7 @@ impl Coordinator {
                         report.round_count() as u64,
                         report.total_tiles() as u64,
                     );
+                    pool_prof = pool_stats(&report, traced);
                     (dist, None, Source::SuperBlock, bucket)
                 }
             }
@@ -320,6 +384,7 @@ impl Coordinator {
                 let cfg = superblock::SuperBlockConfig {
                     bucket,
                     workers: self.superblock_workers,
+                    profile: traced,
                 };
                 if req.want_paths {
                     // path mode carries successor tiles through the same
@@ -330,6 +395,7 @@ impl Coordinator {
                         report.round_count() as u64,
                         report.total_tiles() as u64,
                     );
+                    pool_prof = pool_stats(&report, traced);
                     let (dist, succ) = r.into_parts();
                     (dist, Some(succ), Source::SuperBlock, bucket)
                 } else {
@@ -340,11 +406,14 @@ impl Coordinator {
                         report.round_count() as u64,
                         report.total_tiles() as u64,
                     );
+                    pool_prof = pool_stats(&report, traced);
                     (dist, None, Source::SuperBlock, bucket)
                 }
             }
         };
+        let solve_seconds = solve_start.elapsed().as_secs_f64();
 
+        let put_start = Instant::now();
         if !req.no_cache {
             match &succ {
                 Some(succ) => self.cache.put_paths_for(
@@ -357,9 +426,46 @@ impl Coordinator {
                 None => self.cache.put_for(objective, &req.variant, &req.graph, dist.clone()),
             }
         }
+        let put_seconds = put_start.elapsed().as_secs_f64();
         let seconds = t0.elapsed().as_secs_f64();
         if record {
-            self.metrics.record_solve(source, seconds);
+            self.metrics.record_solve(source, objective, seconds);
+        }
+        if let Some(span) = span {
+            let mut r = Span::new("route");
+            r.seconds = route_seconds;
+            let decision = match route {
+                router::Route::Cpu { .. } => "cpu",
+                router::Route::Johnson => "johnson",
+                router::Route::Device => "device",
+                router::Route::SuperBlock { .. } => "superblock",
+            };
+            r.note("decision", decision);
+            r.note("reason", route_reason);
+            span.child(r);
+            let mut s = Span::new("solve");
+            s.seconds = solve_seconds;
+            s.note("source", source.name());
+            s.note("bucket", bucket.to_string());
+            if let Some(p) = phase_prof {
+                s.note("phase1_s", p.phase1_seconds.to_string());
+                s.note("phase2_s", p.phase2_seconds.to_string());
+                s.note("phase3_s", p.phase3_seconds.to_string());
+                s.note("rounds", p.rounds.to_string());
+            }
+            if let Some((busy, idle, occupancy, critical_path, rounds)) = pool_prof {
+                s.note("busy_s", busy.to_string());
+                s.note("idle_s", idle.to_string());
+                s.note("occupancy", occupancy.to_string());
+                s.note("critical_path", critical_path.to_string());
+                s.note("rounds", rounds.to_string());
+            }
+            span.child(s);
+            if !req.no_cache {
+                let mut put = Span::new("cache_put");
+                put.seconds = put_seconds;
+                span.child(put);
+            }
         }
         Ok(Response {
             id: req.id,
@@ -424,8 +530,10 @@ impl Coordinator {
                     no_cache: false,
                     want_paths: req.want_paths || base.succ.is_some(),
                     objective: types::DEFAULT_OBJECTIVE.into(),
+                    trace: false,
                 },
                 false,
+                None,
             )?;
             (resp.dist, resp.succ, true)
         } else if let Some(base_succ) = base.succ {
@@ -451,7 +559,8 @@ impl Coordinator {
         self.metrics
             .record_update(req.updates.len() as u64, recomputed);
         let seconds = t0.elapsed().as_secs_f64();
-        self.metrics.record_solve(Source::Incremental, seconds);
+        self.metrics
+            .record_solve(Source::Incremental, Objective::Shortest, seconds);
         Ok(UpdateOutcome::Solved(Response {
             id: req.id,
             dist,
@@ -481,6 +590,7 @@ impl Coordinator {
             no_cache: false,
             want_paths: false,
             objective: objective.to_string(),
+            trace: false,
         })?;
         Ok(resp.dist)
     }
@@ -498,10 +608,29 @@ impl Coordinator {
             no_cache: false,
             want_paths: true,
             objective: types::DEFAULT_OBJECTIVE.into(),
+            trace: false,
         })?;
         let succ = resp
             .succ
             .ok_or_else(|| anyhow::anyhow!("paths requested but response has no successors"))?;
         Ok(apsp::paths::PathsResult::from_parts(resp.dist, succ))
     }
+}
+
+/// Pool-occupancy stats for a traced superblock solve, as
+/// `(busy_s, idle_s, occupancy, critical_path, rounds)`; `None` when the
+/// solve ran unprofiled (untraced requests pay zero accounting cost).
+fn pool_stats(
+    report: &superblock::Report,
+    traced: bool,
+) -> Option<(f64, f64, f64, usize, usize)> {
+    traced.then(|| {
+        (
+            report.busy_seconds(),
+            report.idle_seconds(),
+            report.occupancy(),
+            report.max_critical_path(),
+            report.round_count(),
+        )
+    })
 }

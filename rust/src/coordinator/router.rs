@@ -203,6 +203,31 @@ pub fn objective_gate_update(objective: &str) -> Result<(), String> {
     }
 }
 
+/// [`route`] plus a short machine-stable reason for the decision.
+///
+/// The reason is recorded on request traces ([`crate::obs::trace`]) so a
+/// span answers "why did this request land on that tier?" without the
+/// reader re-deriving routing policy by hand.  It is derived from the
+/// same inputs [`route`] saw, so the pair can never disagree.
+pub fn route_reasoned(
+    config: &RouterConfig,
+    variant: &str,
+    n: usize,
+    want_paths: bool,
+) -> Result<(Route, &'static str), String> {
+    let r = route(config, variant, n, want_paths)?;
+    let reason = match (variant, &r) {
+        ("cpu", _) => "explicit cpu variant",
+        ("johnson", _) => "explicit johnson variant",
+        ("superblock", _) => "explicit superblock variant",
+        (_, Route::Cpu { .. }) => "n within cpu threshold",
+        (_, Route::SuperBlock { .. }) => "n exceeds largest device bucket",
+        (_, Route::Device) => "fits a lowered device bucket",
+        (_, Route::Johnson) => unreachable!("johnson is explicit-only"),
+    };
+    Ok((r, reason))
+}
+
 /// [`route`] under an explicit serving objective.  Shortest is exactly
 /// [`route`]; other objectives never yield `Route::Device` or
 /// `Route::Johnson` — the artifacts and Johnson's reweighting are
@@ -215,9 +240,20 @@ pub fn route_objective(
     want_paths: bool,
     objective: Objective,
 ) -> Result<Route, String> {
-    let r = route(config, variant, n, want_paths)?;
+    route_objective_reasoned(config, variant, n, want_paths, objective).map(|(r, _)| r)
+}
+
+/// [`route_objective`] plus the decision reason (see [`route_reasoned`]).
+pub fn route_objective_reasoned(
+    config: &RouterConfig,
+    variant: &str,
+    n: usize,
+    want_paths: bool,
+    objective: Objective,
+) -> Result<(Route, &'static str), String> {
+    let (r, reason) = route_reasoned(config, variant, n, want_paths)?;
     if objective == Objective::Shortest {
-        return Ok(r);
+        return Ok((r, reason));
     }
     match r {
         Route::Johnson => Err(format!(
@@ -225,10 +261,13 @@ pub fn route_objective(
              (requested {:?})",
             objective.name()
         )),
-        Route::Device => Ok(Route::Cpu {
-            tile: config.cpu_tile,
-        }),
-        other => Ok(other),
+        Route::Device => Ok((
+            Route::Cpu {
+                tile: config.cpu_tile,
+            },
+            "non-shortest objective served off-device",
+        )),
+        other => Ok((other, reason)),
     }
 }
 
@@ -468,6 +507,37 @@ mod tests {
                 route(&c, variant, n, false).unwrap()
             );
         }
+    }
+
+    #[test]
+    fn route_reasons_are_pinned() {
+        // the reason strings ride request traces; pin them so dashboards
+        // grouping by reason don't silently fragment
+        let c = cfg();
+        let cases = [
+            ("cpu", 4096, "explicit cpu variant"),
+            ("johnson", 4096, "explicit johnson variant"),
+            ("superblock", 1024, "explicit superblock variant"),
+            ("staged", 16, "n within cpu threshold"),
+            ("staged", 300, "fits a lowered device bucket"),
+            ("staged", 1024, "n exceeds largest device bucket"),
+        ];
+        for (variant, n, want) in cases {
+            let (r, reason) = route_reasoned(&c, variant, n, false).unwrap();
+            assert_eq!(reason, want, "{variant} n={n}");
+            assert_eq!(r, route(&c, variant, n, false).unwrap(), "{variant} n={n}");
+        }
+        // objective-aware: the Device→Cpu downgrade gets its own reason...
+        let (r, reason) =
+            route_objective_reasoned(&c, "staged", 300, false, Objective::Bottleneck).unwrap();
+        assert_eq!(r, Route::Cpu { tile: 32 });
+        assert_eq!(reason, "non-shortest objective served off-device");
+        // ...while routes the objective doesn't move keep the base reason
+        let (r, reason) =
+            route_objective_reasoned(&c, "staged", 1024, false, Objective::Minimax).unwrap();
+        assert_eq!(r, Route::SuperBlock { bucket: 256 });
+        assert_eq!(reason, "n exceeds largest device bucket");
+        assert!(route_objective_reasoned(&c, "johnson", 64, false, Objective::Minimax).is_err());
     }
 
     #[test]

@@ -2,33 +2,50 @@
 //!
 //! Request types:
 //! * `{"type":"solve", "id", "n", "variant", "edges": [[u,v,w],…]}` →
-//!   `{"type":"result", …}` (see [`super::types`])
+//!   `{"type":"result", …}` (see [`super::types`]); add `"trace": true`
+//!   and the result line carries the request's span tree under `"trace"`
 //! * `{"type":"update", "id", "n", "variant", "base": "<hex fingerprint>",
 //!   "updates": [[u,v,w],…]}` → `{"type":"result", …}` from the
 //!   incremental tier, or a typed `{"type":"error",
 //!   "code":"update_base_missing"}` the client retries as a full solve
 //! * `{"type":"ping"}` → `{"type":"pong"}`
 //! * `{"type":"stats"}` → metrics snapshot
+//! * `{"type":"trace", "k", "source", "objective"}` → last `k` journaled
+//!   request traces, newest first, optionally filtered by tier source
+//!   and/or objective
+//! * `{"type":"exposition"}` → Prometheus-style metrics text (as a JSON
+//!   string field; the wire stays line-delimited JSON)
 //! * `{"type":"info"}` → artifact variants/buckets
 //!
 //! Malformed input gets a `{"type":"error"}` line and the connection stays
 //! open; handler threads share the coordinator (the engine serializes
-//! device work internally).
+//! device work internally).  Connection failures and malformed requests
+//! emit one structured stderr line each ([`crate::obs::log`]) instead of
+//! being silently dropped.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::router;
 use super::types::{
-    decode_request, decode_update_request, encode_error, encode_error_coded, encode_response,
-    CODE_OBJECTIVE_UNSUPPORTED, CODE_UPDATE_BASE_MISSING,
+    attach_trace, decode_request, decode_update_request, encode_error, encode_error_coded,
+    encode_response, CODE_OBJECTIVE_UNSUPPORTED, CODE_UPDATE_BASE_MISSING,
 };
 use super::{Coordinator, UpdateOutcome};
+use crate::obs::log::{log, Level};
+use crate::obs::{Span, TraceRecord};
 use crate::util::json::Json;
+
+/// Error-code key for requests that failed to decode (counted in
+/// `errors_by_code` alongside the typed wire codes).
+const CODE_MALFORMED: &str = "malformed";
+/// Error-code key for solve/update failures with no dedicated wire code.
+const CODE_GENERIC: &str = "error";
 
 /// A running server (owns the accept thread).
 pub struct Server {
@@ -54,13 +71,33 @@ impl Server {
                     match stream {
                         Ok(stream) => {
                             let coord = coordinator.clone();
+                            let peer = stream
+                                .peer_addr()
+                                .map(|a| a.to_string())
+                                .unwrap_or_else(|_| "?".into());
                             let _ = std::thread::Builder::new()
                                 .name("fw-stage-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_connection(&coord, stream);
+                                    if let Err(e) = handle_connection(&coord, stream) {
+                                        log(
+                                            Level::Warn,
+                                            "conn_error",
+                                            vec![
+                                                ("addr", Json::str(peer)),
+                                                ("error", Json::str(format!("{e:#}"))),
+                                            ],
+                                        );
+                                    }
                                 });
                         }
-                        Err(_) => break,
+                        Err(e) => {
+                            log(
+                                Level::Error,
+                                "accept_error",
+                                vec![("error", Json::str(format!("{e:#}")))],
+                            );
+                            break;
+                        }
                     }
                 }
             })?;
@@ -124,6 +161,27 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
             }
             snap.to_string()
         }
+        "exposition" => Json::obj(vec![
+            ("type", Json::str("exposition")),
+            ("text", Json::str(coord.metrics().exposition())),
+        ])
+        .to_string(),
+        "trace" => {
+            let v = Json::parse(line).unwrap_or(Json::Null);
+            let k = v.get("k").as_usize().unwrap_or(16);
+            let traces: Vec<Json> = coord
+                .journal()
+                .last(k, v.get("source").as_str(), v.get("objective").as_str())
+                .iter()
+                .map(|r| r.to_json())
+                .collect();
+            Json::obj(vec![
+                ("type", Json::str("trace")),
+                ("count", Json::num(traces.len() as f64)),
+                ("traces", Json::Arr(traces)),
+            ])
+            .to_string()
+        }
         "info" => {
             let s = coord.manifest_summary();
             Json::obj(vec![
@@ -140,33 +198,78 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
             ])
             .to_string()
         }
-        "solve" => match decode_request(line) {
-            // objective policy is pre-checked so the rejection is *typed*
-            // (wire code, not a free-text message): unknown objectives and
-            // johnson-with-non-shortest can be dispatched on by clients
-            Ok(req) => match router::objective_gate(&req.variant, &req.objective) {
-                Err(msg) => {
-                    coord.metrics().record_error();
-                    encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
-                }
-                Ok(_) => match coord.solve(&req) {
-                    Ok(resp) => encode_response(&resp),
-                    Err(e) => {
-                        coord.metrics().record_error();
-                        encode_error(req.id, &format!("{e:#}"))
+        "solve" => {
+            let decode_start = Instant::now();
+            match decode_request(line) {
+                // objective policy is pre-checked so the rejection is
+                // *typed* (wire code, not a free-text message): unknown
+                // objectives and johnson-with-non-shortest can be
+                // dispatched on by clients
+                Ok(req) => match router::objective_gate(&req.variant, &req.objective) {
+                    Err(msg) => {
+                        coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
+                        encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
                     }
+                    Ok(_) if coord.obs().enabled => {
+                        let decode_seconds = decode_start.elapsed().as_secs_f64();
+                        match coord.solve_spanned(&req) {
+                            Ok((resp, mut root)) => {
+                                // the server owns the wire edges of the
+                                // trace: decode leads, encode trails
+                                let mut decode = Span::new("decode");
+                                decode.seconds = decode_seconds;
+                                root.children.insert(0, decode);
+                                let encode_start = Instant::now();
+                                let reply = encode_response(&resp);
+                                let mut encode = Span::new("encode");
+                                encode.seconds = encode_start.elapsed().as_secs_f64();
+                                root.child(encode);
+                                let record = coord.journal().record(TraceRecord {
+                                    id: resp.id,
+                                    source: resp.source.name().into(),
+                                    objective: req.objective.clone(),
+                                    n: req.graph.n(),
+                                    root,
+                                });
+                                if req.trace {
+                                    attach_trace(&reply, &record.root.to_json())
+                                } else {
+                                    reply
+                                }
+                            }
+                            Err(e) => {
+                                coord.metrics().record_error(CODE_GENERIC);
+                                encode_error(req.id, &format!("{e:#}"))
+                            }
+                        }
+                    }
+                    Ok(_) => match coord.solve(&req) {
+                        Ok(resp) => encode_response(&resp),
+                        Err(e) => {
+                            coord.metrics().record_error(CODE_GENERIC);
+                            encode_error(req.id, &format!("{e:#}"))
+                        }
+                    },
                 },
-            },
-            Err(e) => {
-                coord.metrics().record_error();
-                encode_error(0, &format!("{e:#}"))
+                Err(e) => {
+                    coord.metrics().record_error(CODE_MALFORMED);
+                    log(
+                        Level::Warn,
+                        "malformed_request",
+                        vec![
+                            ("kind", Json::str("solve")),
+                            ("error", Json::str(format!("{e:#}"))),
+                        ],
+                    );
+                    encode_error(0, &format!("{e:#}"))
+                }
             }
-        },
+        }
         "update" => match decode_update_request(line) {
             // the dynamic tier chains (min, +) closures only — any other
             // objective is a typed policy rejection, same code as solve
             Ok(req) if router::objective_gate_update(&req.objective).is_err() => {
-                coord.metrics().record_error();
+                coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
                 let msg = router::objective_gate_update(&req.objective).unwrap_err();
                 encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
             }
@@ -184,15 +287,26 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
                     ),
                 ),
                 Err(e) => {
-                    coord.metrics().record_error();
+                    coord.metrics().record_error(CODE_GENERIC);
                     encode_error(req.id, &format!("{e:#}"))
                 }
             },
             Err(e) => {
-                coord.metrics().record_error();
+                coord.metrics().record_error(CODE_MALFORMED);
+                log(
+                    Level::Warn,
+                    "malformed_request",
+                    vec![
+                        ("kind", Json::str("update")),
+                        ("error", Json::str(format!("{e:#}"))),
+                    ],
+                );
                 encode_error(0, &format!("{e:#}"))
             }
         },
-        other => encode_error(0, &format!("unknown request type {other:?}")),
+        other => {
+            coord.metrics().record_error(CODE_MALFORMED);
+            encode_error(0, &format!("unknown request type {other:?}"))
+        }
     }
 }

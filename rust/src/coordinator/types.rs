@@ -50,6 +50,10 @@ pub struct Request {
     /// with a typed error ([`CODE_OBJECTIVE_UNSUPPORTED`]); absent on the
     /// wire means [`DEFAULT_OBJECTIVE`].
     pub objective: String,
+    /// Echo the request's span tree in the response (wire key `"trace"`).
+    /// Absent on the wire means false, so untraced request lines are
+    /// byte-identical to the pre-observability format.
+    pub trace: bool,
 }
 
 /// An incremental `"update"` request: an edge-delta batch against a cached
@@ -156,6 +160,10 @@ pub fn encode_request(req: &Request) -> String {
     if req.objective != DEFAULT_OBJECTIVE {
         fields.push(("objective", Json::str(req.objective.clone())));
     }
+    // same omit-the-default rule for the trace echo flag
+    if req.trace {
+        fields.push(("trace", Json::Bool(true)));
+    }
     Json::obj(fields).to_string()
 }
 
@@ -210,6 +218,7 @@ pub fn decode_request(line: &str) -> Result<Request> {
             .as_str()
             .unwrap_or(DEFAULT_OBJECTIVE)
             .to_string(),
+        trace: v.get("trace").as_bool().unwrap_or(false),
     })
 }
 
@@ -467,6 +476,21 @@ pub fn decode_response(line: &str) -> Result<Response> {
     })
 }
 
+/// Splice a trace object into an already-encoded result line.
+///
+/// The response writer is hand-rolled for payload speed, so the trace
+/// echo (requests that set `"trace": true`) is attached by rewriting the
+/// fixed tail rather than re-encoding the matrix.  The sorted-key
+/// invariant holds: `trace` lands between `succ` and `type`.  Lines that
+/// are not result lines (errors) pass through untouched.
+pub fn attach_trace(line: &str, trace: &Json) -> String {
+    const TAIL: &str = ",\"type\":\"result\"}";
+    match line.strip_suffix(TAIL) {
+        Some(head) => format!("{head},\"trace\":{trace}{TAIL}"),
+        None => line.to_string(),
+    }
+}
+
 /// Encode a server-side error for a request id.
 pub fn encode_error(id: u64, message: &str) -> String {
     Json::obj(vec![
@@ -502,6 +526,7 @@ mod tests {
             no_cache: false,
             want_paths: false,
             objective: DEFAULT_OBJECTIVE.into(),
+            trace: false,
         }
     }
 
@@ -546,6 +571,46 @@ mod tests {
         let odd =
             decode_request(r#"{"type":"solve","n":3,"edges":[],"objective":"widest"}"#).unwrap();
         assert_eq!(odd.objective, "widest");
+    }
+
+    #[test]
+    fn trace_flag_roundtrips_and_defaults() {
+        // the flag travels only when set: untraced lines stay byte-identical
+        // to the pre-observability wire format
+        let line = encode_request(&sample_request());
+        assert!(!line.contains("trace"), "{line}");
+        let mut req = sample_request();
+        req.trace = true;
+        let line = encode_request(&req);
+        assert!(line.contains("\"trace\":true"), "{line}");
+        assert!(decode_request(&line).unwrap().trace);
+        // absent key decodes as false (older clients)
+        let legacy = decode_request(r#"{"type":"solve","n":3,"edges":[]}"#).unwrap();
+        assert!(!legacy.trace);
+    }
+
+    #[test]
+    fn attach_trace_splices_before_the_type_key() {
+        let resp = Response {
+            id: 7,
+            dist: DistMatrix::unconnected(2),
+            succ: None,
+            source: Source::Cpu,
+            bucket: 2,
+            seconds: 0.5,
+        };
+        let trace = Json::obj(vec![("name", Json::str("request"))]);
+        let line = attach_trace(&encode_response(&resp), &trace);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("type").as_str(), Some("result"));
+        assert_eq!(v.get("trace").get("name").as_str(), Some("request"));
+        // the spliced line still decodes as a normal response
+        assert_eq!(decode_response(&line).unwrap().id, 7);
+        // sorted-key invariant: re-serializing moves nothing
+        assert_eq!(v.to_string(), line);
+        // error lines pass through untouched
+        let err = encode_error(3, "boom");
+        assert_eq!(attach_trace(&err, &trace), err);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod graph;
 pub mod layout;
+pub mod obs;
 pub mod perf;
 pub mod runtime;
 pub mod simulator;

@@ -1,0 +1,438 @@
+//! Fixed-bucket log-scaled latency histograms.
+//!
+//! The serving metrics need per-`(source, objective)` latency distributions
+//! that survive a long-running coordinator: exact bucket counts, mergeable,
+//! and O(1) memory — unlike [`crate::util::stats::Samples`], which retains
+//! raw values.  Buckets are powers of two over seconds:
+//!
+//! ```text
+//!   bound(i) = 1e-6 · 2^i      for i in 0..28   (1 µs … ~134 s)
+//! ```
+//!
+//! plus one overflow bucket.  Doubling bounds are exact in f64 (only the
+//! 1e-6 anchor rounds, identically for every bound), so bucket boundaries
+//! are deterministic and pinnable: `observe(2e-6)` always lands in bucket 1
+//! under the `x <= bound` (Prometheus `le`) convention.
+//!
+//! [`render_series`] emits one histogram in the Prometheus text exposition
+//! format (cumulative `_bucket{le=…}` lines plus `_sum`/`_count`);
+//! [`parse_exposition`] reads that format back — the round-trip is the
+//! scrape-safety gate in the tests and the serve_demo smoke.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Number of finite bucket bounds (the last array slot is the overflow
+/// bucket).
+pub const FINITE_BOUNDS: usize = 28;
+
+/// A fixed-memory latency histogram (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// Per-bucket counts; `counts[FINITE_BOUNDS]` is the overflow bucket.
+    counts: [u64; FINITE_BOUNDS + 1],
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; FINITE_BOUNDS + 1],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Upper bound (inclusive, `le`) of finite bucket `i`.
+    pub fn bound(i: usize) -> f64 {
+        debug_assert!(i < FINITE_BOUNDS);
+        1e-6 * (1u64 << i) as f64
+    }
+
+    /// Index of the bucket an observation falls into (`x <= bound`, first
+    /// match; everything else — including NaN — overflows).
+    pub fn bucket_index(x: f64) -> usize {
+        for i in 0..FINITE_BOUNDS {
+            if x <= Self::bound(i) {
+                return i;
+            }
+        }
+        FINITE_BOUNDS
+    }
+
+    /// Record one observation (seconds).
+    pub fn observe(&mut self, x: f64) {
+        self.counts[Self::bucket_index(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+    }
+
+    /// Add another histogram's observations into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Raw per-bucket counts (last slot = overflow).
+    pub fn bucket_counts(&self) -> &[u64; FINITE_BOUNDS + 1] {
+        &self.counts
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n < 2).
+    pub fn stddev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    /// Upper-bound quantile estimate: the `le` bound of the bucket holding
+    /// the `q`-th observation (`q` in [0, 1]).  NaN when empty; +inf when
+    /// the rank lands in the overflow bucket.  The estimate never
+    /// undershoots the true quantile — the right bias for latency alerts.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile {q}");
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return if i < FINITE_BOUNDS {
+                    Self::bound(i)
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Compact summary for the `stats` snapshot (non-finite values render
+    /// as JSON null via the codec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_s", Json::Num(self.sum)),
+            ("mean_s", Json::Num(self.mean())),
+            ("p50_s", Json::Num(self.quantile(0.5))),
+            ("p95_s", Json::Num(self.quantile(0.95))),
+            ("p99_s", Json::Num(self.quantile(0.99))),
+        ])
+    }
+
+    /// A `perf::BenchResult::to_json`-shaped record, so live histograms
+    /// land in the same `BENCH_<name>.json` trajectory as CI bench runs.
+    pub fn to_bench_json(&self, name: &str) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("mean_s", Json::Num(self.mean())),
+            ("median_s", Json::Num(self.quantile(0.5))),
+            ("stddev_s", Json::Num(self.stddev())),
+            ("samples", Json::Num(self.count as f64)),
+        ])
+    }
+}
+
+/// Format an exposition float the way Prometheus expects (shortest
+/// round-tripping decimal; Rust's `Display` for f64 guarantees this).
+fn fmt_f64(x: f64) -> String {
+    if x.is_infinite() {
+        if x > 0.0 {
+            "+Inf".into()
+        } else {
+            "-Inf".into()
+        }
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Append one histogram as Prometheus text-exposition lines.
+///
+/// `labels` is the pre-rendered label body **without** `le`, e.g.
+/// `objective="shortest",source="cpu"` (may be empty).  Bucket lines are
+/// cumulative, as the format requires.
+pub fn render_series(out: &mut String, metric: &str, labels: &str, h: &Histogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        cum += c;
+        let le = if i < FINITE_BOUNDS {
+            fmt_f64(Histogram::bound(i))
+        } else {
+            "+Inf".into()
+        };
+        out.push_str(&format!(
+            "{metric}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}\n"
+        ));
+    }
+    let brace = if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    };
+    out.push_str(&format!("{metric}_sum{brace} {}\n", fmt_f64(h.sum())));
+    out.push_str(&format!("{metric}_count{brace} {}\n", h.count()));
+}
+
+/// Parse Prometheus text exposition produced by [`render_series`] back
+/// into histograms, keyed `metric{labels}` (labels without `le`, in the
+/// order written).  Reconstructs per-bucket counts from the cumulative
+/// lines; `sum_sq` is not part of the wire format and comes back as 0.
+pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, Histogram>, String> {
+    struct Acc {
+        cum: [Option<u64>; FINITE_BOUNDS + 1],
+        sum: Option<f64>,
+        count: Option<u64>,
+    }
+    let mut accs: BTreeMap<String, Acc> = BTreeMap::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("malformed exposition line {line:?}"))?;
+        let (name, labels) = match head.split_once('{') {
+            Some((n, rest)) => (
+                n,
+                rest.strip_suffix('}')
+                    .ok_or_else(|| format!("unterminated labels in {line:?}"))?,
+            ),
+            None => (head, ""),
+        };
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let mut le = None;
+            let mut kept: Vec<&str> = Vec::new();
+            for part in labels.split(',').filter(|p| !p.is_empty()) {
+                match part.strip_prefix("le=\"").and_then(|v| v.strip_suffix('"')) {
+                    Some(v) => le = Some(v),
+                    None => kept.push(part),
+                }
+            }
+            let le = le.ok_or_else(|| format!("bucket line without le: {line:?}"))?;
+            let idx = if le == "+Inf" {
+                FINITE_BOUNDS
+            } else {
+                let bound: f64 = le.parse().map_err(|_| format!("bad le {le:?}"))?;
+                (0..FINITE_BOUNDS)
+                    .find(|&i| Histogram::bound(i) == bound)
+                    .ok_or_else(|| format!("le {le:?} is not a known bound"))?
+            };
+            let cum: u64 = value.parse().map_err(|_| format!("bad count {value:?}"))?;
+            let key = format!("{base}{{{}}}", kept.join(","));
+            accs.entry(key)
+                .or_insert_with(|| Acc {
+                    cum: [None; FINITE_BOUNDS + 1],
+                    sum: None,
+                    count: None,
+                })
+                .cum[idx] = Some(cum);
+        } else if let Some(base) = name.strip_suffix("_sum") {
+            let key = format!("{base}{{{labels}}}");
+            let sum: f64 = value.parse().map_err(|_| format!("bad sum {value:?}"))?;
+            accs.entry(key)
+                .or_insert_with(|| Acc {
+                    cum: [None; FINITE_BOUNDS + 1],
+                    sum: None,
+                    count: None,
+                })
+                .sum = Some(sum);
+        } else if let Some(base) = name.strip_suffix("_count") {
+            let key = format!("{base}{{{labels}}}");
+            let count: u64 = value.parse().map_err(|_| format!("bad count {value:?}"))?;
+            accs.entry(key)
+                .or_insert_with(|| Acc {
+                    cum: [None; FINITE_BOUNDS + 1],
+                    sum: None,
+                    count: None,
+                })
+                .count = Some(count);
+        }
+        // other metric families (plain counters) pass through unparsed
+    }
+    let mut out = BTreeMap::new();
+    for (key, acc) in accs {
+        let mut counts = [0u64; FINITE_BOUNDS + 1];
+        let mut prev = 0u64;
+        for (i, slot) in acc.cum.iter().enumerate() {
+            let cum = slot.ok_or_else(|| format!("{key}: missing bucket {i}"))?;
+            counts[i] = cum
+                .checked_sub(prev)
+                .ok_or_else(|| format!("{key}: non-monotone cumulative buckets"))?;
+            prev = cum;
+        }
+        let count = acc.count.ok_or_else(|| format!("{key}: missing _count"))?;
+        if count != prev {
+            return Err(format!("{key}: _count {count} != +Inf bucket {prev}"));
+        }
+        out.insert(
+            key,
+            Histogram {
+                counts,
+                count,
+                sum: acc.sum.ok_or_else(|| format!("{key}: missing _sum"))?,
+                sum_sq: 0.0,
+            },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_pinned() {
+        // doubling bounds are exact, so le-semantics placement is exact
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(1e-6), 0); // x <= bound inclusive
+        assert_eq!(Histogram::bucket_index(2e-6), 1);
+        assert_eq!(Histogram::bucket_index(1.5e-6), 1);
+        assert_eq!(Histogram::bucket_index(Histogram::bound(10)), 10);
+        assert_eq!(
+            Histogram::bucket_index(Histogram::bound(FINITE_BOUNDS - 1)),
+            FINITE_BOUNDS - 1
+        );
+        // past the largest finite bound (~134 s) → overflow
+        assert_eq!(Histogram::bucket_index(1000.0), FINITE_BOUNDS);
+        assert_eq!(Histogram::bucket_index(f64::NAN), FINITE_BOUNDS);
+    }
+
+    #[test]
+    fn bounds_double_exactly() {
+        for i in 1..FINITE_BOUNDS {
+            assert_eq!(Histogram::bound(i), 2.0 * Histogram::bound(i - 1));
+        }
+        assert_eq!(Histogram::bound(0), 1e-6);
+    }
+
+    #[test]
+    fn observe_and_summarize() {
+        let mut h = Histogram::new();
+        assert!(h.mean().is_nan());
+        assert!(h.quantile(0.5).is_nan());
+        for _ in 0..9 {
+            h.observe(1e-3);
+        }
+        h.observe(1.0);
+        assert_eq!(h.count(), 10);
+        assert!((h.sum() - (9e-3 + 1.0)).abs() < 1e-12);
+        // 1e-3 lands in bucket 10 (bound 1.024e-3 ≥ 1e-3 > 5.12e-4)
+        assert_eq!(Histogram::bucket_index(1e-3), 10);
+        assert_eq!(h.quantile(0.5), Histogram::bound(10));
+        // rank 10 (p100) is the single 1.0s observation: bucket bound 1.048576
+        assert_eq!(h.quantile(1.0), Histogram::bound(20));
+        assert!(h.stddev() > 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_sums() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.observe(1e-4);
+        b.observe(1e-2);
+        b.observe(5.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - (1e-4 + 1e-2 + 5.0)).abs() < 1e-12);
+        let expect = [1e-4, 1e-2, 5.0].map(Histogram::bucket_index);
+        for idx in expect {
+            assert!(a.bucket_counts()[idx] >= 1);
+        }
+    }
+
+    #[test]
+    fn exposition_roundtrips() {
+        let mut h = Histogram::new();
+        for x in [1e-6, 2e-6, 3e-4, 0.25, 7.5, 500.0] {
+            h.observe(x);
+        }
+        let mut text = String::new();
+        render_series(
+            &mut text,
+            "fw_request_seconds",
+            "objective=\"shortest\",source=\"cpu\"",
+            &h,
+        );
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.len(), 1);
+        let key = "fw_request_seconds{objective=\"shortest\",source=\"cpu\"}";
+        let back = parsed.get(key).expect("series keyed by labels");
+        assert_eq!(back.bucket_counts(), h.bucket_counts());
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.sum(), h.sum()); // Display round-trips f64 exactly
+    }
+
+    #[test]
+    fn exposition_roundtrips_without_labels() {
+        let mut h = Histogram::new();
+        h.observe(0.5);
+        let mut text = String::new();
+        render_series(&mut text, "m", "", &h);
+        assert!(text.contains("m_bucket{le=\"+Inf\"} 1\n"));
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.get("m{}").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_inconsistent_series() {
+        let mut text = String::new();
+        render_series(&mut text, "m", "", &Histogram::new());
+        let broken = text.replace("m_count 0", "m_count 5");
+        assert!(parse_exposition(&broken).is_err());
+    }
+
+    #[test]
+    fn bench_json_matches_bench_result_schema() {
+        let mut h = Histogram::new();
+        h.observe(0.01);
+        h.observe(0.02);
+        let j = h.to_bench_json("serve/cpu/shortest");
+        for key in ["name", "mean_s", "median_s", "stddev_s", "samples"] {
+            assert!(!j.get(key).is_null(), "missing {key}");
+        }
+        assert_eq!(j.get("samples").as_f64(), Some(2.0));
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal leveled structured logging for the serving stack.
+//!
+//! One machine-parsable JSON line per event on stderr — enough for the
+//! server to stop silently dropping connection errors and malformed
+//! requests, without pulling a logging crate into the vendored set.  The
+//! level is a process-global atomic (`--log-level` on `fw-stage serve`);
+//! the default is [`Level::Warn`], so a healthy server stays quiet.
+//!
+//! ```text
+//! {"addr":"127.0.0.1:51724","error":"connection reset","event":"conn_error","level":"warn"}
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::json::Json;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// Set the process-global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current process-global log level.
+pub fn level() -> Level {
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Whether events at `l` are currently emitted (one relaxed atomic load —
+/// cheap enough for any hot path).
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit one structured line to stderr: `event` and `level` keys plus the
+/// caller's fields, serialized by the deterministic sorted-key codec.
+pub fn log(l: Level, event: &str, fields: Vec<(&str, Json)>) {
+    if !enabled(l) {
+        return;
+    }
+    let mut obj = vec![
+        ("event", Json::str(event)),
+        ("level", Json::str(l.name())),
+    ];
+    obj.extend(fields);
+    eprintln!("{}", Json::obj(obj));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_order_and_gate() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug);
+        // exercise the global gate across every level, restoring the
+        // default afterwards (tests share the process-global)
+        let prior = level();
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+        log(Level::Debug, "selftest", vec![("k", Json::num(1.0))]);
+        set_level(prior);
+        assert_eq!(level(), prior);
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+            assert_eq!(Level::from_u8(l as u8), l);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Observability for the serving stack: request-scoped traces, fixed-bucket
+//! latency histograms, and leveled structured logging.
+//!
+//! The paper's speedups came from *measuring* where time went before
+//! restructuring the kernel; this module gives the serving stack the same
+//! attribution.  Three pieces:
+//!
+//! * [`trace`] — per-request span trees (decode → route → solve →
+//!   cache put → encode, with phase/round breakdown inside the solve)
+//!   journaled into a bounded ring buffer and served over the wire
+//!   (`{"type":"trace"}`, or echoed inline via the request `"trace"` flag).
+//! * [`hist`] — log-scaled-bucket latency histograms keyed
+//!   `(source, objective)` in the metrics: exact, mergeable, O(1) memory,
+//!   with a Prometheus text exposition and a parser that round-trips it.
+//! * [`log`] — one JSON line per server-side error on stderr, leveled by a
+//!   process-global `--log-level`.
+//!
+//! **Bitwise neutrality.** Every hook reads wall-clock time *around*
+//! numeric sections (or counts scheduler events); none reorders a float
+//! operation.  Traced and untraced solves are therefore bitwise equal —
+//! the conformance suite pins this, and [`ObsConfig::enabled`] makes the
+//! hooks one branch when off.
+
+pub mod hist;
+pub mod log;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use trace::{Span, TraceJournal, TraceRecord};
+
+/// Observability configuration for a coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    /// Master switch: when false, no spans are built, no traces are
+    /// journaled, and the profiled solver twins are never chosen.  The
+    /// per-`(source, objective)` histograms stay on either way — they are
+    /// O(1) counters on the metrics mutex the request already takes.
+    pub enabled: bool,
+    /// Trace-journal ring size (finished request traces retained for
+    /// `{"type":"trace"}`).
+    pub journal_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            journal_capacity: 256,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Tracing fully off: no span assembly, empty journal.
+    pub fn disabled() -> ObsConfig {
+        ObsConfig {
+            enabled: false,
+            journal_capacity: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_and_disable() {
+        let on = ObsConfig::default();
+        assert!(on.enabled);
+        assert!(on.journal_capacity > 0);
+        let off = ObsConfig::disabled();
+        assert!(!off.enabled);
+        assert_eq!(off.journal_capacity, 0);
+    }
+}

@@ -1,0 +1,280 @@
+//! Request-scoped span trees and the bounded trace journal.
+//!
+//! Every served request gets one [`Span`] tree — decode → route decision
+//! (with the router's reason) → tier solve (with phase/round breakdown) →
+//! cache put → encode — assembled by the server and coordinator as the
+//! request flows through them.  Finished trees are pushed into a
+//! [`TraceJournal`]: a mutex-guarded ring buffer of `Arc`'d records, so
+//! recording is one short critical section and readers never copy span
+//! trees.  The journal is served over the wire by the `{"type":"trace"}`
+//! request and echoed inline when a client sets `"trace": true`.
+//!
+//! Spans carry **timing read outside the numeric kernels** only: the
+//! solvers' profiled twins take `Instant` readings *between* phases, never
+//! reordering a float op, so traced and untraced solves are bitwise equal
+//! (pinned by the conformance suite).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// One node of a request trace: a named, timed section with string notes
+/// and child spans.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub name: String,
+    /// Wall-clock seconds spent in this section (children included).
+    pub seconds: f64,
+    /// Key/value annotations (route reason, tier source, tile counts, …).
+    pub notes: Vec<(String, String)>,
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    pub fn new(name: impl Into<String>) -> Span {
+        Span {
+            name: name.into(),
+            seconds: 0.0,
+            notes: Vec::new(),
+            children: Vec::new(),
+        }
+    }
+
+    /// Attach a key/value note.
+    pub fn note(&mut self, key: &str, value: impl Into<String>) {
+        self.notes.push((key.to_string(), value.into()));
+    }
+
+    /// Attach a finished child span.
+    pub fn child(&mut self, child: Span) {
+        self.children.push(child);
+    }
+
+    /// First note value for `key`, if any (test/display helper).
+    pub fn note_value(&self, key: &str) -> Option<&str> {
+        self.notes
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// First child (depth-first) named `name`, if any.
+    pub fn find(&self, name: &str) -> Option<&Span> {
+        for c in &self.children {
+            if c.name == name {
+                return Some(c);
+            }
+            if let Some(hit) = c.find(name) {
+                return Some(hit);
+            }
+        }
+        None
+    }
+
+    /// Compact tree-shape signature, e.g. `request(decode,route,solve(
+    /// phase1,phase2,phase3),cache_put,encode)` — timing-free, so it is
+    /// deterministic for a replayed request and pinnable in tests.
+    pub fn shape(&self) -> String {
+        if self.children.is_empty() {
+            return self.name.clone();
+        }
+        let inner: Vec<String> = self.children.iter().map(Span::shape).collect();
+        format!("{}({})", self.name, inner.join(","))
+    }
+
+    /// JSON form: `{"name":…,"seconds":…,"notes":{…},"spans":[…]}` (notes
+    /// and spans omitted when empty; keys sort deterministically).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name.clone())),
+            ("seconds", Json::Num(self.seconds)),
+        ];
+        if !self.notes.is_empty() {
+            fields.push((
+                "notes",
+                Json::Obj(
+                    self.notes
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.children.is_empty() {
+            fields.push((
+                "spans",
+                Json::Arr(self.children.iter().map(Span::to_json).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// One journaled request trace.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub id: u64,
+    /// Tier that served the request (`Source::name()`).
+    pub source: String,
+    /// Objective name (`shortest`, `bottleneck`, …).
+    pub objective: String,
+    pub n: usize,
+    pub root: Span,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("objective", Json::str(self.objective.clone())),
+            ("source", Json::str(self.source.clone())),
+            ("root", self.root.to_json()),
+        ])
+    }
+}
+
+/// Bounded ring buffer of finished traces.  Recording takes the mutex for
+/// one push/pop; records are `Arc`'d so serving the journal never clones a
+/// span tree.  Capacity 0 disables retention (records pass through).
+#[derive(Debug)]
+pub struct TraceJournal {
+    capacity: usize,
+    inner: Mutex<VecDeque<Arc<TraceRecord>>>,
+}
+
+impl TraceJournal {
+    pub fn new(capacity: usize) -> TraceJournal {
+        TraceJournal {
+            capacity,
+            inner: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Journal one finished trace, evicting the oldest past capacity.
+    /// Returns the shared record (the server echoes it when the client
+    /// asked for an inline trace).
+    pub fn record(&self, record: TraceRecord) -> Arc<TraceRecord> {
+        let record = Arc::new(record);
+        if self.capacity > 0 {
+            let mut q = self.inner.lock().unwrap();
+            q.push_back(Arc::clone(&record));
+            while q.len() > self.capacity {
+                q.pop_front();
+            }
+        }
+        record
+    }
+
+    /// Last `k` traces, newest first, optionally filtered by tier source
+    /// and/or objective name.
+    pub fn last(
+        &self,
+        k: usize,
+        source: Option<&str>,
+        objective: Option<&str>,
+    ) -> Vec<Arc<TraceRecord>> {
+        let q = self.inner.lock().unwrap();
+        q.iter()
+            .rev()
+            .filter(|r| source.is_none_or(|s| r.source == s))
+            .filter(|r| objective.is_none_or(|o| r.objective == o))
+            .take(k)
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, source: &str, objective: &str) -> TraceRecord {
+        let mut root = Span::new("request");
+        root.seconds = 0.5;
+        let mut solve = Span::new("solve");
+        solve.note("source", source);
+        root.child(solve);
+        TraceRecord {
+            id,
+            source: source.into(),
+            objective: objective.into(),
+            n: 64,
+            root,
+        }
+    }
+
+    #[test]
+    fn span_shape_and_lookup() {
+        let mut root = Span::new("request");
+        root.child(Span::new("decode"));
+        let mut solve = Span::new("solve");
+        solve.child(Span::new("phase1"));
+        solve.child(Span::new("phase2"));
+        root.child(solve);
+        root.child(Span::new("encode"));
+        assert_eq!(root.shape(), "request(decode,solve(phase1,phase2),encode)");
+        assert!(root.find("phase2").is_some());
+        assert!(root.find("phase9").is_none());
+    }
+
+    #[test]
+    fn span_json_omits_empty_fields_and_roundtrips() {
+        let mut s = Span::new("route");
+        s.seconds = 1.25e-6;
+        s.note("reason", "n <= cpu_threshold");
+        let j = s.to_json();
+        assert_eq!(j.get("name").as_str(), Some("route"));
+        assert_eq!(j.get("notes").get("reason").as_str(), Some("n <= cpu_threshold"));
+        assert!(j.get("spans").is_null());
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn journal_is_a_ring() {
+        let journal = TraceJournal::new(3);
+        for id in 0..5 {
+            journal.record(record(id, "cpu", "shortest"));
+        }
+        assert_eq!(journal.len(), 3);
+        let got = journal.last(10, None, None);
+        let ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4, 3, 2], "newest first, oldest evicted");
+    }
+
+    #[test]
+    fn journal_filters_by_source_and_objective() {
+        let journal = TraceJournal::new(16);
+        journal.record(record(1, "cpu", "shortest"));
+        journal.record(record(2, "superblock", "shortest"));
+        journal.record(record(3, "cpu", "bottleneck"));
+        assert_eq!(journal.last(10, Some("cpu"), None).len(), 2);
+        assert_eq!(journal.last(10, None, Some("shortest")).len(), 2);
+        let both = journal.last(10, Some("cpu"), Some("bottleneck"));
+        assert_eq!(both.len(), 1);
+        assert_eq!(both[0].id, 3);
+        assert_eq!(journal.last(1, Some("cpu"), None)[0].id, 3);
+    }
+
+    #[test]
+    fn zero_capacity_journal_passes_through() {
+        let journal = TraceJournal::new(0);
+        let rec = journal.record(record(7, "cache", "shortest"));
+        assert_eq!(rec.id, 7);
+        assert!(journal.is_empty());
+    }
+}

@@ -203,6 +203,13 @@ impl BenchSink {
         self.results.push(Json::Obj(obj));
     }
 
+    /// Record an already-shaped measurement object (e.g. the live-serving
+    /// histogram rows from [`crate::obs::hist::Histogram::to_bench_json`]),
+    /// letting non-`bench()` sources feed the same trajectory file.
+    pub fn record_json(&mut self, row: Json) {
+        self.results.push(row);
+    }
+
     /// Append this run to the trajectory file.  Returns the path written,
     /// or `None` when the sink is disabled.
     pub fn finish(self) -> std::io::Result<Option<PathBuf>> {
@@ -329,6 +336,27 @@ mod tests {
         }
         // deterministic serialization (sorted keys) round-trips
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn record_json_feeds_raw_rows() {
+        let path = std::env::temp_dir().join(format!(
+            "fw-stage-perf-sink-raw-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut sink = BenchSink::to_path("rawtest", &path);
+        sink.record_json(Json::obj(vec![
+            ("name", Json::str("serve/solve")),
+            ("count", Json::Num(7.0)),
+        ]));
+        sink.finish().unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = doc.get("runs").as_arr().unwrap();
+        let results = runs[0].get("results").as_arr().unwrap();
+        assert_eq!(results[0].get("name").as_str(), Some("serve/solve"));
+        assert_eq!(results[0].get("count").as_f64(), Some(7.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

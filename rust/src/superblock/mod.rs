@@ -61,11 +61,20 @@ pub struct SuperBlockConfig {
     pub bucket: usize,
     /// Phase-2/3 pool width; 0 = one worker per available core.
     pub workers: usize,
+    /// Record per-round worker occupancy and critical-path accounting
+    /// into the [`Report`] (via [`pool::run_tasks_profiled`]).  Timing
+    /// reads happen around tile bodies, never inside them, so results are
+    /// bitwise-identical either way; off keeps the pool measurement-free.
+    pub profile: bool,
 }
 
 impl SuperBlockConfig {
     pub fn new(bucket: usize) -> SuperBlockConfig {
-        SuperBlockConfig { bucket, workers: 0 }
+        SuperBlockConfig {
+            bucket,
+            workers: 0,
+            profile: false,
+        }
     }
 
     /// The pool width actually used (resolves `workers == 0`).
@@ -153,7 +162,7 @@ where
             n_int if n_int > 0 && n_int < workers => (workers / n_int).max(1),
             _ => 1,
         };
-        pool::run_tasks(&plan.dep_graph(), workers, |id| match plan.tasks[id].op {
+        let exec = |id: usize| match plan.tasks[id].op {
             TileOp::PanelRow { bj } => {
                 let mut tile = tiles[k * blocks + bj].write().unwrap();
                 minplus::panel_row_semiring::<S>(&mut tile, &diag, b);
@@ -178,13 +187,24 @@ where
                     minplus::interior_semiring::<S>(&mut tile, &col, &row, b);
                 }
             }
-        });
+        };
+        let deps = plan.dep_graph();
+        let (busy_seconds, idle_seconds, critical_path) = if config.profile {
+            let prof = pool::run_tasks_profiled(&deps, workers, &exec);
+            (prof.busy_total(), prof.idle_total(), prof.critical_path)
+        } else {
+            pool::run_tasks(&deps, workers, &exec);
+            (0.0, 0.0, 0)
+        };
         report.rounds.push(progress::RoundStats {
             round: k,
             diag_seconds,
             tile_seconds: t1.elapsed().as_secs_f64(),
             panel_tiles: plan.panel_tiles(),
             interior_tiles: plan.interior_tiles(),
+            busy_seconds,
+            idle_seconds,
+            critical_path,
         });
     }
 
@@ -333,7 +353,7 @@ pub fn solve_paths_semiring<S: Semiring>(
             n_int if n_int > 0 && n_int < workers => (workers / n_int).max(1),
             _ => 1,
         };
-        pool::run_tasks(&plan.dep_graph(), workers, |id| match plan.tasks[id].op {
+        let exec = |id: usize| match plan.tasks[id].op {
             TileOp::PanelRow { bj } => {
                 let mut guard = tiles[k * blocks + bj].write().unwrap();
                 let tile = &mut *guard;
@@ -365,13 +385,24 @@ pub fn solve_paths_semiring<S: Semiring>(
                     intra_threads,
                 );
             }
-        });
+        };
+        let deps = plan.dep_graph();
+        let (busy_seconds, idle_seconds, critical_path) = if config.profile {
+            let prof = pool::run_tasks_profiled(&deps, workers, &exec);
+            (prof.busy_total(), prof.idle_total(), prof.critical_path)
+        } else {
+            pool::run_tasks(&deps, workers, &exec);
+            (0.0, 0.0, 0)
+        };
         report.rounds.push(progress::RoundStats {
             round: k,
             diag_seconds,
             tile_seconds: t1.elapsed().as_secs_f64(),
             panel_tiles: plan.panel_tiles(),
             interior_tiles: plan.interior_tiles(),
+            busy_seconds,
+            idle_seconds,
+            critical_path,
         });
     }
 
@@ -474,7 +505,11 @@ mod tests {
     use crate::graph::generators;
 
     fn cfg(bucket: usize, workers: usize) -> SuperBlockConfig {
-        SuperBlockConfig { bucket, workers }
+        SuperBlockConfig {
+            bucket,
+            workers,
+            profile: false,
+        }
     }
 
     #[test]
@@ -675,6 +710,35 @@ mod tests {
         for workers in [2, 4] {
             let (par, _) = solve_paths_semiring::<MaxMin>(&g, &cfg(16, workers));
             assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn profiling_is_bitwise_neutral_and_accounts_workers() {
+        // the observability contract: profile on/off cannot perturb a
+        // single bit of output, but on populates occupancy accounting
+        let g = generators::erdos_renyi(96, 0.3, 31);
+        for workers in [1, 4] {
+            let plain = cfg(32, workers);
+            let profiled = SuperBlockConfig {
+                profile: true,
+                ..plain
+            };
+            let (d0, r0) = solve_cpu(&g, &plain);
+            let (d1, r1) = solve_cpu(&g, &profiled);
+            assert_eq!(d0, d1, "workers={workers}");
+            assert_eq!(r0.busy_seconds(), 0.0, "off records nothing");
+            assert_eq!(r0.max_critical_path(), 0);
+            assert!(r1.busy_seconds() > 0.0, "on accounts busy time");
+            // blocks=3 → per round 1 panel-depth + 1 interior-depth
+            assert_eq!(r1.max_critical_path(), 2);
+            let occ = r1.occupancy();
+            assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+            // path mode carries the same accounting
+            let (p0, _) = solve_paths(&g, &plain);
+            let (p1, pr1) = solve_paths(&g, &profiled);
+            assert_eq!(p0, p1, "workers={workers}");
+            assert_eq!(pr1.max_critical_path(), 2);
         }
     }
 

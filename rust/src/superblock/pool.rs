@@ -14,6 +14,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Execute every task of a dependency graph.
 ///
@@ -93,6 +94,173 @@ where
     });
 }
 
+/// Worker-occupancy accounting for one [`run_tasks_profiled`] round.
+///
+/// `busy_seconds[w]` is the wall-clock time worker `w` spent inside task
+/// bodies; `idle_seconds[w]` the time it spent waiting for a ready task
+/// (queue empty or lock contention).  `critical_path` is the longest
+/// dependency chain in the round's graph, in tasks — the schedule-imposed
+/// lower bound on rounds of parallel work, independent of pool width.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolProfile {
+    pub workers: usize,
+    pub busy_seconds: Vec<f64>,
+    pub idle_seconds: Vec<f64>,
+    pub critical_path: usize,
+}
+
+impl PoolProfile {
+    pub fn busy_total(&self) -> f64 {
+        self.busy_seconds.iter().sum()
+    }
+
+    pub fn idle_total(&self) -> f64 {
+        self.idle_seconds.iter().sum()
+    }
+
+    /// Fraction of worker wall-clock spent in task bodies (1.0 for an
+    /// empty round — nothing was wasted).
+    pub fn occupancy(&self) -> f64 {
+        let busy = self.busy_total();
+        let total = busy + self.idle_total();
+        if total == 0.0 {
+            1.0
+        } else {
+            busy / total
+        }
+    }
+}
+
+/// Longest dependency chain of a task graph, in tasks (0 for an empty
+/// graph).  Expects the topologically-ordered graphs [`super::schedule`]
+/// emits (`deps[t]` only references earlier tasks).
+pub fn critical_path(deps: &[Vec<usize>]) -> usize {
+    let mut chain = vec![0usize; deps.len()];
+    let mut best = 0;
+    for (t, ds) in deps.iter().enumerate() {
+        let deepest = ds
+            .iter()
+            .map(|&d| {
+                debug_assert!(d < t, "plan not topological");
+                chain[d]
+            })
+            .max()
+            .unwrap_or(0);
+        chain[t] = deepest + 1;
+        best = best.max(chain[t]);
+    }
+    best
+}
+
+/// [`run_tasks`] with per-worker occupancy accounting.
+///
+/// Executes the identical schedule — same ready-queue discipline, same
+/// release order — and additionally times each worker's task bodies and
+/// waits.  Task bodies themselves are untouched (timing reads happen
+/// around `exec`, never inside it), so results are exactly those of
+/// [`run_tasks`]; the profiled path exists so the hot path stays
+/// measurement-free when observability is off.
+pub fn run_tasks_profiled<F>(deps: &[Vec<usize>], workers: usize, exec: F) -> PoolProfile
+where
+    F: Fn(usize) + Sync,
+{
+    let total = deps.len();
+    let cp = critical_path(deps);
+    if total == 0 {
+        return PoolProfile {
+            workers: 0,
+            critical_path: cp,
+            ..PoolProfile::default()
+        };
+    }
+    if workers <= 1 {
+        let mut busy = 0.0;
+        for t in 0..total {
+            debug_assert!(deps[t].iter().all(|&d| d < t), "plan not topological");
+            let t0 = Instant::now();
+            exec(t);
+            busy += t0.elapsed().as_secs_f64();
+        }
+        return PoolProfile {
+            workers: 1,
+            busy_seconds: vec![busy],
+            idle_seconds: vec![0.0],
+            critical_path: cp,
+        };
+    }
+
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); total];
+    for (t, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            assert!(d < total, "dependency {d} out of range");
+            dependents[d].push(t);
+        }
+    }
+
+    struct State {
+        ready: VecDeque<usize>,
+        pending: Vec<usize>,
+        remaining: usize,
+    }
+    let state = Mutex::new(State {
+        ready: (0..total).filter(|&t| deps[t].is_empty()).collect(),
+        pending: deps.iter().map(Vec::len).collect(),
+        remaining: total,
+    });
+    let cv = Condvar::new();
+
+    let workers = workers.min(total);
+    let per_worker: Vec<(f64, f64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut busy = 0.0;
+                    let mut idle = 0.0;
+                    loop {
+                        let wait0 = Instant::now();
+                        let task = {
+                            let mut st = state.lock().unwrap();
+                            loop {
+                                if st.remaining == 0 {
+                                    idle += wait0.elapsed().as_secs_f64();
+                                    return (busy, idle);
+                                }
+                                if let Some(t) = st.ready.pop_front() {
+                                    break t;
+                                }
+                                st = cv.wait(st).unwrap();
+                            }
+                        };
+                        idle += wait0.elapsed().as_secs_f64();
+                        let t0 = Instant::now();
+                        exec(task);
+                        busy += t0.elapsed().as_secs_f64();
+                        let mut st = state.lock().unwrap();
+                        st.remaining -= 1;
+                        for &d in &dependents[task] {
+                            st.pending[d] -= 1;
+                            if st.pending[d] == 0 {
+                                st.ready.push_back(d);
+                            }
+                        }
+                        if st.remaining == 0 || !st.ready.is_empty() {
+                            cv.notify_all();
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let (busy_seconds, idle_seconds) = per_worker.into_iter().unzip();
+    PoolProfile {
+        workers,
+        busy_seconds,
+        idle_seconds,
+        critical_path: cp,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +337,76 @@ mod tests {
     #[test]
     fn more_workers_than_tasks() {
         check_order(&diamond(), 64);
+    }
+
+    #[test]
+    fn critical_path_pins() {
+        assert_eq!(critical_path(&[]), 0);
+        assert_eq!(critical_path(&diamond()), 3, "0 → 1|2 → 3");
+        let chain: Vec<Vec<usize>> = (0..10)
+            .map(|t| if t == 0 { vec![] } else { vec![t - 1] })
+            .collect();
+        assert_eq!(critical_path(&chain), 10);
+        let independent: Vec<Vec<usize>> = (0..7).map(|_| Vec::new()).collect();
+        assert_eq!(critical_path(&independent), 1);
+        // a real round plan: panels (depth 1) feed interiors (depth 2)
+        let plan = crate::superblock::schedule::round_plan(5, 2);
+        assert_eq!(critical_path(&plan.dep_graph()), 2);
+    }
+
+    /// Profiled runs obey the same ordering contract as [`run_tasks`].
+    fn check_order_profiled(deps: &[Vec<usize>], workers: usize) -> PoolProfile {
+        let order: StdMutex<Vec<usize>> = StdMutex::new(Vec::new());
+        let profile = run_tasks_profiled(deps, workers, |t| {
+            order.lock().unwrap().push(t);
+        });
+        let order = order.into_inner().unwrap();
+        assert_eq!(order.len(), deps.len(), "every task ran exactly once");
+        let mut position = vec![usize::MAX; deps.len()];
+        for (pos, &t) in order.iter().enumerate() {
+            assert_eq!(position[t], usize::MAX, "task {t} ran twice");
+            position[t] = pos;
+        }
+        for (t, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                assert!(position[d] < position[t], "task {t} before dep {d}");
+            }
+        }
+        profile
+    }
+
+    #[test]
+    fn profiled_runs_match_schedule_and_account_workers() {
+        for workers in [1, 2, 4] {
+            let profile = check_order_profiled(&diamond(), workers);
+            assert_eq!(profile.workers, workers.min(4));
+            assert_eq!(profile.busy_seconds.len(), profile.workers);
+            assert_eq!(profile.idle_seconds.len(), profile.workers);
+            assert_eq!(profile.critical_path, 3);
+            assert!(profile.busy_total() >= 0.0);
+            assert!(profile.idle_total() >= 0.0);
+            let occ = profile.occupancy();
+            assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+        }
+    }
+
+    #[test]
+    fn profiled_empty_round() {
+        let profile = run_tasks_profiled(&[], 4, |_| panic!("no tasks"));
+        assert_eq!(profile.workers, 0);
+        assert_eq!(profile.critical_path, 0);
+        assert_eq!(profile.occupancy(), 1.0, "empty round wastes nothing");
+    }
+
+    #[test]
+    fn profiled_serial_accumulates_busy_only() {
+        let deps: Vec<Vec<usize>> = (0..5).map(|_| Vec::new()).collect();
+        let profile = run_tasks_profiled(&deps, 1, |_| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(profile.workers, 1);
+        assert_eq!(profile.idle_seconds, vec![0.0]);
+        assert!(profile.busy_seconds[0] >= 0.0);
+        assert_eq!(profile.occupancy(), 1.0);
     }
 }

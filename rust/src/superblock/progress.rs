@@ -17,6 +17,15 @@ pub struct RoundStats {
     pub tile_seconds: f64,
     pub panel_tiles: usize,
     pub interior_tiles: usize,
+    /// Summed seconds pool workers spent inside tile bodies this round
+    /// (0 unless the solve ran with profiling on).
+    pub busy_seconds: f64,
+    /// Summed seconds pool workers spent waiting for ready tiles this
+    /// round (0 unless profiling was on).
+    pub idle_seconds: f64,
+    /// Longest dependency chain in this round's tile graph, in tasks
+    /// (0 unless profiling was on).
+    pub critical_path: usize,
 }
 
 /// Aggregate accounting for one superblock solve.
@@ -71,6 +80,38 @@ impl Report {
     pub fn tile_seconds(&self) -> f64 {
         self.rounds.iter().map(|r| r.tile_seconds).sum()
     }
+
+    /// Total worker-busy seconds across rounds (0 without profiling).
+    pub fn busy_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.busy_seconds).sum()
+    }
+
+    /// Total worker-idle seconds across rounds (0 without profiling).
+    pub fn idle_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.idle_seconds).sum()
+    }
+
+    /// Aggregate pool occupancy: busy / (busy + idle); 1.0 when nothing
+    /// was measured (profiling off or no pool work at all).
+    pub fn occupancy(&self) -> f64 {
+        let busy = self.busy_seconds();
+        let total = busy + self.idle_seconds();
+        if total == 0.0 {
+            1.0
+        } else {
+            busy / total
+        }
+    }
+
+    /// Deepest per-round critical path, in tile tasks (0 without
+    /// profiling).
+    pub fn max_critical_path(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| r.critical_path)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 impl fmt::Display for Report {
@@ -106,6 +147,9 @@ mod tests {
                 tile_seconds: 1.0,
                 panel_tiles: 6,
                 interior_tiles: 9,
+                busy_seconds: 0.75,
+                idle_seconds: 0.25,
+                critical_path: 2,
             });
         }
         assert_eq!(report.round_count(), 4);
@@ -116,6 +160,11 @@ mod tests {
         let line = report.to_string();
         assert!(line.contains("blocks=4"), "{line}");
         assert!(line.contains("60 tiles"), "{line}");
+        // occupancy fields aggregate too
+        assert!((report.busy_seconds() - 3.0).abs() < 1e-12);
+        assert!((report.idle_seconds() - 1.0).abs() < 1e-12);
+        assert!((report.occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(report.max_critical_path(), 2);
     }
 
     #[test]
@@ -123,5 +172,7 @@ mod tests {
         let report = Report::new(64, 64, 64, 1, 1);
         assert_eq!(report.total_tiles(), 0);
         assert_eq!(report.round_count(), 0);
+        assert_eq!(report.occupancy(), 1.0, "nothing measured, nothing wasted");
+        assert_eq!(report.max_critical_path(), 0);
     }
 }

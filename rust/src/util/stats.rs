@@ -1,12 +1,36 @@
 //! Summary statistics for the first-party benchmark harness (`perf` module
-//! and `rust/benches/*`): online mean/variance (Welford) plus exact
-//! percentiles over retained samples.
+//! and `rust/benches/*`) and the serving metrics: online summaries plus
+//! exact percentiles over retained samples.
+//!
+//! Retention is **bounded**: past [`DEFAULT_CAP`] (or an explicit
+//! [`Samples::with_capacity`] cap) the newest sample overwrites the oldest
+//! — a sliding window — so a long-running coordinator's latency tracking
+//! is O(cap), not O(requests).  Summaries then describe the window;
+//! [`Samples::seen`] still counts everything ever pushed.  Benchmarks
+//! record a few hundred samples and never hit the cap.
+
+/// Default retention cap: far above any bench run, small enough that a
+/// pathological serving workload stays at ~128 KiB per sample set.
+pub const DEFAULT_CAP: usize = 16384;
 
 /// A batch of duration/throughput samples with summary accessors.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Samples {
+    /// Retained window (ring order once the cap is reached).
     xs: Vec<f64>,
+    /// Sorted copy of `xs`, rebuilt lazily for percentile calls.
+    scratch: Vec<f64>,
     sorted: bool,
+    cap: usize,
+    /// Ring cursor: index of the oldest retained sample once full.
+    next: usize,
+    seen: u64,
+}
+
+impl Default for Samples {
+    fn default() -> Self {
+        Samples::with_capacity(DEFAULT_CAP)
+    }
 }
 
 impl Samples {
@@ -14,24 +38,59 @@ impl Samples {
         Self::default()
     }
 
+    /// Sample set retaining at most `cap` most-recent values.
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "sample capacity must be positive");
+        Samples {
+            xs: Vec::new(),
+            scratch: Vec::new(),
+            sorted: false,
+            cap,
+            next: 0,
+            seen: 0,
+        }
+    }
+
     pub fn push(&mut self, x: f64) {
-        self.xs.push(x);
+        if self.xs.len() < self.cap {
+            self.xs.push(x);
+        } else {
+            // full: overwrite the oldest (sliding window)
+            self.xs[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.seen += 1;
         self.sorted = false;
     }
 
+    /// Number of retained samples (≤ the cap).
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
-    /// Raw samples (insertion order not guaranteed after percentile calls).
+    /// Total samples ever pushed, including any that slid out of the
+    /// window.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retention cap.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Retained samples (ring order once the window is full — treat as an
+    /// unordered window).
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
 
-    /// Merge another sample set into this one.
+    /// Merge another sample set's retained window into this one (subject
+    /// to this set's cap).
     pub fn merge(&mut self, other: &Samples) {
-        self.xs.extend_from_slice(&other.xs);
-        self.sorted = false;
+        for &x in &other.xs {
+            self.push(x);
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -64,19 +123,22 @@ impl Samples {
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Exact percentile by nearest-rank on the sorted samples; `p` in [0, 100].
+    /// Exact percentile by nearest-rank on the sorted retained samples;
+    /// `p` in [0, 100].
     pub fn percentile(&mut self, p: f64) -> f64 {
         assert!((0.0..=100.0).contains(&p), "percentile {p}");
         if self.xs.is_empty() {
             return f64::NAN;
         }
         if !self.sorted {
-            self.xs
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&self.xs);
+            self.scratch
                 .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
             self.sorted = true;
         }
-        let rank = ((p / 100.0) * (self.xs.len() - 1) as f64).round() as usize;
-        self.xs[rank]
+        let rank = ((p / 100.0) * (self.scratch.len() - 1) as f64).round() as usize;
+        self.scratch[rank]
     }
 
     pub fn median(&mut self) -> f64 {
@@ -192,5 +254,63 @@ mod tests {
         s.push(0.5);
         s.push(0.6);
         assert_eq!(s.percentile(0.0), 0.5);
+    }
+
+    #[test]
+    fn capped_retention_is_a_sliding_window() {
+        let mut s = Samples::with_capacity(4);
+        for x in 0..10 {
+            s.push(x as f64);
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.seen(), 10);
+        // the window holds exactly the last four pushes
+        let mut window: Vec<f64> = s.values().to_vec();
+        window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(window, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(s.percentile(0.0), 6.0);
+        assert_eq!(s.percentile(100.0), 9.0);
+        assert!((s.mean() - 7.5).abs() < 1e-12);
+        // memory stays put: further pushes never grow the buffer
+        for x in 10..1000 {
+            s.push(x as f64);
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.capacity(), 4);
+        assert_eq!(s.percentile(100.0), 999.0);
+    }
+
+    #[test]
+    fn window_interleaves_with_percentile_sorting() {
+        // sorting for percentiles must not corrupt eviction order: the
+        // sorted copy lives in scratch, the window keeps insertion order
+        let mut s = Samples::with_capacity(3);
+        for x in [3.0, 1.0, 2.0] {
+            s.push(x);
+        }
+        assert_eq!(s.median(), 2.0);
+        s.push(10.0); // evicts 3.0 (the oldest), not a sorted-position victim
+        let mut window: Vec<f64> = s.values().to_vec();
+        window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(window, vec![1.0, 2.0, 10.0]);
+    }
+
+    #[test]
+    fn merge_respects_the_cap() {
+        let mut a = Samples::with_capacity(2);
+        let b = of(&[1.0, 2.0, 3.0]);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.seen(), 3);
+        let mut window: Vec<f64> = a.values().to_vec();
+        window.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(window, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn default_cap_is_generous() {
+        let s = Samples::new();
+        assert_eq!(s.capacity(), DEFAULT_CAP);
+        assert!(DEFAULT_CAP >= 1000, "bench workloads must fit untruncated");
     }
 }

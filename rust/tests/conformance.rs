@@ -59,6 +59,15 @@
 //! `objective_unsupported` wire error and per-objective cache isolation
 //! are pinned here too.
 //!
+//! The **observability regime** section gates the tracing layer: traced
+//! requests take the profiled solver twins (`solve_profiled`,
+//! `profile: true` super-block configs), whose `Instant` reads sit
+//! *between* phases — so traced and untraced solves must be bitwise
+//! identical, span shapes and route reasons are pinned over the wire, the
+//! trace journal serves newest-first with source filters, and the
+//! per-code error counters plus the Prometheus exposition round-trip
+//! through `parse_exposition`.
+//!
 //! Every property here sizes its case count through
 //! `util::proptest::env_cases`, so the dedicated CI conformance job can
 //! run the same suites harder (`FW_PROPTEST_CASES=8`) without forking the
@@ -81,6 +90,16 @@ use fw_stage::util::proptest::{check, env_cases, Config};
 use fw_stage::INF;
 
 // ------------------------------------------------------------ generators --
+
+/// Measurement-free superblock config (the conformance suite pins the
+/// profiled twin separately, in `prop_observability_is_bitwise_neutral`).
+fn sb_cfg(bucket: usize, workers: usize) -> SuperBlockConfig {
+    SuperBlockConfig {
+        bucket,
+        workers,
+        profile: false,
+    }
+}
 
 /// Random graph mixing the shapes the tiers must agree on: sparse digraphs
 /// (unreachable pairs), dense digraphs, and layered DAGs with negative
@@ -162,10 +181,10 @@ fn prop_blocked_family_distances_bitwise_equal() {
 
         let blocked = apsp::blocked::solve(&g, s);
         let parallel = apsp::parallel::solve(&g, s, threads);
-        let (sb, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket: s, workers });
+        let (sb, _) = superblock::solve_cpu(&g, &sb_cfg(s, workers));
         let blocked_p = apsp::blocked::solve_paths(&g, s);
         let parallel_p = apsp::parallel::solve_paths(&g, s, threads);
-        let (sb_p, _) = superblock::solve_paths(&g, &SuperBlockConfig { bucket: s, workers });
+        let (sb_p, _) = superblock::solve_paths(&g, &sb_cfg(s, workers));
 
         for (name, dist) in [
             ("parallel", &parallel),
@@ -284,7 +303,7 @@ fn prop_algorithm_families_distances_close() {
         }
         // superblock pads non-multiple n internally
         let bucket = [8, 16][rng.range(0, 2)];
-        let (sb, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket, workers: 2 });
+        let (sb, _) = superblock::solve_cpu(&g, &sb_cfg(bucket, 2));
         if !sb.allclose(&naive, 1e-4, 1e-4) {
             return Err(format!("superblock(b={bucket}) vs naive, n={n}"));
         }
@@ -308,7 +327,7 @@ fn prop_every_path_tier_reconstructs_reference_distances() {
             ("parallel", apsp::parallel::solve_paths(&g, s, 3)),
             (
                 "superblock",
-                superblock::solve_paths(&g, &SuperBlockConfig { bucket: s, workers: 2 }).0,
+                superblock::solve_paths(&g, &sb_cfg(s, 2)).0,
             ),
         ];
         for (name, r) in &tiers {
@@ -851,6 +870,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             no_cache: false,
             want_paths: true,
             objective: "shortest".into(),
+            trace: false,
         }),
     );
     assert_eq!(Json::parse(&prime).unwrap().get("type").as_str(), Some("result"));
@@ -889,6 +909,7 @@ fn update_roundtrip_chains_through_server_and_cache() {
             no_cache: false,
             want_paths: true,
             objective: "shortest".into(),
+            trace: false,
         }),
     );
     let hit = types::decode_response(&hit).expect("cache hit");
@@ -970,6 +991,7 @@ fn chain_cap_rebaselines_through_a_full_solve() {
             no_cache: false,
             want_paths: true,
             objective: "shortest".into(),
+            trace: false,
         })
         .expect("prime");
     let solve_update = |base: &DistMatrix, batch: &[EdgeUpdate]| {
@@ -1054,6 +1076,7 @@ fn paths_through_coordinator_superblock_tier() {
             no_cache: false,
             want_paths: true,
             objective: "shortest".into(),
+            trace: false,
         })
         .expect("superblock paths solve");
     assert_eq!(resp.source, Source::SuperBlock);
@@ -1061,7 +1084,7 @@ fn paths_through_coordinator_superblock_tier() {
     let r = PathsResult::from_parts(resp.dist.clone(), resp.succ.clone().expect("succ"));
     assert_paths_valid(&g, &r, "superblock-coordinator").expect("valid paths");
     // distances bitwise vs the CPU superblock tier at the same bucket
-    let (oracle, _) = superblock::solve_cpu(&g, &SuperBlockConfig { bucket: 64, workers: 0 });
+    let (oracle, _) = superblock::solve_cpu(&g, &sb_cfg(64, 0));
     assert_eq!(r.dist, oracle);
 }
 
@@ -1224,8 +1247,7 @@ fn selection_tiers_agree<S: Semiring>(
         return Err(format!("{}: parallel(s={s}, t={threads}) != naive (n={n})", S::NAME));
     }
     let bucket = [8, 16][rng.range(0, 2)];
-    let (sb, _) =
-        superblock::solve_cpu_semiring::<S>(&prepared, &SuperBlockConfig { bucket, workers: 2 });
+    let (sb, _) = superblock::solve_cpu_semiring::<S>(&prepared, &sb_cfg(bucket, 2));
     if sb != oracle {
         return Err(format!("{}: superblock(b={bucket}) != naive (n={n})", S::NAME));
     }
@@ -1471,4 +1493,237 @@ fn objective_end_to_end_and_cache_isolation() {
     // the bottleneck closure has an inf diagonal (ONE = +inf), the shortest
     // one a zero diagonal — served pairs can never be confused
     assert_ne!(spaths.dist, bpaths.dist, "bottleneck pair leaked into a shortest request");
+}
+
+// ------------------------------------------------- observability regime --
+
+/// Tracing must never change solver outputs: traced requests run the
+/// profiled solver twins, whose timing reads sit between phases, so the
+/// distances are bitwise identical to an obs-disabled coordinator across
+/// every objective — and the assembled span tree always carries the route
+/// decision (with reason) and the tier solve.
+#[test]
+fn prop_observability_is_bitwise_neutral() {
+    let on = synthetic_coordinator();
+    let off = synthetic_coordinator_with(|c| c.obs = fw_stage::obs::ObsConfig::disabled());
+    let cfg = Config { cases: env_cases(16), max_size: 28, ..Config::default() };
+    check("tracing is bitwise neutral", cfg, |rng, size| {
+        // n ≤ cpu_threshold keeps the synthetic stack on the CPU tier;
+        // positive weights keep every objective's domain valid
+        let n = 4 + rng.range(0, size.max(4));
+        let g = generators::erdos_renyi_weighted(n, 0.4, 0.1, 10.0, rng.next_u64());
+        let objective =
+            ["shortest", "bottleneck", "minimax", "reachability"][rng.range(0, 4)];
+        let req = coordinator::Request {
+            id: rng.next_u64() % 1_000_000,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: true,
+            want_paths: false,
+            objective: objective.into(),
+            trace: true,
+        };
+        let (traced, root) = on.solve_spanned(&req).map_err(|e| format!("{e:#}"))?;
+        let plain = off.solve(&req).map_err(|e| format!("{e:#}"))?;
+        if traced.dist != plain.dist {
+            return Err(format!("n={n} {objective}: traced dist diverges from plain"));
+        }
+        let route = root.find("route").ok_or("trace lacks a route span")?;
+        if route.note_value("reason") != Some("n within cpu threshold") {
+            return Err(format!("route reason {:?}", route.note_value("reason")));
+        }
+        let solve = root.find("solve").ok_or("trace lacks a solve span")?;
+        if solve.note_value("source") != Some(traced.source.name()) {
+            return Err(format!("solve source note {:?}", solve.note_value("source")));
+        }
+        // the CPU tier's profiled twin feeds the phase/round breakdown
+        if solve.note_value("rounds").is_none() {
+            return Err("solve span lacks the rounds note".into());
+        }
+        Ok(())
+    });
+
+    // the profiled twins themselves, off the serving stack: profile on vs
+    // off is bitwise across the blocked family, and the super-block pool's
+    // occupancy accounting is internally consistent
+    let mut rng = Rng::new(0x0B5);
+    for n in [33usize, 64, 96] {
+        let g = arb_graph(&mut rng, n);
+        let (bp, prof) = apsp::blocked::solve_profiled(&g, 16);
+        assert_eq!(bp, apsp::blocked::solve(&g, 16), "blocked twin diverges at n={n}");
+        assert!(prof.rounds > 0 && prof.total_seconds() >= 0.0);
+        let (pp, _) = apsp::parallel::solve_profiled(&g, 16, 3);
+        assert_eq!(pp, apsp::parallel::solve(&g, 16, 3), "parallel twin diverges at n={n}");
+        let profiled_cfg = SuperBlockConfig { bucket: 32, workers: 2, profile: true };
+        let (sp, report) = superblock::solve_cpu(&g, &profiled_cfg);
+        let (s0, _) = superblock::solve_cpu(&g, &sb_cfg(32, 2));
+        assert_eq!(sp, s0, "superblock twin diverges at n={n}");
+        assert!(report.busy_seconds() > 0.0, "profiled pool recorded no busy time");
+        let occ = report.occupancy();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ} outside [0, 1]");
+        assert!(report.max_critical_path() > 0, "profiled pool lost the critical path");
+    }
+}
+
+/// The wire contract of a traced request: the echo splice keeps the reply
+/// canonical JSON, span shapes are pinned for the cache-miss and cache-hit
+/// paths, and the journal serves newest-first with source filters.
+#[test]
+fn traced_request_span_shapes_and_journal_over_the_wire() {
+    let coord = synthetic_coordinator();
+    let g = generators::erdos_renyi(24, 0.3, 515); // n ≤ cpu_threshold → CPU tier
+    let request = |id: u64| {
+        types::encode_request(&coordinator::Request {
+            id,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: false,
+            objective: "shortest".into(),
+            trace: true,
+        })
+    };
+    let span_names = |tree: &Json| -> Vec<String> {
+        tree.get("spans")
+            .as_arr()
+            .expect("trace has child spans")
+            .iter()
+            .filter_map(|s| s.get("name").as_str().map(str::to_string))
+            .collect()
+    };
+
+    // first request: cache miss — the full decode → route → solve →
+    // cache_put → encode shape, with the router's reason and the profiled
+    // twin's phase breakdown riding as notes
+    let reply = server::handle_line(&coord, &request(21));
+    let v = Json::parse(&reply).expect("traced reply is valid JSON");
+    assert_eq!(v.get("type").as_str(), Some("result"), "reply: {reply}");
+    assert_eq!(v.to_string(), reply, "trace splice broke canonical key order");
+    let tree = v.get("trace");
+    assert_eq!(tree.get("name").as_str(), Some("request"));
+    assert_eq!(span_names(tree), ["decode", "route", "solve", "cache_put", "encode"]);
+    let spans = tree.get("spans").as_arr().unwrap();
+    assert_eq!(spans[1].get("notes").get("decision").as_str(), Some("cpu"));
+    assert_eq!(
+        spans[1].get("notes").get("reason").as_str(),
+        Some("n within cpu threshold"),
+        "route reason is part of the trace contract"
+    );
+    let solve_notes = spans[2].get("notes");
+    assert_eq!(solve_notes.get("source").as_str(), Some("cpu"));
+    for key in ["phase1_s", "phase2_s", "phase3_s", "rounds"] {
+        assert!(solve_notes.get(key).as_str().is_some(), "solve span lacks {key}: {reply}");
+    }
+
+    // repeat: cache hit — a different, shorter pinned shape
+    let v2 = Json::parse(&server::handle_line(&coord, &request(22))).unwrap();
+    assert_eq!(v2.get("source").as_str(), Some("cache"));
+    assert_eq!(span_names(v2.get("trace")), ["decode", "cache_get", "encode"]);
+
+    // the journal holds both, newest first, and filters by tier source
+    let listing = Json::parse(&server::handle_line(&coord, r#"{"type":"trace","k":8}"#)).unwrap();
+    assert_eq!(listing.get("type").as_str(), Some("trace"));
+    assert_eq!(listing.get("count").as_f64(), Some(2.0));
+    let traces = listing.get("traces").as_arr().unwrap();
+    assert_eq!(traces[0].get("id").as_f64(), Some(22.0), "newest first");
+    assert_eq!(traces[0].get("source").as_str(), Some("cache"));
+    assert_eq!(traces[1].get("source").as_str(), Some("cpu"));
+    assert_eq!(traces[1].get("root").get("name").as_str(), Some("request"));
+    let cpu_only =
+        Json::parse(&server::handle_line(&coord, r#"{"type":"trace","k":8,"source":"cpu"}"#))
+            .unwrap();
+    assert_eq!(cpu_only.get("count").as_f64(), Some(1.0), "source filter leaked");
+    assert_eq!(cpu_only.get("traces").as_arr().unwrap()[0].get("id").as_f64(), Some(21.0));
+
+    // untraced requests are journaled too (the journal is the server's
+    // memory, not the client's), but their replies carry no echo
+    let plain = server::handle_line(
+        &coord,
+        &types::encode_request(&coordinator::Request {
+            id: 23,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: false,
+            objective: "shortest".into(),
+            trace: false,
+        }),
+    );
+    assert!(Json::parse(&plain).unwrap().get("trace").is_null(), "unasked echo: {plain}");
+    assert_eq!(coord.journal().len(), 3);
+}
+
+/// `solve_traced` over TCP: the inline echo round-trips, results match the
+/// local tier bitwise — and against an obs-disabled server the client gets
+/// a clean error (no echo to return) while the journal stays empty.
+#[test]
+fn solve_traced_roundtrip_and_disabled_server() {
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn(coord.clone(), "127.0.0.1:0").expect("server");
+    let mut client =
+        coordinator::client::Client::connect(&srv.addr().to_string()).expect("connect");
+    let g = generators::erdos_renyi(28, 0.25, 616);
+    let (resp, tree) = client.solve_traced(&g, "staged").expect("traced solve");
+    assert_eq!(resp.dist, apsp::blocked::solve(&g, 32), "traced result diverges from tier");
+    assert_eq!(tree.get("name").as_str(), Some("request"));
+    assert!(!tree.get("spans").as_arr().unwrap().is_empty());
+    let listing = client.trace(4, None, None).expect("journal listing");
+    assert_eq!(listing.get("count").as_f64(), Some(1.0));
+
+    let off = Arc::new(synthetic_coordinator_with(|c| {
+        c.obs = fw_stage::obs::ObsConfig::disabled();
+    }));
+    let srv_off = server::Server::spawn(off.clone(), "127.0.0.1:0").expect("server");
+    let mut client_off =
+        coordinator::client::Client::connect(&srv_off.addr().to_string()).expect("connect");
+    // plain solves still serve; traced ones fail loudly instead of
+    // silently dropping the echo
+    assert_eq!(client_off.solve(&g, "staged").unwrap().dist, resp.dist);
+    let err = client_off.solve_traced(&g, "staged").unwrap_err();
+    assert!(err.to_string().contains("trace"), "{err}");
+    assert!(off.journal().is_empty(), "disabled journal retained records");
+}
+
+/// Per-code error counters and the Prometheus exposition: typed failures
+/// land under their wire code, histograms key by `(source, objective)`,
+/// and the rendered text round-trips through `parse_exposition`.
+#[test]
+fn error_codes_and_exposition_round_trip() {
+    let coord = synthetic_coordinator();
+    let ok = server::handle_line(
+        &coord,
+        r#"{"type":"solve","id":1,"n":3,"edges":[[0,1,2.0],[1,2,3.0]]}"#,
+    );
+    assert_eq!(Json::parse(&ok).unwrap().get("type").as_str(), Some("result"));
+    assert_error_shape(&server::handle_line(&coord, "{not json"), "");
+    assert_error_shape(
+        &server::handle_line(
+            &coord,
+            r#"{"type":"solve","id":2,"n":3,"variant":"johnson","objective":"minimax","edges":[]}"#,
+        ),
+        "johnson",
+    );
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.get("errors").as_f64(), Some(2.0), "{snap}");
+    let codes = snap.get("errors_by_code").as_obj().expect("errors_by_code object");
+    assert_eq!(codes.get("malformed").and_then(Json::as_f64), Some(1.0), "{snap}");
+    assert_eq!(
+        codes.get(types::CODE_OBJECTIVE_UNSUPPORTED).and_then(Json::as_f64),
+        Some(1.0),
+        "{snap}"
+    );
+    let hists = snap.get("latency_hist").as_obj().expect("latency_hist object");
+    assert!(hists.contains_key("cpu/shortest"), "{snap}");
+
+    // the wire exposition parses back into the histogram it rendered
+    let reply = Json::parse(&server::handle_line(&coord, r#"{"type":"exposition"}"#)).unwrap();
+    assert_eq!(reply.get("type").as_str(), Some("exposition"));
+    let text = reply.get("text").as_str().expect("exposition text");
+    assert!(text.contains("fw_requests_total"), "{text}");
+    assert!(text.contains("fw_errors_total 2"), "{text}");
+    let series = fw_stage::obs::hist::parse_exposition(text).expect("exposition parses");
+    let h = &series["fw_request_seconds{objective=\"shortest\",source=\"cpu\"}"];
+    assert_eq!(h.count(), 1, "one CPU solve observed");
+    assert!(h.sum() >= 0.0);
 }

@@ -214,6 +214,7 @@ fn oversized_graph_served_by_superblock_tier() {
                 no_cache: true,
                 want_paths: false,
                 objective: "shortest".into(),
+                trace: false,
             })
             .expect("oversized graphs are served by the superblock tier");
         assert_eq!(resp.source, coordinator::Source::SuperBlock);
@@ -280,6 +281,7 @@ fn invalid_superblock_bucket_override_is_clean_error() {
                     no_cache: true,
                     want_paths: false,
                     objective: "shortest".into(),
+                    trace: false,
                 })
                 .unwrap_err();
             assert!(

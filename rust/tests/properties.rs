@@ -250,6 +250,7 @@ fn prop_wire_request_roundtrip() {
             want_paths: rng.chance(0.5),
             objective: ["shortest", "bottleneck", "minimax", "reachability"][rng.range(0, 4)]
                 .to_string(),
+            trace: rng.chance(0.5),
         };
         let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
         if back.id != req.id || back.variant != req.variant || back.graph != req.graph {
@@ -260,6 +261,9 @@ fn prop_wire_request_roundtrip() {
         }
         if back.objective != req.objective {
             return Err("objective diverged".to_string());
+        }
+        if back.trace != req.trace {
+            return Err("trace flag diverged".to_string());
         }
         Ok(())
     });

@@ -15,7 +15,11 @@ use fw_stage::graph::{generators, DistMatrix};
 use fw_stage::superblock::{self, SuperBlockConfig};
 
 fn sb(bucket: usize, workers: usize) -> SuperBlockConfig {
-    SuperBlockConfig { bucket, workers }
+    SuperBlockConfig {
+        bucket,
+        workers,
+        profile: false,
+    }
 }
 
 // ---------------------------------------------------------- artifact-free --
@@ -97,6 +101,7 @@ fn oversized_request_served_and_cached() {
             no_cache: false,
             want_paths: false,
             objective: "shortest".into(),
+            trace: false,
         };
         let first = coord.solve(&req).expect("n=1024 must be served now");
         assert_eq!(first.source, Source::SuperBlock);
@@ -134,6 +139,7 @@ fn explicit_superblock_variant() {
                 no_cache: true,
                 want_paths: false,
                 objective: "shortest".into(),
+                trace: false,
             })
             .unwrap();
         assert_eq!(resp.source, Source::SuperBlock);
