@@ -16,6 +16,7 @@ mod common;
 
 use fw_stage::apsp::kernel::{self, PanelBuf};
 use fw_stage::apsp::semiring::{self, MinPlus, Objective};
+use fw_stage::apsp::simd;
 use fw_stage::graph::generators;
 use fw_stage::layout;
 use fw_stage::perf::{bench, BenchResult, BenchSink};
@@ -44,6 +45,9 @@ fn main() {
     let mut sink = BenchSink::from_env("apsp");
     sink.set_meta("n", Json::Num(n as f64));
     sink.set_meta("fast", Json::Bool(common::fast_mode()));
+    // which SIMD ISA the ambient rows below ran on — the trajectory is
+    // meaningless without it once runners differ
+    sink.set_meta("kernel", Json::str(simd::active().name()));
 
     common::banner(&format!("APSP CPU solvers (n={n})"));
     let r = bench("naive triple loop", &cfg, || {
@@ -97,6 +101,16 @@ fn main() {
         perf::black_box(&dst);
     });
     emit(&mut sink, &r, Some(s3));
+    // one row per ISA this host can execute (scalar always included) — the
+    // scalar-vs-SIMD spread IS the perf trajectory of the vector kernels,
+    // and the bitwise conformance gate makes the comparison apples-to-apples
+    for isa in simd::available_isas() {
+        let r = bench(&format!("phase3 tile s=32 kernel={}", isa.name()), &cfg, || {
+            kernel::panel_with::<MinPlus>(isa, &mut dst[s..], n, col, n, &row[s..], n, s, s, s);
+            perf::black_box(&dst);
+        });
+        emit(&mut sink, &r, Some(s3));
+    }
 
     common::banner("semiring objectives, blocked s=32");
     // one row per non-(min,+) serving objective: the same blocked schedule

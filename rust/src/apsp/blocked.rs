@@ -14,7 +14,9 @@
 //!    ([`kernel::panel`]) — the CPU analog of the paper's multi-stage
 //!    kernel.  The column-panel tile is packed once per tile row
 //!    ([`kernel::PanelBuf`], the §4.3 coalescing analog), which also
-//!    de-aliases it from the in-place destination rows.
+//!    de-aliases it from the in-place destination rows.  Both the panel
+//!    kernel and the row sweep dispatch to the runtime-selected SIMD ISA
+//!    ([`crate::apsp::simd`]) — bitwise-invisible to this driver.
 //!
 //! The whole schedule is generic over the [`Semiring`]
 //! ([`solve_semiring`], [`solve_paths_semiring`]): nothing above uses any

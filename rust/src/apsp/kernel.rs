@@ -61,8 +61,16 @@
 //! feeds the microkernel unit-stride `k`-walks and resolves the borrow
 //! overlap when the column panel shares rows with `dst` (the in-place and
 //! banded tiers).  [`should_pack`] documents when packing pays on its own.
+//!
+//! As of the SIMD PR, [`panel`], [`panel_succ`], and
+//! [`relax_row_semiring`] dispatch to the process-wide lane ISA chosen by
+//! [`crate::apsp::simd`] (AVX2/AVX-512/NEON, `FW_KERNEL` override, scalar
+//! fallback); [`panel_scalar`] / [`panel_succ_scalar`] are the unchanged
+//! PR 4 register-tiled loops, and `*_with` variants take an explicit
+//! [`Isa`] so every compiled path can be pinned and priced in one process.
 
 use super::semiring::{MinPlus, Semiring};
+use super::simd::{self, Isa};
 
 /// Register-block rows: output cells each microkernel step holds per row
 /// group.  4 broadcast values per k-step.
@@ -87,16 +95,44 @@ pub fn should_pack(stride: usize, kk: usize) -> bool {
 }
 
 /// Branchless semiring row sweep shared by the phase-1/2 bodies:
-/// `out[j] = out[j] ⊕ (wik ⊗ row_k[j])`.
+/// `out[j] = out[j] ⊕ (wik ⊗ row_k[j])`, dispatched to the process-wide
+/// kernel ISA ([`simd::active`]).
 ///
 /// For `(min, +)` this is value-identical to the branchy `if cand < out[j]`
 /// accept (no NaN, no `-0.0`, and equal floats share one bit pattern), and
-/// free of the store branch, so the sweep autovectorizes.  Callers must
-/// keep `k` sequential — see the module docs for why phases 1–2 admit only
-/// this much.
-#[inline(always)]
+/// free of the store branch — so the scalar form autovectorizes and the
+/// explicit lane forms compute the same bits per element (the sweep never
+/// reassociates across `j`).  Callers must keep `k` sequential — see the
+/// module docs for why phases 1–2 admit only this much.
+#[inline]
 pub fn relax_row_semiring<S: Semiring>(out: &mut [f32], row_k: &[f32], wik: f32) {
+    relax_row_with::<S>(simd::active(), out, row_k, wik);
+}
+
+/// [`relax_row_semiring`] on an explicit ISA.  An ISA this build does not
+/// compile falls back to scalar (same bits per element — there is nothing
+/// to observe); hosts should still only pass available ISAs.
+#[inline]
+pub fn relax_row_with<S: Semiring>(isa: Isa, out: &mut [f32], row_k: &[f32], wik: f32) {
     debug_assert_eq!(out.len(), row_k.len());
+    debug_assert!(isa.available(), "kernel ISA {} unavailable on this host", isa.name());
+    match isa {
+        Isa::Scalar => relax_row_scalar::<S>(out, row_k, wik),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { simd::x86::relax_row_avx2::<S>(out, row_k, wik) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe { simd::x86::relax_row_avx512::<S>(out, row_k, wik) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { simd::arm::relax_row_neon::<S>(out, row_k, wik) },
+        #[allow(unreachable_patterns)]
+        _ => relax_row_scalar::<S>(out, row_k, wik),
+    }
+}
+
+/// The scalar row sweep — the PR 4 loop, kept as the fallback lane shape
+/// and the oracle the SIMD sweeps are held to.
+#[inline(always)]
+pub fn relax_row_scalar<S: Semiring>(out: &mut [f32], row_k: &[f32], wik: f32) {
     let len = out.len().min(row_k.len());
     for j in 0..len {
         out[j] = S::combine(out[j], S::extend(wik, row_k[j]));
@@ -146,6 +182,11 @@ pub fn row_pair_mut(
 /// aliases `dst` rows).  At [`MinPlus`] this is bitwise-identical to the
 /// scalar i-k-j conditional-store loop — see the module docs for the
 /// argument and the tests that pin it.
+///
+/// Dispatches once per call to the process-wide kernel ISA
+/// ([`simd::active`]); every lane path is held to [`panel_reference`]
+/// bitwise, so the dispatch is unobservable except in speed.
+#[allow(clippy::too_many_arguments)]
 pub fn panel<S: Semiring>(
     dst: &mut [f32],
     dst_stride: usize,
@@ -157,9 +198,89 @@ pub fn panel<S: Semiring>(
     cols: usize,
     kk: usize,
 ) {
+    panel_with::<S>(
+        simd::active(),
+        dst,
+        dst_stride,
+        col,
+        col_stride,
+        row,
+        row_stride,
+        rows,
+        cols,
+        kk,
+    );
+}
+
+/// [`panel`] on an explicit ISA — how benches price and the conformance
+/// matrix pins every compiled lane path in one process.  Panics if `isa`
+/// cannot run on this host: the typed rejection that replaces an
+/// illegal-instruction fault (`FW_KERNEL` misuse is normally caught
+/// earlier, at [`simd::resolve`]).
+#[allow(clippy::too_many_arguments)]
+pub fn panel_with<S: Semiring>(
+    isa: Isa,
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    assert!(
+        isa.available(),
+        "kernel ISA {} is not available on this host (available: {})",
+        isa.name(),
+        simd::available_names()
+    );
     debug_assert!(rows == 0 || cols == 0 || (rows - 1) * dst_stride + cols <= dst.len());
     debug_assert!(rows == 0 || kk == 0 || (rows - 1) * col_stride + kk <= col.len());
     debug_assert!(kk == 0 || cols == 0 || (kk - 1) * row_stride + cols <= row.len());
+    match isa {
+        Isa::Scalar => panel_scalar::<S>(
+            dst, dst_stride, col, col_stride, row, row_stride, rows, cols, kk,
+        ),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            simd::x86::panel_avx2::<S>(
+                dst, dst_stride, col, col_stride, row, row_stride, rows, cols, kk,
+            )
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            simd::x86::panel_avx512::<S>(
+                dst, dst_stride, col, col_stride, row, row_stride, rows, cols, kk,
+            )
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            simd::arm::panel_neon::<S>(
+                dst, dst_stride, col, col_stride, row, row_stride, rows, cols, kk,
+            )
+        },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel ISA {} is not compiled for this target", other.name()),
+    }
+}
+
+/// The scalar `MR × NR` register-tiled panel — the PR 4 path, kept intact
+/// as the [`Isa::Scalar`] lane shape and the first rung of the oracle
+/// ladder (it is itself pinned against [`panel_reference`]).
+#[allow(clippy::too_many_arguments)]
+pub fn panel_scalar<S: Semiring>(
+    dst: &mut [f32],
+    dst_stride: usize,
+    col: &[f32],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
     let mut rb = 0;
     while rb + MR <= rows {
         let col_rows = &col[rb * col_stride..];
@@ -318,9 +439,10 @@ fn micro_full<S: Semiring>(
 
 /// Ragged-edge fallback for blocks narrower than `MR × NR`: a plain scalar
 /// fold per cell, still ascending in `k`, so edges carry the same bitwise
-/// guarantee as the register path.
+/// guarantee as the register path.  The SIMD panels reuse it for their
+/// `cols % lanes` column remainders (`pub(crate)` for `apsp::simd`).
 #[inline]
-fn micro_edge<S: Semiring>(
+pub(crate) fn micro_edge<S: Semiring>(
     dst: &mut [f32],
     dst_stride: usize,
     col: &[f32],
@@ -350,7 +472,10 @@ fn micro_edge<S: Semiring>(
 /// order, with the strict [`Semiring::improves`] accept copying the
 /// column-panel successor `colsucc[r][k]` — so values *and* successors are
 /// bitwise equal to the scalar succ loop.  `dsucc` shares `dst_stride`;
-/// `colsucc` shares `col_stride`.
+/// `colsucc` shares `col_stride`.  Dispatches like [`panel`]; the SIMD
+/// twins express the accept as a compare-mask select and replay the same
+/// ascending-k sequence.
+#[allow(clippy::too_many_arguments)]
 pub fn panel_succ<S: Semiring>(
     dst: &mut [f32],
     dsucc: &mut [usize],
@@ -364,8 +489,93 @@ pub fn panel_succ<S: Semiring>(
     cols: usize,
     kk: usize,
 ) {
+    panel_succ_with::<S>(
+        simd::active(),
+        dst,
+        dsucc,
+        dst_stride,
+        col,
+        colsucc,
+        col_stride,
+        row,
+        row_stride,
+        rows,
+        cols,
+        kk,
+    );
+}
+
+/// [`panel_succ`] on an explicit ISA; panics (typed) if `isa` cannot run
+/// here — see [`panel_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn panel_succ_with<S: Semiring>(
+    isa: Isa,
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
+    assert!(
+        isa.available(),
+        "kernel ISA {} is not available on this host (available: {})",
+        isa.name(),
+        simd::available_names()
+    );
     debug_assert!(rows == 0 || cols == 0 || (rows - 1) * dst_stride + cols <= dsucc.len());
     debug_assert!(rows == 0 || kk == 0 || (rows - 1) * col_stride + kk <= colsucc.len());
+    match isa {
+        Isa::Scalar => panel_succ_scalar::<S>(
+            dst, dsucc, dst_stride, col, colsucc, col_stride, row, row_stride, rows, cols, kk,
+        ),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            simd::x86::panel_succ_avx2::<S>(
+                dst, dsucc, dst_stride, col, colsucc, col_stride, row, row_stride, rows, cols,
+                kk,
+            )
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 => unsafe {
+            simd::x86::panel_succ_avx512::<S>(
+                dst, dsucc, dst_stride, col, colsucc, col_stride, row, row_stride, rows, cols,
+                kk,
+            )
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            simd::arm::panel_succ_neon::<S>(
+                dst, dsucc, dst_stride, col, colsucc, col_stride, row, row_stride, rows, cols,
+                kk,
+            )
+        },
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel ISA {} is not compiled for this target", other.name()),
+    }
+}
+
+/// The scalar register-tiled successor panel (the [`Isa::Scalar`] lane
+/// shape; PR 4 path, unchanged).
+#[allow(clippy::too_many_arguments)]
+pub fn panel_succ_scalar<S: Semiring>(
+    dst: &mut [f32],
+    dsucc: &mut [usize],
+    dst_stride: usize,
+    col: &[f32],
+    colsucc: &[usize],
+    col_stride: usize,
+    row: &[f32],
+    row_stride: usize,
+    rows: usize,
+    cols: usize,
+    kk: usize,
+) {
     let mut rb = 0;
     while rb + MR <= rows {
         let col_rows = &col[rb * col_stride..];
@@ -491,9 +701,9 @@ fn micro_full_succ<S: Semiring>(
 }
 
 /// Ragged-edge successor fallback (ascending k, strict accept — the scalar
-/// order).
+/// order).  Also the SIMD succ panels' column-remainder path.
 #[inline]
-fn micro_edge_succ<S: Semiring>(
+pub(crate) fn micro_edge_succ<S: Semiring>(
     dst: &mut [f32],
     dsucc: &mut [usize],
     dst_stride: usize,
@@ -939,5 +1149,118 @@ mod tests {
         let mut pack = PanelBuf::default();
         pack.pack_dist(&[], 4, 0, 0);
         assert!(pack.dist().is_empty());
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_reference() {
+        // the dispatch contract: each compiled-and-runnable lane path is a
+        // bitwise no-op relative to the scalar reference, incl. tile 33
+        // (ragged rows, cols, and a mid-panel lane remainder)
+        let mut rng = Rng::new(0x51D0);
+        for isa in simd::available_isas() {
+            for s in [8usize, 16, 32, 33] {
+                for density in [0.0, 0.3, 1.0] {
+                    let stride = s + 7;
+                    let base = arb_panel(&mut rng, s, s, stride, density);
+                    let col = arb_panel(&mut rng, s, s, stride, density);
+                    let row = arb_panel(&mut rng, s, s, stride, density);
+                    let mut expect = base.clone();
+                    scalar_reference(&mut expect, stride, &col, stride, &row, stride, s, s, s);
+                    let mut got = base.clone();
+                    panel_with::<MinPlus>(isa, &mut got, stride, &col, stride, &row, stride, s, s, s);
+                    assert!(
+                        bitwise_eq(&expect, &got),
+                        "isa={} s={s} density={density}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_ragged_lane_remainders_match() {
+        // n % lanes != 0 in every combination around the widest lane count
+        let mut rng = Rng::new(0x51D1);
+        for isa in simd::available_isas() {
+            for rows in [1usize, 3, 5] {
+                for cols in [1usize, 7, 9, 15, 17, 31] {
+                    for kk in [1usize, 5, 13] {
+                        let base = arb_panel(&mut rng, rows, cols, cols, 0.4);
+                        let col = arb_panel(&mut rng, rows, kk, kk, 0.4);
+                        let row = arb_panel(&mut rng, kk, cols, cols, 0.4);
+                        let mut expect = base.clone();
+                        scalar_reference(&mut expect, cols, &col, kk, &row, cols, rows, cols, kk);
+                        let mut got = base.clone();
+                        panel_with::<MinPlus>(isa, &mut got, cols, &col, kk, &row, cols, rows, cols, kk);
+                        assert!(
+                            bitwise_eq(&expect, &got),
+                            "isa={} rows={rows} cols={cols} kk={kk}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_succ_twin_matches_scalar() {
+        let mut rng = Rng::new(0x51D2);
+        for isa in simd::available_isas() {
+            for s in [8usize, 17, 33] {
+                let stride = s + 5;
+                let base = arb_panel(&mut rng, s, s, stride, 0.4);
+                let col = arb_panel(&mut rng, s, s, stride, 0.4);
+                let row = arb_panel(&mut rng, s, s, stride, 0.4);
+                let base_succ: Vec<usize> = (0..s * stride).collect();
+                let col_succ: Vec<usize> = (0..s * stride).map(|v| v + 10_000).collect();
+                let mut ed = base.clone();
+                let mut es = base_succ.clone();
+                scalar_reference_succ(
+                    &mut ed, &mut es, stride, &col, &col_succ, stride, &row, stride, s, s, s,
+                );
+                let mut gd = base.clone();
+                let mut gs = base_succ.clone();
+                panel_succ_with::<MinPlus>(
+                    isa, &mut gd, &mut gs, stride, &col, &col_succ, stride, &row, stride, s, s, s,
+                );
+                assert!(bitwise_eq(&ed, &gd), "isa={} dist s={s}", isa.name());
+                assert_eq!(es, gs, "isa={} succ s={s}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_relax_row_matches_scalar() {
+        let mut rng = Rng::new(0x51D3);
+        for isa in simd::available_isas() {
+            for _ in 0..25 {
+                let len = 1 + (rng.next_u64() % 40) as usize;
+                let base = arb_panel(&mut rng, 1, len, len, 0.3);
+                let row_k = arb_panel(&mut rng, 1, len, len, 0.3);
+                let wik = (rng.next_f64() * 10.0 - 3.0) as f32;
+                let mut expect = base.clone();
+                relax_row_scalar::<MinPlus>(&mut expect, &row_k, wik);
+                let mut got = base.clone();
+                relax_row_with::<MinPlus>(isa, &mut got, &row_k, wik);
+                assert!(bitwise_eq(&expect, &got), "isa={} len={len}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not available on this host")]
+    fn panel_with_unavailable_isa_panics_with_typed_message() {
+        // the other family's ISA can never run here — the assert must fire
+        // before any intrinsic does
+        #[cfg(target_arch = "x86_64")]
+        let foreign = simd::Isa::Neon;
+        #[cfg(not(target_arch = "x86_64"))]
+        let foreign = simd::Isa::Avx2;
+        let mut dst = vec![0.0f32; 64];
+        let col = vec![0.0f32; 64];
+        let row = vec![0.0f32; 64];
+        panel_with::<MinPlus>(foreign, &mut dst, 8, &col, 8, &row, 8, 8, 8, 8);
     }
 }

@@ -17,7 +17,9 @@
 //! `⊕`/`⊗` algebra, so the same tiers serve shortest path `(min, +)`,
 //! bottleneck `(max, min)`, minimax `(min, max)`, and transitive closure
 //! `(or, and)`; `(min, +)` stays the monomorphized, bitwise-pinned
-//! specialization.  [`incremental`] applies edge-weight deltas to an
+//! specialization.  The microkernel dispatches at runtime to explicit
+//! SIMD lane kernels ([`simd`]: AVX2/AVX-512/NEON, `FW_KERNEL` override,
+//! scalar fallback), every one held bitwise to the scalar reference.  [`incremental`] applies edge-weight deltas to an
 //! existing `(dist, succ)` closure — the dynamic-graph tier the
 //! coordinator serves `"update"` requests with (shortest-only, as is
 //! [`johnson`]).
@@ -30,6 +32,7 @@ pub mod naive;
 pub mod parallel;
 pub mod paths;
 pub mod semiring;
+pub mod simd;
 pub mod validate;
 
 pub use validate::{check_invariants, negative_cycle_vertices};

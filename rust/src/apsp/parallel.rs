@@ -7,6 +7,9 @@
 //! `threads` row bands using `std::thread::scope`; each band drives the
 //! shared register-tiled microkernel ([`kernel::minplus_panel`]) over its
 //! tiles, packing the band-local column-panel tile once per tile row.
+//! The kernel dispatches to the runtime-selected SIMD ISA
+//! ([`crate::apsp::simd`]); the choice is process-wide and cached, so
+//! every band runs the same lane shape.
 //!
 //! Safety model (no `unsafe`): before phase 3, the stage's row panel is
 //! copied to a scratch buffer (every thread reads it, one thread owns its

@@ -52,6 +52,32 @@ use super::paths::PathsResult;
 use crate::graph::DistMatrix;
 use crate::INF;
 
+/// The f32 lane operation a semiring op lowers to in a SIMD kernel.
+///
+/// Every instance's `⊕`/`⊗` is one of three per-lane f32 primitives, which
+/// is what lets `apsp::simd` write each ISA's panel kernel **once** and
+/// monomorphize it per semiring: the vector kernels select the intrinsic
+/// from [`Semiring::COMBINE_OP`] / [`Semiring::EXTEND_OP`] (a match on a
+/// const, folded away after monomorphization).  `Min`/`Max` lower to
+/// `MINPS`/`MAXPS`-family instructions whose "return the second operand on
+/// ties" quirk is bitwise-invisible on the stack's NaN-free, `-0.0`-free
+/// domain — equal floats share one bit pattern — so the lane ops are
+/// bitwise-identical to the scalar `f32::min`/`f32::max`/`+` (pinned by
+/// `lane_ops_are_bitwise_scalar_ops` below).
+///
+/// `⊕` is always a selection (`Min` or `Max`, never `Add`): that is what
+/// makes the compare-mask successor select in the SIMD succ kernels
+/// express the strict [`Semiring::improves`] accept exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneOp {
+    /// Lane-wise `f32::min` (x86 `MINPS`, NEON `FMINNM`-free `vminq`).
+    Min,
+    /// Lane-wise `f32::max`.
+    Max,
+    /// Lane-wise f32 addition.
+    Add,
+}
+
 /// A closed semiring over `f32` path values.  Implementations are
 /// zero-sized marker types; every solver generic over `S: Semiring`
 /// monomorphizes to exactly the operations the specialized `(min, +)`
@@ -63,6 +89,14 @@ pub trait Semiring: Copy + Send + Sync + 'static {
     const ZERO: f32;
     /// ⊗ identity: the value of the empty path (the diagonal).
     const ONE: f32;
+
+    /// The lane primitive `combine` lowers to — must be a selection
+    /// ([`LaneOp::Min`] or [`LaneOp::Max`]) that is bitwise-equal to
+    /// `combine` on the instance's domain.
+    const COMBINE_OP: LaneOp;
+    /// The lane primitive `extend` lowers to — bitwise-equal to `extend`
+    /// on the instance's domain.
+    const EXTEND_OP: LaneOp;
 
     /// ⊕ — fold two path values into the better one.
     fn combine(a: f32, b: f32) -> f32;
@@ -95,6 +129,8 @@ impl Semiring for MinPlus {
     const NAME: &'static str = "shortest";
     const ZERO: f32 = INF;
     const ONE: f32 = 0.0;
+    const COMBINE_OP: LaneOp = LaneOp::Min;
+    const EXTEND_OP: LaneOp = LaneOp::Add;
 
     #[inline(always)]
     fn combine(a: f32, b: f32) -> f32 {
@@ -144,6 +180,8 @@ impl Semiring for MaxMin {
     const NAME: &'static str = "bottleneck";
     const ZERO: f32 = 0.0;
     const ONE: f32 = INF;
+    const COMBINE_OP: LaneOp = LaneOp::Max;
+    const EXTEND_OP: LaneOp = LaneOp::Min;
 
     #[inline(always)]
     fn combine(a: f32, b: f32) -> f32 {
@@ -187,6 +225,8 @@ impl Semiring for MinMax {
     const NAME: &'static str = "minimax";
     const ZERO: f32 = INF;
     const ONE: f32 = 0.0;
+    const COMBINE_OP: LaneOp = LaneOp::Min;
+    const EXTEND_OP: LaneOp = LaneOp::Max;
 
     #[inline(always)]
     fn combine(a: f32, b: f32) -> f32 {
@@ -230,6 +270,8 @@ impl Semiring for BoolOrAnd {
     const NAME: &'static str = "reachability";
     const ZERO: f32 = 0.0;
     const ONE: f32 = 1.0;
+    const COMBINE_OP: LaneOp = LaneOp::Max;
+    const EXTEND_OP: LaneOp = LaneOp::Min;
 
     #[inline(always)]
     fn combine(a: f32, b: f32) -> f32 {
@@ -484,6 +526,67 @@ mod tests {
         }
         assert!(S::is_zero(S::ZERO), "{}", S::NAME);
         assert!(!S::is_zero(S::ONE), "{}", S::NAME);
+    }
+
+    /// Scalar model of one SIMD lane: what a `MINPS`/`MAXPS`/`ADDPS` lane
+    /// computes on clean (NaN-free, `-0.0`-free) inputs.  The x86 min/max
+    /// instructions return the *second* operand on ties; on a domain where
+    /// equal floats share one bit pattern that choice is unobservable, so
+    /// `if a < b { a } else { b }` is the faithful model.
+    fn lane_model(op: LaneOp, a: f32, b: f32) -> f32 {
+        match op {
+            LaneOp::Min => {
+                if a < b {
+                    a
+                } else {
+                    b
+                }
+            }
+            LaneOp::Max => {
+                if a > b {
+                    a
+                } else {
+                    b
+                }
+            }
+            LaneOp::Add => a + b,
+        }
+    }
+
+    fn lane_ops_match<S: Semiring>(samples: &[f32]) {
+        assert_ne!(
+            S::COMBINE_OP,
+            LaneOp::Add,
+            "{}: ⊕ must be a selection for the compare-mask succ lanes",
+            S::NAME
+        );
+        for &a in samples {
+            for &b in samples {
+                assert_eq!(
+                    lane_model(S::COMBINE_OP, a, b).to_bits(),
+                    S::combine(a, b).to_bits(),
+                    "{} combine({a}, {b})",
+                    S::NAME
+                );
+                assert_eq!(
+                    lane_model(S::EXTEND_OP, a, b).to_bits(),
+                    S::extend(a, b).to_bits(),
+                    "{} extend({a}, {b})",
+                    S::NAME
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_ops_are_bitwise_scalar_ops() {
+        // the contract the per-ISA kernels in apsp::simd lean on: lowering
+        // ⊕/⊗ to lane min/max/add is bitwise-invisible on each instance's
+        // domain (incl. ties, ZERO, ONE, and +inf)
+        lane_ops_match::<MinPlus>(&[-5.0, -0.5, 0.0, 0.25, 1.0, 1.0, 3.5, 1e9, INF]);
+        lane_ops_match::<MaxMin>(&[0.0, 0.25, 1.0, 3.5, 1e9, INF]);
+        lane_ops_match::<MinMax>(&[0.0, 0.25, 1.0, 3.5, 1e9, INF]);
+        lane_ops_match::<BoolOrAnd>(&[0.0, 1.0]);
     }
 
     #[test]

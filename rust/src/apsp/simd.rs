@@ -1,0 +1,890 @@
+//! Explicit-SIMD lane kernels and the runtime ISA dispatch table.
+//!
+//! PR 4's register-tiled microkernel (`apsp::kernel`) leans on the
+//! autovectorizer; the KNL blocked-FW case study (arxiv 1811.01201,
+//! PAPERS.md) shows that making the phase-3 panel loop's lanes *explicit*
+//! is where the remaining order of magnitude lives.  This module holds the
+//! per-ISA `std::arch` implementations of the panel kernels — AVX2 8-wide
+//! f32, AVX-512 16-wide, NEON 4-wide — plus the dispatch machinery that
+//! picks one at startup:
+//!
+//! * [`Isa`] names a lane shape; [`Isa::available`] is the runtime feature
+//!   check (`is_x86_feature_detected!` / aarch64 twin), so a binary built
+//!   for a generic target still uses the best ISA of the machine it lands
+//!   on.
+//! * [`active`] resolves the process-wide choice **once** and caches it in
+//!   a `OnceLock`: best available ISA, unless the `FW_KERNEL` env var
+//!   (`scalar|avx2|avx512|neon`) overrides it.  An override naming an ISA
+//!   the host lacks is *rejected with a typed error* ([`resolve`]) rather
+//!   than faulting on an illegal instruction mid-solve; the CLI calls
+//!   [`init_from_env`] at startup so the rejection is a clean exit.
+//! * `kernel::panel` / `kernel::panel_succ` / `kernel::relax_row_semiring`
+//!   dispatch through [`active`]; `kernel::panel_with` exposes an explicit
+//!   ISA so benches and the conformance matrix can pin every compiled path
+//!   in one process.
+//!
+//! **Why the lanes are bitwise-safe.**  Phase 3 is a pure ⊕-fold per output
+//! cell over `k`-indexed candidates (see `apsp::kernel` module docs): for
+//! the selection semirings every fold order is exact, and for `(min, +)`
+//! f32 `min` over NaN-free, `-0.0`-free candidates is associative and
+//! commutative *bitwise* — the `⊗`-additions happen per candidate, never
+//! across lanes, so no sum is ever reassociated.  Widening the fold from
+//! one accumulator to 8/16 lane accumulators therefore cannot perturb a
+//! bit, and `kernel::panel_reference` stays the oracle for every ISA.  The
+//! x86 `MINPS`/`MAXPS` tie rule (return the second operand) is invisible on
+//! a domain where equal floats share one bit pattern (pinned by
+//! `semiring::tests::lane_ops_are_bitwise_scalar_ops`).  The successor
+//! twins keep the scalar accept semantics exactly: ascending `k`, strict
+//! [`Semiring::improves`] compare-mask, per-lane successor select — so
+//! values *and* successors match the scalar twin.
+//!
+//! Each vector kernel covers the lane-aligned column prefix and hands the
+//! ragged remainder (`cols % lanes`) to the pinned scalar edge loop
+//! (`kernel::micro_edge*`), so every cell is updated exactly once by an
+//! equivalent fold; the AVX-512 value path instead retires its remainder
+//! with native masked loads/stores, exercising the third remainder idiom.
+
+use std::sync::OnceLock;
+
+/// Env var overriding the dispatch table: `scalar|avx2|avx512|neon`.
+/// Unset or empty means "best available".  A name the host cannot run is
+/// rejected at [`resolve`] time with a typed error.
+pub const ENV_KERNEL: &str = "FW_KERNEL";
+
+/// A lane shape the panel kernels are compiled for.  `Scalar` is always
+/// available; the SIMD variants exist only on their target arch and are
+/// additionally gated by runtime feature detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// The register-tiled scalar loops of `apsp::kernel` (the PR 4 path).
+    Scalar,
+    /// x86-64 AVX2: 8 × f32 lanes.
+    Avx2,
+    /// x86-64 AVX-512F: 16 × f32 lanes, native masked ragged edges.
+    Avx512,
+    /// aarch64 NEON: 4 × f32 lanes.
+    Neon,
+}
+
+impl Isa {
+    /// Every ISA name the dispatcher knows, in preference order (best
+    /// last is *not* implied; see [`Isa::detect_best`]).
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon];
+
+    /// Parse an `FW_KERNEL` value.
+    pub fn parse(name: &str) -> Option<Isa> {
+        match name {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through [`Isa::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector register (1 for scalar).
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Avx512 => 16,
+            Isa::Neon => 4,
+        }
+    }
+
+    /// Can this host execute this ISA's kernels right now?  Compile-target
+    /// gate plus runtime CPUID/hwcap detection (the std macros cache their
+    /// answer, so this is cheap enough for asserts on kernel entry).
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Isa::Avx2 | Isa::Avx512 => false,
+            #[cfg(not(target_arch = "aarch64"))]
+            Isa::Neon => false,
+        }
+    }
+
+    /// The widest ISA this host can run — what [`active`] uses absent an
+    /// override.
+    pub fn detect_best() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if Isa::Avx512.available() {
+                return Isa::Avx512;
+            }
+            if Isa::Avx2.available() {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if Isa::Neon.available() {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    }
+}
+
+/// Every ISA this host can run, in [`Isa::ALL`] order (always contains
+/// `Scalar`).  Benches and the conformance matrix iterate this to pin each
+/// compiled path.
+pub fn available_isas() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|i| i.available()).collect()
+}
+
+/// Comma-joined [`available_isas`] names — for error messages and the CLI
+/// `kernel` report.
+pub fn available_names() -> String {
+    available_isas()
+        .iter()
+        .map(|i| i.name())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Resolve a requested kernel name (the `FW_KERNEL` value, or `None` for
+/// auto-detect) to a runnable ISA.  This is the satellite bugfix: an
+/// override naming an unknown or host-unsupported ISA comes back as a
+/// clear `Err` instead of an illegal-instruction fault the first time a
+/// panel runs.  Pure (no env access, no caching) so tests can probe every
+/// case without process-global state.
+pub fn resolve(requested: Option<&str>) -> Result<Isa, String> {
+    match requested {
+        None | Some("") => Ok(Isa::detect_best()),
+        Some(name) => {
+            let isa = Isa::parse(name).ok_or_else(|| {
+                format!(
+                    "{ENV_KERNEL}={name:?} is not a known kernel ISA \
+                     (expected scalar, avx2, avx512, or neon)"
+                )
+            })?;
+            if !isa.available() {
+                return Err(format!(
+                    "{ENV_KERNEL}={} names an ISA this host cannot execute \
+                     (available: {}); refusing to dispatch rather than fault \
+                     on an illegal instruction",
+                    isa.name(),
+                    available_names()
+                ));
+            }
+            Ok(isa)
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+/// Validate `FW_KERNEL` and seed the dispatch table, returning the ISA the
+/// process will use.  The CLI calls this before touching any solver so a
+/// bad override is a clean startup error.  First caller wins: once the
+/// table is set (by this or by a solve racing through [`active`]) the
+/// choice is process-wide and permanent.
+pub fn init_from_env() -> Result<Isa, String> {
+    let requested = std::env::var(ENV_KERNEL).ok();
+    let isa = resolve(requested.as_deref())?;
+    Ok(*ACTIVE.get_or_init(|| isa))
+}
+
+/// The process-wide kernel ISA, resolving and caching on first use.
+/// Panics if `FW_KERNEL` names an unusable ISA and nothing called
+/// [`init_from_env`] first — library embedders who set the env var should
+/// pre-validate the same way the CLI does.
+pub fn active() -> Isa {
+    *ACTIVE.get_or_init(|| {
+        let requested = std::env::var(ENV_KERNEL).ok();
+        match resolve(requested.as_deref()) {
+            Ok(isa) => isa,
+            Err(e) => panic!("{e}"),
+        }
+    })
+}
+
+// ------------------------------------------------------------- x86-64 ---
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! AVX2 (8-lane) and AVX-512F (16-lane) panel kernels.  All functions
+    //! are `unsafe` solely for the `#[target_feature]` contract; slice
+    //! geometry is the same as the scalar kernels'.
+
+    use std::arch::x86_64::*;
+
+    use crate::apsp::kernel::{self, MR};
+    use crate::apsp::semiring::{LaneOp, Semiring};
+
+    /// AVX2 f32 lanes per register.
+    pub const W256: usize = 8;
+    /// AVX-512 f32 lanes per register.
+    pub const W512: usize = 16;
+
+    /// One 8-lane semiring op.  The match is on an associated const, so
+    /// after monomorphization each call site is a single instruction.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vop256(op: LaneOp, a: __m256, b: __m256) -> __m256 {
+        match op {
+            LaneOp::Min => _mm256_min_ps(a, b),
+            LaneOp::Max => _mm256_max_ps(a, b),
+            LaneOp::Add => _mm256_add_ps(a, b),
+        }
+    }
+
+    /// 8-lane strict-improves mask: `⊕` is a selection, so `cand` strictly
+    /// beats `cur` iff it wins the ordered compare in the combine
+    /// direction (`<` for `Min`, `>` for `Max`) — exactly
+    /// [`Semiring::improves`] per lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vimproves256(combine: LaneOp, cand: __m256, cur: __m256) -> __m256 {
+        match combine {
+            LaneOp::Min => _mm256_cmp_ps::<_CMP_LT_OQ>(cand, cur),
+            _ => _mm256_cmp_ps::<_CMP_GT_OQ>(cand, cur),
+        }
+    }
+
+    /// One 16-lane semiring op.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vop512(op: LaneOp, a: __m512, b: __m512) -> __m512 {
+        match op {
+            LaneOp::Min => _mm512_min_ps(a, b),
+            LaneOp::Max => _mm512_max_ps(a, b),
+            LaneOp::Add => _mm512_add_ps(a, b),
+        }
+    }
+
+    /// 16-lane strict-improves predicate mask.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vimproves512(combine: LaneOp, cand: __m512, cur: __m512) -> __mmask16 {
+        match combine {
+            LaneOp::Min => _mm512_cmp_ps_mask::<_CMP_LT_OQ>(cand, cur),
+            _ => _mm512_cmp_ps_mask::<_CMP_GT_OQ>(cand, cur),
+        }
+    }
+
+    /// AVX2 phase-3 panel: `MR` rows × 8 lanes of `⊕`-accumulators per
+    /// step over the lane-aligned column prefix, remainder rows one vector
+    /// row at a time, ragged columns via the pinned scalar edge.
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2 ([`super::Isa::Avx2`]`.available()`), and
+    /// the slice geometry must satisfy the `kernel::panel` contract
+    /// (disjoint `rows × kk` col panel at `col_stride`, `kk × cols` row
+    /// panel at `row_stride`, `rows × cols` dst at `dst_stride`, all
+    /// in-bounds).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_avx2<S: Semiring>(
+        dst: &mut [f32],
+        dst_stride: usize,
+        col: &[f32],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W256;
+        let mut r0 = 0;
+        while r0 + MR <= rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for (r, a) in acc.iter_mut().enumerate() {
+                    *a = _mm256_loadu_ps(dst.as_ptr().add((r0 + r) * dst_stride + c0));
+                }
+                for k in 0..kk {
+                    let a0 = col[r0 * col_stride + k];
+                    let a1 = col[(r0 + 1) * col_stride + k];
+                    let a2 = col[(r0 + 2) * col_stride + k];
+                    let a3 = col[(r0 + 3) * col_stride + k];
+                    // hoisted annihilator guard — same bitwise no-op skip
+                    // as the scalar micro_full (see kernel module docs)
+                    if S::is_zero(S::combine(S::combine(S::combine(a0, a1), a2), a3)) {
+                        continue;
+                    }
+                    let rv = _mm256_loadu_ps(row.as_ptr().add(k * row_stride + c0));
+                    for (acc_r, a) in acc.iter_mut().zip([a0, a1, a2, a3]) {
+                        let cand = vop256(S::EXTEND_OP, _mm256_set1_ps(a), rv);
+                        *acc_r = vop256(S::COMBINE_OP, *acc_r, cand);
+                    }
+                }
+                for (r, a) in acc.iter().enumerate() {
+                    _mm256_storeu_ps(dst.as_mut_ptr().add((r0 + r) * dst_stride + c0), *a);
+                }
+                c0 += W256;
+            }
+            r0 += MR;
+        }
+        while r0 < rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let mut acc = _mm256_loadu_ps(dst.as_ptr().add(r0 * dst_stride + c0));
+                for k in 0..kk {
+                    let a = col[r0 * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = _mm256_loadu_ps(row.as_ptr().add(k * row_stride + c0));
+                    acc = vop256(S::COMBINE_OP, acc, vop256(S::EXTEND_OP, _mm256_set1_ps(a), rv));
+                }
+                _mm256_storeu_ps(dst.as_mut_ptr().add(r0 * dst_stride + c0), acc);
+                c0 += W256;
+            }
+            r0 += 1;
+        }
+        if full < cols {
+            // mid-panel ragged fallback: cols % 8 columns for every row go
+            // through the pinned scalar edge loop
+            kernel::micro_edge::<S>(
+                &mut dst[full..],
+                dst_stride,
+                col,
+                col_stride,
+                &row[full..],
+                row_stride,
+                rows,
+                cols - full,
+                kk,
+            );
+        }
+    }
+
+    /// AVX2 successor twin: ascending `k`, 8-lane strict compare-mask
+    /// accept ([`vimproves256`]), blend for values, per-set-bit scalar
+    /// writes for successors — the exact scalar accept sequence.
+    ///
+    /// # Safety
+    ///
+    /// As [`panel_avx2`]; `dsucc` shares `dst_stride`, `colsucc` shares
+    /// `col_stride`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_succ_avx2<S: Semiring>(
+        dst: &mut [f32],
+        dsucc: &mut [usize],
+        dst_stride: usize,
+        col: &[f32],
+        colsucc: &[usize],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W256;
+        for r in 0..rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let base = r * dst_stride + c0;
+                let mut acc = _mm256_loadu_ps(dst.as_ptr().add(base));
+                for k in 0..kk {
+                    let a = col[r * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = _mm256_loadu_ps(row.as_ptr().add(k * row_stride + c0));
+                    let cand = vop256(S::EXTEND_OP, _mm256_set1_ps(a), rv);
+                    let mask = vimproves256(S::COMBINE_OP, cand, acc);
+                    let bits = _mm256_movemask_ps(mask);
+                    if bits != 0 {
+                        acc = _mm256_blendv_ps(acc, cand, mask);
+                        let sr = colsucc[r * col_stride + k];
+                        for c in 0..W256 {
+                            if bits & (1 << c) != 0 {
+                                dsucc[base + c] = sr;
+                            }
+                        }
+                    }
+                }
+                _mm256_storeu_ps(dst.as_mut_ptr().add(base), acc);
+                c0 += W256;
+            }
+        }
+        if full < cols {
+            kernel::micro_edge_succ::<S>(
+                &mut dst[full..],
+                &mut dsucc[full..],
+                dst_stride,
+                col,
+                colsucc,
+                col_stride,
+                &row[full..],
+                row_stride,
+                rows,
+                cols - full,
+                kk,
+            );
+        }
+    }
+
+    /// AVX2 branchless row sweep (`kernel::relax_row_semiring` shape).
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relax_row_avx2<S: Semiring>(out: &mut [f32], row_k: &[f32], wik: f32) {
+        let len = out.len().min(row_k.len());
+        let wv = _mm256_set1_ps(wik);
+        let mut j = 0;
+        while j + W256 <= len {
+            let o = _mm256_loadu_ps(out.as_ptr().add(j));
+            let rv = _mm256_loadu_ps(row_k.as_ptr().add(j));
+            let folded = vop256(S::COMBINE_OP, o, vop256(S::EXTEND_OP, wv, rv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), folded);
+            j += W256;
+        }
+        while j < len {
+            out[j] = S::combine(out[j], S::extend(wik, row_k[j]));
+            j += 1;
+        }
+    }
+
+    /// AVX-512F phase-3 panel: 16-lane accumulators; the ragged column
+    /// remainder is retired in-vector with native masked loads/stores
+    /// (`(1 << rem) - 1` lane mask) instead of a scalar edge loop — masked
+    /// lanes are never read back or stored, so the fold per live cell is
+    /// unchanged.
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX-512F; slice geometry as [`panel_avx2`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn panel_avx512<S: Semiring>(
+        dst: &mut [f32],
+        dst_stride: usize,
+        col: &[f32],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W512;
+        let rem = cols - full;
+        let tail_mask: __mmask16 = if rem == 0 { 0 } else { (1u16 << rem) - 1 };
+        for r in 0..rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let base = r * dst_stride + c0;
+                let mut acc = _mm512_loadu_ps(dst.as_ptr().add(base));
+                for k in 0..kk {
+                    let a = col[r * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = _mm512_loadu_ps(row.as_ptr().add(k * row_stride + c0));
+                    acc = vop512(S::COMBINE_OP, acc, vop512(S::EXTEND_OP, _mm512_set1_ps(a), rv));
+                }
+                _mm512_storeu_ps(dst.as_mut_ptr().add(base), acc);
+                c0 += W512;
+            }
+            if rem != 0 {
+                let base = r * dst_stride + full;
+                let mut acc = _mm512_maskz_loadu_ps(tail_mask, dst.as_ptr().add(base));
+                for k in 0..kk {
+                    let a = col[r * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = _mm512_maskz_loadu_ps(tail_mask, row.as_ptr().add(k * row_stride + full));
+                    let cand = vop512(S::EXTEND_OP, _mm512_set1_ps(a), rv);
+                    // dead lanes compute garbage but tail_mask keeps them
+                    // out of the store below
+                    acc = vop512(S::COMBINE_OP, acc, cand);
+                }
+                _mm512_mask_storeu_ps(dst.as_mut_ptr().add(base), tail_mask, acc);
+            }
+        }
+    }
+
+    /// AVX-512F successor twin: predicate-mask strict accept
+    /// (`_mm512_cmp_ps_mask`), masked blend for values, per-set-bit scalar
+    /// successor writes.  Ragged columns go through the pinned scalar edge
+    /// (succ lanes want the mask and blend anyway; the maskz idiom buys
+    /// nothing here).
+    ///
+    /// # Safety
+    ///
+    /// As [`panel_avx512`]; successor slices share their value strides.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn panel_succ_avx512<S: Semiring>(
+        dst: &mut [f32],
+        dsucc: &mut [usize],
+        dst_stride: usize,
+        col: &[f32],
+        colsucc: &[usize],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W512;
+        for r in 0..rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let base = r * dst_stride + c0;
+                let mut acc = _mm512_loadu_ps(dst.as_ptr().add(base));
+                for k in 0..kk {
+                    let a = col[r * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = _mm512_loadu_ps(row.as_ptr().add(k * row_stride + c0));
+                    let cand = vop512(S::EXTEND_OP, _mm512_set1_ps(a), rv);
+                    let mask = vimproves512(S::COMBINE_OP, cand, acc);
+                    if mask != 0 {
+                        acc = _mm512_mask_blend_ps(mask, acc, cand);
+                        let sr = colsucc[r * col_stride + k];
+                        for c in 0..W512 {
+                            if mask & (1u16 << c) != 0 {
+                                dsucc[base + c] = sr;
+                            }
+                        }
+                    }
+                }
+                _mm512_storeu_ps(dst.as_mut_ptr().add(base), acc);
+                c0 += W512;
+            }
+        }
+        if full < cols {
+            kernel::micro_edge_succ::<S>(
+                &mut dst[full..],
+                &mut dsucc[full..],
+                dst_stride,
+                col,
+                colsucc,
+                col_stride,
+                &row[full..],
+                row_stride,
+                rows,
+                cols - full,
+                kk,
+            );
+        }
+    }
+
+    /// AVX-512F branchless row sweep.
+    ///
+    /// # Safety
+    ///
+    /// The host must support AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn relax_row_avx512<S: Semiring>(out: &mut [f32], row_k: &[f32], wik: f32) {
+        let len = out.len().min(row_k.len());
+        let wv = _mm512_set1_ps(wik);
+        let mut j = 0;
+        while j + W512 <= len {
+            let o = _mm512_loadu_ps(out.as_ptr().add(j));
+            let rv = _mm512_loadu_ps(row_k.as_ptr().add(j));
+            let folded = vop512(S::COMBINE_OP, o, vop512(S::EXTEND_OP, wv, rv));
+            _mm512_storeu_ps(out.as_mut_ptr().add(j), folded);
+            j += W512;
+        }
+        if j < len {
+            let rem = len - j;
+            let tail_mask: __mmask16 = (1u16 << rem) - 1;
+            let o = _mm512_maskz_loadu_ps(tail_mask, out.as_ptr().add(j));
+            let rv = _mm512_maskz_loadu_ps(tail_mask, row_k.as_ptr().add(j));
+            let folded = vop512(S::COMBINE_OP, o, vop512(S::EXTEND_OP, wv, rv));
+            _mm512_mask_storeu_ps(out.as_mut_ptr().add(j), tail_mask, folded);
+        }
+    }
+}
+
+// ------------------------------------------------------------ aarch64 ---
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod arm {
+    //! NEON (4-lane) panel kernels — same structure as the AVX2 paths at
+    //! quarter width.
+
+    use std::arch::aarch64::*;
+
+    use crate::apsp::kernel::{self, MR};
+    use crate::apsp::semiring::{LaneOp, Semiring};
+
+    /// NEON f32 lanes per register.
+    pub const W128: usize = 4;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vop128(op: LaneOp, a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        match op {
+            LaneOp::Min => vminq_f32(a, b),
+            LaneOp::Max => vmaxq_f32(a, b),
+            LaneOp::Add => vaddq_f32(a, b),
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn vimproves128(combine: LaneOp, cand: float32x4_t, cur: float32x4_t) -> uint32x4_t {
+        match combine {
+            LaneOp::Min => vcltq_f32(cand, cur),
+            _ => vcgtq_f32(cand, cur),
+        }
+    }
+
+    /// NEON phase-3 panel: `MR` rows × 4 lanes, scalar edge for ragged
+    /// columns.
+    ///
+    /// # Safety
+    ///
+    /// The host must support NEON; slice geometry as `kernel::panel`.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel_neon<S: Semiring>(
+        dst: &mut [f32],
+        dst_stride: usize,
+        col: &[f32],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W128;
+        let mut r0 = 0;
+        while r0 + MR <= rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let mut acc = [vdupq_n_f32(0.0); MR];
+                for (r, a) in acc.iter_mut().enumerate() {
+                    *a = vld1q_f32(dst.as_ptr().add((r0 + r) * dst_stride + c0));
+                }
+                for k in 0..kk {
+                    let a0 = col[r0 * col_stride + k];
+                    let a1 = col[(r0 + 1) * col_stride + k];
+                    let a2 = col[(r0 + 2) * col_stride + k];
+                    let a3 = col[(r0 + 3) * col_stride + k];
+                    if S::is_zero(S::combine(S::combine(S::combine(a0, a1), a2), a3)) {
+                        continue;
+                    }
+                    let rv = vld1q_f32(row.as_ptr().add(k * row_stride + c0));
+                    for (acc_r, a) in acc.iter_mut().zip([a0, a1, a2, a3]) {
+                        let cand = vop128(S::EXTEND_OP, vdupq_n_f32(a), rv);
+                        *acc_r = vop128(S::COMBINE_OP, *acc_r, cand);
+                    }
+                }
+                for (r, a) in acc.iter().enumerate() {
+                    vst1q_f32(dst.as_mut_ptr().add((r0 + r) * dst_stride + c0), *a);
+                }
+                c0 += W128;
+            }
+            r0 += MR;
+        }
+        while r0 < rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let mut acc = vld1q_f32(dst.as_ptr().add(r0 * dst_stride + c0));
+                for k in 0..kk {
+                    let a = col[r0 * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = vld1q_f32(row.as_ptr().add(k * row_stride + c0));
+                    acc = vop128(S::COMBINE_OP, acc, vop128(S::EXTEND_OP, vdupq_n_f32(a), rv));
+                }
+                vst1q_f32(dst.as_mut_ptr().add(r0 * dst_stride + c0), acc);
+                c0 += W128;
+            }
+            r0 += 1;
+        }
+        if full < cols {
+            kernel::micro_edge::<S>(
+                &mut dst[full..],
+                dst_stride,
+                col,
+                col_stride,
+                &row[full..],
+                row_stride,
+                rows,
+                cols - full,
+                kk,
+            );
+        }
+    }
+
+    /// NEON successor twin: 4-lane strict compare mask, bit-select blend,
+    /// per-set-lane scalar successor writes.
+    ///
+    /// # Safety
+    ///
+    /// As [`panel_neon`]; successor slices share their value strides.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel_succ_neon<S: Semiring>(
+        dst: &mut [f32],
+        dsucc: &mut [usize],
+        dst_stride: usize,
+        col: &[f32],
+        colsucc: &[usize],
+        col_stride: usize,
+        row: &[f32],
+        row_stride: usize,
+        rows: usize,
+        cols: usize,
+        kk: usize,
+    ) {
+        let full = cols - cols % W128;
+        for r in 0..rows {
+            let mut c0 = 0;
+            while c0 < full {
+                let base = r * dst_stride + c0;
+                let mut acc = vld1q_f32(dst.as_ptr().add(base));
+                for k in 0..kk {
+                    let a = col[r * col_stride + k];
+                    if S::is_zero(a) {
+                        continue;
+                    }
+                    let rv = vld1q_f32(row.as_ptr().add(k * row_stride + c0));
+                    let cand = vop128(S::EXTEND_OP, vdupq_n_f32(a), rv);
+                    let mask = vimproves128(S::COMBINE_OP, cand, acc);
+                    let mut mbits = [0u32; W128];
+                    vst1q_u32(mbits.as_mut_ptr(), mask);
+                    if mbits.iter().any(|m| *m != 0) {
+                        acc = vbslq_f32(mask, cand, acc);
+                        let sr = colsucc[r * col_stride + k];
+                        for (c, m) in mbits.iter().enumerate() {
+                            if *m != 0 {
+                                dsucc[base + c] = sr;
+                            }
+                        }
+                    }
+                }
+                vst1q_f32(dst.as_mut_ptr().add(base), acc);
+                c0 += W128;
+            }
+        }
+        if full < cols {
+            kernel::micro_edge_succ::<S>(
+                &mut dst[full..],
+                &mut dsucc[full..],
+                dst_stride,
+                col,
+                colsucc,
+                col_stride,
+                &row[full..],
+                row_stride,
+                rows,
+                cols - full,
+                kk,
+            );
+        }
+    }
+
+    /// NEON branchless row sweep.
+    ///
+    /// # Safety
+    ///
+    /// The host must support NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn relax_row_neon<S: Semiring>(out: &mut [f32], row_k: &[f32], wik: f32) {
+        let len = out.len().min(row_k.len());
+        let wv = vdupq_n_f32(wik);
+        let mut j = 0;
+        while j + W128 <= len {
+            let o = vld1q_f32(out.as_ptr().add(j));
+            let rv = vld1q_f32(row_k.as_ptr().add(j));
+            let folded = vop128(S::COMBINE_OP, o, vop128(S::EXTEND_OP, wv, rv));
+            vst1q_f32(out.as_mut_ptr().add(j), folded);
+            j += W128;
+        }
+        while j < len {
+            out[j] = S::combine(out[j], S::extend(wik, row_k[j]));
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_names_round_trip_and_report_lanes() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("sse2"), None);
+        assert_eq!(Isa::parse("AVX2"), None, "names are case-sensitive");
+        assert_eq!(Isa::Scalar.lanes(), 1);
+        assert_eq!(Isa::Avx2.lanes(), 8);
+        assert_eq!(Isa::Avx512.lanes(), 16);
+        assert_eq!(Isa::Neon.lanes(), 4);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_unavailable() {
+        // satellite bugfix: both failure modes are typed errors, never a
+        // fault
+        let unknown = resolve(Some("sse9")).unwrap_err();
+        assert!(unknown.contains("FW_KERNEL"), "{unknown}");
+        assert!(unknown.contains("not a known"), "{unknown}");
+        // an ISA from the other architecture family is never available,
+        // making the unavailability arm deterministic on every host
+        #[cfg(target_arch = "x86_64")]
+        let foreign = "neon";
+        #[cfg(not(target_arch = "x86_64"))]
+        let foreign = "avx2";
+        let unavailable = resolve(Some(foreign)).unwrap_err();
+        assert!(unavailable.contains("cannot execute"), "{unavailable}");
+        assert!(unavailable.contains("scalar"), "lists the alternatives: {unavailable}");
+    }
+
+    #[test]
+    fn resolve_accepts_auto_scalar_and_every_available_isa() {
+        assert_eq!(resolve(None).unwrap(), Isa::detect_best());
+        assert_eq!(resolve(Some("")).unwrap(), Isa::detect_best());
+        assert_eq!(resolve(Some("scalar")).unwrap(), Isa::Scalar);
+        for isa in available_isas() {
+            assert_eq!(resolve(Some(isa.name())).unwrap(), isa);
+        }
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        assert!(Isa::Scalar.available());
+        let best = Isa::detect_best();
+        assert!(best.available());
+        let avail = available_isas();
+        assert!(avail.contains(&Isa::Scalar));
+        assert!(avail.contains(&best));
+        assert!(available_names().contains("scalar"));
+        // the active table resolves to something runnable and is stable
+        let a = active();
+        assert!(a.available());
+        assert_eq!(a, active());
+        assert_eq!(init_from_env().unwrap(), a, "init after first use returns the cached pick");
+    }
+}

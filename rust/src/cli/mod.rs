@@ -9,7 +9,7 @@
 //! fw-stage serve     [--addr 127.0.0.1:7878] [--artifacts DIR] [--cache 128]
 //!                    [--superblock-bucket N] [--superblock-workers W]
 //!                    [--update-max-chain K] [--log-level error|warn|info|debug]
-//!                    [--trace-journal K]
+//!                    [--trace-journal K] [--max-connections N]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
 //!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
@@ -18,7 +18,13 @@
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
 //! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
 //! fw-stage info      [--artifacts DIR]
+//! fw-stage kernel
 //! ```
+//!
+//! Every subcommand honours `FW_KERNEL=scalar|avx2|avx512|neon`, which
+//! pins the min-plus microkernel's SIMD ISA (validated at startup — an
+//! ISA the host cannot execute is a clean error, never an illegal
+//! instruction).  `kernel` prints the resolved dispatch for this host.
 //!
 //! `--paths` asks the coordinator for successor tracking; with `--src`/
 //! `--dst` the reconstructed hop sequence and its cost are printed instead
@@ -72,6 +78,7 @@ SUBCOMMANDS:
   simulate     regenerate the paper's Table 1 / Fig 7 / §5 analysis
   bench-tasks  measure tasks/sec through the local engine
   info         describe available artifacts
+  kernel       show the SIMD kernel dispatch for this host (FW_KERNEL)
   help         show this message
 ";
 
@@ -91,6 +98,10 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    // validate FW_KERNEL before any subcommand runs a kernel: an override
+    // naming an ISA this host can't execute must die here with a typed
+    // error, not later with an illegal-instruction fault mid-solve
+    crate::apsp::simd::init_from_env().map_err(anyhow::Error::msg)?;
     match cmd.as_str() {
         "solve" => cmd_solve(rest),
         "serve" => cmd_serve(rest),
@@ -99,6 +110,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "bench-tasks" => cmd_bench_tasks(rest),
         "info" => cmd_info(rest),
+        "kernel" => cmd_kernel(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -318,6 +330,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
     let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
     let log_level = args.get_or("log-level", "warn").to_string();
+    let max_connections = args.get_usize(
+        "max-connections",
+        coordinator::server::ServerConfig::default().max_connections,
+    )?;
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
@@ -331,14 +347,23 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .with_context(|| format!("--log-level {log_level:?} (error, warn, info, debug)"))?;
     crate::obs::log::set_level(level);
 
+    if max_connections == 0 {
+        bail!("--max-connections must be at least 1");
+    }
     let coord = Arc::new(start_coordinator(&args)?);
     let summary = coord.manifest_summary().clone();
-    let server = coordinator::server::Server::spawn(coord, &addr)?;
+    let server = coordinator::server::Server::spawn_with(
+        coord,
+        &addr,
+        coordinator::server::ServerConfig { max_connections },
+    )?;
     eprintln!(
-        "fw-stage serving on {} (variants: {}; buckets: {:?})",
+        "fw-stage serving on {} (variants: {}; buckets: {:?}; kernel: {}; max-connections: {})",
         server.addr(),
         summary.variants.join(", "),
         summary.buckets,
+        crate::apsp::simd::active().name(),
+        max_connections,
     );
     // serve until killed
     loop {
@@ -568,6 +593,24 @@ mod tests {
         assert!(parse_updates("1,2").is_err());
         assert!(parse_updates("a,2,3").is_err());
     }
+}
+
+/// `fw-stage kernel` — report the SIMD microkernel dispatch for this host.
+/// Machine-greppable (`sed -n 's/^active: //p'`): CI uses it to fail the
+/// build when dispatch silently resolves to scalar on a vector-capable
+/// runner.
+fn cmd_kernel(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    args.reject_unknown()?;
+    let active = crate::apsp::simd::active();
+    println!("active: {}", active.name());
+    println!("lanes: {}", active.lanes());
+    println!("available: {}", crate::apsp::simd::available_names());
+    match std::env::var(crate::apsp::simd::ENV_KERNEL) {
+        Ok(v) if !v.is_empty() => println!("override: {v}"),
+        _ => println!("override: none"),
+    }
+    Ok(())
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {

@@ -18,7 +18,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::apsp::semiring::Objective;
-use crate::obs::hist::render_series;
+use crate::obs::hist::{escape_label_value, render_series};
 use crate::obs::Histogram;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
@@ -34,6 +34,7 @@ struct Inner {
     requests: u64,
     errors: u64,
     errors_by_code: BTreeMap<String, u64>,
+    connections_shed: u64,
     device_solves: u64,
     cpu_solves: u64,
     cache_hits: u64,
@@ -70,6 +71,15 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.errors += 1;
         *m.errors_by_code.entry(code.to_string()).or_insert(0) += 1;
+    }
+
+    /// Count one connection refused at admission (the server's
+    /// concurrent-connection cap).  Deliberately *not* an `errors` entry:
+    /// a shed is connection-level backpressure working as designed, and
+    /// folding it into request errors would make overload look like
+    /// request failures on dashboards.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().connections_shed += 1;
     }
 
     pub fn record_solve(&self, source: super::types::Source, objective: Objective, seconds: f64) {
@@ -146,6 +156,7 @@ impl Metrics {
             ("requests", Json::num(m.requests as f64)),
             ("errors", Json::num(m.errors as f64)),
             ("errors_by_code", Json::Obj(codes)),
+            ("connections_shed", Json::num(m.connections_shed as f64)),
             ("device_solves", Json::num(m.device_solves as f64)),
             ("cpu_solves", Json::num(m.cpu_solves as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
@@ -180,9 +191,18 @@ impl Metrics {
         out.push_str(&format!("fw_requests_total {}\n", m.requests));
         out.push_str("# TYPE fw_errors_total counter\n");
         out.push_str(&format!("fw_errors_total {}\n", m.errors));
+        out.push_str("# TYPE fw_connections_shed_total counter\n");
+        out.push_str(&format!("fw_connections_shed_total {}\n", m.connections_shed));
         out.push_str("# TYPE fw_request_seconds histogram\n");
         for ((source, objective), h) in &m.hists {
-            let labels = format!("objective=\"{objective}\",source=\"{source}\"");
+            // label values are escaped even though today's sources and
+            // objectives are clean enum names — the exposition format must
+            // not be corruptible by any future label source
+            let labels = format!(
+                "objective=\"{}\",source=\"{}\"",
+                escape_label_value(objective),
+                escape_label_value(source)
+            );
             render_series(&mut out, "fw_request_seconds", &labels, h);
         }
         out
@@ -294,6 +314,19 @@ mod tests {
         let codes = snap.get("errors_by_code");
         assert_eq!(codes.get("error").as_usize(), Some(1));
         assert_eq!(codes.get("objective_unsupported").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn sheds_count_separately_from_errors() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_error("error");
+        let snap = m.snapshot();
+        assert_eq!(snap.get("connections_shed").as_usize(), Some(2));
+        assert_eq!(snap.get("errors").as_usize(), Some(1), "sheds are not errors");
+        let text = m.exposition();
+        assert!(text.contains("fw_connections_shed_total 2\n"), "{text}");
     }
 
     #[test]

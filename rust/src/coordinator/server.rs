@@ -22,19 +22,28 @@
 //! device work internally).  Connection failures and malformed requests
 //! emit one structured stderr line each ([`crate::obs::log`]) instead of
 //! being silently dropped.
+//!
+//! **Admission control.**  Handler threads are capped
+//! ([`ServerConfig::max_connections`]): a connection arriving at the cap
+//! gets one typed `{"type":"error","code":"shed"}` line and an immediate
+//! close instead of an unbounded thread spawn, so a connection flood
+//! degrades (clients back off and retry) rather than exhausting process
+//! threads/memory.  Sheds are counted (`connections_shed` in stats /
+//! `fw_connections_shed_total` in the exposition).  The full worker-pool
+//! front end remains ROADMAP item 2; this is the minimal overload fix.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::router;
 use super::types::{
     attach_trace, decode_request, decode_update_request, encode_error, encode_error_coded,
-    encode_response, CODE_OBJECTIVE_UNSUPPORTED, CODE_UPDATE_BASE_MISSING,
+    encode_response, CODE_OBJECTIVE_UNSUPPORTED, CODE_SHED, CODE_UPDATE_BASE_MISSING,
 };
 use super::{Coordinator, UpdateOutcome};
 use crate::obs::log::{log, Level};
@@ -47,6 +56,49 @@ const CODE_MALFORMED: &str = "malformed";
 /// Error-code key for solve/update failures with no dedicated wire code.
 const CODE_GENERIC: &str = "error";
 
+/// Front-end admission limits.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Hard cap on concurrently served connections.  Connections past the
+    /// cap receive one typed shed line and are closed at accept time —
+    /// they never get a handler thread.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            // generous for a thread-per-connection server, but finite: a
+            // flood saturates here instead of at process limits
+            max_connections: 1024,
+        }
+    }
+}
+
+/// Decrements the live-connection count when a handler thread finishes by
+/// any path (clean EOF, error, panic unwind).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Refuse an over-cap connection: one typed `shed` error line, then drop
+/// the socket.  Bounded write timeout so a hostile client that never
+/// reads cannot wedge the accept thread.
+fn shed_connection(mut stream: TcpStream, cap: usize) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let line = encode_error_coded(
+        0,
+        CODE_SHED,
+        &format!("server at connection capacity ({cap}); back off and retry"),
+    );
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
 /// A running server (owns the accept thread).
 pub struct Server {
     addr: std::net::SocketAddr,
@@ -55,12 +107,24 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve on background threads.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve on background threads
+    /// with default admission limits.
     pub fn spawn(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        Server::spawn_with(coordinator, addr, ServerConfig::default())
+    }
+
+    /// [`Server::spawn`] with explicit admission limits.
+    pub fn spawn_with(
+        coordinator: Arc<Coordinator>,
+        addr: &str,
+        config: ServerConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let accept_shutdown = shutdown.clone();
+        let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
+        let cap = config.max_connections.max(1);
         let handle = std::thread::Builder::new()
             .name("fw-stage-accept".into())
             .spawn(move || {
@@ -70,14 +134,40 @@ impl Server {
                     }
                     match stream {
                         Ok(stream) => {
-                            let coord = coordinator.clone();
+                            // claim a slot before spawning; the handler's
+                            // guard releases it however the thread exits
+                            let claimed = active
+                                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                                    if c < cap {
+                                        Some(c + 1)
+                                    } else {
+                                        None
+                                    }
+                                })
+                                .is_ok();
                             let peer = stream
                                 .peer_addr()
                                 .map(|a| a.to_string())
                                 .unwrap_or_else(|_| "?".into());
-                            let _ = std::thread::Builder::new()
+                            if !claimed {
+                                coordinator.metrics().record_shed();
+                                log(
+                                    Level::Warn,
+                                    "connection_shed",
+                                    vec![
+                                        ("addr", Json::str(peer)),
+                                        ("cap", Json::num(cap as f64)),
+                                    ],
+                                );
+                                shed_connection(stream, cap);
+                                continue;
+                            }
+                            let guard = ConnGuard(active.clone());
+                            let coord = coordinator.clone();
+                            let spawned = std::thread::Builder::new()
                                 .name("fw-stage-conn".into())
                                 .spawn(move || {
+                                    let _guard = guard;
                                     if let Err(e) = handle_connection(&coord, stream) {
                                         log(
                                             Level::Warn,
@@ -89,6 +179,15 @@ impl Server {
                                         );
                                     }
                                 });
+                            if let Err(e) = spawned {
+                                // a failed spawn drops the unrun closure —
+                                // and with it the guard, releasing the slot
+                                log(
+                                    Level::Error,
+                                    "conn_spawn_error",
+                                    vec![("error", Json::str(format!("{e:#}")))],
+                                );
+                            }
                         }
                         Err(e) => {
                             log(
@@ -195,6 +294,8 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
                     Json::Arr(s.buckets.iter().map(|&b| Json::num(b as f64)).collect()),
                 ),
                 ("tile", Json::num(s.tile as f64)),
+                // the CPU tiers' active SIMD lane ISA (see apsp::simd)
+                ("kernel", Json::str(crate::apsp::simd::active().name())),
             ])
             .to_string()
         }

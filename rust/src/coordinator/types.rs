@@ -26,6 +26,11 @@ pub const CODE_UPDATE_BASE_MISSING: &str = "update_base_missing";
 /// updates and the johnson variant are shortest-only).
 pub const CODE_OBJECTIVE_UNSUPPORTED: &str = "objective_unsupported";
 
+/// Wire error code for a connection refused at admission because the
+/// server is at its concurrent-connection cap.  Sent as the connection's
+/// only line, then the socket closes; clients should back off and retry.
+pub const CODE_SHED: &str = "shed";
+
 /// The wire default objective: requests that omit the `"objective"` key
 /// (every pre-semiring client) mean shortest path.
 pub const DEFAULT_OBJECTIVE: &str = "shortest";

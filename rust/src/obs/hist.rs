@@ -123,9 +123,18 @@ impl Histogram {
     }
 
     /// Upper-bound quantile estimate: the `le` bound of the bucket holding
-    /// the `q`-th observation (`q` in [0, 1]).  NaN when empty; +inf when
-    /// the rank lands in the overflow bucket.  The estimate never
+    /// the `q`-th observation (`q` in [0, 1]).  The estimate never
     /// undershoots the true quantile — the right bias for latency alerts.
+    ///
+    /// Edge cases are **pinned**, never a panic or a silent 0
+    /// (`quantile_edge_cases_are_pinned`):
+    ///
+    /// * empty histogram → NaN for every `q` (downstream renders it as
+    ///   `"-"`/`null`, keeping "no data" distinguishable from "fast");
+    /// * all mass in the overflow bucket (observations past the largest
+    ///   finite bound, ~134 s) → `+inf` for every `q` — the honest answer,
+    ///   since the histogram only knows the value exceeded every bound;
+    /// * `q` outside [0, 1] is a caller bug and asserts.
     pub fn quantile(&self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q), "quantile {q}");
         if self.count == 0 {
@@ -186,10 +195,63 @@ fn fmt_f64(x: f64) -> String {
     }
 }
 
+/// Escape a string for use as a Prometheus label *value* (the part inside
+/// the double quotes).  The exposition format reserves exactly three
+/// characters there: backslash, double quote, and newline.  Everything
+/// else — including `,`, `{`, `}`, and spaces — is legal verbatim.
+///
+/// Callers rendering label bodies (e.g. the metrics exposition) must pass
+/// every dynamic value through this, or a hostile objective/source name
+/// containing `"` breaks the line grammar and poisons the whole scrape.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Split a label body on the `,` separators *between* `name="value"` pairs,
+/// honouring quoting: commas inside a quoted value (and escaped quotes
+/// within it) do not split.  A naive `split(',')` corrupts any series whose
+/// label values contain commas — legal after [`escape_label_value`].
+fn split_labels(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut start, mut in_quotes, mut escaped) = (0usize, false, false);
+    for (i, b) in body.bytes().enumerate() {
+        if escaped {
+            escaped = false;
+        } else if in_quotes {
+            match b {
+                b'\\' => escaped = true,
+                b'"' => in_quotes = false,
+                _ => {}
+            }
+        } else {
+            match b {
+                b'"' => in_quotes = true,
+                b',' => {
+                    parts.push(&body[start..i]);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
 /// Append one histogram as Prometheus text-exposition lines.
 ///
 /// `labels` is the pre-rendered label body **without** `le`, e.g.
-/// `objective="shortest",source="cpu"` (may be empty).  Bucket lines are
+/// `objective="shortest",source="cpu"` (may be empty); dynamic values in
+/// it must already be [`escape_label_value`]-escaped.  Bucket lines are
 /// cumulative, as the format requires.
 pub fn render_series(out: &mut String, metric: &str, labels: &str, h: &Histogram) {
     let sep = if labels.is_empty() { "" } else { "," };
@@ -244,7 +306,7 @@ pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, Histogram>, Strin
         if let Some(base) = name.strip_suffix("_bucket") {
             let mut le = None;
             let mut kept: Vec<&str> = Vec::new();
-            for part in labels.split(',').filter(|p| !p.is_empty()) {
+            for part in split_labels(labels).into_iter().filter(|p| !p.is_empty()) {
                 match part.strip_prefix("le=\"").and_then(|v| v.strip_suffix('"')) {
                     Some(v) => le = Some(v),
                     None => kept.push(part),
@@ -422,6 +484,82 @@ mod tests {
         render_series(&mut text, "m", "", &Histogram::new());
         let broken = text.replace("m_count 0", "m_count 5");
         assert!(parse_exposition(&broken).is_err());
+    }
+
+    #[test]
+    fn quantile_edge_cases_are_pinned() {
+        // empty → NaN for every q, never 0 or a panic
+        let empty = Histogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert!(empty.quantile(q).is_nan(), "empty q={q}");
+        }
+        // all mass past the largest finite bound → +inf for every q
+        let mut over = Histogram::new();
+        for _ in 0..5 {
+            over.observe(1e9);
+        }
+        assert_eq!(over.bucket_counts()[FINITE_BOUNDS], 5);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(over.quantile(q), f64::INFINITY, "overflow q={q}");
+        }
+        // mixed mass: high quantiles hit the overflow bucket, low ones don't
+        let mut mixed = Histogram::new();
+        mixed.observe(1e-3);
+        mixed.observe(1e9);
+        assert!(mixed.quantile(0.5).is_finite());
+        assert_eq!(mixed.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn quantile_rejects_out_of_range_q() {
+        let h = Histogram::new();
+        assert!(std::panic::catch_unwind(|| h.quantile(1.5)).is_err());
+        assert!(std::panic::catch_unwind(|| h.quantile(-0.1)).is_err());
+    }
+
+    #[test]
+    fn escape_label_value_covers_reserved_chars() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+        // commas, braces, spaces are legal inside quoted values: untouched
+        assert_eq!(escape_label_value("a,b {c}"), "a,b {c}");
+    }
+
+    #[test]
+    fn split_labels_honours_quoting() {
+        assert_eq!(
+            split_labels("a=\"x,y\",b=\"p\\\"q\",le=\"+Inf\""),
+            vec!["a=\"x,y\"", "b=\"p\\\"q\"", "le=\"+Inf\""]
+        );
+        assert_eq!(split_labels(""), vec![""]);
+    }
+
+    #[test]
+    fn hostile_label_values_roundtrip() {
+        // a source name abusing every reserved/tricky character: quote,
+        // backslash, newline, comma, braces, space
+        let hostile = "cp\"u\\x\ny,{z} w";
+        let labels = format!(
+            "objective=\"shortest\",source=\"{}\"",
+            escape_label_value(hostile)
+        );
+        let mut h = Histogram::new();
+        h.observe(1e-3);
+        h.observe(0.25);
+        let mut text = String::new();
+        render_series(&mut text, "fw_request_seconds", &labels, &h);
+        // escaping keeps the exposition one-line-per-sample
+        for line in text.lines() {
+            assert!(line.ends_with(|c: char| c.is_ascii_digit()), "{line:?}");
+        }
+        let parsed = parse_exposition(&text).unwrap();
+        assert_eq!(parsed.len(), 1, "hostile labels split the series");
+        let key = format!("fw_request_seconds{{{labels}}}");
+        let back = parsed.get(&key).expect("series keyed by escaped labels");
+        assert_eq!(back.bucket_counts(), h.bucket_counts());
+        assert_eq!(back.count(), h.count());
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! through the shared register-tiled microkernel
 //! ([`kernel::minplus_panel`]; detached tiles are contiguous, so no
 //! packing is needed — `should_pack(b, b)` is false by construction).
+//! Both shared kernels dispatch to the runtime-selected SIMD ISA
+//! ([`crate::apsp::simd`]), bitwise-invisibly.
 //! This buys a strong property the tests pin: a super-blocked solve whose
 //! diagonal tiles are solved in phase-1 order is **bitwise identical** to
 //! `apsp::blocked::solve(g, bucket)` — every relaxation performs the same

@@ -1727,3 +1727,219 @@ fn error_codes_and_exposition_round_trip() {
     assert_eq!(h.count(), 1, "one CPU solve observed");
     assert!(h.sum() >= 0.0);
 }
+
+// ----------------------------------------------- SIMD kernel dispatch --
+
+/// In-domain random panel for semiring `S`: `density` of the cells hold
+/// `S::ZERO` (the annihilator the kernels' skip guards key on), the rest
+/// hold values from the semiring's legal domain — shortest allows
+/// negatives, the capacity semirings are non-negative, reachability is
+/// strictly {0, 1}.  Staying in-domain matters: the bitwise contract
+/// between the scalar per-`k` skip and the SIMD per-block skip relies on
+/// `combine(extend(ZERO, x), acc) == acc` holding bit-for-bit, which the
+/// domain guarantees and arbitrary floats do not.
+fn arb_semiring_panel<S: Semiring>(
+    rng: &mut Rng,
+    rows: usize,
+    stride: usize,
+    density: f64,
+) -> Vec<f32> {
+    let mut out = vec![S::ZERO; rows * stride];
+    for v in out.iter_mut() {
+        if rng.next_f64() >= density {
+            *v = match S::NAME {
+                "shortest" => (rng.next_f64() * 20.0 - 5.0) as f32,
+                "reachability" => {
+                    if rng.next_f64() < 0.5 {
+                        S::ZERO
+                    } else {
+                        S::ONE
+                    }
+                }
+                _ => (rng.next_f64() * 10.0 + 0.1) as f32,
+            };
+        }
+    }
+    out
+}
+
+/// One random panel case at `isa` vs the scalar kernel, generic over the
+/// semiring: square tiles {8, 16, 32, 33}, strided and packed operands,
+/// ragged `cols % lanes` remainders, dist and succ twins.
+fn simd_panel_case<S: Semiring>(rng: &mut Rng, isa: apsp::simd::Isa) -> Result<(), String> {
+    let s = [8usize, 16, 32, 33][rng.range(0, 4)];
+    let density = [0.0, 0.3, 1.0][rng.range(0, 3)];
+    let stride = s + rng.range(0, 16);
+    let base = arb_semiring_panel::<S>(rng, s, stride, density);
+    let col = arb_semiring_panel::<S>(rng, s, stride, density);
+    let row = arb_semiring_panel::<S>(rng, s, stride, density);
+    let ctx = format!("{}/{} (s={s}, density={density})", S::NAME, isa.name());
+
+    let mut expect = base.clone();
+    apsp::kernel::panel_scalar::<S>(&mut expect, stride, &col, stride, &row, stride, s, s, s);
+    let mut got = base.clone();
+    apsp::kernel::panel_with::<S>(isa, &mut got, stride, &col, stride, &row, stride, s, s, s);
+    if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        return Err(format!("{ctx}: panel != scalar"));
+    }
+
+    // packed column panel (the phase-2 operand layout)
+    let mut pack = apsp::kernel::PanelBuf::default();
+    pack.pack_dist(&col, stride, s, s);
+    let mut got = base.clone();
+    apsp::kernel::panel_with::<S>(isa, &mut got, stride, pack.dist(), s, &row, stride, s, s, s);
+    if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        return Err(format!("{ctx}: packed panel != scalar"));
+    }
+
+    // succ twin: compare-mask select must replay the scalar strict-accept
+    // sequence exactly — values bitwise, successors ==
+    let succ0: Vec<usize> = (0..s * stride).collect();
+    let colsucc: Vec<usize> = (0..s * stride).map(|v| v + 70_000).collect();
+    let (mut edist, mut esucc) = (base.clone(), succ0.clone());
+    apsp::kernel::panel_succ_scalar::<S>(
+        &mut edist, &mut esucc, stride, &col, &colsucc, stride, &row, stride, s, s, s,
+    );
+    let (mut gdist, mut gsucc) = (base.clone(), succ0);
+    apsp::kernel::panel_succ_with::<S>(
+        isa, &mut gdist, &mut gsucc, stride, &col, &colsucc, stride, &row, stride, s, s, s,
+    );
+    if gdist.iter().zip(&edist).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        return Err(format!("{ctx}: succ panel dist != scalar"));
+    }
+    if gsucc != esucc {
+        return Err(format!("{ctx}: succ panel successors != scalar"));
+    }
+
+    // ragged remainder: every cols % lanes residue class for the widest
+    // vector (16) plus a few below one vector width
+    let rr = 1 + rng.range(0, 6);
+    let cc = 1 + rng.range(0, 17);
+    let kk = 1 + rng.range(0, 9);
+    let base = arb_semiring_panel::<S>(rng, rr, stride, density);
+    let col = arb_semiring_panel::<S>(rng, rr, stride, density);
+    let row = arb_semiring_panel::<S>(rng, kk, stride, density);
+    let mut expect = base.clone();
+    apsp::kernel::panel_scalar::<S>(&mut expect, stride, &col, stride, &row, stride, rr, cc, kk);
+    let mut got = base.clone();
+    apsp::kernel::panel_with::<S>(isa, &mut got, stride, &col, stride, &row, stride, rr, cc, kk);
+    if got.iter().zip(&expect).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        return Err(format!("{ctx}: ragged {rr}x{cc}x{kk} != scalar"));
+    }
+
+    // row sweep (phases 1–2's vectorized inner loop); equal-length slices
+    // keep the dispatcher's geometry debug-assert honest
+    let len = base.len().min(row.len());
+    let mut erow = base[..len].to_vec();
+    apsp::kernel::relax_row_scalar::<S>(&mut erow, &row[..len], col[0]);
+    let mut grow = base[..len].to_vec();
+    apsp::kernel::relax_row_with::<S>(isa, &mut grow, &row[..len], col[0]);
+    if grow.iter().zip(&erow).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        return Err(format!("{ctx}: relax_row != scalar"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_every_isa_bitwise_equals_scalar_for_every_semiring() {
+    // the tentpole gate: every SIMD lane width this host can execute is a
+    // bit-for-bit drop-in for the scalar kernel, on all four semirings.
+    // On a scalar-only host this degenerates to scalar-vs-scalar (and the
+    // CI matrix runs the whole suite under FW_KERNEL=scalar besides).
+    let isas = apsp::simd::available_isas();
+    assert!(isas.contains(&apsp::simd::Isa::Scalar), "scalar is always available");
+    let cfg = Config { cases: env_cases(24), max_size: 4, ..Config::default() };
+    check("SIMD ISAs vs scalar kernel", cfg, |rng, _size| {
+        for &isa in &isas {
+            simd_panel_case::<MinPlus>(rng, isa)?;
+            simd_panel_case::<MaxMin>(rng, isa)?;
+            simd_panel_case::<MinMax>(rng, isa)?;
+            simd_panel_case::<BoolOrAnd>(rng, isa)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_isa_resolution_rejects_unavailable_cleanly() {
+    // unknown name: typed error naming the env var, not a fault
+    let err = apsp::simd::resolve(Some("sse9")).unwrap_err();
+    assert!(err.contains("not a known kernel ISA"), "{err}");
+    assert!(err.contains("FW_KERNEL"), "{err}");
+    // an ISA compiled for a different CPU family (or not detected on this
+    // host) must be refused up front — the illegal-instruction bugfix
+    if let Some(foreign) = apsp::simd::Isa::ALL.iter().find(|i| !i.available()) {
+        let err = apsp::simd::resolve(Some(foreign.name())).unwrap_err();
+        assert!(err.contains("cannot execute"), "{err}");
+        assert!(err.contains("scalar"), "{err} should list available ISAs");
+    }
+    // auto and every available name resolve to a runnable ISA
+    assert!(apsp::simd::resolve(None).unwrap().available());
+    assert!(apsp::simd::resolve(Some("")).unwrap().available());
+    for isa in apsp::simd::available_isas() {
+        assert_eq!(apsp::simd::resolve(Some(isa.name())).unwrap(), isa);
+    }
+}
+
+#[test]
+fn info_reports_active_kernel() {
+    let coord = synthetic_coordinator();
+    let reply = Json::parse(&server::handle_line(&coord, r#"{"type":"info"}"#)).unwrap();
+    let kernel = reply.get("kernel").as_str().expect("info carries kernel field");
+    assert_eq!(kernel, apsp::simd::active().name());
+}
+
+// ------------------------------------------------- connection shedding --
+
+/// Admission control: past `max_connections`, a connection gets exactly one
+/// typed `shed` error line and a close — never an unbounded handler thread,
+/// never a silent hang.  Slots free on disconnect, and sheds count in their
+/// own metric, *not* as request errors.
+#[test]
+fn server_sheds_connections_past_cap_with_typed_error() {
+    use std::io::BufRead;
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn_with(
+        coord.clone(),
+        "127.0.0.1:0",
+        server::ServerConfig { max_connections: 1 },
+    )
+    .expect("server");
+    let addr = srv.addr().to_string();
+
+    // conn 1 claims the only slot; the ping round-trip proves its handler
+    // is live (the slot is claimed at accept time, before any read)
+    let mut first = coordinator::client::Client::connect(&addr).expect("conn 1");
+    first.ping().expect("conn 1 live");
+
+    // conn 2 is over cap: one shed line, then EOF
+    let over = std::net::TcpStream::connect(&addr).expect("conn 2");
+    over.set_read_timeout(Some(std::time::Duration::from_secs(10))).ok();
+    let mut reader = std::io::BufReader::new(over);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("shed line");
+    let v = Json::parse(line.trim()).expect("shed line is JSON");
+    assert_eq!(v.get("type").as_str(), Some("error"), "{line}");
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_SHED), "{line}");
+    let msg = v.get("message").as_str().expect("shed message");
+    assert!(msg.contains("capacity"), "{msg}");
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).expect("post-shed read"), 0, "socket open after shed");
+
+    // dropping conn 1 frees the slot; a retry is eventually admitted
+    drop(first);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let mut retry = coordinator::client::Client::connect(&addr).expect("retry connect");
+        if retry.ping().is_ok() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "shed slot never freed");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    let snap = coord.metrics().snapshot();
+    assert!(snap.get("connections_shed").as_f64().unwrap_or(0.0) >= 1.0, "{snap}");
+    // backpressure is not a request failure: the error counters stay clean
+    assert_eq!(snap.get("errors").as_f64(), Some(0.0), "{snap}");
+}
