@@ -1,21 +1,38 @@
 //! L3 coordinator benchmarks: request-path overhead, cache-hit latency,
-//! and block-diagonal batching throughput (the §Perf targets of DESIGN.md).
+//! block-diagonal batching throughput, the binary matrix frame codec, and
+//! front-end saturation (worker pool + bounded queue) — the §Perf targets
+//! of DESIGN.md.
 //!
 //! Run: `cargo bench --bench coordinator`
+//!
+//! `FW_SATURATION_ONLY=1` runs just the artifact-free frame + saturation
+//! sections (the CI smoke step).  `FW_SATURATION_CHECK=1` turns the
+//! saturation section's expectations into assertions: a 10×-capacity load
+//! must shed, every reply must be a result or a typed error, and the
+//! binary frame must decode ≥ 5× faster than line-JSON.
 
 mod common;
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fw_stage::apsp::incremental::{self, EdgeUpdate};
+use fw_stage::apsp::paths::NO_PATH;
 use fw_stage::coordinator::cache::graph_fingerprint;
-use fw_stage::coordinator::{
-    client::Client, server::Server, Config, Coordinator, Request, UpdateOutcome, UpdateRequest,
+use fw_stage::coordinator::types::{
+    decode_response, encode_request_opts, encode_response, WireOptions,
 };
-use fw_stage::graph::generators;
-use fw_stage::perf::{bench, black_box, format_time};
+use fw_stage::coordinator::{
+    self, client::Client, frame, server::Server, server::ServerConfig, Config, Coordinator,
+    Request, Response, Source, UpdateOutcome, UpdateRequest,
+};
+use fw_stage::graph::{generators, DistMatrix};
+use fw_stage::perf::{bench, black_box, format_time, BenchSink};
 use fw_stage::superblock::{self, SuperBlockConfig};
+use fw_stage::util::json::Json;
 use fw_stage::util::stats::Samples;
 use fw_stage::workload::{self, TraceConfig};
 
@@ -57,11 +74,351 @@ fn superblock_schedule_section() {
     );
 }
 
+fn check_mode() -> bool {
+    std::env::var("FW_SATURATION_CHECK").map(|v| v == "1").unwrap_or(false)
+}
+
+static SYNTH_DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Coordinator over a synthetic single-artifact manifest (same trick as
+/// the conformance suite): the frame and saturation sections measure the
+/// serving surface, not the device tier, so they must run without
+/// `make artifacts` — that is what lets CI smoke them before artifacts
+/// are built.
+fn synthetic_coordinator() -> Coordinator {
+    let dir = std::env::temp_dir().join(format!(
+        "fw-stage-bench-{}-{}",
+        std::process::id(),
+        SYNTH_DIR_SEQ.fetch_add(1, Ordering::SeqCst)
+    ));
+    std::fs::create_dir_all(&dir).expect("create synthetic artifact dir");
+    let hlo = "HLO placeholder (never compiled by this bench)\n";
+    std::fs::write(dir.join("apsp_staged_n64.hlo.txt"), hlo).expect("write fake artifact");
+    let manifest = format!(
+        r#"{{"version": 2, "tile": 32, "artifacts": [
+            {{"name": "apsp_staged_n64.hlo.txt", "variant": "staged", "n": 64,
+              "tile": 32, "dtype": "f32", "input_shape": [64, 64],
+              "output_shape": [64, 64], "bytes": {}}}]}}"#,
+        hlo.len()
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write manifest");
+    let mut config = Config::new(&dir);
+    config.engine.warm_variants = Vec::new();
+    Coordinator::start(config).expect("synthetic coordinator")
+}
+
+/// A deterministic dense response (inf + NO_PATH sprinkled in) sized like
+/// real serving traffic, for codec measurement without a solve.
+fn codec_response(n: usize) -> Response {
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let mut dist = vec![0f32; n * n];
+    let mut succ = vec![0usize; n * n];
+    for idx in 0..n * n {
+        let r = next();
+        dist[idx] = if idx % 97 == 13 {
+            f32::INFINITY
+        } else {
+            (r % 100_000) as f32 / 64.0
+        };
+        succ[idx] = if idx % 11 == 3 { NO_PATH } else { (r % n as u64) as usize };
+    }
+    for i in 0..n {
+        dist[i * n + i] = 0.0;
+    }
+    Response {
+        id: 42,
+        dist: DistMatrix::from_vec(n, dist),
+        succ: Some(succ),
+        source: Source::Cpu,
+        bucket: n,
+        seconds: 0.125,
+    }
+}
+
+fn median_secs(mut run: impl FnMut()) -> f64 {
+    let mut s = Samples::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        run();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s.median()
+}
+
+/// Binary matrix frame vs line-JSON: same response, both codecs, wall
+/// clock and wire bytes.  The frame's claim is decode speed — raw
+/// little-endian rows memcpy into place, while JSON re-parses every float
+/// — so that is the ratio the check mode pins (≥ 5×).
+fn frame_codec_section(sink: &mut BenchSink) {
+    common::banner("binary matrix frame vs line-JSON codec");
+    let n = if common::fast_mode() { 256 } else { 1024 };
+    let resp = codec_response(n);
+
+    let json_line = encode_response(&resp);
+    let frame_bytes = frame::encode_frame(&resp);
+    let json_encode = median_secs(|| {
+        black_box(encode_response(&resp));
+    });
+    let frame_encode = median_secs(|| {
+        black_box(frame::encode_frame(&resp));
+    });
+    let json_decode = median_secs(|| {
+        black_box(decode_response(&json_line).expect("json decode"));
+    });
+    let frame_decode = median_secs(|| {
+        black_box(frame::read_frame(&mut &frame_bytes[..]).expect("frame decode"));
+    });
+
+    // both codecs must reproduce the matrices bit-for-bit
+    let via_json = decode_response(&json_line).expect("json decode");
+    let via_frame = frame::read_frame(&mut &frame_bytes[..]).expect("frame decode");
+    for (a, b) in [(&via_json, &resp), (&via_frame, &resp)] {
+        assert_eq!(a.dist.n(), b.dist.n());
+        assert!(
+            a.dist
+                .as_slice()
+                .iter()
+                .zip(b.dist.as_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "codec round-trip is not bitwise"
+        );
+        assert_eq!(a.succ, b.succ, "codec round-trip lost successors");
+    }
+
+    let size_ratio = json_line.len() as f64 / frame_bytes.len() as f64;
+    let decode_ratio = json_decode / frame_decode;
+    println!(
+        "n={n} line-JSON    encode {}  decode {}  {} bytes",
+        format_time(json_encode),
+        format_time(json_decode),
+        json_line.len()
+    );
+    println!(
+        "n={n} binary frame encode {}  decode {}  {} bytes",
+        format_time(frame_encode),
+        format_time(frame_decode),
+        frame_bytes.len()
+    );
+    println!(
+        "frame is {size_ratio:.2}× smaller on the wire and decodes {decode_ratio:.1}× faster"
+    );
+    sink.record_json(Json::obj(vec![
+        ("bench", Json::str("frame_codec")),
+        ("n", Json::num(n as f64)),
+        ("json_bytes", Json::num(json_line.len() as f64)),
+        ("frame_bytes", Json::num(frame_bytes.len() as f64)),
+        ("json_encode_s", Json::Num(json_encode)),
+        ("frame_encode_s", Json::Num(frame_encode)),
+        ("json_decode_s", Json::Num(json_decode)),
+        ("frame_decode_s", Json::Num(frame_decode)),
+        ("size_ratio", Json::Num(size_ratio)),
+        ("decode_ratio", Json::Num(decode_ratio)),
+    ]));
+    if check_mode() {
+        assert!(
+            decode_ratio >= 5.0,
+            "binary frame should decode ≥ 5× faster than line-JSON (got {decode_ratio:.1}×)"
+        );
+        assert!(
+            size_ratio > 1.0,
+            "binary frame should be smaller than line-JSON (got {size_ratio:.2}×)"
+        );
+    }
+}
+
+/// One closed-loop client: `count` back-to-back solves over its own
+/// connection, classifying every reply.
+struct ClientTally {
+    ok: usize,
+    shed: usize,
+    deadline: usize,
+    other: usize,
+    latencies: Vec<f64>,
+}
+
+fn saturation_client(addr: &str, n: usize, seed_base: u64, count: usize) -> ClientTally {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut tally = ClientTally {
+        ok: 0,
+        shed: 0,
+        deadline: 0,
+        other: 0,
+        latencies: Vec::with_capacity(count),
+    };
+    for i in 0..count {
+        let g = generators::erdos_renyi(n, 0.3, seed_base + i as u64);
+        let req = Request {
+            id: i as u64 + 1,
+            graph: g,
+            variant: "cpu".into(), // every request costs real solver time
+            no_cache: true,        // admission behaviour, not cache behaviour
+            want_paths: false,
+            objective: "shortest".into(),
+            trace: false,
+        };
+        let line = encode_request_opts(
+            &req,
+            &WireOptions {
+                deadline_ms: Some(10_000),
+                binary: false,
+            },
+        );
+        let t0 = Instant::now();
+        writer.write_all(line.as_bytes()).expect("send");
+        writer.write_all(b"\n").expect("send");
+        let mut reply = String::new();
+        reader.read_line(&mut reply).expect("reply");
+        tally.latencies.push(t0.elapsed().as_secs_f64());
+        let v = Json::parse(&reply).expect("reply parses");
+        match v.get("type").as_str() {
+            Some("result") => tally.ok += 1,
+            Some("error") => match v.get("code").as_str() {
+                Some(c) if c == coordinator::types::CODE_SHED => tally.shed += 1,
+                Some(c) if c == coordinator::types::CODE_DEADLINE_EXCEEDED => {
+                    tally.deadline += 1
+                }
+                _ => tally.other += 1,
+            },
+            _ => tally.other += 1,
+        }
+    }
+    tally
+}
+
+/// Offered load at 1×/4×/10× of pool capacity against a small fixed pool:
+/// under capacity nothing sheds; past it the bounded queue sheds with the
+/// typed error and tail latency stays flat instead of growing without
+/// bound (the whole point of admission control).
+fn saturation_section(sink: &mut BenchSink) {
+    common::banner("front-end saturation — fixed pool, bounded queue, typed sheds");
+    let workers = 2usize;
+    let queue_depth = 4usize;
+    let coord = Arc::new(synthetic_coordinator());
+    let server = Server::spawn_with(
+        coord.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers,
+            queue_depth,
+            deadline_ms: 30_000,
+            idle_timeout_ms: 0,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+    let (n, per_client) = if common::fast_mode() { (128, 8) } else { (256, 30) };
+
+    for load in [1usize, 4, 10] {
+        let clients = load * workers;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    saturation_client(&addr, n, 10_000 * (c as u64 + 1), per_client)
+                })
+            })
+            .collect();
+        let mut ok = 0;
+        let mut shed = 0;
+        let mut deadline = 0;
+        let mut other = 0;
+        let mut lat = Samples::new();
+        for h in handles {
+            let t = h.join().expect("client thread");
+            ok += t.ok;
+            shed += t.shed;
+            deadline += t.deadline;
+            other += t.other;
+            for s in t.latencies {
+                lat.push(s);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let attempts = clients * per_client;
+        let shed_rate = shed as f64 / attempts as f64;
+        let throughput = ok as f64 / wall;
+        let pcts = lat.percentiles(&[50.0, 99.0]);
+        let (p50, p99) = (pcts[0], pcts[1]);
+        println!(
+            "load {load:>2}×  clients {clients:>2}  ok {ok:>3}  shed {shed:>3} \
+             ({:>4.0}%)  p50 {}  p99 {}  {throughput:.0} req/s",
+            shed_rate * 100.0,
+            format_time(p50),
+            format_time(p99),
+        );
+        sink.record_json(Json::obj(vec![
+            ("bench", Json::str("saturation")),
+            ("load", Json::num(load as f64)),
+            ("workers", Json::num(workers as f64)),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("n", Json::num(n as f64)),
+            ("attempts", Json::num(attempts as f64)),
+            ("ok", Json::num(ok as f64)),
+            ("shed", Json::num(shed as f64)),
+            ("deadline_exceeded", Json::num(deadline as f64)),
+            ("other_errors", Json::num(other as f64)),
+            ("shed_rate", Json::Num(shed_rate)),
+            ("throughput_rps", Json::Num(throughput)),
+            ("p50_s", Json::Num(p50)),
+            ("p99_s", Json::Num(p99)),
+        ]));
+        if check_mode() {
+            assert_eq!(
+                ok + shed + deadline + other,
+                attempts,
+                "every request must come back as a result or a typed error"
+            );
+            assert_eq!(other, 0, "no untyped errors under saturation");
+            if load >= 10 {
+                assert!(
+                    shed > 0,
+                    "10× capacity must trip admission control (ok={ok} shed={shed})"
+                );
+            }
+        }
+    }
+    server.shutdown();
+}
+
+fn serving_sections() {
+    // default path BENCH_saturation.json at the repo root (the name CI
+    // uploads); FW_BENCH_JSON redirects as usual
+    let mut sink = BenchSink::from_env("saturation");
+    sink.set_meta("fast", Json::Bool(common::fast_mode()));
+    sink.set_meta("kernel", Json::str(fw_stage::apsp::simd::active().name()));
+    frame_codec_section(&mut sink);
+    saturation_section(&mut sink);
+    match sink.finish() {
+        Ok(Some(path)) => println!("\nserving trajectory appended: {}", path.display()),
+        Ok(None) => println!("\nserving trajectory sink disabled (FW_BENCH_JSON=off)"),
+        Err(e) => eprintln!("\nWARN: could not write serving trajectory: {e}"),
+    }
+}
+
 fn main() {
+    if std::env::var("FW_SATURATION_ONLY").map(|v| v == "1").unwrap_or(false) {
+        // artifact-free serving smoke: frame codec + saturation only
+        serving_sections();
+        return;
+    }
+
     superblock_schedule_section();
 
     let Some(dir) = common::artifact_dir() else {
         println!("(artifacts not built — remaining coordinator benches need `make artifacts`)");
+        serving_sections();
         return;
     };
 
@@ -366,4 +723,6 @@ fn main() {
         snap.get("superblock_rounds"),
         snap.get("superblock_tiles")
     );
+
+    serving_sections();
 }

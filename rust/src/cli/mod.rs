@@ -10,10 +10,12 @@
 //!                    [--superblock-bucket N] [--superblock-workers W]
 //!                    [--update-max-chain K] [--log-level error|warn|info|debug]
 //!                    [--trace-journal K] [--max-connections N]
+//!                    [--workers W] [--queue-depth D] [--deadline-ms MS]
+//!                    [--idle-timeout-ms MS]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
 //!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
-//!                    [--trace]
+//!                    [--trace] [--binary] [--deadline-ms MS]
 //! fw-stage gen       --model er|grid|scale-free|geometric|ring|dag --n N --out g.gr
 //! fw-stage simulate  --table1 | --fig7 [--csv] | --analysis | --ablation [--n N] | --accuracy
 //! fw-stage bench-tasks [--variant staged] [--n 512] [--iters 5] [--artifacts DIR]
@@ -42,6 +44,17 @@
 //! path), `minimax` (min, max — smallest maximum edge), or `reachability`
 //! (or, and — transitive closure).  The dynamic tier (`--update`) and the
 //! johnson variant are shortest-only.
+//!
+//! Serving limits: `serve --workers` fixes the solve worker-pool width
+//! (0 = one per core), `--queue-depth` bounds the request queue feeding
+//! it (overflow is shed with a typed `code:"shed"` error), and
+//! `--deadline-ms` sets the default per-request deadline (0 disables;
+//! requests override it with the wire `"deadline_ms"` field, and
+//! `client --deadline-ms` sends exactly that).  `--idle-timeout-ms`
+//! closes connections that send nothing, with a typed
+//! `code:"idle_timeout"` line.  `client --binary` negotiates the
+//! length-prefixed binary matrix frame for the reply instead of
+//! line-JSON (bitwise-identical distances, raw little-endian rows).
 //!
 //! Observability: `serve --log-level` sets the structured-stderr-log
 //! threshold (default `warn`) and `--trace-journal K` sizes the in-memory
@@ -330,10 +343,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
     let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
     let log_level = args.get_or("log-level", "warn").to_string();
-    let max_connections = args.get_usize(
-        "max-connections",
-        coordinator::server::ServerConfig::default().max_connections,
-    )?;
+    let defaults = coordinator::server::ServerConfig::default();
+    let max_connections = args.get_usize("max-connections", defaults.max_connections)?;
+    let workers = args.get_usize("workers", defaults.workers)?;
+    let queue_depth = args.get_usize("queue-depth", defaults.queue_depth)?;
+    let deadline_ms = args.get_u64("deadline-ms", defaults.deadline_ms)?;
+    let idle_timeout_ms = args.get_u64("idle-timeout-ms", defaults.idle_timeout_ms)?;
     let _ = args.get("artifacts");
     let _ = args.get("cache");
     let _ = args.get("batch-window-ms");
@@ -350,20 +365,33 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     if max_connections == 0 {
         bail!("--max-connections must be at least 1");
     }
+    if queue_depth == 0 {
+        bail!("--queue-depth must be at least 1 (admission needs somewhere to admit)");
+    }
     let coord = Arc::new(start_coordinator(&args)?);
     let summary = coord.manifest_summary().clone();
     let server = coordinator::server::Server::spawn_with(
         coord,
         &addr,
-        coordinator::server::ServerConfig { max_connections },
+        coordinator::server::ServerConfig {
+            max_connections,
+            workers,
+            queue_depth,
+            deadline_ms,
+            idle_timeout_ms,
+        },
     )?;
     eprintln!(
-        "fw-stage serving on {} (variants: {}; buckets: {:?}; kernel: {}; max-connections: {})",
+        "fw-stage serving on {} (variants: {}; buckets: {:?}; kernel: {}; max-connections: {}; \
+         workers: {}; queue-depth: {}; deadline-ms: {})",
         server.addr(),
         summary.variants.join(", "),
         summary.buckets,
         crate::apsp::simd::active().name(),
         max_connections,
+        server.workers(),
+        server.queue_depth(),
+        deadline_ms,
     );
     // serve until killed
     loop {
@@ -372,11 +400,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_client(rest: &[String]) -> Result<()> {
-    let args = Args::parse(rest, &["stats", "paths", "trace"])?;
+    let args = Args::parse(rest, &["stats", "paths", "trace", "binary"])?;
     let addr = args.get("addr").context("--addr HOST:PORT required")?;
     let want_stats = args.get_bool("stats");
     let want_paths = args.get_bool("paths");
     let want_trace = args.get_bool("trace");
+    let want_binary = args.get_bool("binary");
     let src = args.get_usize("src", 0)?;
     let dst = args.get_usize("dst", 0)?;
     let input = args.get("input").map(str::to_string);
@@ -384,6 +413,13 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     let output = args.get("output").map(PathBuf::from);
     let update_spec = args.get("update").map(str::to_string);
     let objective = args.get_or("objective", "shortest").to_string();
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .with_context(|| format!("--deadline-ms {s:?} is not a millisecond count"))?,
+        ),
+        None => None,
+    };
     args.reject_unknown()?;
     if update_spec.is_some() && objective != "shortest" {
         bail!("--update serves the shortest objective only (got --objective {objective})");
@@ -391,8 +427,18 @@ fn cmd_client(rest: &[String]) -> Result<()> {
     if want_trace && (want_paths || update_spec.is_some() || objective != "shortest") {
         bail!("--trace traces a plain solve (no --paths/--update/--objective)");
     }
+    if want_binary && want_trace {
+        bail!("--binary replies have no rendering for the --trace echo; pick one");
+    }
+    if want_binary && update_spec.is_some() {
+        bail!("--binary applies to solve replies (updates stay line-JSON)");
+    }
+    if want_binary && want_paths && objective != "shortest" {
+        bail!("--binary --paths serves the shortest objective only");
+    }
 
     let mut client = coordinator::client::Client::connect(addr)?;
+    client.set_deadline_ms(deadline_ms);
     if want_stats {
         println!("{}", client.stats()?);
         return Ok(());
@@ -408,10 +454,11 @@ fn cmd_client(rest: &[String]) -> Result<()> {
             (resp, graph.clone())
         }
         None => {
-            let resp = if want_paths {
-                client.solve_paths_objective(&graph, &variant, &objective)?
-            } else {
-                client.solve_objective(&graph, &variant, &objective)?
+            let resp = match (want_binary, want_paths) {
+                (true, true) => client.solve_paths_binary(&graph, &variant)?,
+                (true, false) => client.solve_binary_objective(&graph, &variant, &objective)?,
+                (false, true) => client.solve_paths_objective(&graph, &variant, &objective)?,
+                (false, false) => client.solve_objective(&graph, &variant, &objective)?,
             };
             (resp, graph.clone())
         }

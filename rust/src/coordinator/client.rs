@@ -1,15 +1,22 @@
 //! Blocking TCP client for the coordinator protocol (examples, benches,
 //! and the `fw-stage client` subcommand).
+//!
+//! Replies are demultiplexed by a 4-byte peek: line-JSON starts `{`
+//! (0x7B), the binary matrix frame starts with the [`super::frame`]
+//! magic — so JSON and binary replies interleave freely on one
+//! connection, and typed error lines still arrive as JSON even for
+//! `"binary": true` requests.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
 use super::cache::graph_fingerprint;
+use super::frame;
 use super::types::{
-    decode_response, encode_request, encode_update_request, Request, Response, UpdateRequest,
-    CODE_UPDATE_BASE_MISSING, DEFAULT_OBJECTIVE,
+    decode_response, encode_request_opts, encode_update_request_opts, Request, Response,
+    UpdateRequest, WireOptions, CODE_UPDATE_BASE_MISSING, DEFAULT_OBJECTIVE,
 };
 use crate::apsp::incremental::{self, EdgeUpdate};
 use crate::graph::DistMatrix;
@@ -25,11 +32,21 @@ pub enum UpdateReply {
     BaseMissing,
 }
 
+/// A demultiplexed server reply: one JSON line or one binary frame.
+enum Reply {
+    Line(String),
+    Frame(Box<Response>),
+}
+
 /// One connection to a running `fw-stage serve`.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    /// Per-request deadline sent as the wire `"deadline_ms"` field on
+    /// every solve/update; `None` leaves the server default in charge,
+    /// `Some(0)` disables the deadline for this client's requests.
+    deadline_ms: Option<u64>,
 }
 
 impl Client {
@@ -40,24 +57,88 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             next_id: 1,
+            deadline_ms: None,
         })
     }
 
+    /// Set (or clear) the deadline attached to subsequent solve/update
+    /// requests.  `Some(0)` explicitly disables the server's default.
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
+    }
+
+    fn wire_options(&self, binary: bool) -> WireOptions {
+        WireOptions {
+            deadline_ms: self.deadline_ms,
+            binary,
+        }
+    }
+
     fn roundtrip(&mut self, line: &str) -> Result<String> {
+        match self.roundtrip_any(line)? {
+            Reply::Line(line) => Ok(line),
+            Reply::Frame(_) => bail!("unexpected binary frame reply to a control request"),
+        }
+    }
+
+    /// Send one line, read one reply of either wire form.  The first 4
+    /// bytes decide: the frame magic means binary, anything else is the
+    /// head of a JSON line.
+    fn roundtrip_any(&mut self, line: &str) -> Result<Reply> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
-        let mut reply = String::new();
-        let n = self.reader.read_line(&mut reply)?;
-        if n == 0 {
-            bail!("server closed the connection");
+        let mut head = [0u8; 4];
+        if let Err(e) = self.reader.read_exact(&mut head) {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                bail!("server closed the connection");
+            }
+            return Err(e.into());
         }
-        Ok(reply)
+        if head == frame::MAGIC {
+            let resp = frame::read_frame_body(&mut self.reader)
+                .context("decoding binary frame reply")?;
+            return Ok(Reply::Frame(Box::new(resp)));
+        }
+        let mut rest = String::new();
+        let n = self.reader.read_line(&mut rest)?;
+        if n == 0 && rest.is_empty() {
+            bail!("server closed the connection mid-line");
+        }
+        let head = std::str::from_utf8(&head).context("reply head is not UTF-8")?;
+        Ok(Reply::Line(format!("{head}{rest}")))
     }
 
     /// Solve a graph; returns the full response (distances + metadata).
     pub fn solve(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
         self.request(graph, variant, false, DEFAULT_OBJECTIVE)
+    }
+
+    /// [`Client::solve`], negotiating the length-prefixed binary frame
+    /// for the reply (`"binary": true`): raw little-endian `f32` rows
+    /// instead of JSON text, bitwise-identical distances.
+    pub fn solve_binary(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
+        self.request_opts(graph, variant, false, DEFAULT_OBJECTIVE, true)
+    }
+
+    /// [`Client::solve_binary`] under an explicit serving objective.
+    pub fn solve_binary_objective(
+        &mut self,
+        graph: &DistMatrix,
+        variant: &str,
+        objective: &str,
+    ) -> Result<Response> {
+        self.request_opts(graph, variant, false, objective, true)
+    }
+
+    /// [`Client::solve_paths`] over the binary frame: the reply carries
+    /// the successor matrix as raw little-endian `u32` rows.
+    pub fn solve_paths_binary(&mut self, graph: &DistMatrix, variant: &str) -> Result<Response> {
+        let resp = self.request_opts(graph, variant, true, DEFAULT_OBJECTIVE, true)?;
+        if resp.succ.is_none() {
+            bail!("server response is missing the successor matrix");
+        }
+        Ok(resp)
     }
 
     /// Solve a graph under an explicit serving objective (`"shortest"`,
@@ -101,6 +182,17 @@ impl Client {
         want_paths: bool,
         objective: &str,
     ) -> Result<Response> {
+        self.request_opts(graph, variant, want_paths, objective, false)
+    }
+
+    fn request_opts(
+        &mut self,
+        graph: &DistMatrix,
+        variant: &str,
+        want_paths: bool,
+        objective: &str,
+        binary: bool,
+    ) -> Result<Response> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request {
@@ -112,8 +204,13 @@ impl Client {
             objective: objective.to_string(),
             trace: false,
         };
-        let reply = self.roundtrip(&encode_request(&req))?;
-        let resp = decode_response(&reply)?;
+        let line = encode_request_opts(&req, &self.wire_options(binary));
+        let resp = match self.roundtrip_any(&line)? {
+            Reply::Frame(resp) => *resp,
+            // typed errors (shed, deadline, objective, …) are always
+            // JSON lines, even on binary-negotiated requests
+            Reply::Line(reply) => decode_response(&reply)?,
+        };
         if resp.id != id {
             bail!("response id {} for request {id}", resp.id);
         }
@@ -135,7 +232,8 @@ impl Client {
             objective: DEFAULT_OBJECTIVE.to_string(),
             trace: true,
         };
-        let reply = self.roundtrip(&encode_request(&req))?;
+        // trace echoes are JSON-only (the server rejects binary+trace)
+        let reply = self.roundtrip(&encode_request_opts(&req, &self.wire_options(false)))?;
         let v = Json::parse(&reply).context("traced reply is not valid JSON")?;
         let trace = v.get("trace").clone();
         let resp = decode_response(&reply)?;
@@ -206,7 +304,10 @@ impl Client {
             want_paths,
             objective: DEFAULT_OBJECTIVE.to_string(),
         };
-        let reply = self.roundtrip(&encode_update_request(&req))?;
+        // updates stay line-JSON (the incremental tier's deltas are the
+        // payload, not a matrix) but carry the client's deadline
+        let reply =
+            self.roundtrip(&encode_update_request_opts(&req, &self.wire_options(false)))?;
         let v = Json::parse(&reply).context("update reply is not valid JSON")?;
         if v.get("type").as_str() == Some("error")
             && v.get("code").as_str() == Some(CODE_UPDATE_BASE_MISSING)

@@ -1,0 +1,355 @@
+//! Length-prefixed binary response frame (opt-in wire encoding).
+//!
+//! A JSON result line renders every f32 as shortest-round-trip decimal —
+//! readable, diffable, and the right default, but an n=1024 dist+succ
+//! response is tens of MB of text and the decode cost dwarfs the solve at
+//! serving scale.  Requests that set `"binary": true` get this frame
+//! instead: a fixed 40-byte header followed by the raw little-endian
+//! matrices.  Decoding is `from_le_bytes` per cell — bitwise exact by
+//! construction, no formatting or parsing on either side.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! | offset | size | field                                                |
+//! |-------:|-----:|------------------------------------------------------|
+//! |      0 |    4 | magic `"FWBF"`                                       |
+//! |      4 |    1 | version (currently 1)                                |
+//! |      5 |    1 | flags (bit 0: successor matrix present)              |
+//! |      6 |    1 | source tag (0 device, 1 cpu, 2 cache, 3 superblock, 4 incremental) |
+//! |      7 |    1 | reserved (0)                                         |
+//! |      8 |    4 | n (u32)                                              |
+//! |     12 |    4 | bucket (u32)                                         |
+//! |     16 |    8 | request id (u64)                                     |
+//! |     24 |    8 | seconds (f64)                                        |
+//! |     32 |    8 | body length in bytes (u64)                           |
+//! |     40 | body | n² f32 dist (row-major), then n² u32 succ if flagged  |
+//!
+//! `+inf` distances travel as their IEEE bits (binary needs no `null`
+//! convention); [`NO_PATH`] successors travel as `u32::MAX`.  The body
+//! length is redundant with `n` + flags and is validated against them —
+//! a cheap corruption check that also lets proxies skip frames blind.
+//!
+//! A JSON line can never be confused with a frame: lines start with `{`
+//! (0x7B) and the magic starts with `F` (0x46), which is how the client
+//! demultiplexes replies from servers that ignored the negotiation.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::types::{Response, Source, MAX_N};
+use crate::apsp::paths::NO_PATH;
+use crate::graph::DistMatrix;
+
+/// Frame magic: the first four bytes of every binary response.
+pub const MAGIC: [u8; 4] = *b"FWBF";
+
+/// Current frame version.
+pub const VERSION: u8 = 1;
+
+/// Total header size in bytes.
+pub const HEADER_LEN: usize = 40;
+
+/// Flags bit 0: the body carries an n² u32 successor matrix after dist.
+pub const FLAG_SUCC: u8 = 1;
+
+/// Wire rendering of [`NO_PATH`] in the successor matrix.
+const NO_PATH_WIRE: u32 = u32::MAX;
+
+fn source_tag(source: Source) -> u8 {
+    match source {
+        Source::Device => 0,
+        Source::Cpu => 1,
+        Source::Cache => 2,
+        Source::SuperBlock => 3,
+        Source::Incremental => 4,
+    }
+}
+
+fn source_from_tag(tag: u8) -> Result<Source> {
+    Ok(match tag {
+        0 => Source::Device,
+        1 => Source::Cpu,
+        2 => Source::Cache,
+        3 => Source::SuperBlock,
+        4 => Source::Incremental,
+        other => bail!("frame: unknown source tag {other}"),
+    })
+}
+
+fn body_len(n: usize, with_succ: bool) -> u64 {
+    let cells = (n as u64) * (n as u64);
+    cells * 4 * if with_succ { 2 } else { 1 }
+}
+
+/// Stream a response as one frame.  Rows are staged through a single
+/// reused n·4-byte buffer, so peak formatting state is O(n) — the same
+/// streaming discipline as [`super::types::write_response`].
+pub fn write_frame<W: Write>(out: &mut W, resp: &Response) -> std::io::Result<()> {
+    let n = resp.dist.n();
+    let with_succ = resp.succ.is_some();
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5] = if with_succ { FLAG_SUCC } else { 0 };
+    header[6] = source_tag(resp.source);
+    header[8..12].copy_from_slice(&(n as u32).to_le_bytes());
+    header[12..16].copy_from_slice(&(resp.bucket as u32).to_le_bytes());
+    header[16..24].copy_from_slice(&resp.id.to_le_bytes());
+    header[24..32].copy_from_slice(&resp.seconds.to_le_bytes());
+    header[32..40].copy_from_slice(&body_len(n, with_succ).to_le_bytes());
+    out.write_all(&header)?;
+    let mut row_buf = vec![0u8; n * 4];
+    for i in 0..n {
+        for (cell, w) in row_buf.chunks_exact_mut(4).zip(resp.dist.row(i)) {
+            cell.copy_from_slice(&w.to_le_bytes());
+        }
+        out.write_all(&row_buf)?;
+    }
+    if let Some(succ) = &resp.succ {
+        debug_assert_eq!(succ.len(), n * n);
+        for row in succ.chunks_exact(n) {
+            for (cell, &s) in row_buf.chunks_exact_mut(4).zip(row) {
+                let wire = if s == NO_PATH { NO_PATH_WIRE } else { s as u32 };
+                cell.copy_from_slice(&wire.to_le_bytes());
+            }
+            out.write_all(&row_buf)?;
+        }
+    }
+    Ok(())
+}
+
+/// Encode a response as one in-memory frame (benches, tests, tooling; the
+/// server streams via [`write_frame`]).
+pub fn encode_frame(resp: &Response) -> Vec<u8> {
+    let n = resp.dist.n();
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len(n, resp.succ.is_some()) as usize);
+    write_frame(&mut out, resp).expect("writing a frame to a Vec cannot fail");
+    out
+}
+
+/// Read a whole frame, magic included.
+pub fn read_frame<R: Read>(input: &mut R) -> Result<Response> {
+    let mut magic = [0u8; 4];
+    input.read_exact(&mut magic).context("frame: reading magic")?;
+    if magic != MAGIC {
+        bail!("frame: bad magic {magic:?} (expected {MAGIC:?})");
+    }
+    read_frame_body(input)
+}
+
+/// Read a frame whose 4-byte magic was already consumed (the client peeks
+/// the magic to demultiplex frame vs JSON replies on one stream).
+pub fn read_frame_body<R: Read>(input: &mut R) -> Result<Response> {
+    let mut rest = [0u8; HEADER_LEN - 4];
+    input.read_exact(&mut rest).context("frame: reading header")?;
+    let version = rest[0];
+    if version != VERSION {
+        bail!("frame: unsupported version {version} (this build speaks {VERSION})");
+    }
+    let flags = rest[1];
+    if flags & !FLAG_SUCC != 0 {
+        bail!("frame: unknown flag bits 0x{:02x}", flags & !FLAG_SUCC);
+    }
+    let with_succ = flags & FLAG_SUCC != 0;
+    let source = source_from_tag(rest[2])?;
+    let n = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+    if n == 0 || n > MAX_N {
+        bail!("frame: n={n} outside 1..={MAX_N}");
+    }
+    let bucket = u32::from_le_bytes(rest[8..12].try_into().unwrap()) as usize;
+    let id = u64::from_le_bytes(rest[12..20].try_into().unwrap());
+    let seconds = f64::from_le_bytes(rest[20..28].try_into().unwrap());
+    let declared = u64::from_le_bytes(rest[28..36].try_into().unwrap());
+    let expected = body_len(n, with_succ);
+    if declared != expected {
+        bail!("frame: body length {declared} does not match n={n} flags=0x{flags:02x} (expected {expected})");
+    }
+    let mut row_buf = vec![0u8; n * 4];
+    let mut data = Vec::with_capacity(n * n);
+    for i in 0..n {
+        input
+            .read_exact(&mut row_buf)
+            .with_context(|| format!("frame: reading dist row {i}"))?;
+        data.extend(row_buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    }
+    let dist = DistMatrix::from_vec(n, data);
+    let succ = if with_succ {
+        let mut succ = Vec::with_capacity(n * n);
+        for i in 0..n {
+            input
+                .read_exact(&mut row_buf)
+                .with_context(|| format!("frame: reading succ row {i}"))?;
+            for cell in row_buf.chunks_exact(4) {
+                let wire = u32::from_le_bytes(cell.try_into().unwrap());
+                if wire == NO_PATH_WIRE {
+                    succ.push(NO_PATH);
+                } else {
+                    let s = wire as usize;
+                    if s >= n {
+                        bail!("frame: successor {s} out of range for n={n}");
+                    }
+                    succ.push(s);
+                }
+            }
+        }
+        Some(succ)
+    } else {
+        None
+    };
+    Ok(Response { id, dist, succ, source, bucket, seconds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::types::encode_response;
+    use crate::INF;
+
+    fn sample(n: usize, with_succ: bool, seed: u64) -> Response {
+        // xorshift-filled matrices: negatives, subnormal-ish magnitudes,
+        // and a sprinkle of +inf so the null-free encoding is exercised
+        let mut state = seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut data = Vec::with_capacity(n * n);
+        for idx in 0..n * n {
+            let v = if idx % 97 == 13 {
+                INF
+            } else {
+                ((next() % 2_000_000) as f32 - 1_000_000.0) / 1024.0
+            };
+            data.push(v);
+        }
+        for i in 0..n {
+            data[i * n + i] = 0.0;
+        }
+        let succ = with_succ.then(|| {
+            (0..n * n)
+                .map(|idx| if idx % 11 == 3 { NO_PATH } else { next() as usize % n })
+                .collect()
+        });
+        Response {
+            id: 0x0123_4567_89ab_cdef,
+            dist: DistMatrix::from_vec(n, data),
+            succ,
+            source: Source::SuperBlock,
+            bucket: 512,
+            seconds: 0.03125,
+        }
+    }
+
+    #[test]
+    fn header_bytes_are_pinned() {
+        let resp = Response {
+            id: 7,
+            dist: DistMatrix::unconnected(2),
+            succ: None,
+            source: Source::Device,
+            bucket: 64,
+            seconds: 0.5,
+        };
+        let frame = encode_frame(&resp);
+        assert_eq!(frame.len(), HEADER_LEN + 16);
+        assert_eq!(&frame[0..4], b"FWBF");
+        assert_eq!(frame[4], 1, "version");
+        assert_eq!(frame[5], 0, "no succ flag");
+        assert_eq!(frame[6], 0, "device tag");
+        assert_eq!(frame[7], 0, "reserved");
+        assert_eq!(&frame[8..12], &2u32.to_le_bytes(), "n");
+        assert_eq!(&frame[12..16], &64u32.to_le_bytes(), "bucket");
+        assert_eq!(&frame[16..24], &7u64.to_le_bytes(), "id");
+        assert_eq!(&frame[24..32], &0.5f64.to_le_bytes(), "seconds");
+        assert_eq!(&frame[32..40], &16u64.to_le_bytes(), "body length");
+        // diagonal 0.0, off-diagonal +inf — raw IEEE bits, no null
+        assert_eq!(&frame[40..44], &0.0f32.to_le_bytes());
+        assert_eq!(&frame[44..48], &INF.to_le_bytes());
+    }
+
+    #[test]
+    fn round_trips_bitwise_with_inf_no_path_and_negatives() {
+        let resp = sample(23, true, 0x9E37);
+        let frame = encode_frame(&resp);
+        let back = read_frame(&mut &frame[..]).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.source, resp.source);
+        assert_eq!(back.bucket, resp.bucket);
+        assert_eq!(back.seconds.to_bits(), resp.seconds.to_bits());
+        for (a, b) in back.dist.as_slice().iter().zip(resp.dist.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.succ, resp.succ);
+    }
+
+    #[test]
+    fn large_response_round_trips_and_beats_json_size() {
+        // the acceptance-scale payload: n=1024 dist+succ.  The ISSUE's
+        // headline asked for ≥5× vs line-JSON; raw LE bytes are 8 per
+        // cell-pair vs ~15 for the shortest-round-trip decimal pair, so
+        // the honest arithmetic ceiling is ~2×, asserted here at ≥1.7×
+        // (the ≥5× win is decode *time*, measured in benches/coordinator).
+        let n = 1024;
+        let resp = sample(n, true, 0xACE1);
+        let frame = encode_frame(&resp);
+        assert_eq!(frame.len(), HEADER_LEN + 8 * n * n, "frame size is exactly header + raw body");
+        let back = read_frame(&mut &frame[..]).unwrap();
+        for (a, b) in back.dist.as_slice().iter().zip(resp.dist.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.succ, resp.succ);
+        let json = encode_response(&resp);
+        let ratio = json.len() as f64 / frame.len() as f64;
+        assert!(
+            ratio >= 1.7,
+            "binary frame should cut the n={n} dist+succ payload ≥1.7× (got {ratio:.2}×: {} vs {} bytes)",
+            json.len(),
+            frame.len()
+        );
+        // dist-only responses cut deeper: no cheap integer succ rows
+        // diluting the ratio
+        let resp = sample(n, false, 0xACE1);
+        let ratio = encode_response(&resp).len() as f64 / encode_frame(&resp).len() as f64;
+        assert!(ratio >= 2.2, "dist-only payload cut should be ≥2.2× (got {ratio:.2}×)");
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_misread() {
+        let good = encode_frame(&sample(4, true, 3));
+        let cases: Vec<(&str, Box<dyn Fn(&mut Vec<u8>)>, &str)> = vec![
+            ("magic", Box::new(|f| f[0] = b'X'), "bad magic"),
+            ("version", Box::new(|f| f[4] = 9), "unsupported version"),
+            ("flags", Box::new(|f| f[5] |= 0x80), "unknown flag"),
+            ("source", Box::new(|f| f[6] = 200), "source tag"),
+            ("n zero", Box::new(|f| f[8..12].copy_from_slice(&0u32.to_le_bytes())), "outside"),
+            (
+                "n huge",
+                Box::new(|f| f[8..12].copy_from_slice(&1_000_000u32.to_le_bytes())),
+                "outside",
+            ),
+            (
+                "body length",
+                Box::new(|f| f[32..40].copy_from_slice(&7u64.to_le_bytes())),
+                "does not match",
+            ),
+            ("truncated", Box::new(|f| f.truncate(f.len() - 5)), "reading"),
+            (
+                "succ range",
+                Box::new(|f| {
+                    let start = HEADER_LEN + 4 * 16; // first succ cell (n=4)
+                    f[start..start + 4].copy_from_slice(&99u32.to_le_bytes());
+                }),
+                "out of range",
+            ),
+        ];
+        for (what, mutate, needle) in cases {
+            let mut bad = good.clone();
+            mutate(&mut bad);
+            let err = read_frame(&mut &bad[..]).expect_err(what).to_string();
+            assert!(err.contains(needle), "{what}: {err:?} missing {needle:?}");
+        }
+    }
+}

@@ -35,6 +35,8 @@ struct Inner {
     errors: u64,
     errors_by_code: BTreeMap<String, u64>,
     connections_shed: u64,
+    requests_shed: u64,
+    idle_timeouts: u64,
     device_solves: u64,
     cpu_solves: u64,
     cache_hits: u64,
@@ -50,6 +52,10 @@ struct Inner {
     hists: BTreeMap<(String, String), Histogram>,
     device_seconds: f64,
     queue_wait_seconds: f64,
+    /// Serving-queue wait (enqueue → worker pickup) per data request —
+    /// distinct from `queue_wait_seconds`, which sums *engine-batch* queue
+    /// time inside device rounds.
+    queue_wait: Histogram,
 }
 
 impl Metrics {
@@ -80,6 +86,26 @@ impl Metrics {
     /// request failures on dashboards.
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().connections_shed += 1;
+    }
+
+    /// Count one *request* shed at queue admission (the bounded serving
+    /// queue was full).  Same doctrine as [`Metrics::record_shed`]: this
+    /// is backpressure working, not a request error.
+    pub fn record_queue_shed(&self) {
+        self.inner.lock().unwrap().requests_shed += 1;
+    }
+
+    /// Count one connection closed for sitting idle past the configured
+    /// read timeout.  Not an error either — the client did nothing wrong
+    /// by going quiet; the server just reclaimed the admission slot.
+    pub fn record_idle_timeout(&self) {
+        self.inner.lock().unwrap().idle_timeouts += 1;
+    }
+
+    /// Observe one data request's serving-queue wait (enqueue → worker
+    /// pickup), feeding the `fw_queue_wait_seconds` histogram.
+    pub fn record_queue_wait(&self, seconds: f64) {
+        self.inner.lock().unwrap().queue_wait.observe(seconds);
     }
 
     pub fn record_solve(&self, source: super::types::Source, objective: Objective, seconds: f64) {
@@ -157,6 +183,8 @@ impl Metrics {
             ("errors", Json::num(m.errors as f64)),
             ("errors_by_code", Json::Obj(codes)),
             ("connections_shed", Json::num(m.connections_shed as f64)),
+            ("requests_shed", Json::num(m.requests_shed as f64)),
+            ("idle_timeouts", Json::num(m.idle_timeouts as f64)),
             ("device_solves", Json::num(m.device_solves as f64)),
             ("cpu_solves", Json::num(m.cpu_solves as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
@@ -176,6 +204,7 @@ impl Metrics {
             ("latency_p99_s", latency(percentiles[2])),
             ("latency_max_s", latency(m.latency.max())),
             ("latency_hist", Json::Obj(hists)),
+            ("queue_wait_hist", m.queue_wait.to_json()),
         ])
     }
 
@@ -193,6 +222,12 @@ impl Metrics {
         out.push_str(&format!("fw_errors_total {}\n", m.errors));
         out.push_str("# TYPE fw_connections_shed_total counter\n");
         out.push_str(&format!("fw_connections_shed_total {}\n", m.connections_shed));
+        out.push_str("# TYPE fw_requests_shed_total counter\n");
+        out.push_str(&format!("fw_requests_shed_total {}\n", m.requests_shed));
+        out.push_str("# TYPE fw_idle_timeouts_total counter\n");
+        out.push_str(&format!("fw_idle_timeouts_total {}\n", m.idle_timeouts));
+        out.push_str("# TYPE fw_queue_wait_seconds histogram\n");
+        render_series(&mut out, "fw_queue_wait_seconds", "", &m.queue_wait);
         out.push_str("# TYPE fw_request_seconds histogram\n");
         for ((source, objective), h) in &m.hists {
             // label values are escaped even though today's sources and
@@ -327,6 +362,43 @@ mod tests {
         assert_eq!(snap.get("errors").as_usize(), Some(1), "sheds are not errors");
         let text = m.exposition();
         assert!(text.contains("fw_connections_shed_total 2\n"), "{text}");
+    }
+
+    #[test]
+    fn queue_sheds_and_idle_timeouts_count_separately_from_errors() {
+        // same backpressure-is-not-failure doctrine as connection sheds:
+        // a full queue and a reclaimed idle slot are the server working,
+        // not requests failing
+        let m = Metrics::new();
+        m.record_queue_shed();
+        m.record_queue_shed();
+        m.record_queue_shed();
+        m.record_idle_timeout();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests_shed").as_usize(), Some(3));
+        assert_eq!(snap.get("idle_timeouts").as_usize(), Some(1));
+        assert_eq!(snap.get("errors").as_usize(), Some(0), "sheds/timeouts are not errors");
+        assert_eq!(snap.get("connections_shed").as_usize(), Some(0));
+        let text = m.exposition();
+        assert!(text.contains("fw_requests_shed_total 3\n"), "{text}");
+        assert!(text.contains("fw_idle_timeouts_total 1\n"), "{text}");
+    }
+
+    #[test]
+    fn queue_wait_histogram_records_and_round_trips() {
+        let m = Metrics::new();
+        m.record_queue_wait(0.001);
+        m.record_queue_wait(0.004);
+        m.record_queue_wait(0.5);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("queue_wait_hist").get("count").as_usize(), Some(3));
+        let sum = snap.get("queue_wait_hist").get("sum_s").as_f64().unwrap();
+        assert!((sum - 0.505).abs() < 1e-12, "{sum}");
+        let parsed = parse_exposition(&m.exposition()).unwrap();
+        // unlabeled series key back as `name{}` (parser convention)
+        let h = &parsed["fw_queue_wait_seconds{}"];
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 0.505).abs() < 1e-12);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! ```
 //!
 //! * [`types`] — request/response structs + wire codec
+//! * [`frame`] — opt-in length-prefixed binary response frame
 //! * [`router`] — CPU-vs-device routing policy
 //! * [`batcher`] — block-diagonal packing plans
 //! * [`engine`] — the PJRT executor thread
@@ -23,6 +24,7 @@ pub mod batcher;
 pub mod cache;
 pub mod client;
 pub mod engine;
+pub mod frame;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -85,6 +87,19 @@ impl Config {
 pub enum UpdateOutcome {
     Solved(Response),
     BaseMissing { fingerprint: u64 },
+}
+
+/// Outcome of a deadline-carrying solve.  The vendored `anyhow` subset has
+/// no downcasting, so "the deadline expired" is a typed success variant
+/// rather than an error the server would have to string-match: `Err` still
+/// means the request itself was bad or a tier failed.
+pub enum SolveOutcome {
+    Done(Response),
+    /// The deadline passed between solve phases; `phase` names the work
+    /// that was about to start (`"solve"`) or had just finished
+    /// (`"finish"`).  A `"finish"` expiry already cached the closure, so a
+    /// client retry is cheap.
+    DeadlineExceeded { phase: &'static str },
 }
 
 /// The coordinator: validates, routes, caches, and dispatches solves.
@@ -177,8 +192,25 @@ impl Coordinator {
 
     /// Serve one request (blocking). This is the whole request path.
     pub fn solve(&self, req: &Request) -> Result<Response> {
+        match self.solve_with_deadline(req, None)? {
+            SolveOutcome::Done(resp) => Ok(resp),
+            SolveOutcome::DeadlineExceeded { .. } => {
+                unreachable!("no deadline was set, so none can expire")
+            }
+        }
+    }
+
+    /// [`Coordinator::solve`] with an optional absolute deadline checked
+    /// between solve phases (after a cache miss, before encoding), so work
+    /// whose client has given up is abandoned early instead of burning a
+    /// worker.  `None` never expires.
+    pub fn solve_with_deadline(
+        &self,
+        req: &Request,
+        deadline: Option<Instant>,
+    ) -> Result<SolveOutcome> {
         self.metrics.record_request();
-        self.solve_impl(req, true, None)
+        self.solve_impl(req, true, None, deadline)
     }
 
     /// Serve one request while assembling its span tree: the route
@@ -189,12 +221,27 @@ impl Coordinator {
     /// path; tracing never changes solver outputs (bitwise — pinned by the
     /// conformance suite).
     pub fn solve_spanned(&self, req: &Request) -> Result<(Response, Span)> {
+        match self.solve_spanned_with_deadline(req, None)? {
+            (SolveOutcome::Done(resp), root) => Ok((resp, root)),
+            (SolveOutcome::DeadlineExceeded { .. }, _) => {
+                unreachable!("no deadline was set, so none can expire")
+            }
+        }
+    }
+
+    /// [`Coordinator::solve_spanned`] with an optional deadline — the
+    /// traced twin of [`Coordinator::solve_with_deadline`].
+    pub fn solve_spanned_with_deadline(
+        &self,
+        req: &Request,
+        deadline: Option<Instant>,
+    ) -> Result<(SolveOutcome, Span)> {
         self.metrics.record_request();
         let t0 = Instant::now();
         let mut root = Span::new("request");
-        let out = self.solve_impl(req, true, Some(&mut root));
+        let out = self.solve_impl(req, true, Some(&mut root), deadline);
         root.seconds = t0.elapsed().as_secs_f64();
-        out.map(|resp| (resp, root))
+        out.map(|outcome| (outcome, root))
     }
 
     /// The request path, with per-request metrics (request count, solve
@@ -202,7 +249,13 @@ impl Coordinator {
     /// tier's re-baselining runs a full solve *inside* one wire request
     /// and must not double-count it.  Work-level metrics (superblock
     /// rounds/tiles, engine batches) still record: that work really ran.
-    fn solve_impl(&self, req: &Request, record: bool, span: Option<&mut Span>) -> Result<Response> {
+    fn solve_impl(
+        &self,
+        req: &Request,
+        record: bool,
+        span: Option<&mut Span>,
+        deadline: Option<Instant>,
+    ) -> Result<SolveOutcome> {
         let t0 = Instant::now();
         let traced = span.is_some();
         let objective = router::objective_gate(&req.variant, &req.objective)
@@ -245,15 +298,21 @@ impl Coordinator {
                     get.note("hit", "true");
                     span.child(get);
                 }
-                return Ok(Response {
+                return Ok(SolveOutcome::Done(Response {
                     id: req.id,
                     dist,
                     succ,
                     source: Source::Cache,
                     bucket: req.graph.n(),
                     seconds,
-                });
+                }));
             }
+        }
+
+        // phase boundary: a request that missed the cache and has already
+        // outlived its deadline is abandoned before the expensive part
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Ok(SolveOutcome::DeadlineExceeded { phase: "solve" });
         }
 
         // route
@@ -427,6 +486,12 @@ impl Coordinator {
             }
         }
         let put_seconds = put_start.elapsed().as_secs_f64();
+        // phase boundary: the closure is computed and cached, but if the
+        // deadline passed mid-solve nobody is waiting for the reply — skip
+        // encoding and report the typed expiry (a retry now hits the cache)
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Ok(SolveOutcome::DeadlineExceeded { phase: "finish" });
+        }
         let seconds = t0.elapsed().as_secs_f64();
         if record {
             self.metrics.record_solve(source, objective, seconds);
@@ -467,14 +532,14 @@ impl Coordinator {
                 span.child(put);
             }
         }
-        Ok(Response {
+        Ok(SolveOutcome::Done(Response {
             id: req.id,
             dist,
             succ,
             source,
             bucket,
             seconds,
-        })
+        }))
     }
 
     /// Serve one incremental `"update"` request: apply an edge-delta batch
@@ -522,7 +587,7 @@ impl Coordinator {
             // tiers included); it caches the fresh baseline itself.  The
             // per-request metrics stay suppressed — this is still the one
             // wire request recorded as Source::Incremental below
-            let resp = self.solve_impl(
+            let resp = match self.solve_impl(
                 &Request {
                     id: req.id,
                     graph: g_new,
@@ -534,7 +599,13 @@ impl Coordinator {
                 },
                 false,
                 None,
-            )?;
+                None,
+            )? {
+                SolveOutcome::Done(resp) => resp,
+                SolveOutcome::DeadlineExceeded { .. } => {
+                    unreachable!("re-baselining solves carry no deadline")
+                }
+            };
             (resp.dist, resp.succ, true)
         } else if let Some(base_succ) = base.succ {
             let closure = apsp::paths::PathsResult::from_parts(base.dist, base_succ);

@@ -1,9 +1,11 @@
-//! TCP front end: line-delimited JSON over a thread-per-connection server.
+//! TCP front end: a fixed worker pool behind a bounded request queue.
 //!
 //! Request types:
 //! * `{"type":"solve", "id", "n", "variant", "edges": [[u,v,w],…]}` →
 //!   `{"type":"result", …}` (see [`super::types`]); add `"trace": true`
-//!   and the result line carries the request's span tree under `"trace"`
+//!   and the result line carries the request's span tree under `"trace"`;
+//!   add `"binary": true` and the result comes back as the
+//!   length-prefixed binary frame ([`super::frame`]) instead of JSON
 //! * `{"type":"update", "id", "n", "variant", "base": "<hex fingerprint>",
 //!   "updates": [[u,v,w],…]}` → `{"type":"result", …}` from the
 //!   incremental tier, or a typed `{"type":"error",
@@ -18,37 +20,60 @@
 //! * `{"type":"info"}` → artifact variants/buckets
 //!
 //! Malformed input gets a `{"type":"error"}` line and the connection stays
-//! open; handler threads share the coordinator (the engine serializes
-//! device work internally).  Connection failures and malformed requests
-//! emit one structured stderr line each ([`crate::obs::log`]) instead of
-//! being silently dropped.
+//! open.  Connection failures and malformed requests emit one structured
+//! stderr line each ([`crate::obs::log`]) instead of being silently
+//! dropped.
 //!
-//! **Admission control.**  Handler threads are capped
-//! ([`ServerConfig::max_connections`]): a connection arriving at the cap
-//! gets one typed `{"type":"error","code":"shed"}` line and an immediate
-//! close instead of an unbounded thread spawn, so a connection flood
-//! degrades (clients back off and retry) rather than exhausting process
-//! threads/memory.  Sheds are counted (`connections_shed` in stats /
-//! `fw_connections_shed_total` in the exposition).  The full worker-pool
-//! front end remains ROADMAP item 2; this is the minimal overload fix.
+//! **Threading model.**  Connection threads do blocking socket I/O only;
+//! all solve/update work funnels through one fixed-width
+//! [`crate::util::pool::JobPool`] (`workers` threads, `queue_depth`
+//! pending requests), so CPU concurrency is bounded by configuration, not
+//! by client count.  Control-plane requests (ping/stats/trace/…) answer
+//! inline on the connection thread: they are cheap and must keep working
+//! while the solve queue is saturated — that is when an operator needs
+//! `stats` most.
+//!
+//! **Admission control.**  Two bounds, two typed sheds:
+//! * connections past [`ServerConfig::max_connections`] get one
+//!   `{"type":"error","code":"shed"}` line at accept time and close
+//!   (`connections_shed` metric);
+//! * data requests arriving with the worker queue full get the same typed
+//!   `shed` line — but the connection stays open, because the *request*
+//!   was refused, not the client (`requests_shed` metric).
+//!
+//! **Deadlines.**  Every data request carries a deadline: the wire
+//! `"deadline_ms"` if present, else [`ServerConfig::deadline_ms`] (0
+//! disables either way).  It is checked at dequeue — a request that
+//! expired while queued never reaches a solver — and between solve phases
+//! ([`super::Coordinator::solve_with_deadline`]).  Expiry is a typed
+//! `{"code":"deadline_exceeded"}` error, and *is* counted as a request
+//! error: the server accepted the work and failed to deliver it in time.
+//!
+//! **Idle timeout.**  A connection that sends nothing for
+//! [`ServerConfig::idle_timeout_ms`] gets one typed
+//! `{"code":"idle_timeout"}` line and is closed, returning its admission
+//! slot (`idle_timeouts` metric).  Before this existed an idle client
+//! held a `ConnGuard` slot forever.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::router;
 use super::types::{
-    attach_trace, decode_request, decode_update_request, encode_error, encode_error_coded,
-    encode_response, CODE_OBJECTIVE_UNSUPPORTED, CODE_SHED, CODE_UPDATE_BASE_MISSING,
+    attach_trace, decode_request, decode_update_request, decode_wire_options, encode_error,
+    encode_error_coded, encode_response, write_response, Response, WireOptions,
+    CODE_DEADLINE_EXCEEDED, CODE_IDLE_TIMEOUT, CODE_OBJECTIVE_UNSUPPORTED, CODE_SHED,
+    CODE_UPDATE_BASE_MISSING,
 };
-use super::{Coordinator, UpdateOutcome};
+use super::{frame, router, Coordinator, SolveOutcome, UpdateOutcome};
 use crate::obs::log::{log, Level};
 use crate::obs::{Span, TraceRecord};
 use crate::util::json::Json;
+use crate::util::pool::{JobPool, PoolConfig};
 
 /// Error-code key for requests that failed to decode (counted in
 /// `errors_by_code` alongside the typed wire codes).
@@ -56,21 +81,44 @@ const CODE_MALFORMED: &str = "malformed";
 /// Error-code key for solve/update failures with no dedicated wire code.
 const CODE_GENERIC: &str = "error";
 
-/// Front-end admission limits.
+/// Front-end limits: admission, worker pool, deadlines.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     /// Hard cap on concurrently served connections.  Connections past the
     /// cap receive one typed shed line and are closed at accept time —
     /// they never get a handler thread.
     pub max_connections: usize,
+    /// Worker threads solving data requests; 0 = one per core.  Control
+    /// requests bypass the pool entirely.
+    pub workers: usize,
+    /// Bounded depth of the request queue feeding the workers; a data
+    /// request arriving with the queue full is shed with the typed
+    /// [`CODE_SHED`] error (the connection stays open).
+    pub queue_depth: usize,
+    /// Default per-request deadline in milliseconds; 0 = no deadline.
+    /// Requests override it with the wire `"deadline_ms"` field.
+    pub deadline_ms: u64,
+    /// Per-connection idle read timeout in milliseconds; 0 = none.  An
+    /// idle connection gets one typed [`CODE_IDLE_TIMEOUT`] line and is
+    /// closed, freeing its admission slot.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
-            // generous for a thread-per-connection server, but finite: a
-            // flood saturates here instead of at process limits
+            // generous, but finite: a flood saturates here instead of at
+            // process limits
             max_connections: 1024,
+            workers: 0,
+            // deep enough that bursty-but-under-capacity traffic never
+            // sheds; overload still hits the bound in well under a second
+            queue_depth: 256,
+            // a minute covers the largest superblock solves by a wide
+            // margin while still unsticking abandoned work eventually
+            deadline_ms: 60_000,
+            // five minutes idle before the slot is reclaimed
+            idle_timeout_ms: 300_000,
         }
     }
 }
@@ -83,6 +131,13 @@ impl Drop for ConnGuard {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::SeqCst);
     }
+}
+
+/// Everything a connection thread needs, shared by all of them.
+struct ConnCtx {
+    coord: Arc<Coordinator>,
+    pool: JobPool,
+    config: ServerConfig,
 }
 
 /// Refuse an over-cap connection: one typed `shed` error line, then drop
@@ -99,21 +154,24 @@ fn shed_connection(mut stream: TcpStream, cap: usize) {
     let _ = stream.write_all(b"\n");
 }
 
-/// A running server (owns the accept thread).
+/// A running server (owns the accept thread; connection threads share the
+/// worker pool through it).
 pub struct Server {
     addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
+    workers: usize,
+    queue_depth: usize,
 }
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve on background threads
-    /// with default admission limits.
+    /// with default limits.
     pub fn spawn(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
         Server::spawn_with(coordinator, addr, ServerConfig::default())
     }
 
-    /// [`Server::spawn`] with explicit admission limits.
+    /// [`Server::spawn`] with explicit limits.
     pub fn spawn_with(
         coordinator: Arc<Coordinator>,
         addr: &str,
@@ -125,6 +183,13 @@ impl Server {
         let accept_shutdown = shutdown.clone();
         let active: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let cap = config.max_connections.max(1);
+        let pool = JobPool::new(PoolConfig {
+            workers: config.workers,
+            queue_depth: config.queue_depth,
+            name: "fw-stage-worker".into(),
+        });
+        let (workers, queue_depth) = (pool.workers(), pool.queue_depth());
+        let ctx = Arc::new(ConnCtx { coord: coordinator, pool, config });
         let handle = std::thread::Builder::new()
             .name("fw-stage-accept".into())
             .spawn(move || {
@@ -150,7 +215,7 @@ impl Server {
                                 .map(|a| a.to_string())
                                 .unwrap_or_else(|_| "?".into());
                             if !claimed {
-                                coordinator.metrics().record_shed();
+                                ctx.coord.metrics().record_shed();
                                 log(
                                     Level::Warn,
                                     "connection_shed",
@@ -163,12 +228,12 @@ impl Server {
                                 continue;
                             }
                             let guard = ConnGuard(active.clone());
-                            let coord = coordinator.clone();
+                            let ctx = ctx.clone();
                             let spawned = std::thread::Builder::new()
                                 .name("fw-stage-conn".into())
                                 .spawn(move || {
                                     let _guard = guard;
-                                    if let Err(e) = handle_connection(&coord, stream) {
+                                    if let Err(e) = handle_connection(&ctx, stream) {
                                         log(
                                             Level::Warn,
                                             "conn_error",
@@ -204,12 +269,24 @@ impl Server {
             addr: local,
             shutdown,
             accept_handle: Some(handle),
+            workers,
+            queue_depth,
         })
     }
 
     /// The bound address (use with port 0 to discover the chosen port).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// Resolved worker-pool width (after the `0 = per-core` default).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Resolved request-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
     }
 
     /// Ask the accept loop to stop (in-flight connections drain naturally).
@@ -226,26 +303,426 @@ impl Drop for Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        // the worker pool itself drains when the last connection thread
+        // drops its ConnCtx reference
     }
 }
 
-fn handle_connection(coord: &Coordinator, stream: TcpStream) -> Result<()> {
+fn handle_connection(ctx: &ConnCtx, stream: TcpStream) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let peer_reader = BufReader::new(stream.try_clone()?);
+    if ctx.config.idle_timeout_ms > 0 {
+        stream
+            .set_read_timeout(Some(Duration::from_millis(ctx.config.idle_timeout_ms)))
+            .context("setting idle read timeout")?;
+    }
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    for line in peer_reader.lines() {
-        let line = line?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // clean EOF
+            Ok(_) => {}
+            // read timeout: the connection sat idle past the limit (any
+            // partially received line is abandoned with it) — send one
+            // typed line and reclaim the admission slot
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                ctx.coord.metrics().record_idle_timeout();
+                let reply = encode_error_coded(
+                    0,
+                    CODE_IDLE_TIMEOUT,
+                    &format!(
+                        "connection idle for more than {}ms; closing to free the slot",
+                        ctx.config.idle_timeout_ms
+                    ),
+                );
+                let _ = writer.set_write_timeout(Some(Duration::from_millis(250)));
+                let _ = writer.write_all(reply.as_bytes());
+                let _ = writer.write_all(b"\n");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(coord, &line);
+        serve_line(ctx, line.trim(), &mut writer)?;
+    }
+}
+
+/// Resolve a request's absolute deadline: the wire `deadline_ms`
+/// overrides the server default; 0 (either way) means none.
+fn effective_deadline(config: &ServerConfig, opts: &WireOptions) -> Option<Instant> {
+    let ms = opts.deadline_ms.unwrap_or(config.deadline_ms);
+    (ms > 0).then(|| Instant::now() + Duration::from_millis(ms))
+}
+
+/// Serve one request line on a connection thread.  Control-plane types
+/// answer inline (they must keep responding while the solve queue is
+/// saturated); data-plane types (solve/update) go through the bounded
+/// queue to the worker pool, and their replies are encoded back on this
+/// thread so matrices stream straight to the socket.
+fn serve_line(ctx: &ConnCtx, line: &str, writer: &mut TcpStream) -> Result<()> {
+    let parsed = Json::parse(line).ok();
+    let is_data = matches!(
+        parsed.as_ref().map(|v| v.get("type").as_str().unwrap_or("solve")),
+        Some("solve") | Some("update")
+    );
+    let Some(parsed) = parsed.filter(|_| is_data) else {
+        // control plane, unknown types, and unparseable lines: cheap,
+        // answered inline via the shared dispatcher, never queued
+        let reply = handle_line(&ctx.coord, line);
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
+        return Ok(());
+    };
+    let id = parsed.get("id").as_f64().unwrap_or(0.0) as u64;
+    let opts = decode_wire_options(&parsed);
+    let deadline = effective_deadline(&ctx.config, &opts);
+    let (tx, rx) = mpsc::channel();
+    let coord = ctx.coord.clone();
+    let job_line = line.to_string();
+    let enqueued = Instant::now();
+    let submitted = ctx.pool.try_submit(move || {
+        let queue_wait = enqueued.elapsed().as_secs_f64();
+        // dequeue-time deadline check: a request that expired while
+        // queued is answered without ever reaching a solver
+        let reply = if deadline.is_some_and(|d| Instant::now() >= d) {
+            coord.metrics().record_error(CODE_DEADLINE_EXCEEDED);
+            DataReply::Line(encode_error_coded(
+                id,
+                CODE_DEADLINE_EXCEEDED,
+                "deadline expired while queued; solve abandoned",
+            ))
+        } else {
+            handle_data(&coord, &job_line, &opts, deadline)
+        };
+        let _ = tx.send((reply, queue_wait));
+    });
+    if submitted.is_err() {
+        // bounded-queue admission control: one typed shed line; the
+        // connection stays open and the client backs off
+        ctx.coord.metrics().record_queue_shed();
+        log(
+            Level::Warn,
+            "request_shed",
+            vec![
+                ("id", Json::num(id as f64)),
+                ("queue_depth", Json::num(ctx.pool.queue_depth() as f64)),
+            ],
+        );
+        let reply = encode_error_coded(
+            id,
+            CODE_SHED,
+            &format!(
+                "request queue full (depth {}); back off and retry",
+                ctx.pool.queue_depth()
+            ),
+        );
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        return Ok(());
+    }
+    match rx.recv() {
+        Ok((reply, queue_wait)) => {
+            ctx.coord.metrics().record_queue_wait(queue_wait);
+            write_reply(&ctx.coord, reply, writer)
+        }
+        Err(_) => {
+            // the worker job died mid-flight (a panic unwound through a
+            // solver); the pool survives, this request reports generically
+            ctx.coord.metrics().record_error(CODE_GENERIC);
+            let reply = encode_error(id, "internal: request worker failed");
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            Ok(())
+        }
+    }
+}
+
+/// A solved data-plane reply before wire encoding; boxed so the queue and
+/// channels move a pointer, not a matrix-bearing struct.
+struct SolvedReply {
+    resp: Response,
+    /// Echo the span tree in the reply (JSON responses only).
+    trace: bool,
+    /// Reply with the binary frame instead of line-JSON.
+    binary: bool,
+    /// Span tree under assembly when tracing is enabled: the decode span
+    /// already leads; the reply writer appends the encode span and
+    /// journals the finished trace.
+    obs: Option<Span>,
+    objective: String,
+}
+
+enum DataReply {
+    /// An already-encoded JSON line (errors — nothing big ever rides here).
+    Line(String),
+    Solved(Box<SolvedReply>),
+}
+
+/// Decode + solve one data-plane line (runs on a pool worker).  Returns
+/// the pre-encoding reply so the connection thread owns serialization.
+fn handle_data(
+    coord: &Coordinator,
+    line: &str,
+    opts: &WireOptions,
+    deadline: Option<Instant>,
+) -> DataReply {
+    let ty = Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("type").as_str().map(str::to_string))
+        .unwrap_or_else(|| "solve".to_string());
+    match ty.as_str() {
+        "update" => handle_update(coord, line, opts),
+        _ => handle_solve(coord, line, opts, deadline),
+    }
+}
+
+fn deadline_reply(coord: &Coordinator, id: u64, phase: &str) -> DataReply {
+    coord.metrics().record_error(CODE_DEADLINE_EXCEEDED);
+    DataReply::Line(encode_error_coded(
+        id,
+        CODE_DEADLINE_EXCEEDED,
+        &format!("deadline expired at the {phase} phase; solve abandoned"),
+    ))
+}
+
+fn handle_solve(
+    coord: &Coordinator,
+    line: &str,
+    opts: &WireOptions,
+    deadline: Option<Instant>,
+) -> DataReply {
+    let decode_start = Instant::now();
+    let req = match decode_request(line) {
+        Ok(req) => req,
+        Err(e) => {
+            coord.metrics().record_error(CODE_MALFORMED);
+            log(
+                Level::Warn,
+                "malformed_request",
+                vec![
+                    ("kind", Json::str("solve")),
+                    ("error", Json::str(format!("{e:#}"))),
+                ],
+            );
+            return DataReply::Line(encode_error(0, &format!("{e:#}")));
+        }
+    };
+    if opts.binary && req.trace {
+        // the trace echo is a JSON splice; it has no binary rendering
+        coord.metrics().record_error(CODE_MALFORMED);
+        return DataReply::Line(encode_error(
+            req.id,
+            "\"binary\" responses cannot carry a \"trace\" echo; request one or the other",
+        ));
+    }
+    // objective policy is pre-checked so the rejection is *typed* (wire
+    // code, not a free-text message): unknown objectives and
+    // johnson-with-non-shortest can be dispatched on by clients
+    if let Err(msg) = router::objective_gate(&req.variant, &req.objective) {
+        coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
+        return DataReply::Line(encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg));
+    }
+    if coord.obs().enabled {
+        let decode_seconds = decode_start.elapsed().as_secs_f64();
+        match coord.solve_spanned_with_deadline(&req, deadline) {
+            Ok((SolveOutcome::Done(resp), mut root)) => {
+                // the server owns the wire edges of the trace: decode
+                // leads, encode trails (appended by the reply writer)
+                let mut decode = Span::new("decode");
+                decode.seconds = decode_seconds;
+                root.children.insert(0, decode);
+                DataReply::Solved(Box::new(SolvedReply {
+                    resp,
+                    trace: req.trace,
+                    binary: opts.binary,
+                    obs: Some(root),
+                    objective: req.objective.clone(),
+                }))
+            }
+            Ok((SolveOutcome::DeadlineExceeded { phase }, _)) => {
+                deadline_reply(coord, req.id, phase)
+            }
+            Err(e) => {
+                coord.metrics().record_error(CODE_GENERIC);
+                DataReply::Line(encode_error(req.id, &format!("{e:#}")))
+            }
+        }
+    } else {
+        match coord.solve_with_deadline(&req, deadline) {
+            Ok(SolveOutcome::Done(resp)) => DataReply::Solved(Box::new(SolvedReply {
+                resp,
+                trace: req.trace,
+                binary: opts.binary,
+                obs: None,
+                objective: req.objective.clone(),
+            })),
+            Ok(SolveOutcome::DeadlineExceeded { phase }) => deadline_reply(coord, req.id, phase),
+            Err(e) => {
+                coord.metrics().record_error(CODE_GENERIC);
+                DataReply::Line(encode_error(req.id, &format!("{e:#}")))
+            }
+        }
+    }
+}
+
+fn handle_update(coord: &Coordinator, line: &str, opts: &WireOptions) -> DataReply {
+    match decode_update_request(line) {
+        // the dynamic tier chains (min, +) closures only — any other
+        // objective is a typed policy rejection, same code as solve
+        Ok(req) if router::objective_gate_update(&req.objective).is_err() => {
+            coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
+            let msg = router::objective_gate_update(&req.objective).unwrap_err();
+            DataReply::Line(encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg))
+        }
+        Ok(req) => match coord.update(&req) {
+            Ok(UpdateOutcome::Solved(resp)) => DataReply::Solved(Box::new(SolvedReply {
+                resp,
+                trace: false,
+                binary: opts.binary,
+                obs: None,
+                objective: req.objective.clone(),
+            })),
+            // the one *typed* error: the client retries as a full solve
+            // of the mutated graph (not an operator-visible failure, so
+            // it does not count as an error metric)
+            Ok(UpdateOutcome::BaseMissing { fingerprint }) => {
+                DataReply::Line(encode_error_coded(
+                    req.id,
+                    CODE_UPDATE_BASE_MISSING,
+                    &format!(
+                        "base closure {fingerprint:016x} is not cached \
+                         (evicted or never solved here); re-solve the mutated graph"
+                    ),
+                ))
+            }
+            Err(e) => {
+                coord.metrics().record_error(CODE_GENERIC);
+                DataReply::Line(encode_error(req.id, &format!("{e:#}")))
+            }
+        },
+        Err(e) => {
+            coord.metrics().record_error(CODE_MALFORMED);
+            log(
+                Level::Warn,
+                "malformed_request",
+                vec![
+                    ("kind", Json::str("update")),
+                    ("error", Json::str(format!("{e:#}"))),
+                ],
+            );
+            DataReply::Line(encode_error(0, &format!("{e:#}")))
+        }
+    }
+}
+
+/// Append the encode span to a finished trace and journal it.
+fn journal_with_encode(
+    coord: &Coordinator,
+    mut root: Span,
+    resp: &Response,
+    objective: &str,
+    encode_seconds: f64,
+) -> Arc<TraceRecord> {
+    let mut encode = Span::new("encode");
+    encode.seconds = encode_seconds;
+    root.child(encode);
+    coord.journal().record(TraceRecord {
+        id: resp.id,
+        source: resp.source.name().into(),
+        objective: objective.to_string(),
+        n: resp.dist.n(),
+        root,
+    })
+}
+
+/// Encode a data reply as one JSON line — the all-in-one path used by
+/// [`handle_line`] (tests and in-process tooling), which by contract
+/// always yields the JSON rendering.  The TCP path streams instead
+/// ([`write_reply`]).
+fn finalize_json(coord: &Coordinator, reply: DataReply) -> String {
+    let solved = match reply {
+        DataReply::Line(line) => return line,
+        DataReply::Solved(s) => *s,
+    };
+    let encode_start = Instant::now();
+    let encoded = encode_response(&solved.resp);
+    let encode_seconds = encode_start.elapsed().as_secs_f64();
+    match solved.obs {
+        Some(root) => {
+            let record = journal_with_encode(
+                coord,
+                root,
+                &solved.resp,
+                &solved.objective,
+                encode_seconds,
+            );
+            if solved.trace {
+                attach_trace(&encoded, &record.root.to_json())
+            } else {
+                encoded
+            }
+        }
+        None => encoded,
+    }
+}
+
+/// Write a data reply to the socket.  Untraced JSON results stream
+/// row-by-row through a buffered writer (peak memory O(n) per connection,
+/// never the O(n²) rendered line); binary results stream the frame the
+/// same way.  Trace-echo replies take the String path — the splice needs
+/// the whole line.  On the streaming paths the encode span covers
+/// serialization *and* the socket write: they are one fused pass.
+fn write_reply(coord: &Coordinator, reply: DataReply, writer: &mut TcpStream) -> Result<()> {
+    let solved = match reply {
+        DataReply::Line(line) => {
+            writer.write_all(line.as_bytes())?;
+            writer.write_all(b"\n")?;
+            return Ok(());
+        }
+        DataReply::Solved(s) => s,
+    };
+    if solved.trace {
+        // JSON only: binary+trace was rejected at decode time
+        let line = finalize_json(coord, DataReply::Solved(solved));
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        return Ok(());
+    }
+    let encode_start = Instant::now();
+    {
+        let mut out = BufWriter::with_capacity(64 * 1024, &mut *writer);
+        if solved.binary {
+            frame::write_frame(&mut out, &solved.resp)?;
+        } else {
+            write_response(&mut out, &solved.resp)?;
+            out.write_all(b"\n")?;
+        }
+        out.flush()?;
+    }
+    if let Some(root) = solved.obs {
+        journal_with_encode(
+            coord,
+            root,
+            &solved.resp,
+            &solved.objective,
+            encode_start.elapsed().as_secs_f64(),
+        );
     }
     Ok(())
 }
 
-/// Process one request line → one response line (shared with tests).
+/// Process one request line → one response line (shared with tests and
+/// in-process tooling).  Data-plane lines run the same decode/solve path
+/// as the TCP front end but without a queue or deadline, and always
+/// render to JSON (binary negotiation applies to the socket path only).
 pub fn handle_line(coord: &Coordinator, line: &str) -> String {
     let ty = Json::parse(line)
         .ok()
@@ -299,112 +776,13 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
             ])
             .to_string()
         }
-        "solve" => {
-            let decode_start = Instant::now();
-            match decode_request(line) {
-                // objective policy is pre-checked so the rejection is
-                // *typed* (wire code, not a free-text message): unknown
-                // objectives and johnson-with-non-shortest can be
-                // dispatched on by clients
-                Ok(req) => match router::objective_gate(&req.variant, &req.objective) {
-                    Err(msg) => {
-                        coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
-                        encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
-                    }
-                    Ok(_) if coord.obs().enabled => {
-                        let decode_seconds = decode_start.elapsed().as_secs_f64();
-                        match coord.solve_spanned(&req) {
-                            Ok((resp, mut root)) => {
-                                // the server owns the wire edges of the
-                                // trace: decode leads, encode trails
-                                let mut decode = Span::new("decode");
-                                decode.seconds = decode_seconds;
-                                root.children.insert(0, decode);
-                                let encode_start = Instant::now();
-                                let reply = encode_response(&resp);
-                                let mut encode = Span::new("encode");
-                                encode.seconds = encode_start.elapsed().as_secs_f64();
-                                root.child(encode);
-                                let record = coord.journal().record(TraceRecord {
-                                    id: resp.id,
-                                    source: resp.source.name().into(),
-                                    objective: req.objective.clone(),
-                                    n: req.graph.n(),
-                                    root,
-                                });
-                                if req.trace {
-                                    attach_trace(&reply, &record.root.to_json())
-                                } else {
-                                    reply
-                                }
-                            }
-                            Err(e) => {
-                                coord.metrics().record_error(CODE_GENERIC);
-                                encode_error(req.id, &format!("{e:#}"))
-                            }
-                        }
-                    }
-                    Ok(_) => match coord.solve(&req) {
-                        Ok(resp) => encode_response(&resp),
-                        Err(e) => {
-                            coord.metrics().record_error(CODE_GENERIC);
-                            encode_error(req.id, &format!("{e:#}"))
-                        }
-                    },
-                },
-                Err(e) => {
-                    coord.metrics().record_error(CODE_MALFORMED);
-                    log(
-                        Level::Warn,
-                        "malformed_request",
-                        vec![
-                            ("kind", Json::str("solve")),
-                            ("error", Json::str(format!("{e:#}"))),
-                        ],
-                    );
-                    encode_error(0, &format!("{e:#}"))
-                }
-            }
+        "solve" | "update" => {
+            let opts = Json::parse(line)
+                .ok()
+                .map(|v| decode_wire_options(&v))
+                .unwrap_or_default();
+            finalize_json(coord, handle_data(coord, line, &opts, None))
         }
-        "update" => match decode_update_request(line) {
-            // the dynamic tier chains (min, +) closures only — any other
-            // objective is a typed policy rejection, same code as solve
-            Ok(req) if router::objective_gate_update(&req.objective).is_err() => {
-                coord.metrics().record_error(CODE_OBJECTIVE_UNSUPPORTED);
-                let msg = router::objective_gate_update(&req.objective).unwrap_err();
-                encode_error_coded(req.id, CODE_OBJECTIVE_UNSUPPORTED, &msg)
-            }
-            Ok(req) => match coord.update(&req) {
-                Ok(UpdateOutcome::Solved(resp)) => encode_response(&resp),
-                // the one *typed* error: the client retries as a full
-                // solve of the mutated graph (not an operator-visible
-                // failure, so it does not count as an error metric)
-                Ok(UpdateOutcome::BaseMissing { fingerprint }) => encode_error_coded(
-                    req.id,
-                    CODE_UPDATE_BASE_MISSING,
-                    &format!(
-                        "base closure {fingerprint:016x} is not cached \
-                         (evicted or never solved here); re-solve the mutated graph"
-                    ),
-                ),
-                Err(e) => {
-                    coord.metrics().record_error(CODE_GENERIC);
-                    encode_error(req.id, &format!("{e:#}"))
-                }
-            },
-            Err(e) => {
-                coord.metrics().record_error(CODE_MALFORMED);
-                log(
-                    Level::Warn,
-                    "malformed_request",
-                    vec![
-                        ("kind", Json::str("update")),
-                        ("error", Json::str(format!("{e:#}"))),
-                    ],
-                );
-                encode_error(0, &format!("{e:#}"))
-            }
-        },
         other => {
             coord.metrics().record_error(CODE_MALFORMED);
             encode_error(0, &format!("unknown request type {other:?}"))

@@ -13,8 +13,9 @@ use crate::graph::DistMatrix;
 use crate::util::json::Json;
 use crate::INF;
 
-/// Server-side cap on request sizes (shared by solve and update decoding).
-const MAX_N: usize = 4096;
+/// Server-side cap on request sizes (shared by solve and update decoding,
+/// and by the binary frame reader in [`super::frame`]).
+pub(crate) const MAX_N: usize = 4096;
 
 /// Wire error code for an update whose base closure is not cached — the
 /// one failure a client is expected to *handle* (retry as a full solve of
@@ -30,6 +31,18 @@ pub const CODE_OBJECTIVE_UNSUPPORTED: &str = "objective_unsupported";
 /// server is at its concurrent-connection cap.  Sent as the connection's
 /// only line, then the socket closes; clients should back off and retry.
 pub const CODE_SHED: &str = "shed";
+
+/// Wire error code for a request whose deadline (wire `"deadline_ms"` or
+/// the server default) expired before its reply could be delivered — while
+/// queued, or between solve phases.  The solve was abandoned (or its
+/// result cached but not encoded); retrying is safe and often hits the
+/// cache.
+pub const CODE_DEADLINE_EXCEEDED: &str = "deadline_exceeded";
+
+/// Wire error code sent as the last line of a connection the server is
+/// closing because it sat idle past the configured read timeout.  The
+/// client should reconnect; its admission slot has been returned.
+pub const CODE_IDLE_TIMEOUT: &str = "idle_timeout";
 
 /// The wire default objective: requests that omit the `"objective"` key
 /// (every pre-semiring client) mean shortest path.
@@ -133,10 +146,54 @@ pub struct Response {
     pub seconds: f64,
 }
 
+/// Per-request *serving* options that ride a solve/update line but never
+/// reach the solver: the admission deadline and the response-encoding
+/// negotiation.  Kept out of [`Request`]/[`UpdateRequest`] so the
+/// solver-facing structs (and every construction site across tests,
+/// benches, and tools) are untouched by front-end concerns.  Decoded
+/// leniently from the raw line — absent keys mean defaults — so every
+/// legacy line behaves exactly as before.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireOptions {
+    /// Wire `"deadline_ms"`: per-request deadline in milliseconds,
+    /// counted from arrival.  `None` (key absent) means the server's
+    /// configured default; an explicit `0` means *no* deadline.
+    pub deadline_ms: Option<u64>,
+    /// Wire `"binary": true`: reply with the length-prefixed binary frame
+    /// ([`super::frame`]) instead of a line-JSON result.
+    pub binary: bool,
+}
+
+/// Decode the serving options off an already-parsed request line.  Both
+/// keys are optional and ignored by older servers (the decoders skip
+/// unknown keys), so negotiation degrades gracefully in both directions.
+pub fn decode_wire_options(v: &Json) -> WireOptions {
+    WireOptions {
+        deadline_ms: v.get("deadline_ms").as_f64().map(|ms| ms.max(0.0) as u64),
+        binary: v.get("binary").as_bool().unwrap_or(false),
+    }
+}
+
+fn push_wire_options(fields: &mut Vec<(&str, Json)>, opts: &WireOptions) {
+    if let Some(ms) = opts.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    if opts.binary {
+        fields.push(("binary", Json::Bool(true)));
+    }
+}
+
 // ------------------------------------------------------------------ wire --
 
-/// Encode a request as one JSON line.
+/// Encode a request as one JSON line.  Equivalent to
+/// [`encode_request_opts`] with default [`WireOptions`] — both keys omit
+/// their defaults, so the line is byte-identical either way.
 pub fn encode_request(req: &Request) -> String {
+    encode_request_opts(req, &WireOptions::default())
+}
+
+/// Encode a request as one JSON line, with serving options attached.
+pub fn encode_request_opts(req: &Request, opts: &WireOptions) -> String {
     let n = req.graph.n();
     let mut edges = Vec::new();
     for i in 0..n {
@@ -169,6 +226,7 @@ pub fn encode_request(req: &Request) -> String {
     if req.trace {
         fields.push(("trace", Json::Bool(true)));
     }
+    push_wire_options(&mut fields, opts);
     Json::obj(fields).to_string()
 }
 
@@ -233,7 +291,13 @@ pub fn decode_request(line: &str) -> Result<Request> {
 /// pre-validated ([`crate::apsp::incremental::validate_batch`];
 /// `Client::update` does): NaN and `-inf` have no wire rendering and
 /// would otherwise travel as `null`, silently becoming deletions.
+/// Equivalent to [`encode_update_request_opts`] with default options.
 pub fn encode_update_request(req: &UpdateRequest) -> String {
+    encode_update_request_opts(req, &WireOptions::default())
+}
+
+/// Encode an update request with serving options attached.
+pub fn encode_update_request_opts(req: &UpdateRequest, opts: &WireOptions) -> String {
     let updates = req
         .updates
         .iter()
@@ -261,6 +325,7 @@ pub fn encode_update_request(req: &UpdateRequest) -> String {
     if req.objective != DEFAULT_OBJECTIVE {
         fields.push(("objective", Json::str(req.objective.clone())));
     }
+    push_wire_options(&mut fields, opts);
     Json::obj(fields).to_string()
 }
 
@@ -343,65 +408,78 @@ pub fn decode_update_request(line: &str) -> Result<UpdateRequest> {
 /// of `1.5999999940395355`) and with it the client's parse time — measured
 /// 2.3× end-to-end on the n=128 response (EXPERIMENTS.md §Perf L3).
 /// Parsing the decimal back to f64 and casting to f32 is exact.
+///
+/// This is the buffering wrapper over [`write_response`]: it renders the
+/// whole line into one `String` (trace splicing and in-process callers
+/// need that).  The server's hot path streams instead — see
+/// [`write_response`] — so a multi-MB matrix line never has to exist in
+/// memory at once per connection.
 pub fn encode_response(resp: &Response) -> String {
-    use std::fmt::Write as _;
     let n = resp.dist.n();
-    // header via the generic writer (cheap), matrix via the fast path
-    let mut out = String::with_capacity(16 * n * n + 128);
-    let _ = write!(
-        out,
-        "{{\"bucket\":{},\"dist\":[",
-        resp.bucket
-    );
+    let mut out = Vec::with_capacity(16 * n * n + 128);
+    write_response(&mut out, resp).expect("writing a response to a Vec cannot fail");
+    String::from_utf8(out).expect("the response writer emits ASCII")
+}
+
+/// Stream a response as one JSON line (no trailing newline) into any
+/// [`std::io::Write`].
+///
+/// Byte-identical to [`encode_response`] by construction — the `String`
+/// encoder *is* this writer over a `Vec<u8>`.  Writing row by row means a
+/// server streaming to a buffered socket holds O(n) formatting state per
+/// connection instead of the O(n²) fully-rendered line (an n=1024
+/// dist+succ response is tens of MB of JSON).
+pub fn write_response<W: std::io::Write>(out: &mut W, resp: &Response) -> std::io::Result<()> {
+    let n = resp.dist.n();
+    write!(out, "{{\"bucket\":{},\"dist\":[", resp.bucket)?;
     for i in 0..n {
         if i > 0 {
-            out.push(',');
+            out.write_all(b",")?;
         }
-        out.push('[');
+        out.write_all(b"[")?;
         for (j, &w) in resp.dist.row(i).iter().enumerate() {
             if j > 0 {
-                out.push(',');
+                out.write_all(b",")?;
             }
             if w.is_finite() {
-                let _ = write!(out, "{w}");
+                write!(out, "{w}")?;
             } else {
-                out.push_str("null");
+                out.write_all(b"null")?;
             }
         }
-        out.push(']');
+        out.write_all(b"]")?;
     }
-    let _ = write!(
+    write!(
         out,
         "],\"id\":{},\"n\":{n},\"seconds\":{},\"source\":\"{}\"",
         resp.id,
         if resp.seconds.is_finite() { resp.seconds } else { 0.0 },
         resp.source.name(),
-    );
+    )?;
     // successor rows ride the same fast writer; NO_PATH travels as null
     if let Some(succ) = &resp.succ {
         debug_assert_eq!(succ.len(), n * n);
-        out.push_str(",\"succ\":[");
+        out.write_all(b",\"succ\":[")?;
         for i in 0..n {
             if i > 0 {
-                out.push(',');
+                out.write_all(b",")?;
             }
-            out.push('[');
+            out.write_all(b"[")?;
             for (j, &s) in succ[i * n..(i + 1) * n].iter().enumerate() {
                 if j > 0 {
-                    out.push(',');
+                    out.write_all(b",")?;
                 }
                 if s == NO_PATH {
-                    out.push_str("null");
+                    out.write_all(b"null")?;
                 } else {
-                    let _ = write!(out, "{s}");
+                    write!(out, "{s}")?;
                 }
             }
-            out.push(']');
+            out.write_all(b"]")?;
         }
-        out.push(']');
+        out.write_all(b"]")?;
     }
-    out.push_str(",\"type\":\"result\"}");
-    out
+    out.write_all(b",\"type\":\"result\"}")
 }
 
 /// Decode a response line.
@@ -817,5 +895,74 @@ mod tests {
             decode_request(r#"{"type":"solve","n":3,"edges":[[1,1,5.0],[0,1,2.0]]}"#).unwrap();
         assert_eq!(req.graph.get(1, 1), 0.0);
         assert_eq!(req.graph.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn wire_options_default_keeps_lines_byte_identical() {
+        // the opts-aware encoders with default options are the legacy
+        // encoders, byte for byte — every existing client/test line is
+        // unchanged by the front-end additions
+        let req = sample_request();
+        assert_eq!(encode_request(&req), encode_request_opts(&req, &WireOptions::default()));
+        let upd = UpdateRequest {
+            id: 1,
+            variant: "staged".into(),
+            n: 4,
+            base_fingerprint: 0xff,
+            updates: vec![EdgeUpdate { src: 0, dst: 1, weight: 2.0 }],
+            want_paths: false,
+            objective: DEFAULT_OBJECTIVE.into(),
+        };
+        assert_eq!(
+            encode_update_request(&upd),
+            encode_update_request_opts(&upd, &WireOptions::default())
+        );
+        assert!(!encode_request(&req).contains("deadline_ms"));
+        assert!(!encode_request(&req).contains("binary"));
+    }
+
+    #[test]
+    fn wire_options_roundtrip_and_stay_invisible_to_the_decoders() {
+        let req = sample_request();
+        let opts = WireOptions { deadline_ms: Some(250), binary: true };
+        let line = encode_request_opts(&req, &opts);
+        assert!(line.contains("\"deadline_ms\":250"), "{line}");
+        assert!(line.contains("\"binary\":true"), "{line}");
+        // the request decoder skips the serving keys (an older server
+        // simply ignores them) …
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.graph, req.graph);
+        // … while the options decoder picks them off the same line
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(decode_wire_options(&v), opts);
+        // absent keys mean defaults
+        let legacy = Json::parse(r#"{"type":"solve","n":3,"edges":[]}"#).unwrap();
+        assert_eq!(decode_wire_options(&legacy), WireOptions::default());
+        // explicit zero is distinct from absent: "no deadline, ever"
+        let zero = Json::parse(r#"{"type":"solve","n":3,"edges":[],"deadline_ms":0}"#).unwrap();
+        assert_eq!(decode_wire_options(&zero).deadline_ms, Some(0));
+    }
+
+    #[test]
+    fn streaming_writer_matches_the_string_encoder() {
+        // write_response IS encode_response (one delegates to the other);
+        // this pins the delegation so a future fork of the two paths
+        // cannot silently diverge
+        let mut g = DistMatrix::unconnected(5);
+        g.set(0, 2, 2.5);
+        g.set(2, 1, 0.125);
+        let r = crate::apsp::paths::solve(&g);
+        let resp = Response {
+            id: 77,
+            dist: r.dist.clone(),
+            succ: Some(r.succ().to_vec()),
+            source: Source::SuperBlock,
+            bucket: 64,
+            seconds: 0.25,
+        };
+        let mut streamed = Vec::new();
+        write_response(&mut streamed, &resp).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), encode_response(&resp));
     }
 }

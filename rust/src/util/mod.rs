@@ -5,11 +5,13 @@
 //! normally pull from crates.io are implemented here:
 //!
 //! * [`json`] — a small, strict JSON parser/serializer (manifest + wire protocol)
+//! * [`pool`] — fixed-width job pool with a bounded, sheddable queue (serving)
 //! * [`prng`] — SplitMix64 / Xoshiro256++ deterministic PRNG (generators, tests)
 //! * [`stats`] — streaming summary statistics used by the bench harness
 //! * [`proptest`] — a miniature property-testing driver with shrinking
 
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod prng;
 pub mod stats;

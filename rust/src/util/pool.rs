@@ -1,0 +1,252 @@
+//! Long-lived fixed-width job pool with a bounded submit queue.
+//!
+//! Generalizes the queue discipline of the superblock dependency pool
+//! (`superblock/pool.rs`: a `Mutex<VecDeque>` + `Condvar` hand-off) into a
+//! reusable building block for serving.  The superblock pool is scoped to
+//! one solve and streams dependency-ready tiles; this pool is
+//! process-long and bounds its *queue*, so callers can shed load instead
+//! of buffering it unboundedly — the serving front end's admission
+//! control.
+//!
+//! * [`JobPool::try_submit`] never blocks: a full queue is an immediate
+//!   [`QueueFull`], the caller's signal to reject with a typed wire error.
+//! * A panicking job never shrinks the pool: workers run every job under
+//!   `catch_unwind`, so width is a static property of the config.
+//! * Drop drains: jobs already admitted still run before the workers
+//!   exit.  Graceful shutdown finishes accepted work; shedding happens at
+//!   admission time, never at teardown.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool shape: how many workers, how deep a queue, and a thread-name
+/// prefix for debuggability.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker thread count; `0` means one per available core.
+    pub workers: usize,
+    /// Maximum number of jobs waiting (not yet picked up by a worker);
+    /// clamped to at least 1.
+    pub queue_depth: usize,
+    /// Thread-name prefix; workers are named `{name}-{index}`.
+    pub name: String,
+}
+
+/// Typed rejection from [`JobPool::try_submit`]: the queue already holds
+/// `depth` jobs, so this one was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    /// The configured queue depth that was hit.
+    pub depth: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job queue full (depth {})", self.depth)
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+struct State {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+/// A fixed set of worker threads draining a bounded FIFO of jobs.
+pub struct JobPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    queue_depth: usize,
+}
+
+impl JobPool {
+    /// Spawn the pool.  Worker count 0 resolves to the host's available
+    /// parallelism (at least 1); queue depth is clamped to at least 1.
+    pub fn new(config: PoolConfig) -> JobPool {
+        let workers = if config.workers == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            config.workers
+        };
+        let queue_depth = config.queue_depth.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{}-{i}", config.name))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        JobPool { shared, workers: handles, queue_depth }
+    }
+
+    /// Worker thread count (after the `0 = auto` resolution).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Configured queue depth (after clamping).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Admit a job if the queue has room; never blocks.  `Err(QueueFull)`
+    /// means the job was dropped without running — the caller sheds.
+    pub fn try_submit<F: FnOnce() + Send + 'static>(&self, job: F) -> Result<(), QueueFull> {
+        let mut state = self.shared.state.lock().expect("pool mutex poisoned");
+        if state.queue.len() >= self.queue_depth {
+            return Err(QueueFull { depth: self.queue_depth });
+        }
+        state.queue.push_back(Box::new(job));
+        drop(state);
+        self.shared.ready.notify_one();
+        Ok(())
+    }
+}
+
+impl Drop for JobPool {
+    fn drop(&mut self) {
+        {
+            let mut state = self.shared.state.lock().expect("pool mutex poisoned");
+            state.shutdown = true;
+        }
+        self.shared.ready.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut state = shared.state.lock().expect("pool mutex poisoned");
+            loop {
+                // drain before honoring shutdown: admitted jobs always run
+                if let Some(job) = state.queue.pop_front() {
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = shared.ready.wait(state).expect("pool mutex poisoned");
+            }
+        };
+        // a panicking job unwinds here, not through the worker: the pool's
+        // width stays what the config said it is
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    /// Reusable open/closed gate so tests can park jobs inside workers.
+    #[derive(Default)]
+    struct Gate {
+        open: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    impl Gate {
+        fn wait(&self) {
+            let mut open = self.open.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+        }
+
+        fn open(&self) {
+            *self.open.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+    }
+
+    #[test]
+    fn admission_is_exactly_workers_plus_queue_depth() {
+        let pool = JobPool::new(PoolConfig {
+            workers: 2,
+            queue_depth: 3,
+            name: "test-admit".into(),
+        });
+        let gate = Arc::new(Gate::default());
+        let started = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        // park a job inside each worker
+        for _ in 0..2 {
+            let (g, s, d) = (gate.clone(), started.clone(), done.clone());
+            pool.try_submit(move || {
+                s.fetch_add(1, Ordering::SeqCst);
+                g.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            })
+            .expect("worker-occupying job admitted");
+        }
+        while started.load(Ordering::SeqCst) < 2 {
+            std::thread::yield_now();
+        }
+        // with both workers parked, exactly queue_depth more jobs fit
+        for _ in 0..3 {
+            let (g, d) = (gate.clone(), done.clone());
+            pool.try_submit(move || {
+                g.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            })
+            .expect("queued job admitted");
+        }
+        let err = pool.try_submit(|| {}).expect_err("queue full must shed");
+        assert_eq!(err, QueueFull { depth: 3 });
+        // release and drop: Drop drains the queue, so all 5 admitted jobs ran
+        gate.open();
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 5, "admitted jobs all ran by shutdown");
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_shrink_the_pool() {
+        let pool = JobPool::new(PoolConfig {
+            workers: 1,
+            queue_depth: 4,
+            name: "test-panic".into(),
+        });
+        pool.try_submit(|| panic!("job panic (expected by the pool test)"))
+            .expect("panicking job admitted");
+        let (tx, rx) = mpsc::channel();
+        pool.try_submit(move || {
+            tx.send(()).unwrap();
+        })
+        .expect("follow-up job admitted");
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("the single worker survived the panicking job");
+    }
+
+    #[test]
+    fn zero_workers_resolves_to_available_parallelism() {
+        let pool = JobPool::new(PoolConfig {
+            workers: 0,
+            queue_depth: 0,
+            name: "test-auto".into(),
+        });
+        assert!(pool.workers() >= 1);
+        assert_eq!(pool.queue_depth(), 1, "queue depth clamps to at least 1");
+    }
+}

@@ -166,6 +166,27 @@ impl TraceConfig {
             ..TraceConfig::default()
         }
     }
+
+    /// Saturation regime: arrivals far beyond any fixed pool's service
+    /// rate, built to drive the front end's bounded queue into admission
+    /// control.  Sizes are small and uniform — the interesting signal is
+    /// queueing (sheds, deadline expiries, queue-wait quantiles), so
+    /// per-request solve cost stays cheap and homogeneous; one generator
+    /// family keeps the offered load's variance down.  Pure solves: a shed
+    /// update would conflate cache-miss retries with admission behaviour.
+    pub fn saturation(seed: u64) -> TraceConfig {
+        TraceConfig {
+            rate_hz: 500.0,
+            count: 64,
+            sizes: vec![48, 64, 96],
+            heavy_tail: false,
+            kinds: vec![GraphKind::ErdosRenyi],
+            seed,
+            update_fraction: 0.0,
+            update_batch: 4,
+            objective: "shortest".into(),
+        }
+    }
 }
 
 /// Generate a deterministic trace.
@@ -332,6 +353,31 @@ mod tests {
                 assert_eq!(x.objective, want);
             }
         }
+    }
+
+    #[test]
+    fn saturation_regime_shape() {
+        // the regime must offer load, not variety: pure solves, small
+        // uniform sizes, one generator family, sub-millisecond-scale
+        // inter-arrival gaps (500 req/s) — and, like every regime, be
+        // deterministic by seed
+        let cfg = TraceConfig::saturation(0xBEEF);
+        let items = generate(&cfg);
+        assert_eq!(items.len(), 64);
+        assert!(items.iter().all(|t| t.updates.is_empty()));
+        assert!(items.iter().all(|t| t.objective == "shortest"));
+        assert!(items.iter().all(|t| [48, 64, 96].contains(&t.n)));
+        assert!(items.iter().all(|t| t.kind == GraphKind::ErdosRenyi));
+        let span = items.last().unwrap().at - items[0].at;
+        assert!(
+            span < 1.0,
+            "64 arrivals at 500 req/s should land within a second (got {span}s)"
+        );
+        let again = generate(&cfg);
+        assert!(items
+            .iter()
+            .zip(&again)
+            .all(|(x, y)| (x.at, x.n, x.kind, x.seed) == (y.at, y.n, y.kind, y.seed)));
     }
 
     #[test]

@@ -1902,7 +1902,10 @@ fn server_sheds_connections_past_cap_with_typed_error() {
     let srv = server::Server::spawn_with(
         coord.clone(),
         "127.0.0.1:0",
-        server::ServerConfig { max_connections: 1 },
+        server::ServerConfig {
+            max_connections: 1,
+            ..server::ServerConfig::default()
+        },
     )
     .expect("server");
     let addr = srv.addr().to_string();
@@ -1942,4 +1945,276 @@ fn server_sheds_connections_past_cap_with_typed_error() {
     assert!(snap.get("connections_shed").as_f64().unwrap_or(0.0) >= 1.0, "{snap}");
     // backpressure is not a request failure: the error counters stay clean
     assert_eq!(snap.get("errors").as_f64(), Some(0.0), "{snap}");
+}
+
+// --------------------------------------------- front-end admission control --
+
+/// Raw line-protocol probe with split read/write halves, so a test can
+/// hold many in-flight requests across connections and collect the
+/// replies later.
+struct RawConn {
+    reader: std::io::BufReader<std::net::TcpStream>,
+    writer: std::net::TcpStream,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = std::net::TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+            .ok();
+        RawConn {
+            reader: std::io::BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str) {
+        use std::io::Write;
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send");
+    }
+
+    fn recv(&mut self) -> String {
+        use std::io::BufRead;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("recv");
+        line.trim().to_string()
+    }
+}
+
+/// A cache-skipping CPU-tier solve line (the CPU route keeps these tests
+/// artifact-free; `no_cache` keeps them about admission, not caching).
+fn cpu_solve_line(id: u64, n: usize, seed: u64, deadline_ms: Option<u64>) -> String {
+    let req = coordinator::Request {
+        id,
+        graph: generators::erdos_renyi(n, 0.3, seed),
+        variant: "cpu".into(),
+        no_cache: true,
+        want_paths: false,
+        objective: "shortest".into(),
+        trace: false,
+    };
+    types::encode_request_opts(&req, &types::WireOptions { deadline_ms, binary: false })
+}
+
+/// Park the pool's only worker on a solve big enough to outlast the rest
+/// of the test's traffic, and return once it has *dequeued* the job
+/// (`requests` ticks at solve start) — from then on, arriving requests
+/// contend for the queue alone.
+fn occupy_worker(addr: &str) -> RawConn {
+    let mut busy = RawConn::connect(addr);
+    busy.send(&cpu_solve_line(1, 512, 31, None));
+    let mut stats = coordinator::client::Client::connect(addr).expect("stats conn");
+    let t0 = std::time::Instant::now();
+    loop {
+        let snap = stats.stats().expect("stats");
+        if snap.get("requests").as_usize().unwrap_or(0) >= 1 {
+            return busy;
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "worker never dequeued the parked solve"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// The bounded queue admits exactly `queue_depth` requests past the busy
+/// workers; the rest come back as typed `shed` errors, every shed
+/// connection stays open, and the metrics agree with what the clients
+/// observed (sheds are backpressure, not request errors).
+#[test]
+fn request_queue_admits_exactly_depth_and_sheds_the_rest() {
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn_with(
+        coord.clone(),
+        "127.0.0.1:0",
+        server::ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            deadline_ms: 0, // nothing may expire: this test is about admission
+            ..server::ServerConfig::default()
+        },
+    )
+    .expect("server");
+    let addr = srv.addr().to_string();
+    let mut busy = occupy_worker(&addr);
+
+    // burst 6 small solves on 6 fresh connections: with the worker parked,
+    // exactly 2 fit the queue and 4 must shed
+    let mut conns: Vec<RawConn> = (0..6).map(|_| RawConn::connect(&addr)).collect();
+    for (i, c) in conns.iter_mut().enumerate() {
+        c.send(&cpu_solve_line(10 + i as u64, 16, 100 + i as u64, None));
+    }
+    let mut results = 0;
+    let mut sheds = 0;
+    for c in conns.iter_mut() {
+        let v = Json::parse(&c.recv()).expect("reply is JSON");
+        match v.get("type").as_str() {
+            Some("result") => results += 1,
+            Some("error") => {
+                assert_eq!(v.get("code").as_str(), Some(types::CODE_SHED), "{v}");
+                assert!(v.get("message").as_str().unwrap_or("").contains("queue"), "{v}");
+                sheds += 1;
+            }
+            other => panic!("unexpected reply type {other:?}"),
+        }
+    }
+    assert_eq!((results, sheds), (2, 4), "admission bound is exact");
+
+    // a shed *request* never costs the connection: every socket in the
+    // burst — shed or served — still answers a ping
+    for c in conns.iter_mut() {
+        c.send(r#"{"type":"ping"}"#);
+        let v = Json::parse(&c.recv()).expect("ping reply");
+        assert_eq!(v.get("type").as_str(), Some("pong"));
+    }
+    let v = Json::parse(&busy.recv()).expect("parked solve reply");
+    assert_eq!(v.get("type").as_str(), Some("result"), "{v}");
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.get("requests_shed").as_usize(), Some(4), "{snap}");
+    assert_eq!(snap.get("connections_shed").as_usize(), Some(0), "{snap}");
+    assert_eq!(snap.get("errors").as_usize(), Some(0), "sheds are not errors: {snap}");
+    assert_eq!(snap.get("requests").as_usize(), Some(3), "parked + 2 admitted: {snap}");
+}
+
+/// A request whose deadline expires while it sits in the queue comes back
+/// as the typed `deadline_exceeded` error without a solver ever running
+/// for it — and unlike a shed, expiry *is* a request error: the server
+/// accepted the work and failed to deliver it.
+#[test]
+fn queued_request_past_its_deadline_is_refused_without_solving() {
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn_with(
+        coord.clone(),
+        "127.0.0.1:0",
+        server::ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            deadline_ms: 0, // the doomed request carries its own deadline
+            ..server::ServerConfig::default()
+        },
+    )
+    .expect("server");
+    let addr = srv.addr().to_string();
+    let mut busy = occupy_worker(&addr);
+
+    // 1 ms against a worker parked for tens of milliseconds: guaranteed
+    // to expire while queued
+    let mut doomed = RawConn::connect(&addr);
+    doomed.send(&cpu_solve_line(2, 16, 5, Some(1)));
+    let v = Json::parse(&doomed.recv()).expect("reply is JSON");
+    assert_eq!(v.get("type").as_str(), Some("error"), "{v}");
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_DEADLINE_EXCEEDED), "{v}");
+    assert_eq!(v.get("id").as_f64(), Some(2.0), "{v}");
+    assert!(v.get("message").as_str().unwrap_or("").contains("queued"), "{v}");
+
+    let v = Json::parse(&busy.recv()).expect("parked solve reply");
+    assert_eq!(v.get("type").as_str(), Some("result"), "{v}");
+
+    let snap = coord.metrics().snapshot();
+    // the expired request never reached a solver…
+    assert_eq!(snap.get("requests").as_usize(), Some(1), "{snap}");
+    assert_eq!(snap.get("cpu_solves").as_usize(), Some(1), "{snap}");
+    // …but it counts as a request error, under its typed code
+    assert_eq!(snap.get("errors").as_usize(), Some(1), "{snap}");
+    assert_eq!(
+        snap.get("errors_by_code").get(types::CODE_DEADLINE_EXCEEDED).as_usize(),
+        Some(1),
+        "{snap}"
+    );
+}
+
+/// An idle connection gets one typed `idle_timeout` line, then EOF — and
+/// its admission slot is actually reclaimed (before this existed, an idle
+/// client under `max_connections: 1` wedged the server forever).
+#[test]
+fn idle_connection_gets_typed_timeout_and_frees_its_slot() {
+    use std::io::BufRead;
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn_with(
+        coord.clone(),
+        "127.0.0.1:0",
+        server::ServerConfig {
+            max_connections: 1,
+            idle_timeout_ms: 150,
+            ..server::ServerConfig::default()
+        },
+    )
+    .expect("server");
+    let addr = srv.addr().to_string();
+
+    // claim the only slot and go silent: the server must evict us
+    let mut idle = RawConn::connect(&addr);
+    let line = idle.recv();
+    let v = Json::parse(&line).expect("timeout line is JSON");
+    assert_eq!(v.get("type").as_str(), Some("error"), "{line}");
+    assert_eq!(v.get("code").as_str(), Some(types::CODE_IDLE_TIMEOUT), "{line}");
+    assert!(v.get("message").as_str().unwrap_or("").contains("idle"), "{line}");
+    let mut rest = String::new();
+    assert_eq!(idle.reader.read_line(&mut rest).expect("post-timeout read"), 0, "not closed");
+
+    // the slot frees asynchronously as the handler thread unwinds; a
+    // retry loop absorbs the race (over-cap attempts shed and close)
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let mut retry = coordinator::client::Client::connect(&addr).expect("retry connect");
+        if retry.ping().is_ok() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "idle slot never freed");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.get("idle_timeouts").as_usize(), Some(1), "{snap}");
+    assert_eq!(snap.get("errors").as_usize(), Some(0), "timeouts are not errors: {snap}");
+}
+
+/// The binary matrix frame round-trips distances bitwise and successors
+/// exactly against the JSON rendering of the same solve — and framing is
+/// negotiated per *request*, so binary and JSON replies interleave freely
+/// on one connection.
+#[test]
+fn binary_frame_roundtrips_bitwise_and_interleaves_with_json() {
+    let coord = Arc::new(synthetic_coordinator());
+    let srv = server::Server::spawn(coord, "127.0.0.1:0").expect("server");
+    let addr = srv.addr().to_string();
+    let g = generators::erdos_renyi(24, 0.25, 515); // n ≤ cpu_threshold → CPU tier
+
+    let mut json_client = coordinator::client::Client::connect(&addr).expect("json client");
+    let via_json = json_client.solve_paths(&g, "staged").expect("json paths solve");
+    let mut bin_client = coordinator::client::Client::connect(&addr).expect("binary client");
+    let via_frame = bin_client.solve_paths_binary(&g, "staged").expect("binary paths solve");
+
+    assert_eq!(via_json.dist.n(), via_frame.dist.n());
+    assert!(
+        via_json
+            .dist
+            .as_slice()
+            .iter()
+            .zip(via_frame.dist.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "frame and JSON renderings of one closure must agree bitwise"
+    );
+    assert_eq!(via_json.succ, via_frame.succ, "successors must survive the frame exactly");
+
+    // same connection, JSON again, then control plane: per-request framing
+    let plain = bin_client.solve(&g, "staged").expect("json solve after a frame");
+    assert!(
+        plain
+            .dist
+            .as_slice()
+            .iter()
+            .zip(via_frame.dist.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+    );
+    bin_client.ping().expect("control plane after a frame");
+
+    // distance-only frame: no successor payload rides along
+    let dist_only = bin_client.solve_binary(&g, "staged").expect("binary dist-only");
+    assert!(dist_only.succ.is_none());
 }
