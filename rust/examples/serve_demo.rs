@@ -19,6 +19,16 @@ use fw_stage::workload::{generate, GraphKind, TraceConfig};
 fn main() -> anyhow::Result<()> {
     let mut config = Config::new(fw_stage::runtime::artifact::discover_dir());
     config.engine.batch_window = Duration::from_millis(3);
+    // FW_STORE_DIR=<dir> attaches the persistent closure store: every
+    // closure solved below is persisted, and the demo finishes with a
+    // kill-and-restart round trip (see the persistence regime at the end)
+    let store_dir = std::env::var("FW_STORE_DIR").ok().filter(|p| !p.is_empty());
+    if let Some(dir) = &store_dir {
+        config.store = Some(fw_stage::coordinator::store::StoreConfig {
+            dir: dir.into(),
+            max_bytes: 0,
+        });
+    }
     let coord = Arc::new(Coordinator::start(config)?);
     let server = Server::spawn(coord.clone(), "127.0.0.1:0")?;
     let addr = server.addr().to_string();
@@ -269,6 +279,94 @@ fn main() -> anyhow::Result<()> {
         println!("live histogram rows appended to {}", path.display());
     }
     println!("observability: trace echo + journal + exposition round-trip verified");
+
+    // ---- persistence regime: kill the server, warm-start from disk ----
+    // only with FW_STORE_DIR set.  Generation 1 (everything above) has
+    // persisted each solved closure write-behind; generation 2 must serve
+    // replayed graphs from the store — bitwise identical, zero re-solves.
+    if let Some(dir) = &store_dir {
+        // settle the write-behind queue, then prove each replay graph is
+        // actually on disk before tearing generation 1 down
+        coord.flush_store();
+        let store = coord.store().expect("store was configured");
+        let mut replay: Vec<(fw_stage::graph::DistMatrix, fw_stage::graph::DistMatrix)> =
+            Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for item in &trace {
+            let g = item.graph();
+            let fp = fw_stage::coordinator::cache::graph_fingerprint(&g);
+            if !seen.insert(fp) {
+                continue;
+            }
+            let entry = store
+                .get("staged", g.n(), fp)
+                .ok_or_else(|| anyhow::anyhow!("closure {fp:016x} missing from the store"))?;
+            replay.push((g, entry.dist));
+            if replay.len() >= 8 {
+                break;
+            }
+        }
+        let index_json = store.index_json().to_string();
+        drop(client);
+        drop(server); // generation 1 dies here
+        drop(coord);
+
+        // generation 2: same artifacts, same store directory, and a cache
+        // far smaller than the replay set — most replays must read through
+        // to disk rather than ride the boot warm-start
+        let mut config2 = Config::new(fw_stage::runtime::artifact::discover_dir());
+        config2.cache_capacity = 4;
+        config2.store = Some(fw_stage::coordinator::store::StoreConfig {
+            dir: dir.into(),
+            max_bytes: 0,
+        });
+        let coord2 = Coordinator::start(config2)?;
+        for (g, dist_gen1) in &replay {
+            let resp = coord2.solve(&fw_stage::coordinator::Request {
+                id: 0,
+                graph: g.clone(),
+                variant: "staged".into(),
+                no_cache: false,
+                want_paths: false,
+                objective: "shortest".into(),
+                trace: false,
+            })?;
+            anyhow::ensure!(
+                resp.source == fw_stage::coordinator::Source::Cache,
+                "replayed graph re-solved via {} after restart",
+                resp.source.name()
+            );
+            for (a, b) in resp.dist.as_slice().iter().zip(dist_gen1.as_slice()) {
+                anyhow::ensure!(
+                    a.to_bits() == b.to_bits(),
+                    "restart served a non-bitwise-identical closure"
+                );
+            }
+        }
+        let snap = coord2.metrics().snapshot();
+        let counter =
+            |key: &str| -> u64 { snap.get(key).as_f64().unwrap_or(0.0) as u64 };
+        anyhow::ensure!(counter("store_hits") > 0, "restart never touched the store");
+        anyhow::ensure!(counter("store_corrupt") == 0, "store reported corruption");
+        anyhow::ensure!(
+            counter("cpu_solves") == 0
+                && counter("device_solves") == 0
+                && counter("superblock_solves") == 0
+                && counter("incremental_solves") == 0,
+            "generation 2 re-solved a replayed graph"
+        );
+        // CI artifacts: the store's index and the restart's metrics
+        std::fs::write("store_index.json", index_json)?;
+        std::fs::write("store_metrics.json", snap.to_string())?;
+        println!(
+            "persistence: {} closures replayed bitwise from {} after restart \
+             (store_hits {}, zero re-solves)",
+            replay.len(),
+            dir,
+            counter("store_hits"),
+        );
+    }
+
     println!("serve_demo OK");
     Ok(())
 }

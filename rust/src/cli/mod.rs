@@ -11,7 +11,8 @@
 //!                    [--update-max-chain K] [--log-level error|warn|info|debug]
 //!                    [--trace-journal K] [--max-connections N]
 //!                    [--workers W] [--queue-depth D] [--deadline-ms MS]
-//!                    [--idle-timeout-ms MS]
+//!                    [--idle-timeout-ms MS] [--store-dir DIR]
+//!                    [--store-max-bytes BYTES]
 //! fw-stage client    --addr HOST:PORT --input g.gr [--variant staged]
 //!                    [--objective shortest|bottleneck|minimax|reachability]
 //!                    [--paths --src A --dst B] [--update "u,v,w[;u,v,w…]"]
@@ -55,6 +56,16 @@
 //! `code:"idle_timeout"` line.  `client --binary` negotiates the
 //! length-prefixed binary matrix frame for the reply instead of
 //! line-JSON (bitwise-identical distances, raw little-endian rows).
+//!
+//! Persistence: `--store-dir` points the coordinator at a content-
+//! addressed on-disk closure store (DESIGN.md §Closure store).  Every
+//! solved closure is persisted asynchronously (checksummed, written via
+//! temp-file + rename) and the cache warm-starts from the store at boot,
+//! so a restarted server answers previously solved graphs from disk —
+//! bitwise identical, no re-solve.  `--store-max-bytes` bounds the
+//! directory (oldest entries evicted; 0 = unbounded).  Corrupt entries
+//! are quarantined and re-solved, never served.  `solve` and
+//! `bench-tasks` accept the same flags (shared coordinator config).
 //!
 //! Observability: `serve --log-level` sets the structured-stderr-log
 //! threshold (default `warn`) and `--trace-journal K` sizes the in-memory
@@ -157,6 +168,20 @@ fn start_coordinator(args: &Args) -> Result<Coordinator> {
         "trace-journal",
         crate::obs::ObsConfig::default().journal_capacity,
     )?;
+    // persistent closure store: solved closures survive restarts
+    match args.get("store-dir") {
+        Some(dir) => {
+            config.store = Some(coordinator::store::StoreConfig {
+                dir: PathBuf::from(dir),
+                max_bytes: args.get_u64("store-max-bytes", 0)?,
+            });
+        }
+        None => {
+            if args.get("store-max-bytes").is_some() {
+                bail!("--store-max-bytes requires --store-dir");
+            }
+        }
+    }
     Coordinator::start(config)
 }
 
@@ -212,6 +237,8 @@ fn cmd_solve(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
     let _ = args.get("trace-journal");
+    let _ = args.get("store-dir");
+    let _ = args.get("store-max-bytes");
     args.reject_unknown()?;
     if update_spec.is_some() && objective != "shortest" {
         bail!("--update serves the shortest objective only (got --objective {objective})");
@@ -357,6 +384,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
     let _ = args.get("trace-journal");
+    let _ = args.get("store-dir");
+    let _ = args.get("store-max-bytes");
     args.reject_unknown()?;
     let level = crate::obs::log::Level::parse(&log_level)
         .with_context(|| format!("--log-level {log_level:?} (error, warn, info, debug)"))?;
@@ -369,6 +398,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         bail!("--queue-depth must be at least 1 (admission needs somewhere to admit)");
     }
     let coord = Arc::new(start_coordinator(&args)?);
+    let store_banner = match coord.store() {
+        Some(store) => format!("; store: {}", store.dir().display()),
+        None => String::new(),
+    };
     let summary = coord.manifest_summary().clone();
     let server = coordinator::server::Server::spawn_with(
         coord,
@@ -383,7 +416,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     )?;
     eprintln!(
         "fw-stage serving on {} (variants: {}; buckets: {:?}; kernel: {}; max-connections: {}; \
-         workers: {}; queue-depth: {}; deadline-ms: {})",
+         workers: {}; queue-depth: {}; deadline-ms: {}{})",
         server.addr(),
         summary.variants.join(", "),
         summary.buckets,
@@ -392,6 +425,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         server.workers(),
         server.queue_depth(),
         deadline_ms,
+        store_banner,
     );
     // serve until killed
     loop {
@@ -580,6 +614,8 @@ fn cmd_bench_tasks(rest: &[String]) -> Result<()> {
     let _ = args.get("superblock-workers");
     let _ = args.get("update-max-chain");
     let _ = args.get("trace-journal");
+    let _ = args.get("store-dir");
+    let _ = args.get("store-max-bytes");
     args.reject_unknown()?;
 
     let coord = start_coordinator(&args)?;

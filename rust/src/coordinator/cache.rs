@@ -7,12 +7,40 @@
 //! taken over one semiring can never answer a request for another;
 //! collisions are guarded by storing the full key (n, variant, hash) and
 //! verifying n.
+//!
+//! ## Hot-path discipline
+//!
+//! Payloads are `Arc`'d and every O(n²) copy happens **outside** the
+//! global mutex: a hit snapshots three `Arc` pointers under the lock and
+//! deep-clones (when the caller needs ownership) after releasing it, so a
+//! superblock-scale hit no longer serializes every other request behind a
+//! multi-MB memcpy.  Eviction is O(log capacity) via a `BTreeMap` keyed
+//! by the monotone touch clock (clock values are unique under the lock,
+//! so the map is a faithful LRU order) — not a full-map scan.  The lock
+//! itself recovers from poisoning ([`crate::util::sync`]): one panicking
+//! request must not turn into a permanent all-requests panic.
+//!
+//! ## Backing store
+//!
+//! [`ResultCache::with_store`] attaches the persistent closure store
+//! ([`super::store`]): lookups that miss memory consult disk **after**
+//! releasing the lock (read-through; disk hits are re-inserted so the
+//! next hit is a memory hit), and every insert that changes an entry is
+//! persisted asynchronously through a single-worker [`JobPool`] —
+//! write-behind off the request path, FIFO so chained re-baselines land
+//! in order.  A full writer queue drops the write (the entry stays
+//! correct in memory; the store is an optimization, never a dependency).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use crate::apsp::semiring::Objective;
 use crate::graph::DistMatrix;
+use crate::obs::log::{log, Level};
+use crate::util::json::Json;
+use crate::util::pool::JobPool;
+
+use super::store::Store;
 
 const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const PRIME: u64 = 0x0000_0100_0000_01B3;
@@ -78,38 +106,71 @@ struct Entry {
     /// an edge-delta batch needs the base weights to classify deltas and
     /// to fall back to a full solve (roughly triples the entry footprint;
     /// capacity bounds total memory as before).
-    graph: DistMatrix,
-    dist: DistMatrix,
+    graph: Arc<DistMatrix>,
+    dist: Arc<DistMatrix>,
     /// Successor matrix, present once a path-carrying solve has been
     /// cached for this key (same fingerprint — the key contract is shared
     /// with distance-only entries; paths *upgrade* an entry in place).
-    succ: Option<Vec<usize>>,
+    succ: Option<Arc<Vec<usize>>>,
     /// Incremental updates applied since the last from-scratch solve of
     /// this closure (0 = a baseline).  The coordinator re-baselines when a
     /// chain exceeds its cap.
     chain: u32,
-    /// Monotone counter value at last touch (LRU eviction order).
+    /// Monotone counter value at last touch (LRU eviction order; doubles
+    /// as this entry's key in `Inner::order`).
     last_used: u64,
 }
 
 /// A cached base closure an `"update"` request chains from — an atomic
 /// snapshot of one entry (graph, closure, chain depth), taken under the
-/// cache lock so a concurrent put can never hand out a split pair.
+/// cache lock so a concurrent put can never hand out a split pair.  The
+/// payloads are shared (`Arc`), not copied: snapshotting is O(1).
 pub struct CachedBase {
-    pub graph: DistMatrix,
-    pub dist: DistMatrix,
-    pub succ: Option<Vec<usize>>,
+    pub graph: Arc<DistMatrix>,
+    pub dist: Arc<DistMatrix>,
+    pub succ: Option<Arc<Vec<usize>>>,
     pub chain: u32,
 }
 
-/// A thread-safe LRU result cache.
+/// Where a cache hit came from: the in-memory LRU, or the backing store
+/// on disk (read-through).  Both are verified closures; the distinction
+/// feeds the `store_get` span and the store metrics.
+#[derive(Debug)]
+pub enum CacheHit<T> {
+    Memory(T),
+    Disk(T),
+}
+
+impl<T> CacheHit<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            CacheHit::Memory(v) | CacheHit::Disk(v) => v,
+        }
+    }
+
+    pub fn from_disk(&self) -> bool {
+        matches!(self, CacheHit::Disk(_))
+    }
+}
+
+/// A thread-safe LRU result cache, optionally backed by the persistent
+/// closure store.
 pub struct ResultCache {
     inner: Mutex<Inner>,
     capacity: usize,
+    store: Option<Arc<Store>>,
+    /// Async persistence lane.  **Single worker by contract**: FIFO order
+    /// is what makes [`ResultCache::flush_store`]'s sentinel a barrier and
+    /// keeps chained re-baselines landing on disk in cache order.
+    writer: Option<JobPool>,
 }
 
 struct Inner {
     map: HashMap<Key, Entry>,
+    /// LRU order: touch-clock → key.  The clock is bumped once per
+    /// operation under the lock, so values are unique and `pop_first`
+    /// yields the least-recently-used key in O(log capacity).
+    order: BTreeMap<u64, Key>,
     clock: u64,
     hits: u64,
     misses: u64,
@@ -118,47 +179,101 @@ struct Inner {
 impl ResultCache {
     /// `capacity` = max cached results (0 disables caching).
     pub fn new(capacity: usize) -> Self {
+        Self::build(capacity, None, None)
+    }
+
+    /// A cache backed by the on-disk closure store: read-through on miss,
+    /// async write-through on insert, warm-startable via
+    /// [`ResultCache::warm_from_store`].  `writer` must be a
+    /// **single-worker** pool (FIFO persistence order).  Capacity 0 still
+    /// disables everything, store included.
+    pub fn with_store(capacity: usize, store: Arc<Store>, writer: JobPool) -> Self {
+        debug_assert_eq!(writer.workers(), 1, "store writer must be single-worker (FIFO)");
+        Self::build(capacity, Some(store), Some(writer))
+    }
+
+    fn build(capacity: usize, store: Option<Arc<Store>>, writer: Option<JobPool>) -> Self {
         ResultCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
+                order: BTreeMap::new(),
                 clock: 0,
                 hits: 0,
                 misses: 0,
             }),
             capacity,
+            store,
+            writer,
         }
+    }
+
+    pub fn has_store(&self) -> bool {
+        self.store.is_some()
+    }
+
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_deref()
     }
 
     pub fn get(&self, variant: &str, g: &DistMatrix) -> Option<DistMatrix> {
         self.get_for(Objective::Shortest, variant, g)
     }
 
-    /// [`ResultCache::get`] under an explicit serving objective.
+    /// [`ResultCache::get`] under an explicit serving objective.  The
+    /// returned matrix is deep-cloned *outside* the lock.
     pub fn get_for(
         &self,
         objective: Objective,
         variant: &str,
         g: &DistMatrix,
     ) -> Option<DistMatrix> {
+        self.lookup_for(objective, variant, g)
+            .map(|hit| (*hit.into_inner()).clone())
+    }
+
+    /// Distance lookup returning the shared payload and its origin
+    /// (memory vs disk read-through).  This is the request path's entry
+    /// point; `get_for` wraps it for callers that need ownership.
+    pub fn lookup_for(
+        &self,
+        objective: Objective,
+        variant: &str,
+        g: &DistMatrix,
+    ) -> Option<CacheHit<Arc<DistMatrix>>> {
         if self.capacity == 0 {
             return None;
         }
         let key = make_key(objective, variant, g);
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let clock = inner.clock;
-        match inner.map.get_mut(&key) {
-            Some(entry) => {
-                entry.last_used = clock;
-                let dist = entry.dist.clone();
-                inner.hits += 1;
-                Some(dist)
-            }
-            None => {
-                inner.misses += 1;
-                None
+        {
+            let mut inner = crate::recover_lock!(&self.inner, "cache.inner");
+            inner.clock += 1;
+            let clock = inner.clock;
+            match inner.map.get_mut(&key) {
+                Some(entry) => {
+                    let prev = entry.last_used;
+                    entry.last_used = clock;
+                    let dist = entry.dist.clone(); // Arc clone: O(1), no matrix copy
+                    inner.order.remove(&prev);
+                    inner.order.insert(clock, key);
+                    inner.hits += 1;
+                    return Some(CacheHit::Memory(dist));
+                }
+                None => inner.misses += 1,
             }
         }
+        // memory miss: consult the store with the lock *released* — disk
+        // latency must never serialize other requests
+        let entry = self.store.as_ref()?.get(&key.variant, key.n, key.fingerprint)?;
+        let dist = Arc::new(entry.dist);
+        self.insert_shared(
+            key,
+            Arc::new(entry.graph),
+            dist.clone(),
+            entry.succ.map(Arc::new),
+            entry.chain,
+            false, // came *from* disk; writing it back would be churn
+        );
+        Some(CacheHit::Disk(dist))
     }
 
     /// Closure + successor lookup: hits only entries a path-carrying solve
@@ -174,25 +289,49 @@ impl ResultCache {
         variant: &str,
         g: &DistMatrix,
     ) -> Option<(DistMatrix, Vec<usize>)> {
+        self.lookup_paths_for(objective, variant, g).map(|hit| {
+            let (dist, succ) = hit.into_inner();
+            ((*dist).clone(), (*succ).clone())
+        })
+    }
+
+    /// Paths lookup returning shared payloads and their origin.  A
+    /// distance-only entry (memory or disk) reads as a miss, exactly as
+    /// before — but a distance-only *disk* entry is still pulled into
+    /// memory, so the follow-up solve can chain updates from its graph.
+    pub fn lookup_paths_for(
+        &self,
+        objective: Objective,
+        variant: &str,
+        g: &DistMatrix,
+    ) -> Option<CacheHit<(Arc<DistMatrix>, Arc<Vec<usize>>)>> {
         if self.capacity == 0 {
             return None;
         }
         let key = make_key(objective, variant, g);
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let clock = inner.clock;
-        match inner.map.get_mut(&key) {
-            Some(Entry { dist, succ: Some(succ), last_used }) => {
-                *last_used = clock;
-                let hit = (dist.clone(), succ.clone());
-                inner.hits += 1;
-                Some(hit)
-            }
-            _ => {
-                inner.misses += 1;
-                None
+        {
+            let mut inner = crate::recover_lock!(&self.inner, "cache.inner");
+            inner.clock += 1;
+            let clock = inner.clock;
+            match inner.map.get_mut(&key) {
+                Some(Entry { dist, succ: Some(succ), last_used, .. }) => {
+                    let prev = *last_used;
+                    *last_used = clock;
+                    let hit = (dist.clone(), succ.clone()); // Arc clones
+                    inner.order.remove(&prev);
+                    inner.order.insert(clock, key);
+                    inner.hits += 1;
+                    return Some(CacheHit::Memory(hit));
+                }
+                _ => inner.misses += 1,
             }
         }
+        let entry = self.store.as_ref()?.get(&key.variant, key.n, key.fingerprint)?;
+        let dist = Arc::new(entry.dist);
+        let succ = entry.succ.map(Arc::new);
+        self.insert_shared(key, Arc::new(entry.graph), dist.clone(), succ.clone(), entry.chain, false);
+        let succ = succ?; // dist-only disk entry: warmed memory, still a paths miss
+        Some(CacheHit::Disk((dist, succ)))
     }
 
     pub fn put(&self, variant: &str, g: &DistMatrix, dist: DistMatrix) {
@@ -241,10 +380,13 @@ impl ResultCache {
 
     /// Atomic base-closure lookup for an `"update"` request, addressed by
     /// fingerprint (the request carries no graph — that is the point).
-    /// Misses when the closure was never solved here or has been evicted;
-    /// the caller surfaces that as a typed error the client retries as a
-    /// full solve.  Like every lookup, trusts the 64-bit fingerprint not
-    /// to collide (the request-path `get` makes the same bet).
+    /// Misses when the closure was never solved here or has been evicted
+    /// — though with a backing store, an evicted (or pre-restart) closure
+    /// is read through from disk, which is exactly what makes delta
+    /// chains survive a process death.  On a true miss the caller
+    /// surfaces a typed error the client retries as a full solve.  Like
+    /// every lookup, trusts the 64-bit fingerprint not to collide (the
+    /// request-path `get` makes the same bet).
     pub fn get_base(&self, variant: &str, n: usize, fingerprint: u64) -> Option<CachedBase> {
         if self.capacity == 0 {
             return None;
@@ -254,26 +396,90 @@ impl ResultCache {
             n,
             fingerprint,
         };
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let clock = inner.clock;
-        match inner.map.get_mut(&key) {
-            Some(entry) => {
-                entry.last_used = clock;
-                let base = CachedBase {
-                    graph: entry.graph.clone(),
-                    dist: entry.dist.clone(),
-                    succ: entry.succ.clone(),
-                    chain: entry.chain,
-                };
-                inner.hits += 1;
-                Some(base)
-            }
-            None => {
-                inner.misses += 1;
-                None
+        {
+            let mut inner = crate::recover_lock!(&self.inner, "cache.inner");
+            inner.clock += 1;
+            let clock = inner.clock;
+            match inner.map.get_mut(&key) {
+                Some(entry) => {
+                    let prev = entry.last_used;
+                    entry.last_used = clock;
+                    let base = CachedBase {
+                        graph: entry.graph.clone(),
+                        dist: entry.dist.clone(),
+                        succ: entry.succ.clone(),
+                        chain: entry.chain,
+                    };
+                    inner.order.remove(&prev);
+                    inner.order.insert(clock, key);
+                    inner.hits += 1;
+                    return Some(base);
+                }
+                None => inner.misses += 1,
             }
         }
+        let entry = self.store.as_ref()?.get(&key.variant, key.n, key.fingerprint)?;
+        let graph = Arc::new(entry.graph);
+        let dist = Arc::new(entry.dist);
+        let succ = entry.succ.map(Arc::new);
+        self.insert_shared(key, graph.clone(), dist.clone(), succ.clone(), entry.chain, false);
+        Some(CachedBase {
+            graph,
+            dist,
+            succ,
+            chain: entry.chain,
+        })
+    }
+
+    /// Preload the LRU from the store's newest entries (boot warm-start).
+    /// Returns how many entries were loaded.  Inserted oldest-first (the
+    /// store hands them back that way), so the newest entry on disk ends
+    /// up most-recently-used.  Nothing is written back.
+    pub fn warm_from_store(&self) -> usize {
+        let Some(store) = &self.store else {
+            return 0;
+        };
+        if self.capacity == 0 {
+            return 0;
+        }
+        let entries = store.warm(self.capacity);
+        let count = entries.len();
+        for e in entries {
+            let key = Key {
+                variant: e.variant,
+                n: e.graph.n(),
+                fingerprint: e.fingerprint,
+            };
+            self.insert_shared(
+                key,
+                Arc::new(e.graph),
+                Arc::new(e.dist),
+                e.succ.map(Arc::new),
+                e.chain,
+                false,
+            );
+        }
+        count
+    }
+
+    /// Block until every persistence job enqueued so far has completed.
+    /// Correct because the writer is single-worker FIFO: a sentinel job's
+    /// completion implies all prior jobs ran.  Admission waits (the queue
+    /// may be momentarily full) — this is a teardown/test barrier, never
+    /// the request path.
+    pub fn flush_store(&self) {
+        let Some(writer) = &self.writer else {
+            return;
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        loop {
+            let tx = tx.clone();
+            if writer.try_submit(move || drop(tx.send(()))).is_ok() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let _ = rx.recv();
     }
 
     fn insert(
@@ -285,77 +491,166 @@ impl ResultCache {
         succ: Option<Vec<usize>>,
         chain: u32,
     ) {
-        if self.capacity == 0 {
-            return;
-        }
         let key = make_key(objective, variant, g);
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let clock = inner.clock;
-        if let Some(entry) = inner.map.get_mut(&key) {
-            // refresh in place.  A distance-only insert must neither
-            // discard successors a paths solve already paid for NOR
-            // overwrite their paired distances: different tiers can
-            // produce bitwise-different (equally valid) closures, and a
-            // (dist, succ) pair must stay internally consistent — so a
-            // succ-less put against a succ-carrying entry only bumps LRU
-            // (the surviving pair keeps its own chain depth; re-baselining
-            // then happens at the pair's cadence, never against a mix).
-            if succ.is_some() {
-                entry.graph = g.clone();
-                entry.dist = dist;
-                entry.succ = succ;
-                entry.chain = chain;
-            } else if entry.succ.is_none() {
-                entry.graph = g.clone();
-                entry.dist = dist;
-                entry.chain = chain;
-            }
-            entry.last_used = clock;
-            return;
-        }
-        if inner.map.len() >= self.capacity {
-            // evict the least-recently-used entry
-            if let Some(victim) = inner
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-            {
-                inner.map.remove(&victim);
-            }
-        }
-        inner.map.insert(
+        // Arc allocation (and the one graph copy an insert inherently
+        // needs) happens before the lock — nothing O(n²) inside it
+        self.insert_shared(
             key,
-            Entry {
-                graph: g.clone(),
-                dist,
-                succ,
-                chain,
-                last_used: clock,
-            },
+            Arc::new(g.clone()),
+            Arc::new(dist),
+            succ.map(Arc::new),
+            chain,
+            true,
         );
     }
 
+    /// The one insert path.  Merges under the lock, snapshots the merged
+    /// entry (Arc clones), and — when the merge changed anything and a
+    /// store is attached — enqueues the async persist after unlocking.
+    fn insert_shared(
+        &self,
+        key: Key,
+        graph: Arc<DistMatrix>,
+        dist: Arc<DistMatrix>,
+        succ: Option<Arc<Vec<usize>>>,
+        chain: u32,
+        persist: bool,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        let persist = persist && self.store.is_some();
+        let mut to_persist = None;
+        {
+            let mut inner = crate::recover_lock!(&self.inner, "cache.inner");
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(entry) = inner.map.get_mut(&key) {
+                // refresh in place.  A distance-only insert must neither
+                // discard successors a paths solve already paid for NOR
+                // overwrite their paired distances: different tiers can
+                // produce bitwise-different (equally valid) closures, and a
+                // (dist, succ) pair must stay internally consistent — so a
+                // succ-less put against a succ-carrying entry only bumps LRU
+                // (the surviving pair keeps its own chain depth; re-baselining
+                // then happens at the pair's cadence, never against a mix).
+                let changed = if succ.is_some() {
+                    entry.graph = graph;
+                    entry.dist = dist;
+                    entry.succ = succ;
+                    entry.chain = chain;
+                    true
+                } else if entry.succ.is_none() {
+                    entry.graph = graph;
+                    entry.dist = dist;
+                    entry.chain = chain;
+                    true
+                } else {
+                    false
+                };
+                let prev = entry.last_used;
+                entry.last_used = clock;
+                if changed && persist {
+                    // persist what the cache now *holds* (the merged
+                    // entry), not what the caller offered
+                    to_persist =
+                        Some((entry.graph.clone(), entry.dist.clone(), entry.succ.clone(), entry.chain));
+                }
+                inner.order.remove(&prev);
+                inner.order.insert(clock, key.clone());
+            } else {
+                if inner.map.len() >= self.capacity {
+                    // evict the least-recently-used entry: O(log capacity)
+                    if let Some((_, victim)) = inner.order.pop_first() {
+                        inner.map.remove(&victim);
+                    }
+                }
+                if persist {
+                    to_persist = Some((graph.clone(), dist.clone(), succ.clone(), chain));
+                }
+                inner.map.insert(
+                    key.clone(),
+                    Entry {
+                        graph,
+                        dist,
+                        succ,
+                        chain,
+                        last_used: clock,
+                    },
+                );
+                inner.order.insert(clock, key.clone());
+            }
+        }
+        if let Some((graph, dist, succ, chain)) = to_persist {
+            self.enqueue_persist(key, graph, dist, succ, chain);
+        }
+    }
+
+    /// Hand the entry to the writer pool.  `QueueFull` drops the write
+    /// with a debug line: persistence is write-behind and best-effort —
+    /// shedding a disk write under burst must never block or fail the
+    /// request that produced the closure.
+    fn enqueue_persist(
+        &self,
+        key: Key,
+        graph: Arc<DistMatrix>,
+        dist: Arc<DistMatrix>,
+        succ: Option<Arc<Vec<usize>>>,
+        chain: u32,
+    ) {
+        let (Some(store), Some(writer)) = (&self.store, &self.writer) else {
+            return;
+        };
+        let store = Arc::clone(store);
+        let fingerprint = key.fingerprint;
+        let submitted = writer.try_submit(move || {
+            let succ = succ.as_ref().map(|s| s.as_slice());
+            if let Err(e) = store.put(&key.variant, key.fingerprint, &graph, &dist, succ, chain) {
+                log(
+                    Level::Warn,
+                    "store_write_error",
+                    vec![
+                        ("fingerprint", Json::str(format!("{:016x}", key.fingerprint))),
+                        ("error", Json::str(e.to_string())),
+                    ],
+                );
+            }
+        });
+        if submitted.is_err() {
+            log(
+                Level::Debug,
+                "store_write_dropped",
+                vec![("fingerprint", Json::str(format!("{fingerprint:016x}")))],
+            );
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        crate::recover_lock!(&self.inner, "cache.inner").map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// (hits, misses) since construction.
+    /// (hits, misses) since construction — memory-cache traffic only (the
+    /// store keeps its own `store_*` counters in the metrics).
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.inner.lock().unwrap();
+        let inner = crate::recover_lock!(&self.inner, "cache.inner");
         (inner.hits, inner.misses)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::metrics::Metrics;
+    use super::super::store::StoreConfig;
     use super::*;
     use crate::graph::generators;
+    use crate::util::pool::PoolConfig;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn hit_after_put() {
@@ -389,6 +684,117 @@ mod tests {
         assert!(cache.get("v", &g2).is_none());
         assert!(cache.get("v", &g1).is_some());
         assert!(cache.get("v", &g3).is_some());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn insert_storm_at_capacity_keeps_exactly_the_newest() {
+        // the O(capacity)-scan eviction this replaced was quadratic under
+        // exactly this load: capacity-1024 cache, thousands of distinct
+        // inserts.  Pin the LRU discipline at that scale — only the
+        // newest `capacity` keys survive, in insertion order.
+        let capacity = 1024;
+        let total = 4096;
+        let cache = ResultCache::new(capacity);
+        let g = generators::ring(4);
+        for i in 0..total {
+            cache.put(&format!("v{i}"), &g, g.clone());
+        }
+        assert_eq!(cache.len(), capacity);
+        for i in 0..total - capacity {
+            assert!(cache.get(&format!("v{i}"), &g).is_none(), "v{i} should be evicted");
+        }
+        for i in total - capacity..total {
+            assert!(cache.get(&format!("v{i}"), &g).is_some(), "v{i} should survive");
+        }
+    }
+
+    #[test]
+    fn hits_share_one_allocation_no_matrix_copy_under_the_lock() {
+        // the hot-path contract: a hit hands out the *same* Arc, proving
+        // the payload is snapshotted by pointer under the lock and any
+        // deep copy happens outside it (get_for clones after release)
+        let cache = ResultCache::new(4);
+        let g = generators::erdos_renyi(64, 0.3, 7);
+        cache.put("staged", &g, crate::apsp::naive::solve(&g));
+        let a = cache
+            .lookup_for(Objective::Shortest, "staged", &g)
+            .expect("hit")
+            .into_inner();
+        let b = cache
+            .lookup_for(Objective::Shortest, "staged", &g)
+            .expect("hit")
+            .into_inner();
+        assert!(Arc::ptr_eq(&a, &b), "repeated hits must alias one allocation");
+        // paths pairs too
+        let r = crate::apsp::paths::solve(&g);
+        cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
+        let (d1, s1) = cache
+            .lookup_paths_for(Objective::Shortest, "staged", &g)
+            .expect("paths hit")
+            .into_inner();
+        let (d2, s2) = cache
+            .lookup_paths_for(Objective::Shortest, "staged", &g)
+            .expect("paths hit")
+            .into_inner();
+        assert!(Arc::ptr_eq(&d1, &d2) && Arc::ptr_eq(&s1, &s2));
+        // and the base snapshot shares the same allocations as lookups
+        let base = cache.get_base("staged", g.n(), graph_fingerprint(&g)).unwrap();
+        assert!(Arc::ptr_eq(&base.dist, &d1));
+    }
+
+    #[test]
+    fn concurrent_lookups_and_inserts_share_payloads_without_tearing() {
+        // lookups running against concurrent large inserts: every hit
+        // must be a whole (untorn) closure, and hits between inserts
+        // alias rather than copy.  This is the concurrency half of the
+        // "no clones under the lock" fix — structural, not timing-based.
+        let cache = ResultCache::new(8);
+        let graphs: Vec<_> = (0..4).map(|i| generators::erdos_renyi(48, 0.4, i)).collect();
+        let solved: Vec<_> = graphs.iter().map(crate::apsp::naive::solve).collect();
+        std::thread::scope(|scope| {
+            for t in 0..3 {
+                let (cache, graphs, solved) = (&cache, &graphs, &solved);
+                scope.spawn(move || {
+                    for round in 0..50 {
+                        let gi = (t + round) % graphs.len();
+                        cache.put("v", &graphs[gi], solved[gi].clone());
+                    }
+                });
+            }
+            for _ in 0..3 {
+                let (cache, graphs, solved) = (&cache, &graphs, &solved);
+                scope.spawn(move || {
+                    for round in 0..200 {
+                        let gi = round % graphs.len();
+                        if let Some(hit) = cache.lookup_for(Objective::Shortest, "v", &graphs[gi]) {
+                            let dist = hit.into_inner();
+                            assert_eq!(*dist, solved[gi], "torn or foreign closure served");
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn a_poisoning_panic_leaves_the_cache_serviceable() {
+        // one panic while holding the lock must not turn every later
+        // request into a panic: the guard recovers and state survives
+        let cache = ResultCache::new(4);
+        let g = generators::ring(6);
+        let d = crate::apsp::naive::solve(&g);
+        cache.put("staged", &g, d.clone());
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = cache.inner.lock().unwrap();
+            panic!("poisoning the cache lock (expected by this test)");
+        }));
+        assert!(caught.is_err());
+        assert!(cache.inner.is_poisoned());
+        assert_eq!(cache.get("staged", &g), Some(d), "hit after poison");
+        let g2 = generators::ring(7);
+        cache.put("staged", &g2, crate::apsp::naive::solve(&g2));
+        assert!(cache.get("staged", &g2).is_some(), "insert after poison");
         assert_eq!(cache.len(), 2);
     }
 
@@ -432,9 +838,9 @@ mod tests {
         cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
         let fp = graph_fingerprint(&g);
         let base = cache.get_base("staged", g.n(), fp).expect("base hit");
-        assert_eq!(base.graph, g);
-        assert_eq!(base.dist, r.dist);
-        assert_eq!(base.succ.as_deref(), Some(r.succ()));
+        assert_eq!(*base.graph, g);
+        assert_eq!(*base.dist, r.dist);
+        assert_eq!(base.succ.as_ref().map(|s| s.as_slice()), Some(r.succ()));
         assert_eq!(base.chain, 0);
         // unknown fingerprint misses; n is part of the key
         assert!(cache.get_base("staged", g.n(), fp ^ 1).is_none());
@@ -448,7 +854,7 @@ mod tests {
             .get_base("staged", g2.n(), graph_fingerprint(&g2))
             .expect("chained hit");
         assert_eq!(b2.chain, 3);
-        assert_eq!(b2.graph, g2);
+        assert_eq!(*b2.graph, g2);
         // ...and the ordinary lookups see the chained closure too
         assert_eq!(cache.get("staged", &g2), Some(r2.dist.clone()));
         let (d, s) = cache.get_paths("staged", &g2).expect("paths hit");
@@ -468,8 +874,8 @@ mod tests {
         other.set(0, 1, other.get(0, 1) + 1e-3);
         cache.put_chained("v", &g, other, None, 5);
         let base = cache.get_base("v", g.n(), graph_fingerprint(&g)).unwrap();
-        assert_eq!(base.dist, r.dist);
-        assert_eq!(base.succ.as_deref(), Some(r.succ()));
+        assert_eq!(*base.dist, r.dist);
+        assert_eq!(base.succ.as_ref().map(|s| s.as_slice()), Some(r.succ()));
         assert_eq!(base.chain, 0, "surviving pair keeps its own chain depth");
     }
 
@@ -480,6 +886,133 @@ mod tests {
         cache.put("v", &g, g.clone());
         assert!(cache.get("v", &g).is_none());
         assert!(cache.is_empty());
+    }
+
+    // ------------------------------------------------- backing store --
+
+    /// Unique per-test scratch dir, removed on drop.
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            static SEQ: AtomicUsize = AtomicUsize::new(0);
+            let path = std::env::temp_dir().join(format!(
+                "fw-cache-unit-{tag}-{}-{}",
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_dir_all(&path);
+            TempDir(path)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn stored_cache(dir: &TempDir, capacity: usize) -> (ResultCache, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let store = Arc::new(
+            Store::open(StoreConfig { dir: dir.0.clone(), max_bytes: 0 }, metrics.clone())
+                .expect("store opens"),
+        );
+        let writer = JobPool::new(PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            name: "test-store-writer".into(),
+        });
+        (ResultCache::with_store(capacity, store, writer), metrics)
+    }
+
+    #[test]
+    fn write_through_then_read_through_after_memory_eviction() {
+        let dir = TempDir::new("readthrough");
+        let (cache, _metrics) = stored_cache(&dir, 1);
+        let g1 = generators::ring(6);
+        let g2 = generators::ring(7);
+        let d1 = crate::apsp::naive::solve(&g1);
+        let d2 = crate::apsp::naive::solve(&g2);
+        cache.put("staged", &g1, d1.clone());
+        cache.put("staged", &g2, d2.clone()); // evicts g1 from memory
+        cache.flush_store();
+        let hit = cache
+            .lookup_for(Objective::Shortest, "staged", &g1)
+            .expect("disk read-through");
+        assert!(hit.from_disk(), "evicted entry must come back from the store");
+        let dist = hit.into_inner();
+        for (a, b) in dist.as_slice().iter().zip(d1.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "disk round-trip must be bitwise");
+        }
+        // the read-through re-inserted it: next hit is memory (g2 evicted)
+        assert!(matches!(
+            cache.lookup_for(Objective::Shortest, "staged", &g1),
+            Some(CacheHit::Memory(_))
+        ));
+    }
+
+    #[test]
+    fn restart_warm_start_round_trips_pairs_bitwise() {
+        let dir = TempDir::new("warmstart");
+        let g = generators::ring(9);
+        let r = crate::apsp::paths::solve(&g);
+        {
+            let (cache, _metrics) = stored_cache(&dir, 4);
+            cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
+            cache.flush_store();
+        } // "process death": cache dropped, store directory survives
+        let (cache, metrics) = stored_cache(&dir, 4);
+        assert_eq!(cache.warm_from_store(), 1);
+        let (dist, succ) = cache.get_paths("staged", &g).expect("warm-started pair");
+        for (a, b) in dist.as_slice().iter().zip(r.dist.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(succ, r.succ());
+        // the warm hit was served from memory, and warm loads counted as
+        // store hits
+        assert_eq!(cache.stats().0, 1);
+        assert!(metrics.snapshot().get("store_hits").as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn chained_entries_rebaseline_to_disk() {
+        let dir = TempDir::new("chain");
+        let g = generators::ring(8);
+        let r = crate::apsp::paths::solve(&g);
+        let fp = graph_fingerprint(&g);
+        {
+            let (cache, _metrics) = stored_cache(&dir, 4);
+            cache.put_chained("staged", &g, r.dist.clone(), Some(r.succ().to_vec()), 5);
+            cache.flush_store();
+        }
+        let (cache, _metrics) = stored_cache(&dir, 4);
+        let base = cache.get_base("staged", g.n(), fp).expect("chained base from disk");
+        assert_eq!(base.chain, 5, "chain depth survives the restart");
+        assert_eq!(*base.dist, r.dist);
+        assert_eq!(base.succ.as_ref().map(|s| s.as_slice()), Some(r.succ()));
+    }
+
+    #[test]
+    fn lru_only_bump_does_not_rewrite_disk() {
+        // a succ-less put against a succ-carrying entry changes nothing
+        // (merge semantics) — so nothing should be re-persisted
+        let dir = TempDir::new("nobump");
+        let (cache, metrics) = stored_cache(&dir, 4);
+        let g = generators::ring(6);
+        let r = crate::apsp::paths::solve(&g);
+        cache.put_paths("staged", &g, r.dist.clone(), r.succ().to_vec());
+        cache.flush_store();
+        assert_eq!(metrics.snapshot().get("store_writes").as_usize(), Some(1));
+        let mut other = r.dist.clone();
+        other.set(0, 1, other.get(0, 1) + 1e-3);
+        cache.put("staged", &g, other); // LRU bump only
+        cache.flush_store();
+        assert_eq!(
+            metrics.snapshot().get("store_writes").as_usize(),
+            Some(1),
+            "an unchanged entry must not be rewritten"
+        );
     }
 
     #[test]

@@ -48,6 +48,18 @@ struct Inner {
     update_recomputes: u64,
     batches: u64,
     batched_items: u64,
+    /// Closure-store traffic (`coordinator/store.rs`).  `store_hits`
+    /// counts every entry loaded and verified from disk — boot warm-start
+    /// loads *and* request-path read-throughs (both are the store doing
+    /// its job: serving a closure that survived a process death).
+    store_hits: u64,
+    store_misses: u64,
+    store_writes: u64,
+    store_evictions: u64,
+    /// Entries rejected at load time (bad checksum, short read, version
+    /// skew, stale tmp) and quarantined.  Nonzero means disk state was
+    /// damaged and *detected* — never served.
+    store_corrupt: u64,
     latency: Samples,
     hists: BTreeMap<(String, String), Histogram>,
     device_seconds: f64,
@@ -67,14 +79,14 @@ impl Metrics {
     }
 
     pub fn record_request(&self) {
-        self.inner.lock().unwrap().requests += 1;
+        crate::recover_lock!(&self.inner, "metrics.inner").requests += 1;
     }
 
     /// Count one error under its typed wire code (e.g.
     /// [`super::types::CODE_OBJECTIVE_UNSUPPORTED`]); free-form failures
     /// use `"error"`, the generic wire code.
     pub fn record_error(&self, code: &str) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         m.errors += 1;
         *m.errors_by_code.entry(code.to_string()).or_insert(0) += 1;
     }
@@ -85,31 +97,31 @@ impl Metrics {
     /// folding it into request errors would make overload look like
     /// request failures on dashboards.
     pub fn record_shed(&self) {
-        self.inner.lock().unwrap().connections_shed += 1;
+        crate::recover_lock!(&self.inner, "metrics.inner").connections_shed += 1;
     }
 
     /// Count one *request* shed at queue admission (the bounded serving
     /// queue was full).  Same doctrine as [`Metrics::record_shed`]: this
     /// is backpressure working, not a request error.
     pub fn record_queue_shed(&self) {
-        self.inner.lock().unwrap().requests_shed += 1;
+        crate::recover_lock!(&self.inner, "metrics.inner").requests_shed += 1;
     }
 
     /// Count one connection closed for sitting idle past the configured
     /// read timeout.  Not an error either — the client did nothing wrong
     /// by going quiet; the server just reclaimed the admission slot.
     pub fn record_idle_timeout(&self) {
-        self.inner.lock().unwrap().idle_timeouts += 1;
+        crate::recover_lock!(&self.inner, "metrics.inner").idle_timeouts += 1;
     }
 
     /// Observe one data request's serving-queue wait (enqueue → worker
     /// pickup), feeding the `fw_queue_wait_seconds` histogram.
     pub fn record_queue_wait(&self, seconds: f64) {
-        self.inner.lock().unwrap().queue_wait.observe(seconds);
+        crate::recover_lock!(&self.inner, "metrics.inner").queue_wait.observe(seconds);
     }
 
     pub fn record_solve(&self, source: super::types::Source, objective: Objective, seconds: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         match source {
             super::types::Source::Device => m.device_solves += 1,
             super::types::Source::Cpu => m.cpu_solves += 1,
@@ -124,7 +136,7 @@ impl Metrics {
 
     /// Account one superblock solve's schedule (rounds run, tile updates).
     pub fn record_superblock(&self, rounds: u64, tiles: u64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         m.superblock_rounds += rounds;
         m.superblock_tiles += tiles;
     }
@@ -133,17 +145,45 @@ impl Metrics {
     /// whether it fell back to a full recompute (re-baseline, threshold, or
     /// a successor-less base).
     pub fn record_update(&self, edges: u64, recomputed: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         m.update_edges += edges;
         if recomputed {
             m.update_recomputes += 1;
         }
     }
 
+    /// Count one closure served from the on-disk store (a boot warm-start
+    /// load or a request-path read-through — both checksum-verified).
+    pub fn record_store_hit(&self) {
+        crate::recover_lock!(&self.inner, "metrics.inner").store_hits += 1;
+    }
+
+    /// Count one store lookup that found no entry on disk (a true cold
+    /// miss: the memory cache already missed before the store was asked).
+    pub fn record_store_miss(&self) {
+        crate::recover_lock!(&self.inner, "metrics.inner").store_misses += 1;
+    }
+
+    /// Count one entry durably published (temp written, synced, renamed).
+    pub fn record_store_write(&self) {
+        crate::recover_lock!(&self.inner, "metrics.inner").store_writes += 1;
+    }
+
+    /// Count entries deleted by the size-budget eviction sweep.
+    pub fn record_store_evictions(&self, n: u64) {
+        crate::recover_lock!(&self.inner, "metrics.inner").store_evictions += n;
+    }
+
+    /// Count one corrupt entry detected at load (quarantined, never
+    /// served) or one stale temp file swept at open.
+    pub fn record_store_corrupt(&self) {
+        crate::recover_lock!(&self.inner, "metrics.inner").store_corrupt += 1;
+    }
+
     /// Account one engine batch: item count, device-kernel seconds, and
     /// the summed seconds its jobs sat queued before the round started.
     pub fn record_batch(&self, items: usize, device_seconds: f64, queue_wait_seconds: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         m.batches += 1;
         m.batched_items += items as u64;
         m.device_seconds += device_seconds;
@@ -162,7 +202,7 @@ impl Metrics {
     /// so far, keyed `"source/objective"`; `errors_by_code` breaks the
     /// `errors` total out by typed wire code.
     pub fn snapshot(&self) -> Json {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = crate::recover_lock!(&self.inner, "metrics.inner");
         let uptime = self.started.elapsed().as_secs_f64();
         let percentiles = m.latency.percentiles(&[50.0, 95.0, 99.0]);
         let empty = m.latency.is_empty();
@@ -196,6 +236,11 @@ impl Metrics {
             ("update_recomputes", Json::num(m.update_recomputes as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("batched_items", Json::num(m.batched_items as f64)),
+            ("store_hits", Json::num(m.store_hits as f64)),
+            ("store_misses", Json::num(m.store_misses as f64)),
+            ("store_writes", Json::num(m.store_writes as f64)),
+            ("store_evictions", Json::num(m.store_evictions as f64)),
+            ("store_corrupt", Json::num(m.store_corrupt as f64)),
             ("device_seconds", Json::num(m.device_seconds)),
             ("queue_wait_seconds", Json::num(m.queue_wait_seconds)),
             ("latency_mean_s", latency(m.latency.mean())),
@@ -214,7 +259,7 @@ impl Metrics {
     /// `{objective="…",source="…"}`.  Round-trips through
     /// [`crate::obs::hist::parse_exposition`].
     pub fn exposition(&self) -> String {
-        let m = self.inner.lock().unwrap();
+        let m = crate::recover_lock!(&self.inner, "metrics.inner");
         let mut out = String::new();
         out.push_str("# TYPE fw_requests_total counter\n");
         out.push_str(&format!("fw_requests_total {}\n", m.requests));
@@ -226,6 +271,16 @@ impl Metrics {
         out.push_str(&format!("fw_requests_shed_total {}\n", m.requests_shed));
         out.push_str("# TYPE fw_idle_timeouts_total counter\n");
         out.push_str(&format!("fw_idle_timeouts_total {}\n", m.idle_timeouts));
+        out.push_str("# TYPE fw_store_hits_total counter\n");
+        out.push_str(&format!("fw_store_hits_total {}\n", m.store_hits));
+        out.push_str("# TYPE fw_store_misses_total counter\n");
+        out.push_str(&format!("fw_store_misses_total {}\n", m.store_misses));
+        out.push_str("# TYPE fw_store_writes_total counter\n");
+        out.push_str(&format!("fw_store_writes_total {}\n", m.store_writes));
+        out.push_str("# TYPE fw_store_evictions_total counter\n");
+        out.push_str(&format!("fw_store_evictions_total {}\n", m.store_evictions));
+        out.push_str("# TYPE fw_store_corrupt_total counter\n");
+        out.push_str(&format!("fw_store_corrupt_total {}\n", m.store_corrupt));
         out.push_str("# TYPE fw_queue_wait_seconds histogram\n");
         render_series(&mut out, "fw_queue_wait_seconds", "", &m.queue_wait);
         out.push_str("# TYPE fw_request_seconds histogram\n");
@@ -382,6 +437,32 @@ mod tests {
         let text = m.exposition();
         assert!(text.contains("fw_requests_shed_total 3\n"), "{text}");
         assert!(text.contains("fw_idle_timeouts_total 1\n"), "{text}");
+    }
+
+    #[test]
+    fn store_counters_accumulate_and_expose() {
+        let m = Metrics::new();
+        m.record_store_hit();
+        m.record_store_hit();
+        m.record_store_miss();
+        m.record_store_write();
+        m.record_store_write();
+        m.record_store_write();
+        m.record_store_evictions(2);
+        m.record_store_corrupt();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("store_hits").as_usize(), Some(2));
+        assert_eq!(snap.get("store_misses").as_usize(), Some(1));
+        assert_eq!(snap.get("store_writes").as_usize(), Some(3));
+        assert_eq!(snap.get("store_evictions").as_usize(), Some(2));
+        assert_eq!(snap.get("store_corrupt").as_usize(), Some(1));
+        // corruption and eviction are store health, not request errors —
+        // the same doctrine as sheds
+        assert_eq!(snap.get("errors").as_usize(), Some(0));
+        let text = m.exposition();
+        assert!(text.contains("fw_store_hits_total 2\n"), "{text}");
+        assert!(text.contains("fw_store_writes_total 3\n"), "{text}");
+        assert!(text.contains("fw_store_corrupt_total 1\n"), "{text}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! * [`batcher`] — block-diagonal packing plans
 //! * [`engine`] — the PJRT executor thread
 //! * [`cache`] — LRU result cache
+//! * [`store`] — persistent content-addressed closure store (warm starts)
 //! * [`metrics`] — counters + latency summaries
 //! * [`server`] / [`client`] — TCP front end and a blocking client
 
@@ -28,6 +29,7 @@ pub mod frame;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod store;
 pub mod types;
 
 use std::path::PathBuf;
@@ -64,6 +66,11 @@ pub struct Config {
     /// Observability: request tracing and the trace-journal ring
     /// (DESIGN.md §Observability).  Histograms are unconditional.
     pub obs: obs::ObsConfig,
+    /// Persistent closure store (DESIGN.md §Closure store): `None` (the
+    /// default) serves memory-only, exactly as before.  `Some` makes the
+    /// cache read-through/write-behind against the store directory and
+    /// warm-starts the LRU from it at boot.
+    pub store: Option<store::StoreConfig>,
 }
 
 impl Config {
@@ -77,6 +84,7 @@ impl Config {
             superblock_workers: 0,
             update_max_chain: 8,
             obs: obs::ObsConfig::default(),
+            store: None,
         }
     }
 }
@@ -157,9 +165,36 @@ impl Coordinator {
         config.router.device_buckets = summary.buckets.clone();
         let metrics = Arc::new(metrics::Metrics::new());
         let engine = Engine::start(config.engine, metrics.clone())?;
+        let cache = match config.store {
+            Some(store_config) => {
+                let store = Arc::new(
+                    store::Store::open(store_config, metrics.clone())
+                        .context("coordinator: opening closure store")?,
+                );
+                // single worker by contract: FIFO persistence order is
+                // what makes flush_store a barrier (cache.rs documents it)
+                let writer = crate::util::pool::JobPool::new(crate::util::pool::PoolConfig {
+                    workers: 1,
+                    queue_depth: 256,
+                    name: "fw-store".into(),
+                });
+                let cache = cache::ResultCache::with_store(config.cache_capacity, store, writer);
+                let warmed = cache.warm_from_store();
+                obs::log::log(
+                    obs::log::Level::Info,
+                    "store_warm_start",
+                    vec![(
+                        "entries",
+                        crate::util::json::Json::Num(warmed as f64),
+                    )],
+                );
+                cache
+            }
+            None => cache::ResultCache::new(config.cache_capacity),
+        };
         Ok(Coordinator {
             engine,
-            cache: cache::ResultCache::new(config.cache_capacity),
+            cache,
             metrics,
             router: config.router,
             manifest_summary: summary,
@@ -188,6 +223,18 @@ impl Coordinator {
 
     pub fn manifest_summary(&self) -> &ManifestSummary {
         &self.manifest_summary
+    }
+
+    /// The persistent closure store, when one was configured.
+    pub fn store(&self) -> Option<&store::Store> {
+        self.cache.store()
+    }
+
+    /// Barrier: wait for every closure persist enqueued so far to reach
+    /// disk.  No-op without a store.  Teardown/test helper — the request
+    /// path never calls this (persistence is write-behind by design).
+    pub fn flush_store(&self) {
+        self.cache.flush_store()
     }
 
     /// Serve one request (blocking). This is the whole request path.
@@ -275,19 +322,29 @@ impl Coordinator {
             })?),
         };
 
-        // cache (paths requests only hit entries that carry successors)
+        // cache (paths requests only hit entries that carry successors);
+        // a memory miss reads through to the closure store when one is
+        // configured — disk hits reply Source::Cache like any other hit
         if !req.no_cache {
             let cache_start = Instant::now();
             let hit = if req.want_paths {
                 self.cache
-                    .get_paths_for(objective, &req.variant, &req.graph)
-                    .map(|(dist, succ)| (dist, Some(succ)))
+                    .lookup_paths_for(objective, &req.variant, &req.graph)
+                    .map(|hit| {
+                        let from_disk = hit.from_disk();
+                        let (dist, succ) = hit.into_inner();
+                        // deep copies happen here, outside the cache lock
+                        ((*dist).clone(), Some((*succ).clone()), from_disk)
+                    })
             } else {
                 self.cache
-                    .get_for(objective, &req.variant, &req.graph)
-                    .map(|d| (d, None))
+                    .lookup_for(objective, &req.variant, &req.graph)
+                    .map(|hit| {
+                        let from_disk = hit.from_disk();
+                        ((*hit.into_inner()).clone(), None, from_disk)
+                    })
             };
-            if let Some((dist, succ)) = hit {
+            if let Some((dist, succ, from_disk)) = hit {
                 let seconds = t0.elapsed().as_secs_f64();
                 if record {
                     self.metrics.record_solve(Source::Cache, objective, seconds);
@@ -296,6 +353,17 @@ impl Coordinator {
                     let mut get = Span::new("cache_get");
                     get.seconds = cache_start.elapsed().as_secs_f64();
                     get.note("hit", "true");
+                    // span shape is pinned for store-less serving; the
+                    // extra note and child only appear with a store
+                    if self.cache.has_store() {
+                        get.note("from", if from_disk { "store" } else { "memory" });
+                    }
+                    if from_disk {
+                        // the read-through dominated this lookup's time
+                        let mut sg = Span::new("store_get");
+                        sg.seconds = get.seconds;
+                        get.child(sg);
+                    }
                     span.child(get);
                 }
                 return Ok(SolveOutcome::Done(Response {
@@ -530,6 +598,14 @@ impl Coordinator {
                 let mut put = Span::new("cache_put");
                 put.seconds = put_seconds;
                 span.child(put);
+                if self.cache.has_store() {
+                    // the disk write is write-behind: enqueued during
+                    // cache_put, performed off the request path.  The span
+                    // marks that the persist was scheduled, not its I/O.
+                    let mut sp = Span::new("store_put");
+                    sp.note("async", "true");
+                    span.child(sp);
+                }
             }
         }
         Ok(SolveOutcome::Done(Response {
@@ -608,7 +684,12 @@ impl Coordinator {
             };
             (resp.dist, resp.succ, true)
         } else if let Some(base_succ) = base.succ {
-            let closure = apsp::paths::PathsResult::from_parts(base.dist, base_succ);
+            // the base payloads are shared with the cache entry; reuse the
+            // allocation when this request is the only holder
+            let closure = apsp::paths::PathsResult::from_parts(
+                Arc::unwrap_or_clone(base.dist),
+                Arc::unwrap_or_clone(base_succ),
+            );
             let (r, stats) =
                 apsp::incremental::update_paths(&base.graph, &closure, &req.updates, &ucfg)
                     .map_err(|e| anyhow::anyhow!("update: {e}"))?;

@@ -760,7 +760,7 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
         }
         "info" => {
             let s = coord.manifest_summary();
-            Json::obj(vec![
+            let mut fields = vec![
                 ("type", Json::str("info")),
                 (
                     "variants",
@@ -773,8 +773,13 @@ pub fn handle_line(coord: &Coordinator, line: &str) -> String {
                 ("tile", Json::num(s.tile as f64)),
                 // the CPU tiers' active SIMD lane ISA (see apsp::simd)
                 ("kernel", Json::str(crate::apsp::simd::active().name())),
-            ])
-            .to_string()
+            ];
+            // persistent closure store, when configured (key absent when
+            // serving memory-only, so store-less replies are unchanged)
+            if let Some(store) = coord.store() {
+                fields.push(("store_dir", Json::str(store.dir().display().to_string())));
+            }
+            Json::obj(fields).to_string()
         }
         "solve" | "update" => {
             let opts = Json::parse(line)

@@ -1,0 +1,840 @@
+//! Persistent content-addressed closure store: crash-safe warm starts.
+//!
+//! The solved closures are the expensive artifact this system exists to
+//! produce, and until this module they died with the process — a restart
+//! under load re-solved everything from scratch.  The store persists each
+//! cache entry `(graph, dist, succ, chain)` as one checksummed binary
+//! file, keyed by the same objective-mixed fingerprint the in-memory
+//! cache uses ([`super::cache::objective_fingerprint`]), so a rebooted
+//! coordinator serves yesterday's closures bitwise-identical from disk.
+//! It is also the persistence substrate the out-of-core superblock tier
+//! (ROADMAP item 4) will spill tiles into.
+//!
+//! ## Entry layout (all integers little-endian)
+//!
+//! The byte discipline is [`super::frame`]'s — magic + version +
+//! length-validated LE body — extended with a trailing integrity seal:
+//!
+//! | offset | size | field                                            |
+//! |-------:|-----:|--------------------------------------------------|
+//! |      0 |    4 | magic `"FWCS"`                                   |
+//! |      4 |    1 | version (currently 1)                            |
+//! |      5 |    1 | flags (bit 0: successor matrix present)          |
+//! |      6 |    2 | variant byte length (u16)                        |
+//! |      8 |    4 | n (u32)                                          |
+//! |     12 |    4 | chain depth (u32)                                |
+//! |     16 |    8 | objective-mixed fingerprint (u64)                |
+//! |     24 |    8 | body length in bytes (u64)                       |
+//! |     32 | body | variant UTF-8, n² f32 graph, n² f32 dist, then n² u32 succ if flagged |
+//! |    end |    8 | FNV-1a 64 over every preceding byte ([`crate::util::checksum`]) |
+//!
+//! [`crate::apsp::paths::NO_PATH`] successors travel as `u32::MAX`, and
+//! `+inf` weights as raw IEEE bits — the frame's conventions.  The body
+//! length is redundant with `n` + flags + variant length and is validated
+//! against them; the file length must match exactly (a longer file is as
+//! corrupt as a shorter one).
+//!
+//! ## Atomicity and corruption
+//!
+//! Entries are published by write-to-temp → `sync_all` → `rename`: the
+//! rename is atomic on POSIX filesystems, so a reader can never observe a
+//! half-written `.fwc` file — a crash mid-write leaves only a `.tmp`
+//! orphan, which [`Store::open`] sweeps (and counts) on the next boot.
+//! Every load re-verifies the full checksum; any defect (bad magic,
+//! version skew, short read, length mismatch, checksum mismatch, identity
+//! mismatch) **quarantines** the file — renamed to `*.quarantine`, a
+//! typed `store_corrupt` log event, the `store_corrupt` metric — and the
+//! request falls through to a clean re-solve.  A damaged entry is never
+//! served and never silently deleted: the quarantined bytes stay on disk
+//! for a post-mortem.
+//!
+//! ## Eviction
+//!
+//! `max_bytes > 0` bounds the directory: after each put, oldest-mtime
+//! entries (reads touch mtime, so this is disk LRU) are deleted until the
+//! total fits, never evicting the entry just written.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::SystemTime;
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::Metrics;
+use super::types::MAX_N;
+use crate::apsp::paths::NO_PATH;
+use crate::graph::DistMatrix;
+use crate::obs::log::{log, Level};
+use crate::util::checksum::{fnv64, Fnv64};
+use crate::util::json::Json;
+
+/// Entry-file magic: the first four bytes of every `.fwc` file.
+pub const MAGIC: [u8; 4] = *b"FWCS";
+
+/// Current on-disk entry version.
+pub const VERSION: u8 = 1;
+
+/// Fixed header size in bytes (the checksum trails the body).
+pub const HEADER_LEN: usize = 32;
+
+/// Flags bit 0: the body carries an n² u32 successor matrix after dist.
+pub const FLAG_SUCC: u8 = 1;
+
+/// Wire rendering of [`NO_PATH`] in the successor matrix (the frame's).
+const NO_PATH_WIRE: u32 = u32::MAX;
+
+/// Store shape: where entries live and how many bytes they may total.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Directory holding the `.fwc` entries (created if missing).
+    pub dir: PathBuf,
+    /// Disk budget in bytes; `0` = unbounded.  Enforced after each put by
+    /// deleting oldest-mtime entries until the directory fits.
+    pub max_bytes: u64,
+}
+
+/// One persisted closure, exactly what the in-memory cache holds per key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreEntry {
+    pub variant: String,
+    /// Objective-mixed fingerprint — the cache key's hash half.  Stored
+    /// (not recomputed from `graph`) because the objective tag is mixed in
+    /// and the raw graph alone cannot reproduce it.
+    pub fingerprint: u64,
+    pub graph: DistMatrix,
+    pub dist: DistMatrix,
+    pub succ: Option<Vec<usize>>,
+    pub chain: u32,
+}
+
+/// One row of the store index (warm-start ordering, eviction, CI dumps).
+#[derive(Clone, Debug)]
+pub struct IndexEntry {
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub modified: SystemTime,
+}
+
+/// The on-disk closure store.  All methods are `&self`; the filesystem is
+/// the shared state (atomic renames make concurrent puts safe).
+pub struct Store {
+    dir: PathBuf,
+    max_bytes: u64,
+    metrics: Arc<Metrics>,
+}
+
+impl Store {
+    /// Open (creating the directory if needed), sweeping `.tmp` orphans a
+    /// crash mid-write may have left behind.
+    pub fn open(config: StoreConfig, metrics: Arc<Metrics>) -> Result<Store> {
+        fs::create_dir_all(&config.dir)
+            .with_context(|| format!("store: creating {}", config.dir.display()))?;
+        let store = Store {
+            dir: config.dir,
+            max_bytes: config.max_bytes,
+            metrics,
+        };
+        store.sweep_stale_tmp()?;
+        let index = store.index();
+        log(
+            Level::Info,
+            "store_open",
+            vec![
+                ("dir", Json::str(store.dir.display().to_string())),
+                ("entries", Json::num(index.len() as f64)),
+                (
+                    "bytes",
+                    Json::num(index.iter().map(|e| e.bytes).sum::<u64>() as f64),
+                ),
+            ],
+        );
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path an entry for this key lives at (or would).  Content-addressed:
+    /// fingerprint + n + variant *are* the filename, so lookup is one
+    /// `open`, no index file to maintain or corrupt.  The decoded body
+    /// repeats the identity and [`Store::get`] cross-checks it, so a
+    /// renamed or collided file can never serve the wrong closure.
+    pub fn entry_path(&self, variant: &str, n: usize, fingerprint: u64) -> PathBuf {
+        let safe: String = variant
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        self.dir.join(format!("{fingerprint:016x}-{n}-{safe}.fwc"))
+    }
+
+    /// Load one entry, verifying the checksum and identity.  Any defect
+    /// quarantines the file and reads as a miss — corrupt bytes are never
+    /// served.  A hit touches the file's mtime (disk-LRU for eviction).
+    pub fn get(&self, variant: &str, n: usize, fingerprint: u64) -> Option<StoreEntry> {
+        let path = self.entry_path(variant, n, fingerprint);
+        let bytes = match fs::read(&path) {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.metrics.record_store_miss();
+                return None;
+            }
+            Err(e) => {
+                log(
+                    Level::Warn,
+                    "store_read_error",
+                    vec![
+                        ("path", Json::str(path.display().to_string())),
+                        ("error", Json::str(e.to_string())),
+                    ],
+                );
+                self.metrics.record_store_miss();
+                return None;
+            }
+        };
+        match decode_entry(&bytes) {
+            Ok(entry)
+                if entry.variant == variant
+                    && entry.graph.n() == n
+                    && entry.fingerprint == fingerprint =>
+            {
+                self.touch(&path);
+                self.metrics.record_store_hit();
+                Some(entry)
+            }
+            // decoded clean but answers a different key than the filename
+            // claims (renamed file, sanitize collision): as unservable as
+            // a bad checksum
+            Ok(_) => {
+                self.quarantine(&path, "entry identity does not match its filename");
+                self.metrics.record_store_miss();
+                None
+            }
+            Err(e) => {
+                self.quarantine(&path, &e.to_string());
+                self.metrics.record_store_miss();
+                None
+            }
+        }
+    }
+
+    /// Durably publish one entry: encode, write `.tmp`, `sync_all`,
+    /// rename into place.  Then enforce the size budget (never evicting
+    /// the entry just written).
+    pub fn put(
+        &self,
+        variant: &str,
+        fingerprint: u64,
+        graph: &DistMatrix,
+        dist: &DistMatrix,
+        succ: Option<&[usize]>,
+        chain: u32,
+    ) -> Result<()> {
+        let bytes = encode_entry(variant, fingerprint, graph, dist, succ, chain)?;
+        let path = self.entry_path(variant, graph.n(), fingerprint);
+        let tmp = path.with_extension("tmp");
+        let mut file = fs::File::create(&tmp)
+            .with_context(|| format!("store: creating {}", tmp.display()))?;
+        file.write_all(&bytes)
+            .with_context(|| format!("store: writing {}", tmp.display()))?;
+        // the rename only publishes durable bytes: without the sync, a
+        // power loss after the rename could expose a hole-y file under
+        // the *final* name, defeating the whole temp dance
+        file.sync_all()
+            .with_context(|| format!("store: syncing {}", tmp.display()))?;
+        drop(file);
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("store: publishing {}", path.display()))?;
+        self.metrics.record_store_write();
+        if self.max_bytes > 0 {
+            self.enforce_budget(&path);
+        }
+        Ok(())
+    }
+
+    /// All `.fwc` entries, oldest-mtime first (ties broken by path, so
+    /// eviction order is deterministic under coarse filesystem clocks).
+    pub fn index(&self) -> Vec<IndexEntry> {
+        let mut out = Vec::new();
+        let Ok(dir) = fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in dir.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("fwc") {
+                continue;
+            }
+            if let Ok(meta) = entry.metadata() {
+                out.push(IndexEntry {
+                    path,
+                    bytes: meta.len(),
+                    modified: meta.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+                });
+            }
+        }
+        out.sort_by(|a, b| (a.modified, &a.path).cmp(&(b.modified, &b.path)));
+        out
+    }
+
+    /// Load the newest `limit` entries for a boot-time warm start,
+    /// returned **oldest-first** so inserting them in order leaves the
+    /// newest entry most-recently-used in the cache's LRU.  Corrupt
+    /// entries are quarantined and skipped, exactly as in [`Store::get`].
+    pub fn warm(&self, limit: usize) -> Vec<StoreEntry> {
+        let index = self.index();
+        let skip = index.len().saturating_sub(limit);
+        let mut out = Vec::new();
+        for row in index.into_iter().skip(skip) {
+            let bytes = match fs::read(&row.path) {
+                Ok(bytes) => bytes,
+                Err(_) => continue,
+            };
+            match decode_entry(&bytes) {
+                Ok(entry) => {
+                    self.metrics.record_store_hit();
+                    out.push(entry);
+                }
+                Err(e) => self.quarantine(&row.path, &e.to_string()),
+            }
+        }
+        out
+    }
+
+    /// Index as JSON (the CI persistence-smoke artifact).
+    pub fn index_json(&self) -> Json {
+        Json::Arr(
+            self.index()
+                .into_iter()
+                .map(|e| {
+                    let age = e
+                        .modified
+                        .duration_since(SystemTime::UNIX_EPOCH)
+                        .map(|d| d.as_secs_f64())
+                        .unwrap_or(0.0);
+                    Json::obj(vec![
+                        ("file", Json::str(e.path.display().to_string())),
+                        ("bytes", Json::num(e.bytes as f64)),
+                        ("modified_epoch_s", Json::num(age)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn sweep_stale_tmp(&self) -> Result<()> {
+        for entry in fs::read_dir(&self.dir)
+            .with_context(|| format!("store: listing {}", self.dir.display()))?
+            .flatten()
+        {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                // a crash between create and rename: never published, so
+                // nothing was lost — but its presence is recorded like any
+                // other damage
+                let _ = fs::remove_file(&path);
+                self.metrics.record_store_corrupt();
+                log(
+                    Level::Warn,
+                    "store_stale_tmp",
+                    vec![("path", Json::str(path.display().to_string()))],
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Move a damaged entry aside (`*.quarantine`), keeping the bytes for
+    /// a post-mortem; emit the typed log event and metric.
+    fn quarantine(&self, path: &Path, reason: &str) {
+        self.metrics.record_store_corrupt();
+        let mut target = path.as_os_str().to_os_string();
+        target.push(".quarantine");
+        let renamed = fs::rename(path, &target).is_ok();
+        if !renamed {
+            // fall back to deletion: a corrupt entry must not stay
+            // loadable under its content address
+            let _ = fs::remove_file(path);
+        }
+        log(
+            Level::Warn,
+            "store_corrupt",
+            vec![
+                ("path", Json::str(path.display().to_string())),
+                ("reason", Json::str(reason)),
+                ("quarantined", Json::Bool(renamed)),
+            ],
+        );
+    }
+
+    /// Best-effort mtime bump on a hit, so disk eviction is LRU rather
+    /// than insertion-order.  Failure is harmless (eviction degrades to
+    /// FIFO for that entry).
+    fn touch(&self, path: &Path) {
+        let times = fs::FileTimes::new().set_modified(SystemTime::now());
+        let _ = fs::File::options()
+            .append(true)
+            .open(path)
+            .and_then(|f| f.set_times(times));
+    }
+
+    /// Delete oldest-mtime entries until the directory fits `max_bytes`,
+    /// never deleting `protect` (the entry just written — evicting it
+    /// would make the put a silent no-op).  If `protect` alone exceeds
+    /// the budget, everything else goes and it stays: an over-budget
+    /// store beats a put that never persists.
+    fn enforce_budget(&self, protect: &Path) {
+        let index = self.index();
+        let mut total: u64 = index.iter().map(|e| e.bytes).sum();
+        let mut evicted = 0u64;
+        let mut freed = 0u64;
+        for entry in &index {
+            if total <= self.max_bytes {
+                break;
+            }
+            if entry.path == protect {
+                continue;
+            }
+            if fs::remove_file(&entry.path).is_ok() {
+                total -= entry.bytes;
+                freed += entry.bytes;
+                evicted += 1;
+            }
+        }
+        if evicted > 0 {
+            self.metrics.record_store_evictions(evicted);
+            log(
+                Level::Info,
+                "store_evict",
+                vec![
+                    ("evicted", Json::num(evicted as f64)),
+                    ("freed_bytes", Json::num(freed as f64)),
+                    ("resident_bytes", Json::num(total as f64)),
+                ],
+            );
+        }
+    }
+}
+
+fn body_len(n: usize, variant_len: usize, with_succ: bool) -> u64 {
+    let cells = (n as u64) * (n as u64);
+    variant_len as u64 + cells * 8 + if with_succ { cells * 4 } else { 0 }
+}
+
+/// Serialize one entry, checksum included.  In-memory: entries are cache
+/// payloads (bounded by cache capacity), not superblock-scale matrices.
+pub fn encode_entry(
+    variant: &str,
+    fingerprint: u64,
+    graph: &DistMatrix,
+    dist: &DistMatrix,
+    succ: Option<&[usize]>,
+    chain: u32,
+) -> Result<Vec<u8>> {
+    let n = graph.n();
+    if dist.n() != n {
+        bail!("store: graph n={n} but dist n={}", dist.n());
+    }
+    if let Some(succ) = succ {
+        if succ.len() != n * n {
+            bail!("store: succ length {} but n²={}", succ.len(), n * n);
+        }
+    }
+    if variant.len() > u16::MAX as usize {
+        bail!("store: variant name longer than {} bytes", u16::MAX);
+    }
+    let with_succ = succ.is_some();
+    let body = body_len(n, variant.len(), with_succ);
+    let mut out = Vec::with_capacity(HEADER_LEN + body as usize + 8);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(if with_succ { FLAG_SUCC } else { 0 });
+    out.extend_from_slice(&(variant.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&chain.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&body.to_le_bytes());
+    out.extend_from_slice(variant.as_bytes());
+    for &w in graph.as_slice() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for &w in dist.as_slice() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    if let Some(succ) = succ {
+        for &s in succ {
+            let wire = if s == NO_PATH { NO_PATH_WIRE } else { s as u32 };
+            out.extend_from_slice(&wire.to_le_bytes());
+        }
+    }
+    let seal = fnv64(&out);
+    out.extend_from_slice(&seal.to_le_bytes());
+    Ok(out)
+}
+
+/// Decode one entry, validating structure and the trailing checksum.
+/// Every failure mode gets its own typed message (the quarantine log's
+/// `reason`); none ever yields a partially-decoded entry.
+pub fn decode_entry(bytes: &[u8]) -> Result<StoreEntry> {
+    if bytes.len() < HEADER_LEN + 8 {
+        bail!("store: short read ({} bytes, header needs {})", bytes.len(), HEADER_LEN + 8);
+    }
+    if bytes[0..4] != MAGIC {
+        bail!("store: bad magic {:?} (expected {MAGIC:?})", &bytes[0..4]);
+    }
+    let version = bytes[4];
+    if version != VERSION {
+        bail!("store: unsupported version {version} (this build speaks {VERSION})");
+    }
+    let flags = bytes[5];
+    if flags & !FLAG_SUCC != 0 {
+        bail!("store: unknown flag bits 0x{:02x}", flags & !FLAG_SUCC);
+    }
+    let with_succ = flags & FLAG_SUCC != 0;
+    let variant_len = u16::from_le_bytes(bytes[6..8].try_into().unwrap()) as usize;
+    let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    if n == 0 || n > MAX_N {
+        bail!("store: n={n} outside 1..={MAX_N}");
+    }
+    let chain = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let fingerprint = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let declared = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    let expected = body_len(n, variant_len, with_succ);
+    if declared != expected {
+        bail!(
+            "store: body length {declared} does not match n={n} \
+             variant_len={variant_len} flags=0x{flags:02x} (expected {expected})"
+        );
+    }
+    let total = HEADER_LEN + expected as usize + 8;
+    if bytes.len() != total {
+        bail!("store: file length {} does not match entry length {total}", bytes.len());
+    }
+    // the seal covers header + body; verify before trusting any of it
+    let declared_seal = u64::from_le_bytes(bytes[total - 8..].try_into().unwrap());
+    let mut seal = Fnv64::new();
+    seal.update(&bytes[..total - 8]);
+    if seal.finish() != declared_seal {
+        bail!(
+            "store: checksum mismatch (sealed {declared_seal:016x}, computed {:016x})",
+            seal.finish()
+        );
+    }
+    let mut at = HEADER_LEN;
+    let variant = std::str::from_utf8(&bytes[at..at + variant_len])
+        .context("store: variant is not UTF-8")?
+        .to_string();
+    at += variant_len;
+    let cells = n * n;
+    let mut read_matrix = |at: &mut usize| {
+        let data: Vec<f32> = bytes[*at..*at + cells * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        *at += cells * 4;
+        DistMatrix::from_vec(n, data)
+    };
+    let graph = read_matrix(&mut at);
+    let dist = read_matrix(&mut at);
+    let succ = if with_succ {
+        let mut succ = Vec::with_capacity(cells);
+        for cell in bytes[at..at + cells * 4].chunks_exact(4) {
+            let wire = u32::from_le_bytes(cell.try_into().unwrap());
+            if wire == NO_PATH_WIRE {
+                succ.push(NO_PATH);
+            } else {
+                let s = wire as usize;
+                if s >= n {
+                    bail!("store: successor {s} out of range for n={n}");
+                }
+                succ.push(s);
+            }
+        }
+        Some(succ)
+    } else {
+        None
+    };
+    Ok(StoreEntry {
+        variant,
+        fingerprint,
+        graph,
+        dist,
+        succ,
+        chain,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Unique per-test scratch dir, removed on drop.
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            static SEQ: AtomicUsize = AtomicUsize::new(0);
+            let path = std::env::temp_dir().join(format!(
+                "fw-store-unit-{tag}-{}-{}",
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = fs::remove_dir_all(&path);
+            TempDir(path)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn open(dir: &TempDir, max_bytes: u64) -> (Store, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let store = Store::open(
+            StoreConfig { dir: dir.0.clone(), max_bytes },
+            metrics.clone(),
+        )
+        .expect("store opens");
+        (store, metrics)
+    }
+
+    fn counter(metrics: &Metrics, key: &str) -> usize {
+        metrics.snapshot().get(key).as_usize().unwrap()
+    }
+
+    fn sample(n: usize) -> (DistMatrix, DistMatrix, Vec<usize>) {
+        let g = generators::ring(n);
+        let r = crate::apsp::paths::solve(&g);
+        let succ = r.succ().to_vec();
+        (g, r.dist, succ)
+    }
+
+    #[test]
+    fn header_bytes_are_pinned() {
+        // the layout is an on-disk contract: freeze the exact bytes
+        let g = DistMatrix::unconnected(1);
+        let bytes = encode_entry("v", 0x1122_3344_5566_7788, &g, &g, None, 3).unwrap();
+        assert_eq!(bytes.len(), HEADER_LEN + 1 + 8 + 8);
+        assert_eq!(&bytes[0..4], b"FWCS");
+        assert_eq!(bytes[4], 1, "version");
+        assert_eq!(bytes[5], 0, "no succ flag");
+        assert_eq!(&bytes[6..8], &1u16.to_le_bytes(), "variant length");
+        assert_eq!(&bytes[8..12], &1u32.to_le_bytes(), "n");
+        assert_eq!(&bytes[12..16], &3u32.to_le_bytes(), "chain");
+        assert_eq!(&bytes[16..24], &0x1122_3344_5566_7788u64.to_le_bytes(), "fingerprint");
+        assert_eq!(&bytes[24..32], &9u64.to_le_bytes(), "body length");
+        assert_eq!(bytes[32], b'v');
+        // graph then dist: the 1×1 unconnected matrix is one 0.0 diagonal
+        assert_eq!(&bytes[33..37], &0.0f32.to_le_bytes());
+        assert_eq!(&bytes[37..41], &0.0f32.to_le_bytes());
+        let seal = u64::from_le_bytes(bytes[41..49].try_into().unwrap());
+        assert_eq!(seal, fnv64(&bytes[..41]), "trailing seal covers header + body");
+    }
+
+    #[test]
+    fn round_trips_bitwise_with_and_without_succ() {
+        let dir = TempDir::new("roundtrip");
+        let (store, metrics) = open(&dir, 0);
+        let (g, dist, succ) = sample(9);
+        let fp = 0xDEAD_BEEF_u64;
+        store.put("staged", fp, &g, &dist, Some(&succ), 2).unwrap();
+        let back = store.get("staged", 9, fp).expect("hit");
+        assert_eq!(back.variant, "staged");
+        assert_eq!(back.fingerprint, fp);
+        assert_eq!(back.chain, 2);
+        for (a, b) in back.dist.as_slice().iter().zip(dist.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dist must round-trip bitwise");
+        }
+        for (a, b) in back.graph.as_slice().iter().zip(g.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.succ.as_deref(), Some(&succ[..]));
+        // dist-only entry under another key
+        store.put("staged", fp ^ 1, &g, &dist, None, 0).unwrap();
+        let back = store.get("staged", 9, fp ^ 1).expect("dist-only hit");
+        assert!(back.succ.is_none());
+        assert_eq!(counter(&metrics, "store_writes"), 2);
+        assert_eq!(counter(&metrics, "store_hits"), 2);
+        assert_eq!(counter(&metrics, "store_corrupt"), 0);
+    }
+
+    #[test]
+    fn missing_entry_is_a_counted_miss() {
+        let dir = TempDir::new("miss");
+        let (store, metrics) = open(&dir, 0);
+        assert!(store.get("staged", 8, 42).is_none());
+        assert_eq!(counter(&metrics, "store_misses"), 1);
+        assert_eq!(counter(&metrics, "store_corrupt"), 0);
+    }
+
+    #[test]
+    fn no_path_successors_round_trip() {
+        let dir = TempDir::new("nopath");
+        let (store, _metrics) = open(&dir, 0);
+        let g = DistMatrix::unconnected(3);
+        let succ: Vec<usize> = vec![0, NO_PATH, NO_PATH, NO_PATH, 1, NO_PATH, NO_PATH, NO_PATH, 2];
+        store.put("v", 7, &g, &g, Some(&succ), 0).unwrap();
+        let back = store.get("v", 3, 7).unwrap();
+        assert_eq!(back.succ.as_deref(), Some(&succ[..]));
+    }
+
+    #[test]
+    fn corrupt_entries_are_quarantined_not_served() {
+        // the frame.rs table-driven corruption test, against the disk:
+        // every mutation must read as a miss, quarantine the file, and
+        // bump store_corrupt — and a fresh put must then serve cleanly
+        let (g, dist, succ) = sample(4);
+        let fp = 0xABCD_u64;
+        let cases: Vec<(&str, Box<dyn Fn(&mut Vec<u8>)>)> = vec![
+            ("bad magic", Box::new(|f| f[0] = b'X')),
+            ("version skew", Box::new(|f| f[4] = 9)),
+            ("unknown flags", Box::new(|f| f[5] |= 0x80)),
+            ("n zero", Box::new(|f| f[8..12].copy_from_slice(&0u32.to_le_bytes()))),
+            ("body length", Box::new(|f| f[24..32].copy_from_slice(&7u64.to_le_bytes()))),
+            ("truncated mid-body", Box::new(|f| f.truncate(HEADER_LEN + 20))),
+            ("checksum bit flip", Box::new(|f| { let last = f.len() - 1; f[last] ^= 0x01; })),
+            ("body bit flip", Box::new(|f| f[HEADER_LEN + 3] ^= 0x40)),
+            ("trailing garbage", Box::new(|f| f.push(0))),
+            (
+                "succ out of range",
+                Box::new(|f| {
+                    // first succ cell: after variant (1 byte) + 2 matrices
+                    let at = HEADER_LEN + 1 + 2 * 4 * 16;
+                    f[at..at + 4].copy_from_slice(&99u32.to_le_bytes());
+                }),
+            ),
+        ];
+        for (i, (what, mutate)) in cases.iter().enumerate() {
+            let dir = TempDir::new("corrupt");
+            let (store, metrics) = open(&dir, 0);
+            store.put("v", fp, &g, &dist, Some(&succ), 0).unwrap();
+            let path = store.entry_path("v", 4, fp);
+            let mut bytes = fs::read(&path).unwrap();
+            mutate(&mut bytes);
+            fs::write(&path, &bytes).unwrap();
+            assert!(store.get("v", 4, fp).is_none(), "case {i} ({what}) must not serve");
+            assert_eq!(counter(&metrics, "store_corrupt"), 1, "case {i} ({what})");
+            assert!(!path.exists(), "case {i} ({what}): file must be moved aside");
+            let mut quarantined = path.as_os_str().to_os_string();
+            quarantined.push(".quarantine");
+            assert!(
+                PathBuf::from(&quarantined).exists(),
+                "case {i} ({what}): quarantine keeps the bytes"
+            );
+            // the key is servable again after a clean re-solve re-puts it
+            store.put("v", fp, &g, &dist, Some(&succ), 0).unwrap();
+            assert!(store.get("v", 4, fp).is_some(), "case {i} ({what}): clean re-put serves");
+        }
+    }
+
+    #[test]
+    fn renamed_entry_fails_the_identity_check() {
+        let dir = TempDir::new("identity");
+        let (store, metrics) = open(&dir, 0);
+        let (g, dist, _) = sample(5);
+        store.put("v", 11, &g, &dist, None, 0).unwrap();
+        // an entry copied to another key's address decodes clean but
+        // answers the wrong question — it must quarantine, not serve
+        let from = store.entry_path("v", 5, 11);
+        let to = store.entry_path("v", 5, 12);
+        fs::copy(&from, &to).unwrap();
+        assert!(store.get("v", 5, 12).is_none());
+        assert_eq!(counter(&metrics, "store_corrupt"), 1);
+        // the honest copy still serves
+        assert!(store.get("v", 5, 11).is_some());
+    }
+
+    #[test]
+    fn stale_tmp_is_swept_and_counted_at_open() {
+        let dir = TempDir::new("staletmp");
+        {
+            let (store, _metrics) = open(&dir, 0);
+            let (g, dist, _) = sample(4);
+            store.put("v", 5, &g, &dist, None, 0).unwrap();
+        }
+        // simulate a crash mid-write: a half-entry under the temp name
+        let orphan = dir.0.join("deadbeef-4-v.tmp");
+        fs::write(&orphan, b"FWCS partial...").unwrap();
+        let (store, metrics) = open(&dir, 0);
+        assert!(!orphan.exists(), "open sweeps the orphan");
+        assert_eq!(counter(&metrics, "store_corrupt"), 1);
+        // the published entry survived untouched
+        assert!(store.get("v", 4, 5).is_some());
+    }
+
+    #[test]
+    fn eviction_is_lru_by_mtime_and_never_the_fresh_write() {
+        let dir = TempDir::new("evict");
+        let (store, metrics) = open(&dir, 0);
+        let (g, dist, _) = sample(6);
+        // three entries with explicit, strictly increasing mtimes (the
+        // filesystem clock is too coarse to rely on between writes)
+        for (i, fp) in [1u64, 2, 3].iter().enumerate() {
+            store.put("v", *fp, &g, &dist, None, 0).unwrap();
+            let t = SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(1000 + i as u64);
+            let f = fs::File::options()
+                .append(true)
+                .open(store.entry_path("v", 6, *fp))
+                .unwrap();
+            f.set_times(fs::FileTimes::new().set_modified(t)).unwrap();
+        }
+        let entry_bytes = fs::metadata(store.entry_path("v", 6, 1)).unwrap().len();
+        // budget fits two entries: the next put must evict the two oldest
+        // (fp=1, fp=2), keep fp=3, and keep itself
+        let store = Store {
+            dir: store.dir.clone(),
+            max_bytes: entry_bytes * 2 + entry_bytes / 2,
+            metrics: metrics.clone(),
+        };
+        store.put("v", 4, &g, &dist, None, 0).unwrap();
+        assert!(store.get("v", 6, 1).is_none(), "oldest evicted");
+        assert!(store.get("v", 6, 2).is_none(), "second-oldest evicted");
+        assert!(store.get("v", 6, 3).is_some(), "newest survivor kept");
+        assert!(store.get("v", 6, 4).is_some(), "fresh write never evicted");
+        assert_eq!(counter(&metrics, "store_evictions"), 2);
+        assert_eq!(counter(&metrics, "store_corrupt"), 0);
+    }
+
+    #[test]
+    fn warm_returns_newest_entries_oldest_first() {
+        let dir = TempDir::new("warm");
+        let (store, metrics) = open(&dir, 0);
+        let (g, dist, _) = sample(4);
+        for (i, fp) in [10u64, 20, 30].iter().enumerate() {
+            store.put("v", *fp, &g, &dist, None, 0).unwrap();
+            let t = SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(2000 + i as u64);
+            let f = fs::File::options()
+                .append(true)
+                .open(store.entry_path("v", 4, *fp))
+                .unwrap();
+            f.set_times(fs::FileTimes::new().set_modified(t)).unwrap();
+        }
+        let warmed = store.warm(2);
+        let fps: Vec<u64> = warmed.iter().map(|e| e.fingerprint).collect();
+        assert_eq!(fps, vec![20, 30], "newest two, oldest of them first");
+        assert_eq!(counter(&metrics, "store_hits"), 2, "warm loads count as hits");
+        // a limit beyond the population returns everything
+        assert_eq!(store.warm(10).len(), 3);
+    }
+
+    #[test]
+    fn variant_names_are_sanitized_into_filenames() {
+        let dir = TempDir::new("sanitize");
+        let (store, _metrics) = open(&dir, 0);
+        let path = store.entry_path("sta/ged..x", 8, 0xFF);
+        let name = path.file_name().unwrap().to_str().unwrap();
+        assert_eq!(name, "00000000000000ff-8-sta_ged__x.fwc");
+        // and a put under such a variant still round-trips (identity is
+        // checked from the body, not the sanitized filename)
+        let (g, dist, _) = sample(8);
+        store.put("sta/ged..x", 0xFF, &g, &dist, None, 1).unwrap();
+        let back = store.get("sta/ged..x", 8, 0xFF).unwrap();
+        assert_eq!(back.variant, "sta/ged..x");
+        assert_eq!(back.chain, 1);
+    }
+}

@@ -6,7 +6,9 @@
 //! request flows through them.  Finished trees are pushed into a
 //! [`TraceJournal`]: a mutex-guarded ring buffer of `Arc`'d records, so
 //! recording is one short critical section and readers never copy span
-//! trees.  The journal is served over the wire by the `{"type":"trace"}`
+//! trees.  The journal lock recovers from poisoning
+//! ([`crate::util::sync`]) — observability must never become the reason
+//! serving stops.  The journal is served over the wire by the `{"type":"trace"}`
 //! request and echoed inline when a client sets `"trace": true`.
 //!
 //! Spans carry **timing read outside the numeric kernels** only: the
@@ -162,7 +164,7 @@ impl TraceJournal {
     pub fn record(&self, record: TraceRecord) -> Arc<TraceRecord> {
         let record = Arc::new(record);
         if self.capacity > 0 {
-            let mut q = self.inner.lock().unwrap();
+            let mut q = crate::recover_lock!(&self.inner, "trace.journal");
             q.push_back(Arc::clone(&record));
             while q.len() > self.capacity {
                 q.pop_front();
@@ -179,7 +181,7 @@ impl TraceJournal {
         source: Option<&str>,
         objective: Option<&str>,
     ) -> Vec<Arc<TraceRecord>> {
-        let q = self.inner.lock().unwrap();
+        let q = crate::recover_lock!(&self.inner, "trace.journal");
         q.iter()
             .rev()
             .filter(|r| source.is_none_or(|s| r.source == s))
@@ -190,7 +192,7 @@ impl TraceJournal {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        crate::recover_lock!(&self.inner, "trace.journal").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -268,6 +270,22 @@ mod tests {
         assert_eq!(both.len(), 1);
         assert_eq!(both[0].id, 3);
         assert_eq!(journal.last(1, Some("cpu"), None)[0].id, 3);
+    }
+
+    #[test]
+    fn journal_survives_a_poisoned_lock() {
+        let journal = TraceJournal::new(4);
+        journal.record(record(1, "cpu", "shortest"));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = journal.inner.lock().unwrap();
+            panic!("poisoning the journal lock (expected by this test)");
+        }));
+        assert!(caught.is_err());
+        assert!(journal.inner.is_poisoned());
+        journal.record(record(2, "cpu", "shortest"));
+        assert_eq!(journal.len(), 2, "recording continues after the poison");
+        let ids: Vec<u64> = journal.last(10, None, None).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 1], "pre-poison records survive");
     }
 
     #[test]

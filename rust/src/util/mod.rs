@@ -9,9 +9,13 @@
 //! * [`prng`] — SplitMix64 / Xoshiro256++ deterministic PRNG (generators, tests)
 //! * [`stats`] — streaming summary statistics used by the bench harness
 //! * [`proptest`] — a miniature property-testing driver with shrinking
+//! * [`checksum`] — streaming FNV-1a 64 (the closure store's integrity seal)
+//! * [`sync`] — poison-recovering mutex helpers (one panic must not poison serving)
 
+pub mod checksum;
 pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod prng;
 pub mod stats;
+pub mod sync;

@@ -11,7 +11,10 @@
 //! * [`JobPool::try_submit`] never blocks: a full queue is an immediate
 //!   [`QueueFull`], the caller's signal to reject with a typed wire error.
 //! * A panicking job never shrinks the pool: workers run every job under
-//!   `catch_unwind`, so width is a static property of the config.
+//!   `catch_unwind`, so width is a static property of the config.  Nor
+//!   does a poisoned queue lock stop admission — every lock site recovers
+//!   ([`crate::util::sync`]); jobs run outside the lock, so the queue is
+//!   never left half-mutated by a panic.
 //! * Drop drains: jobs already admitted still run before the workers
 //!   exit.  Graceful shutdown finishes accepted work; shedding happens at
 //!   admission time, never at teardown.
@@ -107,8 +110,12 @@ impl JobPool {
 
     /// Admit a job if the queue has room; never blocks.  `Err(QueueFull)`
     /// means the job was dropped without running — the caller sheds.
+    /// A poisoned queue lock is recovered, not propagated: jobs run
+    /// *outside* the lock (under `catch_unwind`), so a poisoned mutex
+    /// only ever means some thread panicked between push and pop — the
+    /// `VecDeque` itself is never left mid-mutation.
     pub fn try_submit<F: FnOnce() + Send + 'static>(&self, job: F) -> Result<(), QueueFull> {
-        let mut state = self.shared.state.lock().expect("pool mutex poisoned");
+        let mut state = crate::recover_lock!(&self.shared.state, "pool.state");
         if state.queue.len() >= self.queue_depth {
             return Err(QueueFull { depth: self.queue_depth });
         }
@@ -122,7 +129,7 @@ impl JobPool {
 impl Drop for JobPool {
     fn drop(&mut self) {
         {
-            let mut state = self.shared.state.lock().expect("pool mutex poisoned");
+            let mut state = crate::recover_lock!(&self.shared.state, "pool.state");
             state.shutdown = true;
         }
         self.shared.ready.notify_all();
@@ -133,9 +140,11 @@ impl Drop for JobPool {
 }
 
 fn worker_loop(shared: &Shared) {
+    // one warn flag for the wait site (recover_lock! declares its own)
+    static WAIT_LOGGED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
     loop {
         let job = {
-            let mut state = shared.state.lock().expect("pool mutex poisoned");
+            let mut state = crate::recover_lock!(&shared.state, "pool.state");
             loop {
                 // drain before honoring shutdown: admitted jobs always run
                 if let Some(job) = state.queue.pop_front() {
@@ -144,7 +153,12 @@ fn worker_loop(shared: &Shared) {
                 if state.shutdown {
                     return;
                 }
-                state = shared.ready.wait(state).expect("pool mutex poisoned");
+                state = crate::util::sync::wait_recover(
+                    &shared.ready,
+                    state,
+                    "pool.state",
+                    &WAIT_LOGGED,
+                );
             }
         };
         // a panicking job unwinds here, not through the worker: the pool's
@@ -237,6 +251,32 @@ mod tests {
         .expect("follow-up job admitted");
         rx.recv_timeout(Duration::from_secs(30))
             .expect("the single worker survived the panicking job");
+    }
+
+    #[test]
+    fn a_poisoned_queue_lock_still_admits_and_runs_jobs() {
+        // poison the queue mutex directly (white box), then prove the
+        // pool keeps admitting, running, and draining — one panic must
+        // not turn the persistence/serving lane into a brick
+        let pool = JobPool::new(PoolConfig {
+            workers: 1,
+            queue_depth: 4,
+            name: "test-poison".into(),
+        });
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = pool.shared.state.lock().unwrap();
+            panic!("poisoning the pool lock (expected by this test)");
+        }));
+        assert!(caught.is_err());
+        assert!(pool.shared.state.is_poisoned());
+        let (tx, rx) = mpsc::channel();
+        pool.try_submit(move || {
+            tx.send(()).unwrap();
+        })
+        .expect("admission survives the poisoned lock");
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("worker loop recovered the lock and ran the job");
+        drop(pool); // Drop's shutdown path recovers too
     }
 
     #[test]

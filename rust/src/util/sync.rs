@@ -1,0 +1,134 @@
+//! Poison-recovering mutex helpers for the serving stack.
+//!
+//! `Mutex::lock().unwrap()` turns one panic while holding the lock into a
+//! *permanent* denial of service: every later `lock()` sees the poison
+//! flag and the `unwrap` panics too, so a single buggy request kills all
+//! subsequent requests.  That trade is wrong for every lock in this crate
+//! — the guarded state is a plain map, ring, or queue whose invariants
+//! hold after any prefix of operations (no multi-step critical sections
+//! that a mid-flight panic could leave half-applied), so the data behind a
+//! poisoned lock is still valid.  [`lock_recover`] takes the guard out of
+//! the poison wrapper, emits one `warn` log event per call site (not per
+//! call — a poisoned hot-path lock must not turn the log into a firehose),
+//! and serving continues.
+//!
+//! The panic that poisoned the lock is still loud: it unwound its own
+//! thread (or was caught by the pool's `catch_unwind`, which reports it);
+//! recovery here only stops it from cascading.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::obs::log::{log, Level};
+use crate::util::json::Json;
+
+/// One warn per call site: each site passes its own flag (a `static`), so
+/// the first recovery logs and the rest are silent.
+fn warn_once(site: &'static str, logged: &AtomicBool) {
+    if !logged.swap(true, Ordering::Relaxed) {
+        log(
+            Level::Warn,
+            "lock_poisoned",
+            vec![
+                ("site", Json::str(site)),
+                ("action", Json::str("recovered; state is panic-safe by construction")),
+            ],
+        );
+    }
+}
+
+/// Lock `mutex`, recovering from poisoning instead of propagating it.
+/// `site` names the lock in the one-time warn event; `logged` is the call
+/// site's own once-flag (a `static AtomicBool`).
+pub fn lock_recover<'a, T>(
+    mutex: &'a Mutex<T>,
+    site: &'static str,
+    logged: &AtomicBool,
+) -> MutexGuard<'a, T> {
+    match mutex.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            warn_once(site, logged);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`Condvar::wait`] with the same recovery policy as [`lock_recover`]:
+/// a wait that returns a poisoned guard hands back the inner guard.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    site: &'static str,
+    logged: &AtomicBool,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            warn_once(site, logged);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Declares the per-site once-flag and locks in one expression:
+/// `recover_lock!(&self.inner, "cache.inner")`.
+#[macro_export]
+macro_rules! recover_lock {
+    ($mutex:expr, $site:expr) => {{
+        static LOGGED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+        $crate::util::sync::lock_recover($mutex, $site, &LOGGED)
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    fn poison<T: Send + 'static>(mutex: &Mutex<T>) {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = mutex.lock().unwrap();
+            panic!("poisoning the lock (expected by the sync test)");
+        }));
+        assert!(caught.is_err());
+        assert!(mutex.is_poisoned(), "the panic above must have poisoned the lock");
+    }
+
+    #[test]
+    fn recovers_a_poisoned_lock_and_state_survives() {
+        let mutex = Mutex::new(vec![1, 2, 3]);
+        poison(&mutex);
+        let mut guard = recover_lock!(&mutex, "test.vec");
+        assert_eq!(*guard, vec![1, 2, 3], "state behind the poison is intact");
+        guard.push(4);
+        drop(guard);
+        // a second recovery sees the post-recovery mutation
+        assert_eq!(recover_lock!(&mutex, "test.vec").len(), 4);
+    }
+
+    #[test]
+    fn wait_recovers_when_a_peer_poisons_mid_wait() {
+        static LOGGED: AtomicBool = AtomicBool::new(false);
+        let shared = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let waiter = {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                let (m, cv) = &*shared;
+                let mut guard = recover_lock!(m, "test.wait");
+                while *guard == 0 {
+                    guard = wait_recover(cv, guard, "test.wait", &LOGGED);
+                }
+                *guard
+            })
+        };
+        // poison the lock out from under the waiter, then complete the
+        // hand-off anyway: set the condition during recovery's lock
+        let (m, cv) = &*shared;
+        poison(m);
+        *recover_lock!(m, "test.wait") = 7;
+        cv.notify_all();
+        assert_eq!(waiter.join().expect("waiter survived the poison"), 7);
+    }
+}

@@ -612,17 +612,17 @@ fn cache_concurrent_puts_never_split_pairs_or_serve_stale() {
                         4 => {
                             if let Some(base) = cache.get_base("v", g.n(), graph_fingerprint(g))
                             {
-                                assert_eq!(base.graph, *g, "base graph mismatch");
+                                assert_eq!(*base.graph, *g, "base graph mismatch");
                                 match &base.succ {
                                     Some(s) => {
-                                        let ok = (base.dist == pair_a[gi].dist
+                                        let ok = (*base.dist == pair_a[gi].dist
                                             && s.as_slice() == pair_a[gi].succ())
-                                            || (base.dist == pair_b[gi].dist
+                                            || (*base.dist == pair_b[gi].dist
                                                 && s.as_slice() == pair_b[gi].succ());
                                         assert!(ok, "stale or torn base closure");
                                     }
                                     None => assert_eq!(
-                                        base.dist, lone[gi],
+                                        *base.dist, lone[gi],
                                         "dist-only base must be the lone closure"
                                     ),
                                 }
@@ -645,8 +645,8 @@ fn cache_concurrent_puts_never_split_pairs_or_serve_stale() {
     for (gi, g) in graphs.iter().enumerate() {
         if let Some(base) = cache.get_base("v", g.n(), graph_fingerprint(g)) {
             if let Some(s) = &base.succ {
-                let ok = (base.dist == pair_a[gi].dist && s.as_slice() == pair_a[gi].succ())
-                    || (base.dist == pair_b[gi].dist && s.as_slice() == pair_b[gi].succ());
+                let ok = (*base.dist == pair_a[gi].dist && s.as_slice() == pair_a[gi].succ())
+                    || (*base.dist == pair_b[gi].dist && s.as_slice() == pair_b[gi].succ());
                 assert!(ok);
             }
         }

@@ -1,0 +1,300 @@
+//! Crash-safety and restart tests for the persistent closure store.
+//!
+//! Two layers:
+//!
+//! * Store + cache tests run artifact-free: they exercise the on-disk
+//!   format, corruption quarantine, and warm-start round trips directly.
+//!   "Kill and restart" is modeled as dropping one cache/store generation
+//!   (the write-behind queue drained first) and opening a fresh one over
+//!   the same directory — exactly what a process death plus re-exec does
+//!   to the store's on-disk state.
+//! * The coordinator-level test needs built artifacts and is skipped
+//!   (with a notice) when `artifacts/` is absent, like the other
+//!   integration suites.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use fw_stage::apsp;
+use fw_stage::coordinator::cache::{graph_fingerprint, ResultCache};
+use fw_stage::coordinator::metrics::Metrics;
+use fw_stage::coordinator::store::{Store, StoreConfig};
+use fw_stage::coordinator::{self, Coordinator};
+use fw_stage::graph::generators;
+use fw_stage::util::pool::{JobPool, PoolConfig};
+
+/// Unique per-test scratch dir, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "fw-store-it-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        TempDir(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// One store-backed cache "process generation" over `dir`.
+fn generation(dir: &TempDir, capacity: usize) -> (ResultCache, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let store = Arc::new(
+        Store::open(
+            StoreConfig { dir: dir.0.clone(), max_bytes: 0 },
+            metrics.clone(),
+        )
+        .expect("store opens"),
+    );
+    let writer = JobPool::new(PoolConfig {
+        workers: 1,
+        queue_depth: 64,
+        name: "it-store".into(),
+    });
+    (ResultCache::with_store(capacity, store, writer), metrics)
+}
+
+fn counter(metrics: &Metrics, key: &str) -> usize {
+    metrics.snapshot().get(key).as_usize().unwrap_or(0)
+}
+
+/// The single `.fwc` entry in `dir` (panics unless exactly one exists).
+fn only_entry(dir: &Path) -> PathBuf {
+    let entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "fwc"))
+        .collect();
+    assert_eq!(entries.len(), 1, "expected exactly one store entry in {dir:?}");
+    entries.into_iter().next().unwrap()
+}
+
+fn quarantine_count(dir: &Path) -> usize {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.to_string_lossy().ends_with(".quarantine"))
+        .count()
+}
+
+#[test]
+fn kill_and_restart_round_trips_closures_bitwise() {
+    let dir = TempDir::new("restart");
+    let g_dist = generators::erdos_renyi(24, 0.4, 11);
+    let g_pair = generators::erdos_renyi(24, 0.4, 12);
+    let d = apsp::naive::solve(&g_dist);
+    let r = apsp::paths::solve(&g_pair);
+    {
+        let (gen1, _) = generation(&dir, 8);
+        gen1.put("staged", &g_dist, d.clone());
+        gen1.put_paths("staged", &g_pair, r.dist.clone(), r.succ().to_vec());
+        gen1.flush_store();
+    } // process death
+
+    // generation 2 over the same directory: both closures come back
+    // bitwise — first via boot warm-start, then (generation 3, capacity
+    // too small to warm everything) via request-path read-through
+    let (gen2, metrics2) = generation(&dir, 8);
+    assert_eq!(gen2.warm_from_store(), 2);
+    let dist = gen2.get("staged", &g_dist).expect("distance closure survived");
+    for (a, b) in dist.as_slice().iter().zip(d.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "dist must round-trip bitwise");
+    }
+    let (pd, ps) = gen2.get_paths("staged", &g_pair).expect("paths pair survived");
+    for (a, b) in pd.as_slice().iter().zip(r.dist.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(ps, r.succ(), "successors must round-trip exactly");
+    assert!(counter(&metrics2, "store_hits") >= 2);
+    assert_eq!(counter(&metrics2, "store_corrupt"), 0);
+    drop(gen2);
+
+    let (gen3, metrics3) = generation(&dir, 1);
+    assert_eq!(gen3.warm_from_store(), 1, "capacity bounds the warm start");
+    // whichever entry was not warmed reads through from disk on demand
+    assert!(gen3.get("staged", &g_dist).is_some());
+    assert!(gen3.get_paths("staged", &g_pair).is_some());
+    assert!(counter(&metrics3, "store_hits") >= 2);
+}
+
+#[test]
+fn chained_closures_rebaseline_across_generations() {
+    // a delta chain's disk state: the chained entry (depth included)
+    // must survive a restart so updates keep chaining from it
+    let dir = TempDir::new("chain");
+    let g = generators::erdos_renyi(16, 0.5, 21);
+    let r = apsp::paths::solve(&g);
+    let fp = graph_fingerprint(&g);
+    {
+        let (gen1, _) = generation(&dir, 8);
+        gen1.put_chained("staged", &g, r.dist.clone(), Some(r.succ().to_vec()), 3);
+        gen1.flush_store();
+    }
+    let (gen2, _) = generation(&dir, 8);
+    let base = gen2.get_base("staged", g.n(), fp).expect("chained base survived");
+    assert_eq!(base.chain, 3, "chain depth is part of the persisted state");
+    assert_eq!(*base.graph, g);
+    assert_eq!(*base.dist, r.dist);
+    assert_eq!(base.succ.as_ref().map(|s| s.as_slice()), Some(r.succ()));
+    // re-baselining writes a fresh chain-0 entry over the same key
+    gen2.put_chained("staged", &g, r.dist.clone(), Some(r.succ().to_vec()), 0);
+    gen2.flush_store();
+    drop(gen2);
+    let (gen3, _) = generation(&dir, 8);
+    assert_eq!(gen3.get_base("staged", g.n(), fp).unwrap().chain, 0);
+}
+
+#[test]
+fn flipped_byte_is_quarantined_and_resolved_clean() {
+    let dir = TempDir::new("bitflip");
+    let g = generators::erdos_renyi(16, 0.4, 31);
+    let d = apsp::naive::solve(&g);
+    {
+        let (gen1, _) = generation(&dir, 8);
+        gen1.put("staged", &g, d.clone());
+        gen1.flush_store();
+    }
+    // flip one body byte: the checksum seal must catch it
+    let path = only_entry(&dir.0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, bytes).unwrap();
+
+    let (gen2, metrics2) = generation(&dir, 8);
+    assert_eq!(gen2.warm_from_store(), 0, "a corrupt entry must never warm the cache");
+    assert!(gen2.get("staged", &g).is_none(), "a corrupt entry must never be served");
+    assert_eq!(counter(&metrics2, "store_corrupt"), 1);
+    assert_eq!(quarantine_count(&dir.0), 1, "the bad bytes are kept for post-mortem");
+    // the miss falls through to a clean re-solve + re-persist
+    gen2.put("staged", &g, d.clone());
+    gen2.flush_store();
+    assert_eq!(gen2.get("staged", &g), Some(d.clone()));
+    drop(gen2);
+    let (gen3, metrics3) = generation(&dir, 8);
+    assert_eq!(gen3.warm_from_store(), 1, "the re-persisted entry is healthy");
+    assert_eq!(counter(&metrics3, "store_corrupt"), 0);
+}
+
+#[test]
+fn truncated_entry_is_quarantined_not_served() {
+    let dir = TempDir::new("truncate");
+    let g = generators::erdos_renyi(16, 0.4, 41);
+    {
+        let (gen1, _) = generation(&dir, 8);
+        gen1.put("staged", &g, apsp::naive::solve(&g));
+        gen1.flush_store();
+    }
+    // cut the file mid-body: a crash mid-write could leave this shape
+    // only if the atomic temp+rename protocol were broken — the store
+    // must treat it as corruption either way
+    let path = only_entry(&dir.0);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let (gen2, metrics2) = generation(&dir, 8);
+    assert!(gen2.get("staged", &g).is_none());
+    assert_eq!(counter(&metrics2, "store_corrupt"), 1);
+    assert_eq!(quarantine_count(&dir.0), 1);
+}
+
+#[test]
+fn version_skew_is_quarantined_not_served() {
+    let dir = TempDir::new("version");
+    let g = generators::erdos_renyi(16, 0.4, 51);
+    {
+        let (gen1, _) = generation(&dir, 8);
+        gen1.put("staged", &g, apsp::naive::solve(&g));
+        gen1.flush_store();
+    }
+    // byte 4 is the format version: a downgrade reading a future format
+    // must refuse rather than misinterpret the layout
+    let path = only_entry(&dir.0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4] = 99;
+    std::fs::write(&path, bytes).unwrap();
+
+    let (gen2, metrics2) = generation(&dir, 8);
+    assert!(gen2.get("staged", &g).is_none());
+    assert_eq!(counter(&metrics2, "store_corrupt"), 1);
+    assert_eq!(quarantine_count(&dir.0), 1);
+}
+
+#[test]
+fn stale_tmp_from_a_crashed_write_is_swept_at_open() {
+    let dir = TempDir::new("staletmp");
+    std::fs::create_dir_all(&dir.0).unwrap();
+    // a crash between temp-write and rename leaves exactly this debris
+    std::fs::write(dir.0.join("deadbeef-8-staged.tmp"), b"partial write").unwrap();
+    let (gen1, metrics1) = generation(&dir, 8);
+    assert_eq!(counter(&metrics1, "store_corrupt"), 1, "the sweep is counted");
+    assert!(
+        !dir.0.join("deadbeef-8-staged.tmp").exists(),
+        "stale temp files are removed, never decoded"
+    );
+    // the directory is fully usable afterwards
+    let g = generators::ring(8);
+    gen1.put("staged", &g, apsp::naive::solve(&g));
+    gen1.flush_store();
+    assert!(gen1.get("staged", &g).is_some());
+}
+
+// ---------------------------------------------- coordinator level --
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn coordinator_restart_serves_from_store_without_resolving() {
+    let Some(artifacts) = artifact_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let dir = TempDir::new("coord");
+    let g = generators::erdos_renyi(100, 0.3, 61);
+
+    let mut config = coordinator::Config::new(&artifacts);
+    config.store = Some(StoreConfig { dir: dir.0.clone(), max_bytes: 0 });
+    let gen1 = Coordinator::start(config).expect("gen-1 coordinator");
+    let resp1 = gen1.solve_graph(&g, "staged").expect("gen-1 solve");
+    gen1.flush_store();
+    drop(gen1); // process death
+
+    let mut config = coordinator::Config::new(&artifacts);
+    config.store = Some(StoreConfig { dir: dir.0.clone(), max_bytes: 0 });
+    config.cache_capacity = 4;
+    let gen2 = Coordinator::start(config).expect("gen-2 coordinator");
+    let resp2 = gen2
+        .solve(&coordinator::Request {
+            id: 0,
+            graph: g.clone(),
+            variant: "staged".into(),
+            no_cache: false,
+            want_paths: false,
+            objective: "shortest".into(),
+            trace: false,
+        })
+        .expect("gen-2 solve");
+    assert_eq!(resp2.source, coordinator::Source::Cache, "restart must not re-solve");
+    for (a, b) in resp2.dist.as_slice().iter().zip(resp1.as_slice()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "restart must serve bitwise-identical state");
+    }
+    let snap = gen2.metrics().snapshot();
+    assert!(snap.get("store_hits").as_usize().unwrap_or(0) >= 1);
+    assert_eq!(snap.get("store_corrupt").as_usize().unwrap_or(1), 0);
+    assert_eq!(snap.get("device_solves").as_usize().unwrap_or(1), 0);
+    assert_eq!(snap.get("superblock_solves").as_usize().unwrap_or(1), 0);
+    assert_eq!(snap.get("cpu_solves").as_usize().unwrap_or(1), 0);
+}
